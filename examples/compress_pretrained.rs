@@ -1,0 +1,43 @@
+//! Post-training compression walkthrough (paper Experiment 5 shape):
+//! pretrain once, then show (a) the K-vs-Q compressibility asymmetry under
+//! truncated SVD and (b) QK-only fine-tuning recovering the loss at an
+//! aggressive rank. Run with: cargo run --release --example compress_pretrained
+use thinkeys::experiments::common::{self, Opts};
+use thinkeys::experiments::exp5_svd;
+use thinkeys::model::surgery::{self, AblationMode};
+use thinkeys::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new()?;
+    let opts = Opts { scale: 0.5, seeds: vec![137] };
+    let (params, corpus) = exp5_svd::base_model(&rt, &opts)?;
+    let cfg = rt.manifest().config("tinylm_ds64")?.clone();
+    let base = common::val_ppl(&rt, "tinylm_ds64", &params, &corpus)?;
+    println!("pretrained tinylm: val PPL {base:.2} (d_qk_head = {})",
+             cfg.d_qk_head);
+
+    println!("\nrank/head   K-only        Q-only        (dPPL)");
+    for r in [2usize, 4, 6] {
+        let k = surgery::low_rank_ablation(&params, &cfg, r,
+                                           AblationMode::KOnly)?;
+        let q = surgery::low_rank_ablation(&params, &cfg, r,
+                                           AblationMode::QOnly)?;
+        let kp = common::val_ppl(&rt, "tinylm_ds64", &k, &corpus)?;
+        let qp = common::val_ppl(&rt, "tinylm_ds64", &q, &corpus)?;
+        println!("{r:>9}   {kp:>6.2} ({:+5.1}%)  {qp:>6.2} ({:+5.1}%)",
+                 100.0 * (kp - base) / base, 100.0 * (qp - base) / base);
+    }
+
+    // aggressive factoring + recovery
+    let thin_cfg = rt.manifest().config("tinylm_ds16")?.clone();
+    let thin = surgery::factor_to_thin(&params, &cfg, &thin_cfg)?;
+    let before = common::val_ppl(&rt, "tinylm_ds16", &thin, &corpus)?;
+    let batches = corpus.batches(&corpus.train, cfg.train_batch,
+                                 cfg.train_seq, 99);
+    let tuned = common::qk_finetune(&rt, "tinylm_ds16", thin, 80,
+                                    |i| batches[i % batches.len()].clone())?;
+    let after = common::val_ppl(&rt, "tinylm_ds16", &tuned, &corpus)?;
+    println!("\nfactored to d/4 (75% K cache saved): PPL {before:.2} before \
+              FT -> {after:.2} after 80 QK-FT steps (base {base:.2})");
+    Ok(())
+}

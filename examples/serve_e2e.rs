@@ -1,0 +1,69 @@
+//! End-to-end serving driver (the headline validation): pretrain a small
+//! model, deploy it twice — full keys and factored keys — serve the same
+//! Poisson trace through the full stack (router -> scheduler -> paged
+//! split-pool KV cache -> batched PJRT decode), and report throughput,
+//! latency, and the measured K-cache saving.
+//! Run with: cargo run --release --example serve_e2e
+use thinkeys::coordinator::engine::Engine;
+use thinkeys::coordinator::kvcache::{KvCacheConfig, KvCacheManager};
+use thinkeys::coordinator::router::Router;
+use thinkeys::coordinator::sampling::Sampler;
+use thinkeys::coordinator::scheduler::Scheduler;
+use thinkeys::datagen::arrival::{poisson_trace, TraceConfig};
+use thinkeys::experiments::common;
+use thinkeys::model::surgery;
+use thinkeys::runtime::{ParamStore, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new()?;
+    let full_cfg = rt.manifest().config("servefull")?.clone();
+    let thin_cfg = rt.manifest().config("servethin")?.clone();
+
+    // pretrain (cached under artifacts/ckpt after the first run)
+    let corpus = common::corpus_for(&rt, "servefull", common::LARGE_CORPUS);
+    let pre = common::pretrain_lm(&rt, "servefull", &corpus, "serve",
+                                  240, 137)?;
+    let ppl = common::val_ppl(&rt, "servefull", &pre.params, &corpus)?;
+    println!("base model: servefull val PPL {ppl:.2} (cached: {})",
+             pre.cached);
+    let thin_params =
+        surgery::factor_to_thin(&pre.params, &full_cfg, &thin_cfg)?;
+    let ppl_thin = common::val_ppl(&rt, "servethin", &thin_params, &corpus)?;
+    println!("factored (d/4, zero retraining): val PPL {ppl_thin:.2}");
+
+    let trace = poisson_trace(&TraceConfig {
+        rate_per_s: 6.0, n_requests: 24, prompt_mean: 48, prompt_max: 120,
+        gen_mean: 16, gen_max: 32,
+    }, 0);
+
+    for (label, cfg, params) in [
+        ("FULL KEYS", &full_cfg, pre.params.clone()),
+        ("FACTORED KEYS (d/4)", &thin_cfg, thin_params),
+    ] {
+        let eng = Engine::new(&rt, &cfg.name, params, false,
+                              Sampler::TopK { temperature: 0.8, top_k: 40 },
+                              7)?;
+        let kv = KvCacheManager::new(KvCacheConfig {
+            n_layers: cfg.n_layers,
+            k_dims: cfg.k_cache_dims,
+            v_dims: cfg.v_cache_dims,
+            block_tokens: 16,
+            bytes_per_el_k: 2.0,
+            bytes_per_el_v: 2.0,
+            budget_bytes: 4e6,
+        });
+        println!("\n=== {label} ===  (token capacity {})",
+                 kv.cfg.token_capacity());
+        let sched = Scheduler::new(eng, kv, 16);
+        let mut router = Router::new(sched);
+        let report = router.run_trace(&trace, 3)?;
+        println!("{}", report.report());
+        println!("{}", router.sched.engine.metrics.report());
+        let stats = router.sched.kv.stats();
+        println!("K pool capacity {:.2} MB vs V pool {:.2} MB (K is {:.0}x \
+                  thinner per token)",
+                 stats.k_bytes_capacity / 1e6, stats.v_bytes_capacity / 1e6,
+                 cfg.v_cache_dims as f64 / cfg.k_cache_dims as f64);
+    }
+    Ok(())
+}

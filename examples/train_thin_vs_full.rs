@@ -1,0 +1,25 @@
+//! From-scratch training comparison (paper Experiments 7/7b shape): train
+//! the LLaMA-style model with full attention and with thin keys (d/4),
+//! log the validation-PPL trajectory and wall-clock — thin keys should
+//! track (or beat) full attention while training faster.
+//! Run with: cargo run --release --example train_thin_vs_full
+use thinkeys::experiments::exp67_llama::trajectory;
+use thinkeys::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new()?;
+    let steps = 120;
+    let full = trajectory(&rt, "llama_ds64", steps, steps / 6, 137)?;
+    let thin = trajectory(&rt, "llama_ds16", steps, steps / 6, 137)?;
+    println!("\nstep   full-PPL   thin-PPL");
+    for (i, &(step, ppl)) in full.checkpoints.iter().enumerate() {
+        println!("{step:>5}  {ppl:>8.2}  {:>8.2}", thin.checkpoints[i].1);
+    }
+    println!("\nparams: full {:.2}M vs thin {:.2}M ({:.0}% fewer)",
+             full.params as f64 / 1e6, thin.params as f64 / 1e6,
+             100.0 * (1.0 - thin.params as f64 / full.params as f64));
+    println!("wall-clock: full {:.1}s vs thin {:.1}s ({:+.1}%)",
+             full.seconds, thin.seconds,
+             100.0 * (thin.seconds / full.seconds - 1.0));
+    Ok(())
+}

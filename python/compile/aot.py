@@ -1,0 +1,265 @@
+"""AOT export: lower every entry point to HLO *text* + write manifest.json.
+
+This is the only python that ever runs (`make artifacts`); the rust binary
+is self-contained afterwards. Interchange is HLO text, NOT serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids that the
+xla crate's xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Incremental: an artifact is re-lowered only if its content hash (config +
+kind + geometry + source digest) changed since the last export.
+
+Usage: cd python && python -m compile.aot [--out-dir ../artifacts] [--only PREFIX]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import (REGISTRY, DECODE_BATCHES, PREFILL_SEQ, config_dict,
+                      train_geometry)
+from . import model as M
+from .kernels.asym_attention import vmem_report
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _param_arg_specs(cfg):
+    return [_spec(s.shape) for s in M.param_specs(cfg)]
+
+
+def _source_digest():
+    h = hashlib.sha1()
+    base = os.path.dirname(__file__)
+    for rel in ("configs.py", "model.py", "kernels/ref.py",
+                "kernels/asym_attention.py"):
+        with open(os.path.join(base, rel), "rb") as f:
+            h.update(f.read())
+    return h.hexdigest()
+
+
+def artifact_plan():
+    """Yield (artifact_name, kind, cfg, geometry dict)."""
+    plan = []
+
+    def add(kind, cfg, **geom):
+        tag = "_".join(f"{k}{v}" for k, v in sorted(geom.items())
+                       if k not in ("impl",))
+        impl = geom.get("impl", "ref")
+        suffix = f"_{tag}" if tag else ""
+        if impl != "ref":
+            suffix += f"_{impl}"
+        plan.append((f"{kind}_{cfg.name}{suffix}", kind, cfg, geom))
+
+    trainables = (
+        [f"copyback_ds{d}" for d in (4, 8, 16, 32, 64)] +
+        [f"kvret_ds{d}" for d in (4, 8, 16, 32, 64)] +
+        [f"tinylm_ds{d}" for d in (8, 16, 32, 64)] +
+        [f"llama_ds{d}" for d in (8, 16, 32, 64)] +
+        ["llama_gqa2", "llama_gqa1", "llama_mla56", "llama_mla36",
+         "tinygqa_ds64", "servefull"])
+    for name in trainables:
+        cfg = REGISTRY[name]
+        b, s = train_geometry(cfg)
+        add("train", cfg, b=b, s=s)
+
+    # QK-only fine-tuning (Exp 5/8, Tables 2/7/19). ds64 = identically
+    # fine-tuned uncompressed control.
+    for fam in ("tinylm", "tinygqa"):
+        for d in (64, 32, 16, 8):
+            cfg = REGISTRY[f"{fam}_ds{d}"]
+            b, s = train_geometry(cfg)
+            add("qkft", cfg, b=b, s=s)
+
+    # Eval loss (PPL) for every config whose PPL we report.
+    for name in ([f"tinylm_ds{d}" for d in (8, 16, 32, 64)] +
+                 [f"llama_ds{d}" for d in (8, 16, 32, 64)] +
+                 ["llama_gqa2", "llama_gqa1", "llama_mla56", "llama_mla36"] +
+                 [f"tinygqa_ds{d}" for d in (8, 16, 32, 64)]):
+        cfg = REGISTRY[name]
+        b, s = train_geometry(cfg)
+        add("evalloss", cfg, b=b, s=s)
+
+    # Full logits (accuracy tasks + downstream probes + sampling eval).
+    for name in ([f"copyback_ds{d}" for d in (4, 8, 16, 32, 64)] +
+                 [f"kvret_ds{d}" for d in (4, 8, 16, 32, 64)] +
+                 [f"tinylm_ds{d}" for d in (8, 16, 32, 64)] +
+                 [f"tinygqa_ds{d}" for d in (8, 16, 32, 64)] +
+                 [f"llama_ds{d}" for d in (8, 16, 32, 64)] +
+                 ["servefull", "servethin"]):
+        cfg = REGISTRY[name]
+        b, s = train_geometry(cfg)
+        add("logits", cfg, b=b, s=s)
+
+    # Serving artifacts.
+    for name in ("servefull", "servethin"):
+        cfg = REGISTRY[name]
+        add("prefill", cfg, s=PREFILL_SEQ)
+        for b in DECODE_BATCHES:
+            add("decode", cfg, b=b)
+        # Pallas-kernel path (Layer 1 lowered into the same HLO).
+        add("prefill", cfg, s=PREFILL_SEQ, impl="pallas")
+        add("decode", cfg, b=8, impl="pallas")
+    return plan
+
+
+def build_entry(kind, cfg, geom):
+    """Returns (fn, arg_specs, input_names, output_names)."""
+    nparams = len(M.param_specs(cfg))
+    pnames = [s.name for s in M.param_specs(cfg)]
+    impl = geom.get("impl", "ref")
+    if kind in ("train", "qkft"):
+        b, s = geom["b"], geom["s"]
+        fn = M.make_train_step(cfg, "qk" if kind == "qkft" else "all",
+                               impl=impl)
+        specs = (_param_arg_specs(cfg) * 3 +
+                 [_spec((b, s), I32), _spec((b, s), I32), _spec((b, s)),
+                  _spec(()), _spec(())])
+        names = (pnames + [f"m.{n}" for n in pnames] +
+                 [f"v.{n}" for n in pnames] +
+                 ["tokens", "targets", "mask", "lr", "step"])
+        outs = (["loss"] + pnames + [f"m.{n}" for n in pnames] +
+                [f"v.{n}" for n in pnames])
+        return fn, specs, names, outs
+    if kind == "evalloss":
+        b, s = geom["b"], geom["s"]
+        fn = M.make_evalloss(cfg, impl=impl)
+        specs = _param_arg_specs(cfg) + [
+            _spec((b, s), I32), _spec((b, s), I32), _spec((b, s))]
+        return fn, specs, pnames + ["tokens", "targets", "mask"], \
+            ["sum_nll", "sum_mask"]
+    if kind == "logits":
+        b, s = geom["b"], geom["s"]
+        fn = M.make_logits(cfg, impl=impl)
+        specs = _param_arg_specs(cfg) + [_spec((b, s), I32)]
+        return fn, specs, pnames + ["tokens"], ["logits"]
+    if kind == "prefill":
+        s = geom["s"]
+        fn = M.make_prefill(cfg, s, impl=impl)
+        specs = _param_arg_specs(cfg) + [_spec((1, s), I32), _spec((), I32)]
+        return fn, specs, pnames + ["tokens", "length"], \
+            ["last_logits", "k_cache", "v_cache"]
+    if kind == "decode":
+        b = geom["b"]
+        kd = cfg.k_cache_dims()
+        vd = cfg.v_cache_dims()
+        n = cfg.max_seq
+        fn = M.make_decode(cfg, b, impl=impl)
+        specs = _param_arg_specs(cfg) + [
+            _spec((cfg.n_layers, b, n, kd)), _spec((cfg.n_layers, b, n, vd)),
+            _spec((b,), I32), _spec((b,), I32)]
+        return fn, specs, pnames + ["k_cache", "v_cache", "tokens", "pos"], \
+            ["logits", "k_cache", "v_cache"]
+    raise ValueError(kind)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--only", default=None,
+                    help="only export artifacts whose name starts with this")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    prev = {}
+    if os.path.exists(manifest_path) and not args.force:
+        with open(manifest_path) as f:
+            prev = {a["name"]: a for a in json.load(f).get("artifacts", [])}
+
+    digest = _source_digest()
+    plan = artifact_plan()
+    artifacts = []
+    n_built = n_skipped = 0
+    for name, kind, cfg, geom in plan:
+        fname = f"{name}.hlo.txt"
+        fpath = os.path.join(out_dir, fname)
+        h = hashlib.sha1(json.dumps(
+            [digest, config_dict(cfg), kind, sorted(geom.items())],
+            sort_keys=True, default=str).encode()).hexdigest()
+        entry_meta = {
+            "name": name, "file": fname, "kind": kind, "config": cfg.name,
+            "geom": {k: v for k, v in geom.items()}, "hash": h,
+        }
+        fn, specs, in_names, out_names = build_entry(kind, cfg, geom)
+        entry_meta["inputs"] = [
+            [n_, str(s.dtype), list(s.shape)] for n_, s in zip(in_names, specs)]
+        entry_meta["n_params"] = len(M.param_specs(cfg))
+        entry_meta["outputs"] = out_names
+        artifacts.append(entry_meta)
+        if (not args.force and args.only is None and os.path.exists(fpath)
+                and prev.get(name, {}).get("hash") == h):
+            n_skipped += 1
+            continue
+        if args.only is not None and not name.startswith(args.only):
+            if os.path.exists(fpath):
+                n_skipped += 1
+                continue
+        print(f"[aot] lowering {name} ...", flush=True)
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        with open(fpath, "w") as f:
+            f.write(text)
+        n_built += 1
+
+    configs_out = {}
+    for name_ in sorted({a["config"] for a in artifacts}):
+        cfg = REGISTRY[name_]
+        cd = config_dict(cfg)
+        cd["params"] = [
+            {"name": s.name, "shape": list(s.shape), "init": s.init,
+             "std": s.std, "wd": s.wd, "qk": s.qk}
+            for s in M.param_specs(cfg)]
+        b, s = train_geometry(cfg)
+        cd["train_batch"], cd["train_seq"] = b, s
+        configs_out[name_] = cd
+
+    manifest = {
+        "version": 1,
+        "adam": {"b1": M.ADAM_B1, "b2": M.ADAM_B2, "eps": M.ADAM_EPS,
+                 "weight_decay": M.WEIGHT_DECAY},
+        "decode_batches": list(DECODE_BATCHES),
+        "prefill_seq": PREFILL_SEQ,
+        "configs": configs_out,
+        "artifacts": artifacts,
+    }
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    # L1 kernel report: VMEM/MXU estimates for the serving geometries.
+    reports = []
+    for name_ in ("servefull", "servethin"):
+        cfg = REGISTRY[name_]
+        reports.append(vmem_report(
+            name_, 1, cfg.n_heads, cfg.n_kv_heads, PREFILL_SEQ,
+            cfg.d_qk_head, cfg.d_v_head))
+    with open(os.path.join(out_dir, "kernel_report.json"), "w") as f:
+        json.dump(reports, f, indent=1)
+
+    print(f"[aot] done: {n_built} built, {n_skipped} cached, "
+          f"{len(artifacts)} total -> {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,176 @@
+"""Experiment configuration registry (single source of truth, mirrored by
+rust/src/model/config.rs via artifacts/manifest.json).
+
+Every architecture evaluated in the paper maps to a config here, scaled to a
+1-core CPU testbed (see DESIGN.md §2 for the substitution table):
+
+- ``tinylm_*``   — vanilla transformer (learned positions, LayerNorm, GELU),
+                   the GPT-2 stand-in for Experiments 3/4/5 and Table 1/2.
+- ``copyback_*`` — Experiment 1 positional-selection task models.
+- ``kvret_*``    — Experiment 2 content-selection task models.
+- ``llama_*``    — LLaMA-style (RMSNorm, SwiGLU, RoPE, no bias) for
+                   Experiments 6/7/7b and Table 16/17, incl. GQA/MLA variants.
+- ``tinygqa_*``  — GQA (8q/2kv) vanilla model, the Mistral-7B stand-in for
+                   Experiment 8 (learned positions keep factored-key SVD
+                   semantics exact; see DESIGN.md on the RoPE caveat).
+- ``serve*``     — serving artifacts (prefill/decode) for the engine.
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch: str            # "vanilla" | "llama"
+    attn: str            # "mha" | "gqa" | "mla"
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int         # query heads
+    n_kv_heads: int      # kv heads (== n_heads for MHA)
+    d_select: int        # TOTAL query/key dims across query heads
+    d_ff: int
+    max_seq: int         # longest sequence any artifact of this config sees
+    # MLA-only:
+    d_c: int = 0         # latent dim (cached)
+    d_r: int = 0         # decoupled RoPE key dim (cached, shared across heads)
+
+    @property
+    def d_qk_head(self) -> int:
+        return self.d_select // self.n_heads
+
+    @property
+    def d_v_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def group(self) -> int:
+        """Query heads per KV head (GQA group size)."""
+        return self.n_heads // self.n_kv_heads
+
+    def validate(self) -> None:
+        assert self.d_select % self.n_heads == 0, self.name
+        assert self.d_model % self.n_heads == 0, self.name
+        assert self.n_heads % self.n_kv_heads == 0, self.name
+        if self.arch == "llama" and self.attn != "mla":
+            assert self.d_qk_head % 2 == 0, f"{self.name}: RoPE needs even d_qk_head"
+        if self.attn == "mla":
+            assert self.d_c > 0 and self.d_r > 0 and self.d_r % 2 == 0, self.name
+
+    # --- cache geometry (per token, per layer, in ELEMENTS) ---
+    def k_cache_dims(self) -> int:
+        if self.attn == "mla":
+            return self.d_c + self.d_r  # joint latent + rope key
+        return self.n_kv_heads * self.d_qk_head
+
+    def v_cache_dims(self) -> int:
+        if self.attn == "mla":
+            return 0  # values reconstructed from the latent
+        return self.n_kv_heads * self.d_v_head
+
+    def kv_budget(self) -> int:
+        """Per-token per-layer cache elements (the paper's 'KV budget')."""
+        return self.k_cache_dims() + self.v_cache_dims()
+
+
+def _v(name, vocab, d_model, n_layers, n_heads, d_select, d_ff, max_seq,
+       n_kv_heads=None):
+    return ModelConfig(
+        name=name, arch="vanilla",
+        attn="mha" if (n_kv_heads is None or n_kv_heads == n_heads) else "gqa",
+        vocab=vocab, d_model=d_model, n_layers=n_layers, n_heads=n_heads,
+        n_kv_heads=n_kv_heads if n_kv_heads is not None else n_heads,
+        d_select=d_select, d_ff=d_ff, max_seq=max_seq)
+
+
+def _l(name, vocab, d_model, n_layers, n_heads, d_select, d_ff, max_seq,
+       n_kv_heads=None, attn="mha", d_c=0, d_r=0):
+    return ModelConfig(
+        name=name, arch="llama", attn=attn, vocab=vocab, d_model=d_model,
+        n_layers=n_layers, n_heads=n_heads,
+        n_kv_heads=n_kv_heads if n_kv_heads is not None else n_heads,
+        d_select=d_select, d_ff=d_ff, max_seq=max_seq, d_c=d_c, d_r=d_r)
+
+
+def build_registry() -> dict:
+    cfgs = []
+
+    # Experiment 1 — copy-back (positional selection), Table 12.
+    for ds in (4, 8, 16, 32, 64):
+        cfgs.append(_v(f"copyback_ds{ds}", 32, 64, 2, 4, ds, 256, 64))
+
+    # Experiment 2 — key-value retrieval (content selection), Table 13.
+    for ds in (4, 8, 16, 32, 64):
+        cfgs.append(_v(f"kvret_ds{ds}", 48, 64, 4, 4, ds, 256, 24))
+
+    # Experiments 3/4/5 — tinylm, the GPT-2 stand-in, Tables 1/2/14/15.
+    # d_model 64 (the paper's own Exp 1-4 scale): the xla_extension 0.5.1
+    # CPU compiler is ~5x slower than modern jaxlib, so LM sweeps are sized
+    # for ~0.1-0.2 s/step on the 1-core testbed (DESIGN.md §2).
+    for ds in (8, 16, 32, 64):
+        cfgs.append(_v(f"tinylm_ds{ds}", 512, 64, 3, 8, ds, 256, 128))
+
+    # Experiments 6/7/7b — LLaMA-style, Tables 3/4/5/16 + Figs 1/2.
+    for ds in (8, 16, 32, 64):
+        cfgs.append(_l(f"llama_ds{ds}", 512, 64, 3, 4, ds, 192, 128))
+
+    # Table 17 — GQA and MLA baselines trained from scratch (LLaMA arch).
+    # MHA KV budget = 128 el/token/layer; gqa2 = 64 (50%), gqa1 = 32 (75%);
+    # mla56 = 64 (50%), mla36 = 44 (66%).
+    cfgs.append(_l("llama_gqa2", 512, 64, 3, 4, 64, 192, 128, n_kv_heads=2))
+    cfgs.append(_l("llama_gqa1", 512, 64, 3, 4, 64, 192, 128, n_kv_heads=1))
+    cfgs.append(_l("llama_mla56", 512, 64, 3, 4, 64, 192, 128,
+                   attn="mla", d_c=56, d_r=8))
+    cfgs.append(_l("llama_mla36", 512, 64, 3, 4, 64, 192, 128,
+                   attn="mla", d_c=36, d_r=8))
+
+    # Experiment 8 — tinygqa, the Mistral-7B stand-in (GQA 8q/2kv, learned
+    # positions so truncated-SVD key factoring is score-exact), Tables 7/8/9/19.
+    # d_qk_head 8; factored ranks {4,2,1} per kv head = d_K/{2,4,8}.
+    for ds in (8, 16, 32, 64):
+        cfgs.append(_v(f"tinygqa_ds{ds}", 512, 64, 3, 8, ds, 256, 128,
+                       n_kv_heads=2))
+
+    # Serving configs: full model and its factored (/4) deployment.
+    # max_seq here is the decode cache arena length N. Same family as
+    # tinylm so the serve_e2e example serves a genuinely trained model.
+    cfgs.append(_v("servefull", 512, 64, 3, 8, 64, 256, 256))
+    cfgs.append(_v("servethin", 512, 64, 3, 8, 16, 256, 256))
+
+    reg = {}
+    for c in cfgs:
+        c.validate()
+        assert c.name not in reg, c.name
+        reg[c.name] = c
+    return reg
+
+
+REGISTRY = build_registry()
+
+# Training batch/seq per config family (also recorded in the manifest).
+def train_geometry(cfg: ModelConfig):
+    """(batch, seq) used by train/qkft/evalloss/logits artifacts."""
+    fam = cfg.name.split("_")[0]
+    if fam == "copyback":
+        return 16, 32
+    if fam == "kvret":
+        return 32, 24
+    # LM families: sized for the 1-core CPU testbed (see DESIGN.md §2) —
+    # 512 tokens/step keeps a train step ~0.1s so full sweeps stay tractable.
+    return 8, 64
+
+
+DECODE_BATCHES = (1, 2, 4, 8, 16, 32)
+PREFILL_SEQ = 128  # prompt bucket for serving prefill (B=1)
+
+
+def config_dict(cfg: ModelConfig) -> dict:
+    d = asdict(cfg)
+    d["d_qk_head"] = cfg.d_qk_head
+    d["d_v_head"] = cfg.d_v_head
+    d["k_cache_dims"] = cfg.k_cache_dims()
+    d["v_cache_dims"] = cfg.v_cache_dims()
+    d["kv_budget"] = cfg.kv_budget()
+    return d

@@ -1,0 +1,255 @@
+"""Pallas asymmetric-attention kernels (Layer 1).
+
+The paper's hot spot: attention where the query/key dimension ``d_qk_head``
+is much smaller than the value dimension ``d_v_head`` (thin keys, full
+values). Two kernels:
+
+- :func:`pallas_attention_prefill` — causal flash attention over a prompt,
+  online-softmax so the (S, S) score matrix never materializes.
+- :func:`pallas_attention_decode` — one query token against a dense KV
+  arena, streaming the *thin* key cache in tiles.
+
+TPU adaptation (DESIGN.md §7). The paper's H100 framing (warps, SRAM tiles,
+HBM roofline) maps to TPU as:
+
+- BlockSpecs express the HBM->VMEM schedule the paper expressed with
+  threadblocks: the grid walks (batch, q-head, q-tile, kv-tile); K tiles are
+  (block_k, d_qk_head) — 4x smaller than full-dim keys at d_select=d/4, so
+  a 4x longer context fits per VMEM residency.
+- GQA is expressed in the *index map* (kv head = q head // group), never by
+  materializing repeated K/V in HBM.
+- The online-softmax accumulator lives in revisited output blocks
+  (``dimension_semantics``: the kv-tile axis is a reduction axis), the
+  canonical Pallas reduction pattern.
+- MXU note: QK^T contracts over d_qk_head in {2..32}, under-filling the
+  128-wide MXU contraction; thin keys deliberately trade contraction fill
+  for 4x less K-cache bandwidth — the right trade for bandwidth-bound
+  decode. Lane padding for real-TPU Mosaic lowering would pad d_qk_head to
+  the 8-sublane multiple; under ``interpret=True`` (mandatory here: the CPU
+  PJRT plugin cannot run Mosaic custom-calls) shapes are unconstrained.
+
+Correctness is pinned to ``ref.py`` by ``python/tests/test_kernel.py``
+(hypothesis sweeps shapes/dtypes/group sizes).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _cdiv(a, b):
+    return (a + b - 1) // b
+
+
+# ---------------------------------------------------------------------------
+# Prefill kernel
+# ---------------------------------------------------------------------------
+
+def _prefill_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, m_ref, l_ref, *,
+                    scale, block_q, block_k, n_k_blocks, causal):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[0, 0]                      # (block_q, d_qk)
+    k = k_ref[0, 0]                      # (block_k, d_qk)
+    v = v_ref[0, 0]                      # (block_k, d_v)
+    s = jnp.dot(q, k.T) * scale          # (block_q, block_k)
+    s = s + bias_ref[0][None, :]         # length mask: 0 valid / NEG_INF pad
+    if causal:
+        qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (block_q, block_k), 0)
+        kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (block_q, block_k), 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+    m_prev = m_ref[0, 0]                 # (block_q,)
+    l_prev = l_ref[0, 0]
+    o_prev = o_ref[0, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + p.sum(axis=-1)
+    o_new = o_prev * alpha[:, None] + jnp.dot(p, v)
+    m_ref[0, 0] = m_new
+    l_ref[0, 0] = l_new
+
+    @pl.when(ik == n_k_blocks - 1)
+    def _final():
+        o_ref[0, 0] = o_new / l_new[:, None]
+
+    @pl.when(ik != n_k_blocks - 1)
+    def _mid():
+        o_ref[0, 0] = o_new
+
+
+def pallas_attention_prefill(q, k, v, lengths=None, causal=True,
+                             block_q=32, block_k=32, interpret=True):
+    """Flash-style asymmetric attention. Shapes as in ref.attention_prefill.
+
+    q: (B, H, S, dqk)  k: (B, Hkv, S, dqk)  v: (B, Hkv, S, dv) -> (B, H, S, dv)
+    """
+    b, h, s, dqk = q.shape
+    hkv = k.shape[1]
+    dv = v.shape[3]
+    group = h // hkv
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    nq, nk = s // block_q, s // block_k
+    scale = 1.0 / float(dqk) ** 0.5
+
+    if lengths is None:
+        bias = jnp.zeros((b, s), q.dtype)
+    else:
+        bias = jnp.where(jnp.arange(s)[None, :] < lengths[:, None],
+                         0.0, NEG_INF).astype(q.dtype)
+
+    kernel = functools.partial(
+        _prefill_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        n_k_blocks=nk, causal=causal)
+    grid = (b, h, nq, nk)
+    out, _, _ = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dqk), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, dqk),
+                         lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, dv),
+                         lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+            pl.BlockSpec((1, block_k), lambda ib, ih, iq, ik: (ib, ik)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, dv), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda ib, ih, iq, ik: (ib, ih, iq)),
+            pl.BlockSpec((1, 1, block_q), lambda ib, ih, iq, ik: (ib, ih, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s, dv), q.dtype),
+            jax.ShapeDtypeStruct((b, h, s), q.dtype),
+            jax.ShapeDtypeStruct((b, h, s), q.dtype),
+        ],
+        interpret=interpret,
+    )(q, k, v, bias)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode kernel
+# ---------------------------------------------------------------------------
+
+def _decode_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, m_ref, l_ref, *,
+                   scale, n_k_blocks):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[0, 0]                      # (dqk,)
+    k = k_ref[0, 0]                      # (block_k, dqk)
+    v = v_ref[0, 0]                      # (block_k, dv)
+    s = jnp.dot(k, q) * scale + bias_ref[0]     # (block_k,)
+
+    m_prev = m_ref[0, 0]
+    l_prev = l_ref[0, 0]
+    o_prev = o_ref[0, 0]
+    m_new = jnp.maximum(m_prev, s.max())
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + p.sum()
+    o_new = o_prev * alpha + jnp.dot(p, v)
+    m_ref[0, 0] = m_new
+    l_ref[0, 0] = l_new
+
+    @pl.when(ik == n_k_blocks - 1)
+    def _final():
+        o_ref[0, 0] = o_new / l_new
+
+    @pl.when(ik != n_k_blocks - 1)
+    def _mid():
+        o_ref[0, 0] = o_new
+
+
+def pallas_attention_decode(q, k_cache, v_cache, pos, block_k=64,
+                            interpret=True):
+    """One-token decode attention, streaming the thin key cache in tiles.
+
+    q: (B, H, dqk)  k_cache: (B, Hkv, N, dqk)  v_cache: (B, Hkv, N, dv)
+    pos: (B,) int32, current position (inclusive). -> (B, H, dv)
+    """
+    b, h, dqk = q.shape
+    hkv, n = k_cache.shape[1], k_cache.shape[2]
+    dv = v_cache.shape[3]
+    group = h // hkv
+    block_k = min(block_k, n)
+    assert n % block_k == 0, (n, block_k)
+    nk = n // block_k
+    scale = 1.0 / float(dqk) ** 0.5
+    bias = jnp.where(jnp.arange(n)[None, :] <= pos[:, None],
+                     0.0, NEG_INF).astype(q.dtype)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, n_k_blocks=nk)
+    out, _, _ = pl.pallas_call(
+        kernel,
+        grid=(b, h, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, dqk), lambda ib, ih, ik: (ib, ih, 0)),
+            pl.BlockSpec((1, 1, block_k, dqk),
+                         lambda ib, ih, ik: (ib, ih // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, dv),
+                         lambda ib, ih, ik: (ib, ih // group, ik, 0)),
+            pl.BlockSpec((1, block_k), lambda ib, ih, ik: (ib, ik)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, dv), lambda ib, ih, ik: (ib, ih, 0)),
+            pl.BlockSpec((1, 1), lambda ib, ih, ik: (ib, ih)),
+            pl.BlockSpec((1, 1), lambda ib, ih, ik: (ib, ih)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, dv), q.dtype),
+            jax.ShapeDtypeStruct((b, h), q.dtype),
+            jax.ShapeDtypeStruct((b, h), q.dtype),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, bias)
+    return out
+
+
+def vmem_report(cfg_name, b, h, hkv, s, dqk, dv, block_q=32, block_k=32,
+                bytes_per_el=2):
+    """Estimate per-core VMEM residency and MXU utilization for the prefill
+    kernel at a given geometry (real-TPU estimate; interpret mode gives no
+    hardware timing). Returns a dict merged into artifacts/kernel_report.json.
+    """
+    vmem = bytes_per_el * (
+        block_q * dqk +          # Q tile
+        block_k * dqk +          # K tile (thin!)
+        block_k * dv +           # V tile
+        block_q * dv +           # O accumulator
+        2 * block_q +            # m, l
+        block_k)                 # bias
+    # MXU: contraction fill for QK^T is dqk/128; for PV it's block_k/128.
+    return {
+        "config": cfg_name,
+        "block_q": block_q, "block_k": block_k,
+        "d_qk_head": dqk, "d_v_head": dv,
+        "vmem_bytes_per_block": vmem,
+        "mxu_qk_contraction_fill": min(1.0, dqk / 128.0),
+        "mxu_pv_contraction_fill": min(1.0, block_k / 128.0),
+        "k_tile_bytes": bytes_per_el * block_k * dqk,
+        "k_tile_bytes_full_dim": bytes_per_el * block_k * dv,
+        "k_bandwidth_saving": 1.0 - dqk / dv if dv else 0.0,
+    }

@@ -1,0 +1,67 @@
+"""Pure-jnp reference attention — the correctness oracle for the Pallas
+kernels, and the XLA-fused fast path used inside training artifacts.
+
+All functions implement *asymmetric* attention: the per-head query/key dim
+``d_qk_head`` is decoupled from the value dim ``d_v_head``. Softmax scaling
+uses ``1/sqrt(d_qk_head)`` (paper Eq. 4).
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def repeat_kv(x, group):
+    """(B, Hkv, S, D) -> (B, Hkv*group, S, D) by repeating each kv head."""
+    if group == 1:
+        return x
+    b, hkv, s, d = x.shape
+    x = jnp.broadcast_to(x[:, :, None], (b, hkv, group, s, d))
+    return x.reshape(b, hkv * group, s, d)
+
+
+def attention_prefill(q, k, v, lengths=None, causal=True):
+    """Causal (optionally length-masked) attention.
+
+    q: (B, H, S, dqk)   k: (B, Hkv, S, dqk)   v: (B, Hkv, S, dv)
+    lengths: (B,) int32 valid prompt lengths, or None.
+    Returns (B, H, S, dv).
+    """
+    b, h, s, dqk = q.shape
+    group = h // k.shape[1]
+    k = repeat_kv(k, group)
+    v = repeat_kv(v, group)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(
+        jnp.asarray(dqk, q.dtype))
+    if causal:
+        qi = jnp.arange(s)[:, None]
+        ki = jnp.arange(s)[None, :]
+        scores = jnp.where(qi >= ki, scores, NEG_INF)
+    if lengths is not None:
+        ki = jnp.arange(s)[None, None, None, :]
+        scores = jnp.where(ki < lengths[:, None, None, None], scores, NEG_INF)
+    w = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v)
+
+
+def attention_decode(q, k_cache, v_cache, pos):
+    """Single-token decode attention against a dense cache arena.
+
+    q: (B, H, dqk)  k_cache: (B, Hkv, N, dqk)  v_cache: (B, Hkv, N, dv)
+    pos: (B,) int32 — index of the CURRENT token; positions 0..pos are valid
+    (the current token's k/v are assumed already written at index pos).
+    Returns (B, H, dv).
+    """
+    b, h, dqk = q.shape
+    n = k_cache.shape[2]
+    group = h // k_cache.shape[1]
+    k = repeat_kv(k_cache, group)
+    v = repeat_kv(v_cache, group)
+    scores = jnp.einsum("bhd,bhkd->bhk", q, k) / jnp.sqrt(
+        jnp.asarray(dqk, q.dtype))
+    ki = jnp.arange(n)[None, None, :]
+    scores = jnp.where(ki <= pos[:, None, None], scores, NEG_INF)
+    w = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhk,bhkd->bhd", w, v)

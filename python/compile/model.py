@@ -1,0 +1,427 @@
+"""Layer 2 — the JAX model family (build-time only; lowered to HLO text).
+
+Implements every architecture the paper evaluates, all with *asymmetric
+attention* (per-head d_qk decoupled from d_v, paper §2.1):
+
+- ``vanilla``: learned positions, LayerNorm, GELU MLP, tied embeddings —
+  the GPT-2-shaped family (Experiments 1-5, 8).
+- ``llama``: RMSNorm, SwiGLU, RoPE, no biases, tied embeddings —
+  Experiments 6/7/7b and the Table 17 GQA/MLA baselines.
+
+Attention variants: MHA, GQA (n_kv_heads < n_heads), and MLA (joint latent
+d_c + decoupled-RoPE key d_r, DeepSeek-V2 style).
+
+Exported entry points (see aot.py) take FLAT positional tensor lists in the
+order given by :func:`param_specs`; the rust runtime reconstructs that order
+from artifacts/manifest.json.
+
+Attention implementation is selectable: ``impl="ref"`` (XLA-fused jnp, the
+default for training artifacts) or ``impl="pallas"`` (the Layer-1 kernel,
+lowered into the same HLO via interpret=True).
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import ref
+from .kernels.asym_attention import (pallas_attention_prefill,
+                                     pallas_attention_decode)
+
+# AdamW constants (baked into the train-step artifacts; lr/step are args).
+ADAM_B1 = 0.9
+ADAM_B2 = 0.95
+ADAM_EPS = 1e-8
+WEIGHT_DECAY = 0.1
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: tuple
+    init: str      # "normal" | "normal_scaled" | "zeros" | "ones"
+    std: float     # for normal inits
+    wd: bool       # weight decay applies
+    qk: bool       # part of the QK projection set (trainable in qkft mode)
+
+
+def param_specs(cfg: ModelConfig):
+    """Ordered parameter list — THE flattening order for all artifacts."""
+    d, h, hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    dqk, dvh = cfg.d_qk_head, cfg.d_v_head
+    scaled_std = 0.02 / (2.0 * cfg.n_layers) ** 0.5
+    sp = []
+
+    def p(name, shape, init="normal", std=0.02, wd=True, qk=False):
+        sp.append(ParamSpec(name, tuple(shape), init, std, wd, qk))
+
+    p("emb.tok", (cfg.vocab, d), wd=False)
+    if cfg.arch == "vanilla":
+        p("emb.pos", (cfg.max_seq, d), wd=False)
+    for i in range(cfg.n_layers):
+        L = f"l{i}"
+        p(f"{L}.ln1.g", (d,), init="ones", wd=False)
+        if cfg.arch == "vanilla":
+            p(f"{L}.ln1.b", (d,), init="zeros", wd=False)
+        if cfg.attn == "mla":
+            p(f"{L}.attn.wq", (d, h * dqk), qk=True)
+            p(f"{L}.attn.wqr", (d, h * cfg.d_r), qk=True)
+            p(f"{L}.attn.wdkv", (d, cfg.d_c))
+            p(f"{L}.attn.wkr", (d, cfg.d_r), qk=True)
+            p(f"{L}.attn.wuk", (cfg.d_c, h * dqk), qk=True)
+            p(f"{L}.attn.wuv", (cfg.d_c, h * dvh))
+        else:
+            p(f"{L}.attn.wq", (d, h * dqk), qk=True)
+            p(f"{L}.attn.wk", (d, hkv * dqk), qk=True)
+            p(f"{L}.attn.wv", (d, hkv * dvh))
+        p(f"{L}.attn.wo", (h * dvh, d), init="normal_scaled", std=scaled_std)
+        p(f"{L}.ln2.g", (d,), init="ones", wd=False)
+        if cfg.arch == "vanilla":
+            p(f"{L}.ln2.b", (d,), init="zeros", wd=False)
+        p(f"{L}.mlp.w1", (d, cfg.d_ff))
+        if cfg.arch == "llama":
+            p(f"{L}.mlp.w3", (d, cfg.d_ff))
+        p(f"{L}.mlp.w2", (cfg.d_ff, d), init="normal_scaled", std=scaled_std)
+    p("ln_f.g", (d,), init="ones", wd=False)
+    if cfg.arch == "vanilla":
+        p("ln_f.b", (d,), init="zeros", wd=False)
+    return sp
+
+
+def init_params(cfg: ModelConfig, key):
+    """Initialize params per the specs (python-side twin of rust model::init,
+    used by the python tests)."""
+    out = {}
+    for s in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if s.init == "zeros":
+            out[s.name] = jnp.zeros(s.shape, jnp.float32)
+        elif s.init == "ones":
+            out[s.name] = jnp.ones(s.shape, jnp.float32)
+        else:
+            out[s.name] = s.std * jax.random.normal(sub, s.shape, jnp.float32)
+    return out
+
+
+def unflatten(cfg: ModelConfig, flat):
+    specs = param_specs(cfg)
+    assert len(flat) == len(specs), (len(flat), len(specs))
+    return {s.name: t for s, t in zip(specs, flat)}
+
+
+def flatten(cfg: ModelConfig, params):
+    return [params[s.name] for s in param_specs(cfg)]
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def layer_norm(x, g, b):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def rms_norm(x, g):
+    return x * jax.lax.rsqrt((x * x).mean(-1, keepdims=True) + 1e-5) * g
+
+
+def rope(x, positions, base=10000.0):
+    """Rotary embedding, split-half convention.
+
+    x: (..., S, D) with D even; positions: (..., S) int32 broadcastable.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freqs = base ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+def _heads(x, n, dh):
+    """(B, S, n*dh) -> (B, n, S, dh)"""
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, dh).transpose(0, 2, 1, 3)
+
+
+def _unheads(x):
+    """(B, n, S, dh) -> (B, S, n*dh)"""
+    b, n, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, n * dh)
+
+
+# ---------------------------------------------------------------------------
+# Attention (per layer): projections + kernel + output proj
+# ---------------------------------------------------------------------------
+
+def _attn_qkv(cfg, p, L, xn, positions):
+    """Project to q, k, v head tensors (RoPE already applied where needed).
+
+    Returns q (B,H,S,dq'), k (B,Hkv,S,dq'), v (B,Hkv,S,dv) where for MLA the
+    q/k carry the concatenated [content | rope] dims.
+    """
+    h, hkv, dqk, dvh = cfg.n_heads, cfg.n_kv_heads, cfg.d_qk_head, cfg.d_v_head
+    if cfg.attn == "mla":
+        q = _heads(xn @ p[f"{L}.attn.wq"], h, dqk)
+        qr = _heads(xn @ p[f"{L}.attn.wqr"], h, cfg.d_r)
+        c = xn @ p[f"{L}.attn.wdkv"]                        # (B,S,d_c)
+        kr = xn @ p[f"{L}.attn.wkr"]                        # (B,S,d_r) shared
+        if cfg.arch == "llama":
+            qr = rope(qr, positions[:, None, :])
+            kr = rope(kr, positions)
+        k = _heads(c @ p[f"{L}.attn.wuk"], h, dqk)
+        v = _heads(c @ p[f"{L}.attn.wuv"], h, dvh)
+        kr_b = jnp.broadcast_to(kr[:, None], (kr.shape[0], h) + kr.shape[1:])
+        q = jnp.concatenate([q, qr], -1)
+        k = jnp.concatenate([k, kr_b], -1)
+        return q, k, v
+    q = _heads(xn @ p[f"{L}.attn.wq"], h, dqk)
+    k = _heads(xn @ p[f"{L}.attn.wk"], hkv, dqk)
+    v = _heads(xn @ p[f"{L}.attn.wv"], hkv, dvh)
+    if cfg.arch == "llama":
+        q = rope(q, positions[:, None, :])
+        k = rope(k, positions[:, None, :])
+    return q, k, v
+
+
+def _attention(cfg, q, k, v, lengths, impl):
+    if impl == "pallas":
+        return pallas_attention_prefill(q, k, v, lengths)
+    return ref.attention_prefill(q, k, v, lengths)
+
+
+def _mlp(cfg, p, L, xn):
+    if cfg.arch == "llama":
+        return (jax.nn.silu(xn @ p[f"{L}.mlp.w1"]) *
+                (xn @ p[f"{L}.mlp.w3"])) @ p[f"{L}.mlp.w2"]
+    return jax.nn.gelu(xn @ p[f"{L}.mlp.w1"]) @ p[f"{L}.mlp.w2"]
+
+
+def _norm(cfg, p, name, x):
+    if cfg.arch == "vanilla":
+        return layer_norm(x, p[f"{name}.g"], p[f"{name}.b"])
+    return rms_norm(x, p[f"{name}.g"])
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, p, tokens, lengths=None, impl="ref"):
+    """tokens: (B, S) int32 -> logits (B, S, vocab) float32."""
+    b, s = tokens.shape
+    x = p["emb.tok"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if cfg.arch == "vanilla":
+        x = x + p["emb.pos"][:s][None]
+    for i in range(cfg.n_layers):
+        L = f"l{i}"
+        xn = _norm(cfg, p, f"{L}.ln1", x)
+        q, k, v = _attn_qkv(cfg, p, L, xn, positions)
+        o = _attention(cfg, q, k, v, lengths, impl)
+        x = x + _unheads(o) @ p[f"{L}.attn.wo"]
+        xn = _norm(cfg, p, f"{L}.ln2", x)
+        x = x + _mlp(cfg, p, L, xn)
+    x = _norm(cfg, p, "ln_f", x)
+    return x @ p["emb.tok"].T  # tied embeddings
+
+
+def masked_nll(logits, targets, mask):
+    """Returns (sum of masked token NLLs, sum of mask)."""
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (lse - tgt) * mask
+    return nll.sum(), mask.sum()
+
+
+# ---------------------------------------------------------------------------
+# Exported entry factories (each returns fn taking flat positional args)
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, trainable="all", impl="ref"):
+    """AdamW train step over flat params.
+
+    args: *params, *m, *v, tokens(B,S)i32, targets(B,S)i32, mask(B,S)f32,
+          lr f32, step f32 (1-based, for bias correction)
+    returns: (loss, *new_params, *new_m, *new_v)
+    """
+    specs = param_specs(cfg)
+    n = len(specs)
+    train_mask = [s.qk if trainable == "qk" else True for s in specs]
+
+    def loss_fn(plist, tokens, targets, mask):
+        # freeze non-trainable params so backward prunes their grads
+        plist = [t if tr else jax.lax.stop_gradient(t)
+                 for t, tr in zip(plist, train_mask)]
+        logits = forward(cfg, unflatten(cfg, plist), tokens, impl=impl)
+        s, c = masked_nll(logits, targets, mask)
+        return s / c
+
+    def step_fn(*args):
+        plist = list(args[:n])
+        mlist = list(args[n:2 * n])
+        vlist = list(args[2 * n:3 * n])
+        tokens, targets, mask, lr, step = args[3 * n:]
+        loss, grads = jax.value_and_grad(loss_fn)(plist, tokens, targets, mask)
+        bc1 = 1.0 - ADAM_B1 ** step
+        bc2 = 1.0 - ADAM_B2 ** step
+        new_p, new_m, new_v = [], [], []
+        for sp, tr, pt, mt, vt, gt in zip(specs, train_mask, plist, mlist,
+                                          vlist, grads):
+            if not tr:
+                new_p.append(pt); new_m.append(mt); new_v.append(vt)
+                continue
+            mt = ADAM_B1 * mt + (1 - ADAM_B1) * gt
+            vt = ADAM_B2 * vt + (1 - ADAM_B2) * gt * gt
+            upd = (mt / bc1) / (jnp.sqrt(vt / bc2) + ADAM_EPS)
+            if sp.wd:
+                upd = upd + WEIGHT_DECAY * pt
+            new_p.append(pt - lr * upd)
+            new_m.append(mt)
+            new_v.append(vt)
+        return tuple([loss] + new_p + new_m + new_v)
+
+    return step_fn
+
+
+def make_evalloss(cfg: ModelConfig, impl="ref"):
+    """args: *params, tokens, targets, mask -> (sum_nll, sum_mask)"""
+    n = len(param_specs(cfg))
+
+    def fn(*args):
+        p = unflatten(cfg, list(args[:n]))
+        tokens, targets, mask = args[n:]
+        logits = forward(cfg, p, tokens)
+        s, c = masked_nll(logits, targets, mask)
+        return (s, c)
+
+    return fn
+
+
+def make_logits(cfg: ModelConfig, impl="ref"):
+    """args: *params, tokens -> logits (B,S,V)"""
+    n = len(param_specs(cfg))
+
+    def fn(*args):
+        p = unflatten(cfg, list(args[:n]))
+        tokens = args[n]
+        return (forward(cfg, p, tokens, impl=impl),)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with dense cache arenas
+#
+# Cache layout (flat trailing dim, mirrored by rust coordinator::kvcache):
+#   k_cache: (L, B, N, KD)  KD = n_kv_heads * d_qk_head
+#   v_cache: (L, B, N, VD)  VD = n_kv_heads * d_v_head
+# ---------------------------------------------------------------------------
+
+def _cache_dims(cfg):
+    assert cfg.attn != "mla", "MLA serving artifacts not exported (see DESIGN)"
+    return cfg.n_kv_heads * cfg.d_qk_head, cfg.n_kv_heads * cfg.d_v_head
+
+
+def make_prefill(cfg: ModelConfig, seq, impl="ref"):
+    """Single-request prefill.
+
+    args: *params, tokens (1, seq) i32, length () i32
+    returns: (last_logits (1, vocab), k_cache (L, seq, KD), v_cache (L, seq, VD))
+
+    last_logits is taken at position length-1. Cache rows >= length are
+    zeroed (the rust cache manager only copies rows < length anyway).
+    """
+    n = len(param_specs(cfg))
+    kd, vd = _cache_dims(cfg)
+
+    def fn(*args):
+        p = unflatten(cfg, list(args[:n]))
+        tokens, length = args[n], args[n + 1]
+        b, s = tokens.shape
+        lengths = jnp.reshape(length, (1,)).astype(jnp.int32)
+        x = p["emb.tok"][tokens]
+        positions = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        if cfg.arch == "vanilla":
+            x = x + p["emb.pos"][:s][None]
+        kcs, vcs = [], []
+        valid = (jnp.arange(s) < length)[None, :, None].astype(jnp.float32)
+        for i in range(cfg.n_layers):
+            L = f"l{i}"
+            xn = _norm(cfg, p, f"{L}.ln1", x)
+            q, k, v = _attn_qkv(cfg, p, L, xn, positions)
+            kcs.append((_unheads(k) * valid)[0])   # (seq, KD)
+            vcs.append((_unheads(v) * valid)[0])
+            if impl == "pallas":
+                o = pallas_attention_prefill(q, k, v, lengths)
+            else:
+                o = ref.attention_prefill(q, k, v, lengths)
+            x = x + _unheads(o) @ p[f"{L}.attn.wo"]
+            xn = _norm(cfg, p, f"{L}.ln2", x)
+            x = x + _mlp(cfg, p, L, xn)
+        x = _norm(cfg, p, "ln_f", x)
+        last = x[0, length - 1][None]              # (1, d)
+        logits = last @ p["emb.tok"].T
+        return (logits, jnp.stack(kcs), jnp.stack(vcs))
+
+    return fn
+
+
+def make_decode(cfg: ModelConfig, batch, impl="ref"):
+    """Batched single-token decode against dense cache arenas.
+
+    args: *params, k_cache (L,B,N,KD), v_cache (L,B,N,VD),
+          tokens (B,) i32, pos (B,) i32   [pos = index of THIS token]
+    returns: (logits (B, vocab), k_cache', v_cache')
+    """
+    n = len(param_specs(cfg))
+    hkv, dqk, dvh = cfg.n_kv_heads, cfg.d_qk_head, cfg.d_v_head
+    N = cfg.max_seq
+
+    def write_row(cache_layer, row, pos):
+        """cache_layer (B,N,D), row (B,D), pos (B,) -> updated (B,N,D)."""
+        return jax.vmap(
+            lambda c, r, q: jax.lax.dynamic_update_slice(c, r[None], (q, 0))
+        )(cache_layer, row, pos)
+
+    def fn(*args):
+        p = unflatten(cfg, list(args[:n]))
+        k_cache, v_cache, tokens, pos = args[n:]
+        b = tokens.shape[0]
+        x = p["emb.tok"][tokens][:, None]            # (B,1,d)
+        positions = pos[:, None]                     # (B,1)
+        if cfg.arch == "vanilla":
+            x = x + jnp.take(p["emb.pos"], pos, axis=0)[:, None]
+        new_k, new_v = [], []
+        for i in range(cfg.n_layers):
+            L = f"l{i}"
+            xn = _norm(cfg, p, f"{L}.ln1", x)
+            q, k, v = _attn_qkv(cfg, p, L, xn, positions)  # (B,H,1,dqk) etc.
+            kc = write_row(k_cache[i], _unheads(k)[:, 0], pos)
+            vc = write_row(v_cache[i], _unheads(v)[:, 0], pos)
+            new_k.append(kc)
+            new_v.append(vc)
+            kh = kc.reshape(b, N, hkv, dqk).transpose(0, 2, 1, 3)
+            vh = vc.reshape(b, N, hkv, dvh).transpose(0, 2, 1, 3)
+            if impl == "pallas":
+                o = pallas_attention_decode(q[:, :, 0], kh, vh, pos)
+            else:
+                o = ref.attention_decode(q[:, :, 0], kh, vh, pos)
+            x = x + (o.reshape(b, 1, -1) @ p[f"{L}.attn.wo"])
+            xn = _norm(cfg, p, f"{L}.ln2", x)
+            x = x + _mlp(cfg, p, L, xn)
+        x = _norm(cfg, p, "ln_f", x)
+        logits = x[:, 0] @ p["emb.tok"].T
+        return (logits, jnp.stack(new_k), jnp.stack(new_v))
+
+    return fn

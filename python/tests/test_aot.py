@@ -1,0 +1,95 @@
+"""Export-path checks: the artifact plan is well-formed and the manifest
+written by aot.py is consistent with the configs/model param specs the rust
+runtime will rely on."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile.aot import artifact_plan, build_entry
+from compile.configs import REGISTRY, config_dict, train_geometry
+from compile import model as M
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_plan_names_unique():
+    plan = artifact_plan()
+    names = [n for n, _, _, _ in plan]
+    assert len(names) == len(set(names))
+    assert len(plan) > 80
+
+
+@pytest.mark.parametrize("kind,cfgname,geom", [
+    ("train", "copyback_ds4", {"b": 16, "s": 32}),
+    ("qkft", "tinylm_ds32", {"b": 8, "s": 64}),
+    ("evalloss", "tinylm_ds64", {"b": 8, "s": 64}),
+    ("logits", "kvret_ds8", {"b": 32, "s": 24}),
+    ("prefill", "servethin", {"s": 128}),
+    ("decode", "servethin", {"b": 4}),
+])
+def test_build_entry_specs(kind, cfgname, geom):
+    cfg = REGISTRY[cfgname]
+    fn, specs, in_names, out_names = build_entry(kind, cfg, geom)
+    assert len(specs) == len(in_names)
+    nparams = len(M.param_specs(cfg))
+    if kind in ("train", "qkft"):
+        assert len(specs) == 3 * nparams + 5
+    # parameter arg shapes must match the specs order exactly
+    for s, p in zip(specs[:nparams], M.param_specs(cfg)):
+        assert tuple(s.shape) == tuple(p.shape)
+
+
+def test_manifest_consistent_with_registry():
+    path = os.path.join(ART_DIR, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not exported (run `make artifacts`)")
+    with open(path) as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    for name_, cd in man["configs"].items():
+        cfg = REGISTRY[name_]
+        want = config_dict(cfg)
+        for k, v in want.items():
+            assert cd[k] == v, (name_, k)
+        specs = M.param_specs(cfg)
+        assert len(cd["params"]) == len(specs)
+        for got, sp in zip(cd["params"], specs):
+            assert got["name"] == sp.name
+            assert tuple(got["shape"]) == tuple(sp.shape)
+    for art in man["artifacts"]:
+        assert os.path.exists(os.path.join(ART_DIR, art["file"])), art["file"]
+        assert art["config"] in man["configs"]
+
+
+def test_manifest_decode_cache_shapes():
+    path = os.path.join(ART_DIR, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not exported")
+    with open(path) as f:
+        man = json.load(f)
+    for art in man["artifacts"]:
+        if art["kind"] != "decode":
+            continue
+        cfg = REGISTRY[art["config"]]
+        by_name = {i[0]: i for i in art["inputs"]}
+        assert by_name["k_cache"][2] == [
+            cfg.n_layers, art["geom"]["b"], cfg.max_seq, cfg.k_cache_dims()]
+        assert by_name["v_cache"][2] == [
+            cfg.n_layers, art["geom"]["b"], cfg.max_seq, cfg.v_cache_dims()]
+
+
+def test_hlo_text_is_parseable_header():
+    """Every exported artifact must be HLO text (starts with HloModule)."""
+    if not os.path.exists(os.path.join(ART_DIR, "manifest.json")):
+        pytest.skip("artifacts not exported")
+    count = 0
+    for fn in os.listdir(ART_DIR):
+        if fn.endswith(".hlo.txt"):
+            with open(os.path.join(ART_DIR, fn)) as f:
+                head = f.read(64)
+            assert head.startswith("HloModule"), fn
+            count += 1
+    assert count > 80

@@ -1,0 +1,15 @@
+//! Regenerates paper Figures 1/2 + Tables 3/4/5 (Experiments 7/7b:
+//! full-vs-thin from-scratch training trajectories at two token budgets,
+//! plus downstream probe parity). Quick budget; full protocol:
+//! `thinkeys experiments exp7`.
+use thinkeys::experiments::{exp67_llama, Opts};
+use thinkeys::runtime::Runtime;
+
+fn main() {
+    let rt = Runtime::new().expect("make artifacts first");
+    let opts = Opts::quick();
+    for t in exp67_llama::tables_3_4_figs(&rt, &opts).unwrap() {
+        t.print();
+    }
+    exp67_llama::table5(&rt, &opts).unwrap().print();
+}

@@ -1,0 +1,35 @@
+//! §12 prefill analysis: the analytical intensity model plus measured
+//! prefill latency of this stack, full vs factored keys (the QK^T FLOP
+//! saving shows up as faster prefill when compute-bound).
+use thinkeys::bench::{bench, fmt_s, Table};
+use thinkeys::coordinator::engine::Engine;
+use thinkeys::coordinator::router::synth_prompt;
+use thinkeys::coordinator::sampling::Sampler;
+use thinkeys::coordinator::sequence::Sequence;
+use thinkeys::experiments::analytical;
+use thinkeys::runtime::{ParamStore, Runtime};
+use thinkeys::substrate::rng::Rng;
+
+fn main() {
+    analytical::prefill_roofline().print();
+    let rt = Runtime::new().expect("make artifacts first");
+    let mut t = Table::new("Measured prefill latency (prompt=120)",
+                           &["config", "mean", "p99"]);
+    for cfg_name in ["servefull", "servethin"] {
+        let cfg = rt.manifest().config(cfg_name).unwrap().clone();
+        let params = ParamStore::init(&cfg, 42);
+        let mut eng = Engine::new(&rt, cfg_name, params, false,
+                                  Sampler::Greedy, 0).unwrap();
+        let mut rng = Rng::new(0);
+        let mut id = 0u64;
+        let st = bench(2, 12, || {
+            id += 1;
+            let mut seq = Sequence::new(
+                id, synth_prompt(120, cfg.vocab, &mut rng), 4, None);
+            eng.prefill(&mut seq).unwrap();
+            eng.drop_seq(seq.id);
+        });
+        t.row(&[cfg_name.to_string(), fmt_s(st.mean_s), fmt_s(st.p99_s)]);
+    }
+    t.print();
+}

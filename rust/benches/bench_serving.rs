@@ -1,0 +1,58 @@
+//! Serving-stack benchmark: closed-loop throughput + open-loop latency for
+//! full vs factored keys under identical KV budgets, plus the capacity
+//! comparison (the paper's "~60% more concurrent users"). Also exercises
+//! the Pallas-kernel decode path for the L1 perf comparison.
+use thinkeys::coordinator::engine::Engine;
+use thinkeys::coordinator::kvcache::{KvCacheConfig, KvCacheManager};
+use thinkeys::coordinator::router::Router;
+use thinkeys::coordinator::sampling::Sampler;
+use thinkeys::coordinator::scheduler::Scheduler;
+use thinkeys::datagen::arrival::closed_loop;
+use thinkeys::experiments::serving;
+use thinkeys::runtime::{ParamStore, Runtime};
+use thinkeys::bench::Table;
+
+fn main() {
+    let rt = Runtime::new().expect("make artifacts first");
+    let mut t = Table::new(
+        "Closed-loop serving under a fixed 2 MB KV budget",
+        &["config", "tok/s", "concurrent capacity (tokens)", "occupancy"],
+    );
+    for cfg_name in ["servefull", "servethin"] {
+        let cfg = rt.manifest().config(cfg_name).unwrap().clone();
+        let params = ParamStore::init(&cfg, 42);
+        let eng = Engine::new(&rt, cfg_name, params, false,
+                              Sampler::Greedy, 0).unwrap();
+        let kv = KvCacheManager::new(KvCacheConfig {
+            n_layers: cfg.n_layers,
+            k_dims: cfg.k_cache_dims,
+            v_dims: cfg.v_cache_dims,
+            block_tokens: 16,
+            bytes_per_el_k: 2.0,
+            bytes_per_el_v: 2.0,
+            budget_bytes: 2e6,
+        });
+        let capacity = kv.cfg.token_capacity();
+        let sched = Scheduler::new(eng, kv, 16);
+        let mut router = Router::new(sched);
+        let report = router
+            .run_closed_loop(&closed_loop(16, 32, 12), 0)
+            .unwrap();
+        t.row(&[
+            cfg_name.to_string(),
+            format!("{:.1}", report.gen_tokens_per_sec()),
+            capacity.to_string(),
+            format!("{:.2}", router.sched.engine.metrics.mean_occupancy()),
+        ]);
+    }
+    t.print();
+    serving::capacity_table().print();
+
+    // Pallas-kernel decode path (L1 lowered into the serving HLO)
+    let tok_ref = serving::decode_throughput(&rt, "servethin", 8, 10, false)
+        .unwrap();
+    let tok_pal = serving::decode_throughput(&rt, "servethin", 8, 10, true)
+        .unwrap();
+    println!("\ndecode b=8: ref-attention {:.1} tok/s vs pallas-kernel \
+              {:.1} tok/s (interpret-mode lowering)", tok_ref, tok_pal);
+}

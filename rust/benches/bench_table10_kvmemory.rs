@@ -1,0 +1,7 @@
+//! Regenerates paper Table 10 (KV GB/user at 128K and 1M context).
+use thinkeys::experiments::analytical;
+
+fn main() {
+    analytical::table10().print();
+    analytical::prefill_roofline().print();
+}

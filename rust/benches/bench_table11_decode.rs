@@ -1,0 +1,13 @@
+//! Regenerates paper Table 11: Eq. 10 predicted speedups (exact) plus
+//! measured decode throughput of this stack at batch 1..32, full vs
+//! factored keys. The paper's shape to confirm: speedup monotone in batch.
+use thinkeys::experiments::{serving, Opts};
+use thinkeys::runtime::Runtime;
+
+fn main() {
+    let rt = Runtime::new().expect("make artifacts first");
+    let opts = Opts::quick();
+    for t in serving::run(&rt, &opts).unwrap() {
+        t.print();
+    }
+}

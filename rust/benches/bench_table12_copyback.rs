@@ -1,0 +1,10 @@
+//! Regenerates paper Table 12 (Experiment 1: copy-back / positional
+//! selection by d_select). Quick budget; the full protocol is
+//! `thinkeys experiments exp1`.
+use thinkeys::experiments::{exp1_copyback, Opts};
+use thinkeys::runtime::Runtime;
+
+fn main() {
+    let rt = Runtime::new().expect("make artifacts first");
+    exp1_copyback::run(&rt, &Opts::quick()).unwrap().print();
+}

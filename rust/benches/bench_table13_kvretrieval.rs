@@ -1,0 +1,10 @@
+//! Regenerates paper Table 13 (Experiment 2: content-based key-value
+//! retrieval by d_select). Quick budget; full protocol:
+//! `thinkeys experiments exp2`.
+use thinkeys::experiments::{exp2_kvret, Opts};
+use thinkeys::runtime::Runtime;
+
+fn main() {
+    let rt = Runtime::new().expect("make artifacts first");
+    exp2_kvret::run(&rt, &Opts::quick()).unwrap().print();
+}

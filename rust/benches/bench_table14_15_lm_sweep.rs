@@ -1,0 +1,12 @@
+//! Regenerates paper Tables 14/15 (Experiments 3/4: d_select sweep in the
+//! overfit vs underfit corpus regimes). Quick budget; full protocol:
+//! `thinkeys experiments exp34`.
+use thinkeys::experiments::{exp34_lm_sweep, Opts};
+use thinkeys::runtime::Runtime;
+
+fn main() {
+    let rt = Runtime::new().expect("make artifacts first");
+    for t in exp34_lm_sweep::run(&rt, &Opts::quick()).unwrap() {
+        t.print();
+    }
+}

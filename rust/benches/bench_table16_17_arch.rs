@@ -1,0 +1,12 @@
+//! Regenerates paper Tables 16/17 (Experiment 6: LLaMA-arch d_select sweep
+//! + the GQA/MLA from-scratch comparison). Quick budget; full protocol:
+//! `thinkeys experiments exp6`.
+use thinkeys::experiments::{exp67_llama, Opts};
+use thinkeys::runtime::Runtime;
+
+fn main() {
+    let rt = Runtime::new().expect("make artifacts first");
+    let opts = Opts::quick();
+    exp67_llama::table16(&rt, &opts).unwrap().print();
+    exp67_llama::table17(&rt, &opts).unwrap().print();
+}

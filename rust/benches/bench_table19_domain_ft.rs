@@ -1,0 +1,14 @@
+//! Regenerates paper Table 19 + Tables 7/8 (Experiment 8 + §11: SVD+QK-FT
+//! on the GQA model and the gsm-mini domain-matched fine-tuning grid).
+//! Quick budget; full protocol: `thinkeys experiments exp8 exp19`.
+use thinkeys::experiments::{exp19_domain_ft, exp8_gqa, Opts};
+use thinkeys::runtime::Runtime;
+
+fn main() {
+    let rt = Runtime::new().expect("make artifacts first");
+    let opts = Opts::quick();
+    for t in exp8_gqa::run(&rt, &opts).unwrap() {
+        t.print();
+    }
+    exp19_domain_ft::run(&rt, &opts).unwrap().print();
+}

@@ -1,0 +1,11 @@
+//! Regenerates paper Table 1 (Experiment 5: SVD compression of the
+//! pretrained model — Both vs K-only vs Q-only by rank). The shape to
+//! confirm: K-only is far more forgiving than Q-only; both compounds.
+//! Quick budget; full protocol: `thinkeys experiments exp5`.
+use thinkeys::experiments::{exp5_svd, Opts};
+use thinkeys::runtime::Runtime;
+
+fn main() {
+    let rt = Runtime::new().expect("make artifacts first");
+    exp5_svd::table1(&rt, &Opts::quick()).unwrap().print();
+}

@@ -1,0 +1,10 @@
+//! Regenerates paper Table 2 (Experiment 5: SVD + QK-only fine-tuning
+//! recovery vs identically fine-tuned control). Quick budget; full
+//! protocol: `thinkeys experiments exp5`.
+use thinkeys::experiments::{exp5_svd, Opts};
+use thinkeys::runtime::Runtime;
+
+fn main() {
+    let rt = Runtime::new().expect("make artifacts first");
+    exp5_svd::table2(&rt, &Opts::quick()).unwrap().print();
+}

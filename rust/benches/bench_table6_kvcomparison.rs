@@ -1,0 +1,12 @@
+//! Regenerates paper Table 6 (analytical KV comparison @ LLaMA-7B/128K).
+//! Exact-number reproduction; also times the calculator itself.
+use thinkeys::bench::{bench, fmt_s};
+use thinkeys::experiments::analytical;
+
+fn main() {
+    analytical::table6().print();
+    let st = bench(10, 1000, || {
+        let _ = thinkeys::coordinator::roofline::table6_rows();
+    });
+    println!("\ncalculator: {} per eval", fmt_s(st.mean_s));
+}

@@ -1,0 +1,168 @@
+//! Benchmark harness (criterion is not in the vendored registry).
+//!
+//! Warmup + timed iterations with mean/p50/p99, plus an aligned table
+//! printer shared by all `rust/benches/bench_table*.rs` targets so their
+//! output mirrors the paper's tables.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub min_s: f64,
+}
+
+impl Stats {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        if self.mean_s == 0.0 {
+            0.0
+        } else {
+            items_per_iter / self.mean_s
+        }
+    }
+}
+
+/// Run `f` for `warmup` untimed + `iters` timed iterations.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / times.len().max(1) as f64;
+    let q = |p: f64| times[(p * (times.len() - 1) as f64).round() as usize];
+    Stats {
+        iters,
+        mean_s: mean,
+        p50_s: q(0.50),
+        p99_s: q(0.99),
+        min_s: times[0],
+    }
+}
+
+/// Time a single run of `f` (for long experiment steps).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Markdown-ish aligned table printer used by every bench target.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowf(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n## {}\n\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &widths));
+        }
+        let _ = ncol;
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format seconds human-readably.
+pub fn fmt_s(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.0}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0;
+        let st = bench(2, 10, || n += 1);
+        assert_eq!(n, 12);
+        assert_eq!(st.iters, 10);
+        assert!(st.min_s <= st.p50_s && st.p50_s <= st.p99_s);
+    }
+
+    #[test]
+    fn throughput() {
+        let st = Stats { iters: 1, mean_s: 0.5, p50_s: 0.5, p99_s: 0.5, min_s: 0.5 };
+        assert!((st.throughput(100.0) - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["a", "bbbb"]);
+        t.rowf(&["x", "y"]);
+        t.rowf(&["long", "z"]);
+        let r = t.render();
+        assert!(r.contains("## Demo"));
+        assert!(r.contains("| long | z    |"));
+    }
+
+    #[test]
+    fn fmt_s_ranges() {
+        assert!(fmt_s(2e-9).ends_with("ns"));
+        assert!(fmt_s(5e-5).ends_with("us"));
+        assert!(fmt_s(5e-2).ends_with("ms"));
+        assert!(fmt_s(2.0).ends_with('s'));
+    }
+}

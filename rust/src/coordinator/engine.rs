@@ -1,0 +1,358 @@
+//! Execution engine: runs the prefill/decode artifacts and owns the
+//! physical cache storage.
+//!
+//! HLO executables are shape-specialized, so decode runs over *batch
+//! buckets* {1,2,4,8,16,32}; the engine keeps the active sequences packed
+//! into a dense group arena `(L, B, N, KD/VD)` matching the current bucket
+//! and "parks" per-sequence cache rows host-side when membership changes.
+//! In steady state (no joins/leaves) the previous step's output caches are
+//! fed straight back in — no repacking.
+//!
+//! The *thin* K arena is the paper's saving made concrete: `KD =
+//! n_kv_heads · d_qk_head` is 4x smaller for `servethin` than `servefull`
+//! while `VD` is identical.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::metrics::EngineMetrics;
+use crate::coordinator::sampling::Sampler;
+use crate::coordinator::sequence::{SeqId, Sequence};
+use crate::runtime::client::{literal_to_tensor, Arg, Runtime};
+use crate::runtime::manifest::ConfigEntry;
+use crate::runtime::params::ParamStore;
+use crate::substrate::rng::Rng;
+use crate::substrate::tensor::{Tensor, TensorI32};
+
+/// Per-sequence parked cache rows: `(L, len, D)` row-major.
+#[derive(Clone, Debug)]
+struct Parked {
+    len: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+pub struct Engine<'rt> {
+    rt: &'rt Runtime,
+    pub cfg: ConfigEntry,
+    /// Model weights (read-only once the engine is built — the param
+    /// literals below are converted a single time; see §Perf).
+    pub params: ParamStore,
+    pub pallas: bool,
+    pub sampler: Sampler,
+    rng: Rng,
+    /// Pre-converted parameter literals (L3-opt-1: params never change at
+    /// serve time, so the host->literal conversion happens once, not per
+    /// step).
+    param_lits: Vec<xla::Literal>,
+    /// Steady-state cache literals (L3-opt-2: while group membership is
+    /// unchanged, the previous step's output caches are fed straight back
+    /// without literal<->tensor round trips).
+    k_lit: Option<xla::Literal>,
+    v_lit: Option<xla::Literal>,
+    // group state
+    lanes: Vec<Option<SeqId>>,
+    k_group: Tensor,
+    v_group: Tensor,
+    parked: HashMap<SeqId, Parked>,
+    /// Cache rows actually written per live sequence (= tokens fed so far).
+    rows: HashMap<SeqId, usize>,
+    pub metrics: EngineMetrics,
+}
+
+impl<'rt> Engine<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg_name: &str, params: ParamStore,
+               pallas: bool, sampler: Sampler, seed: u64) -> Result<Engine<'rt>> {
+        let cfg = rt.manifest().config(cfg_name)?.clone();
+        params.check_matches(&cfg)?;
+        let param_lits = params
+            .tensors
+            .iter()
+            .map(crate::runtime::client::tensor_to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Engine {
+            rt,
+            cfg,
+            params,
+            pallas,
+            sampler,
+            rng: Rng::new(seed),
+            param_lits,
+            k_lit: None,
+            v_lit: None,
+            lanes: Vec::new(),
+            k_group: Tensor::zeros(&[0]),
+            v_group: Tensor::zeros(&[0]),
+            parked: HashMap::new(),
+            rows: HashMap::new(),
+            metrics: EngineMetrics::default(),
+        })
+    }
+
+    pub fn max_context(&self) -> usize {
+        self.cfg.max_seq
+    }
+
+    pub fn max_prompt(&self) -> usize {
+        self.rt.manifest().prefill_seq
+    }
+
+    fn param_args(&self) -> Vec<Arg<'_>> {
+        self.param_lits.iter().map(Arg::L).collect()
+    }
+
+    /// Prefill a queued sequence: fill its cache rows, sample the first
+    /// token. The sequence transitions to Decoding (or Finished if the
+    /// first token ends it).
+    pub fn prefill(&mut self, seq: &mut Sequence) -> Result<()> {
+        let s = self.max_prompt();
+        let p = seq.prompt.len();
+        if p > s {
+            bail!("prompt {p} exceeds prefill bucket {s}");
+        }
+        if p + seq.max_new > self.cfg.max_seq {
+            bail!(
+                "prompt {p} + max_new {} exceeds context {}",
+                seq.max_new, self.cfg.max_seq
+            );
+        }
+        let mut toks = vec![0i32; s];
+        toks[..p].copy_from_slice(&seq.prompt);
+        let tokens = TensorI32::new(&[1, s], toks);
+        let artifact = self.rt.manifest().prefill_name(&self.cfg.name, self.pallas);
+        let t0 = std::time::Instant::now();
+        let mut args = self.param_args();
+        args.push(Arg::I(&tokens));
+        args.push(Arg::ScalarI(p as i32));
+        let outs = self.rt.execute(&artifact, &args)?;
+        self.metrics.prefill.record(t0.elapsed());
+        self.metrics.prefill_tokens += p as u64;
+        let logits = literal_to_tensor(&outs[0])?; // (1, V)
+        let kc = literal_to_tensor(&outs[1])?; // (L, S, KD)
+        let vc = literal_to_tensor(&outs[2])?; // (L, S, VD)
+
+        // park rows 0..p
+        let (l, kd, vd) = (self.cfg.n_layers, self.cfg.k_cache_dims,
+                           self.cfg.v_cache_dims);
+        let mut parked = Parked {
+            len: p,
+            k: vec![0.0; l * p * kd],
+            v: vec![0.0; l * p * vd],
+        };
+        for li in 0..l {
+            let ksrc = &kc.data[li * s * kd..(li * s + p) * kd];
+            parked.k[li * p * kd..(li + 1) * p * kd].copy_from_slice(ksrc);
+            let vsrc = &vc.data[li * s * vd..(li * s + p) * vd];
+            parked.v[li * p * vd..(li + 1) * p * vd].copy_from_slice(vsrc);
+        }
+        self.parked.insert(seq.id, parked);
+        self.rows.insert(seq.id, p);
+
+        let tok = self.sampler.sample(&logits.data, &mut self.rng);
+        seq.state = crate::coordinator::sequence::SeqState::Decoding;
+        seq.push_token(tok);
+        Ok(())
+    }
+
+    /// Smallest exported decode bucket that fits `n` lanes.
+    fn bucket_for(&self, n: usize) -> Result<usize> {
+        self.rt
+            .manifest()
+            .decode_batches
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no decode bucket >= {n} (max {:?})",
+                    self.rt.manifest().decode_batches.last()
+                )
+            })
+    }
+
+    /// Write a parked sequence's rows into group lane `lane`.
+    fn unpark_into(&mut self, id: SeqId, lane: usize) {
+        let (l, n) = (self.cfg.n_layers, self.cfg.max_seq);
+        let (kd, vd) = (self.cfg.k_cache_dims, self.cfg.v_cache_dims);
+        let b = self.lanes.len();
+        let p = self.parked.get(&id).expect("unpark of unknown seq");
+        for li in 0..l {
+            for t in 0..p.len {
+                let gk = ((li * b + lane) * n + t) * kd;
+                self.k_group.data[gk..gk + kd].copy_from_slice(
+                    &p.k[(li * p.len + t) * kd..(li * p.len + t + 1) * kd]);
+                let gv = ((li * b + lane) * n + t) * vd;
+                self.v_group.data[gv..gv + vd].copy_from_slice(
+                    &p.v[(li * p.len + t) * vd..(li * p.len + t + 1) * vd]);
+            }
+        }
+    }
+
+    /// Copy a lane's live rows back into the parked store.
+    fn park_from(&mut self, id: SeqId, lane: usize, len: usize) {
+        let (l, n) = (self.cfg.n_layers, self.cfg.max_seq);
+        let (kd, vd) = (self.cfg.k_cache_dims, self.cfg.v_cache_dims);
+        let b = self.lanes.len();
+        let mut parked = Parked {
+            len,
+            k: vec![0.0; l * len * kd],
+            v: vec![0.0; l * len * vd],
+        };
+        for li in 0..l {
+            for t in 0..len {
+                let gk = ((li * b + lane) * n + t) * kd;
+                parked.k[(li * len + t) * kd..(li * len + t + 1) * kd]
+                    .copy_from_slice(&self.k_group.data[gk..gk + kd]);
+                let gv = ((li * b + lane) * n + t) * vd;
+                parked.v[(li * len + t) * vd..(li * len + t + 1) * vd]
+                    .copy_from_slice(&self.v_group.data[gv..gv + vd]);
+            }
+        }
+        self.parked.insert(id, parked);
+    }
+
+    /// Re-pack the decode group to hold exactly the `active` sequence ids
+    /// (in order), parking every current member's live rows first so no
+    /// cache state is lost on membership changes (including preemption).
+    fn regroup(&mut self, active: &[SeqId]) -> Result<()> {
+        let current: Vec<SeqId> = self.lanes.iter().flatten().copied().collect();
+        if current == active && !self.lanes.is_empty() {
+            return Ok(());
+        }
+        // park all current members (their latest rows live in the group)
+        let to_park: Vec<(SeqId, usize)> = self
+            .lanes
+            .iter()
+            .enumerate()
+            .filter_map(|(lane, s)| s.map(|id| (id, lane)))
+            .collect();
+        for (id, lane) in to_park {
+            if let Some(&rows) = self.rows.get(&id) {
+                self.park_from(id, lane, rows);
+            }
+        }
+        // build the new group
+        let bucket = self.bucket_for(active.len())?;
+        let (l, n) = (self.cfg.n_layers, self.cfg.max_seq);
+        let (kd, vd) = (self.cfg.k_cache_dims, self.cfg.v_cache_dims);
+        self.lanes = vec![None; bucket];
+        self.k_group = Tensor::zeros(&[l, bucket, n, kd]);
+        self.v_group = Tensor::zeros(&[l, bucket, n, vd]);
+        for (lane, &id) in active.iter().enumerate() {
+            self.lanes[lane] = Some(id);
+            self.unpark_into(id, lane);
+        }
+        self.metrics.regroups += 1;
+        Ok(())
+    }
+
+    /// One continuous-batching decode step over the given active
+    /// sequences. Samples and records one token per sequence.
+    pub fn decode_step(&mut self, seqs: &mut [&mut Sequence]) -> Result<()> {
+        if seqs.is_empty() {
+            return Ok(());
+        }
+        for s in seqs.iter() {
+            if s.len() >= self.cfg.max_seq {
+                bail!("sequence {} exceeds context arena", s.id);
+            }
+        }
+        let active: Vec<SeqId> = seqs.iter().map(|s| s.id).collect();
+        let current: Vec<SeqId> =
+            self.lanes.iter().flatten().copied().collect();
+        if current != active || self.k_lit.is_none() {
+            // materialize the latest cache state for parking, then repack
+            if let (Some(kl), Some(vl)) = (self.k_lit.take(), self.v_lit.take())
+            {
+                self.k_group = literal_to_tensor(&kl)?;
+                self.v_group = literal_to_tensor(&vl)?;
+            }
+            self.regroup(&active)?;
+            self.k_lit = Some(crate::runtime::client::tensor_to_literal(
+                &self.k_group)?);
+            self.v_lit = Some(crate::runtime::client::tensor_to_literal(
+                &self.v_group)?);
+        }
+        let b = self.lanes.len();
+
+        let mut toks = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        for (lane, s) in seqs.iter().enumerate() {
+            toks[lane] = s.last_token();
+            pos[lane] = (s.len() - 1) as i32;
+        }
+        let tokens = TensorI32::new(&[b], toks);
+        let positions = TensorI32::new(&[b], pos);
+        let artifact =
+            self.rt.manifest().decode_name(&self.cfg.name, b, self.pallas);
+        let t0 = std::time::Instant::now();
+        let outs = {
+            let mut args = self.param_args();
+            args.push(Arg::L(self.k_lit.as_ref().unwrap()));
+            args.push(Arg::L(self.v_lit.as_ref().unwrap()));
+            args.push(Arg::I(&tokens));
+            args.push(Arg::I(&positions));
+            self.rt.execute(&artifact, &args)?
+        };
+        self.metrics.decode.record(t0.elapsed());
+        self.metrics.decode_steps += 1;
+        self.metrics.decode_tokens += seqs.len() as u64;
+        self.metrics.occupancy_sum += seqs.len() as f64 / b as f64;
+
+        let logits = literal_to_tensor(&outs[0])?; // (B, V)
+        let mut outs = outs;
+        self.v_lit = Some(outs.remove(2));
+        self.k_lit = Some(outs.remove(1));
+        let v = self.cfg.vocab;
+        for (lane, s) in seqs.iter_mut().enumerate() {
+            // this step wrote the row for the token we just fed
+            self.rows.insert(s.id, s.len());
+            let row = &logits.data[lane * v..(lane + 1) * v];
+            let tok = self.sampler.sample(row, &mut self.rng);
+            s.push_token(tok);
+        }
+        // finished sequences leave the group on the next regroup
+        Ok(())
+    }
+
+    /// Forget a sequence's cache storage.
+    pub fn drop_seq(&mut self, id: SeqId) {
+        self.parked.remove(&id);
+        self.rows.remove(&id);
+        // group tensors must be re-materialized from the literals on the
+        // next decode (membership changed)
+        for lane in self.lanes.iter_mut() {
+            if *lane == Some(id) {
+                *lane = None;
+            }
+        }
+    }
+
+    /// Bytes of host cache storage currently parked (diagnostics).
+    pub fn parked_bytes(&self) -> usize {
+        self.parked
+            .values()
+            .map(|p| (p.k.len() + p.v.len()) * 4)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Engine behaviour against real artifacts is covered by
+    // rust/tests/serving_e2e.rs; here we test the pure helpers.
+
+    #[test]
+    fn bucket_selection_logic() {
+        // mirror of bucket_for's search, without a Runtime
+        let buckets = [1usize, 2, 4, 8, 16, 32];
+        let pick = |n: usize| buckets.iter().copied().find(|&b| b >= n);
+        assert_eq!(pick(1), Some(1));
+        assert_eq!(pick(3), Some(4));
+        assert_eq!(pick(8), Some(8));
+        assert_eq!(pick(33), None);
+    }
+}

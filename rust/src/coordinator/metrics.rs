@@ -1,0 +1,125 @@
+//! Serving metrics: engine-level step timings and router-level per-request
+//! latency/throughput summaries.
+
+use crate::substrate::histogram::Histogram;
+
+#[derive(Clone, Debug, Default)]
+pub struct EngineMetrics {
+    pub prefill: Histogram,
+    pub decode: Histogram,
+    pub prefill_tokens: u64,
+    pub decode_tokens: u64,
+    pub decode_steps: u64,
+    pub regroups: u64,
+    /// Sum of (active/bucket) per decode step — mean = batch efficiency.
+    pub occupancy_sum: f64,
+}
+
+impl EngineMetrics {
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.decode_steps == 0 {
+            0.0
+        } else {
+            self.occupancy_sum / self.decode_steps as f64
+        }
+    }
+
+    pub fn decode_tokens_per_sec(&self) -> f64 {
+        let total_s = self.decode.mean_us() * self.decode.count() as f64 / 1e6;
+        if total_s == 0.0 {
+            0.0
+        } else {
+            self.decode_tokens as f64 / total_s
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "prefill: {} ({} tokens)\ndecode:  {} ({} tokens, {} steps, \
+             {:.2} occupancy, {} regroups)\ndecode throughput: {:.1} tok/s",
+            self.prefill.summary(),
+            self.prefill_tokens,
+            self.decode.summary(),
+            self.decode_tokens,
+            self.decode_steps,
+            self.mean_occupancy(),
+            self.regroups,
+            self.decode_tokens_per_sec()
+        )
+    }
+}
+
+/// Per-request latency summary produced by the router.
+#[derive(Clone, Debug, Default)]
+pub struct ServeReport {
+    pub n_requests: usize,
+    pub total_s: f64,
+    pub prompt_tokens: u64,
+    pub gen_tokens: u64,
+    pub ttft: Histogram,
+    pub e2e: Histogram,
+    pub rejected: usize,
+}
+
+impl ServeReport {
+    pub fn gen_tokens_per_sec(&self) -> f64 {
+        if self.total_s == 0.0 {
+            0.0
+        } else {
+            self.gen_tokens as f64 / self.total_s
+        }
+    }
+
+    pub fn requests_per_sec(&self) -> f64 {
+        if self.total_s == 0.0 {
+            0.0
+        } else {
+            self.n_requests as f64 / self.total_s
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{} requests in {:.2}s ({:.2} req/s, {:.1} gen tok/s, {} rejected)\n\
+             TTFT: {}\nE2E:  {}",
+            self.n_requests,
+            self.total_s,
+            self.requests_per_sec(),
+            self.gen_tokens_per_sec(),
+            self.rejected,
+            self.ttft.summary(),
+            self.e2e.summary()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_mean() {
+        let mut m = EngineMetrics::default();
+        m.decode_steps = 2;
+        m.occupancy_sum = 1.5;
+        assert!((m.mean_occupancy() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_zero_when_empty() {
+        let m = EngineMetrics::default();
+        assert_eq!(m.decode_tokens_per_sec(), 0.0);
+        let r = ServeReport::default();
+        assert_eq!(r.gen_tokens_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn reports_render() {
+        let m = EngineMetrics::default();
+        assert!(m.report().contains("decode throughput"));
+        let r = ServeReport { n_requests: 3, total_s: 1.5, gen_tokens: 30,
+                              ..Default::default() };
+        assert!(r.report().contains("3 requests"));
+        assert!((r.gen_tokens_per_sec() - 20.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,29 @@
+//! Layer 3 — the serving coordinator (the vLLM-shaped part of the paper).
+//!
+//! The paper's asymmetry is made physical here: the paged KV cache keeps
+//! *separate pools* for thin keys (r dims/token) and full values
+//! (d dims/token), the batcher schedules prefill/decode over static-shape
+//! buckets (HLO executables are shape-specialized), and the router admits
+//! requests against the KV memory budget — which is exactly where factored
+//! keys buy ~60% more concurrent users (paper §1, Table 10).
+//!
+//! Module map:
+//! - [`kvcache`]   — split-pool paged block allocator + accounting
+//! - [`sequence`]  — request/sequence lifecycle state
+//! - [`sampling`]  — greedy / temperature·top-k sampling
+//! - [`engine`]    — execution: prefill/decode artifacts + cache packing
+//! - [`scheduler`] — continuous batching policy over the engine
+//! - [`router`]    — front end: arrival traces → scheduler → metrics
+//! - [`metrics`]   — latency/throughput accounting
+//! - [`roofline`]  — paper Eq. 10 + Tables 6/10 analytical models
+//! - [`capacity`]  — concurrent-user capacity planning ("60% more users")
+
+pub mod kvcache;
+pub mod sequence;
+pub mod sampling;
+pub mod engine;
+pub mod scheduler;
+pub mod router;
+pub mod metrics;
+pub mod roofline;
+pub mod capacity;

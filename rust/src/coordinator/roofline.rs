@@ -1,0 +1,289 @@
+//! Analytical models from the paper, reproduced exactly:
+//!
+//! - **Eq. 10** decode bandwidth roofline:
+//!   `speedup(b) = (W + b·C_kv) / (W' + b·C'_kv)`
+//! - **Table 6**: KV cache comparison at LLaMA-7B/128K (bf16, GiB),
+//!   MHA vs thin keys vs GQA vs MLA vs GQA+thin.
+//! - **Table 10**: KV GB/user at 128K and 1M context (fp16, decimal GB,
+//!   128K = 128,000 as the paper's arithmetic implies).
+//! - **§12** prefill arithmetic-intensity model (compute-bound check).
+
+/// Generic per-token per-layer KV cache dims (elements).
+#[derive(Clone, Copy, Debug)]
+pub struct KvGeometry {
+    pub k_dims: usize,
+    pub v_dims: usize,
+}
+
+impl KvGeometry {
+    pub fn mha(d_model: usize) -> Self {
+        KvGeometry { k_dims: d_model, v_dims: d_model }
+    }
+
+    pub fn thin(d_model: usize, d_select: usize) -> Self {
+        KvGeometry { k_dims: d_select, v_dims: d_model }
+    }
+
+    pub fn gqa(n_kv_heads: usize, d_head: usize) -> Self {
+        KvGeometry {
+            k_dims: n_kv_heads * d_head,
+            v_dims: n_kv_heads * d_head,
+        }
+    }
+
+    pub fn gqa_thin(n_kv_heads: usize, d_head: usize, ratio: usize) -> Self {
+        KvGeometry {
+            k_dims: n_kv_heads * d_head / ratio,
+            v_dims: n_kv_heads * d_head,
+        }
+    }
+
+    /// MLA stores a joint latent + decoupled RoPE key; v_dims = 0.
+    pub fn mla(d_c: usize, d_h_r: usize) -> Self {
+        KvGeometry { k_dims: d_c + d_h_r, v_dims: 0 }
+    }
+
+    pub fn total_dims(&self) -> usize {
+        self.k_dims + self.v_dims
+    }
+
+    /// Cache bytes for a full context.
+    pub fn cache_bytes(&self, ctx: usize, layers: usize, bytes_per_el: f64)
+        -> f64 {
+        ctx as f64 * layers as f64 * self.total_dims() as f64 * bytes_per_el
+    }
+
+    pub fn k_bytes(&self, ctx: usize, layers: usize, bytes_per_el: f64) -> f64 {
+        ctx as f64 * layers as f64 * self.k_dims as f64 * bytes_per_el
+    }
+
+    pub fn v_bytes(&self, ctx: usize, layers: usize, bytes_per_el: f64) -> f64 {
+        ctx as f64 * layers as f64 * self.v_dims as f64 * bytes_per_el
+    }
+}
+
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+pub const GB: f64 = 1e9;
+
+/// Eq. 10: decode-step bytes = weights (shared) + per-sequence KV.
+pub fn eq10_speedup(w_bytes: f64, w_thin_bytes: f64, ckv_bytes: f64,
+                    ckv_thin_bytes: f64, batch: f64) -> f64 {
+    (w_bytes + batch * ckv_bytes) / (w_thin_bytes + batch * ckv_thin_bytes)
+}
+
+/// The b→∞ asymptote of Eq. 10.
+pub fn eq10_asymptote(ckv_bytes: f64, ckv_thin_bytes: f64) -> f64 {
+    ckv_bytes / ckv_thin_bytes
+}
+
+/// Table 6 row: (label, K GiB, V GiB, total GiB, saved %).
+pub fn table6_rows() -> Vec<(&'static str, f64, f64, f64, f64)> {
+    let (d, layers, ctx, b) = (4096usize, 32usize, 131072usize, 2.0);
+    let to_gib = |x: f64| x / GIB;
+    let geoms: Vec<(&'static str, KvGeometry)> = vec![
+        ("MHA (baseline)", KvGeometry::mha(d)),
+        ("Thin keys (d_select=d/4)", KvGeometry::thin(d, d / 4)),
+        ("GQA-8", KvGeometry::gqa(8, 128)),
+        ("MLA (d_c=512, d_h^R=64)", KvGeometry::mla(512, 64)),
+        ("GQA-8 + thin keys", KvGeometry::gqa_thin(8, 128, 4)),
+    ];
+    let base = geoms[0].1.cache_bytes(ctx, layers, b);
+    geoms
+        .into_iter()
+        .map(|(label, g)| {
+            let total = g.cache_bytes(ctx, layers, b);
+            (
+                label,
+                to_gib(g.k_bytes(ctx, layers, b)),
+                to_gib(g.v_bytes(ctx, layers, b)),
+                to_gib(total),
+                100.0 * (1.0 - total / base),
+            )
+        })
+        .collect()
+}
+
+/// Table 10 row: (context label, K GB, V GB, total GB, savings GB, savings %).
+pub fn table10_rows() -> Vec<(String, f64, f64, f64, f64, f64)> {
+    // fp16, decimal GB, 128K = 128,000 (paper arithmetic), 1M = 1,000,000.
+    let (d, layers, b) = (4096usize, 32usize, 2.0);
+    let mut rows = Vec::new();
+    for (ctx_label, ctx) in [("128K", 128_000usize), ("1M", 1_000_000usize)] {
+        let std = KvGeometry::mha(d);
+        let std_total = std.cache_bytes(ctx, layers, b) / GB;
+        for (variant, ds) in
+            [("standard", d), ("d_model/2", d / 2), ("d_model/4", d / 4)]
+        {
+            let g = KvGeometry::thin(d, ds);
+            let k = g.k_bytes(ctx, layers, b) / GB;
+            let v = g.v_bytes(ctx, layers, b) / GB;
+            let total = k + v;
+            rows.push((
+                format!("{ctx_label} {variant}"),
+                k,
+                v,
+                total,
+                std_total - total,
+                100.0 * (std_total - total) / std_total,
+            ));
+        }
+    }
+    rows
+}
+
+/// §12 prefill attention FLOPs for one layer at prompt length `s`
+/// (QK^T: 2·s²·d_qk per head; PV: 2·s²·d_v per head).
+pub fn prefill_attention_flops(s: usize, n_heads: usize, d_qk: usize,
+                               d_v: usize) -> f64 {
+    2.0 * (s as f64) * (s as f64) * (d_qk as f64 + d_v as f64)
+        * n_heads as f64
+}
+
+/// §12 prefill arithmetic intensity: attention FLOPs per byte of KV read
+/// for one layer at prompt length `s` (= 2s/bytes_per_el under this
+/// counting — linear in context, so long prompts are compute-bound).
+pub fn prefill_intensity(s: usize, n_heads: usize, d_qk: usize, d_v: usize,
+                         bytes_per_el: f64) -> f64 {
+    let kv_bytes =
+        (s as f64) * n_heads as f64 * (d_qk + d_v) as f64 * bytes_per_el;
+    prefill_attention_flops(s, n_heads, d_qk, d_v) / kv_bytes
+}
+
+/// Mistral-7B constants used by the paper's Table 11 prediction.
+#[derive(Clone, Copy, Debug)]
+pub struct MistralRoofline {
+    pub w_gb: f64,
+    pub ckv_mb: f64,
+}
+
+pub const MISTRAL: MistralRoofline = MistralRoofline { w_gb: 14.2, ckv_mb: 537.0 };
+
+/// Paper's published thin variants: (label, W' GB, C'_kv MB).
+pub fn mistral_thin_variants() -> Vec<(&'static str, f64, f64)> {
+    // r256: W'=13.2 GB, C'kv=336 MB (paper §4.2). r512 interpolated the
+    // same way: half the projection saving, half the K-cache saving.
+    vec![("r512", 13.7, 436.5), ("r256", 13.2, 336.0)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table6_matches_paper() {
+        let rows = table6_rows();
+        // MHA: 32 + 32 = 64 GiB
+        assert!((rows[0].1 - 32.0).abs() < 0.01);
+        assert!((rows[0].3 - 64.0).abs() < 0.01);
+        // thin: 8 + 32 = 40 GiB, 37.5% saved
+        assert!((rows[1].1 - 8.0).abs() < 0.01);
+        assert!((rows[1].3 - 40.0).abs() < 0.01);
+        assert!((rows[1].4 - 37.5).abs() < 0.1);
+        // GQA-8: 16 GiB total, 75%
+        assert!((rows[2].3 - 16.0).abs() < 0.01);
+        assert!((rows[2].4 - 75.0).abs() < 0.1);
+        // MLA: 4.5 GiB, 93%
+        assert!((rows[3].3 - 4.5).abs() < 0.01);
+        assert!((rows[3].4 - 93.0).abs() < 0.5);
+        // GQA+thin: 10 GiB, 84.4%
+        assert!((rows[4].3 - 10.0).abs() < 0.01);
+        assert!((rows[4].4 - 84.4).abs() < 0.1);
+    }
+
+    #[test]
+    fn table10_matches_paper() {
+        let rows = table10_rows();
+        // 128K standard: K 33.6, total 67.2
+        assert!((rows[0].1 - 33.6).abs() < 0.1);
+        assert!((rows[0].3 - 67.2).abs() < 0.1);
+        // 128K /2: total 50.4, saving 16.8 (25%)
+        assert!((rows[1].3 - 50.4).abs() < 0.1);
+        assert!((rows[1].4 - 16.8).abs() < 0.1);
+        assert!((rows[1].5 - 25.0).abs() < 0.1);
+        // 128K /4: total 42.0, saving 25.2 (37.5%)
+        assert!((rows[2].3 - 42.0).abs() < 0.1);
+        assert!((rows[2].5 - 37.5).abs() < 0.1);
+        // 1M standard: 524 GB; /2: 393; /4: 328
+        assert!((rows[3].3 - 524.0).abs() < 1.0);
+        assert!((rows[4].3 - 393.0).abs() < 1.0);
+        assert!((rows[5].3 - 328.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn eq10_monotone_in_batch_and_bounded() {
+        let (w, ck) = (MISTRAL.w_gb * GB, MISTRAL.ckv_mb * 1e6);
+        for (_, w_thin, ck_thin) in mistral_thin_variants() {
+            let (wt, ckt) = (w_thin * GB, ck_thin * 1e6);
+            let mut last = 0.0;
+            for b in [1.0, 4.0, 8.0, 16.0, 32.0, 256.0] {
+                let s = eq10_speedup(w, wt, ck, ckt, b);
+                assert!(s >= last, "not monotone at b={b}");
+                assert!(s <= eq10_asymptote(ck, ckt) + 1e-9);
+                last = s;
+            }
+        }
+        // r256 asymptote ~1.60x (paper §4.2)
+        let a = eq10_asymptote(537.0, 336.0);
+        assert!((a - 1.60).abs() < 0.02, "{a}");
+    }
+
+    #[test]
+    fn prefill_is_compute_bound_at_4k() {
+        // H100 ridge point is ~295 FLOP/byte (989 TFLOP/s / 3.35 TB/s);
+        // prefill at 4K context sits far above it -> compute-bound (§12).
+        let i = prefill_intensity(4096, 8, 128, 128, 2.0);
+        assert!(i > 2000.0, "{i}");
+        // reducing d_k 128 -> 32 cuts QK^T FLOPs 4x per head (paper §12):
+        let f_full = prefill_attention_flops(4096, 8, 128, 0);
+        let f_thin = prefill_attention_flops(4096, 8, 32, 0);
+        assert!((f_full / f_thin - 4.0).abs() < 1e-9);
+    }
+}
+
+#[cfg(test)]
+mod extra_tests {
+    use super::*;
+
+    #[test]
+    fn kv_geometry_composition_algebra() {
+        // gqa_thin == gqa with k_dims divided
+        let g = KvGeometry::gqa(8, 128);
+        let gt = KvGeometry::gqa_thin(8, 128, 4);
+        assert_eq!(gt.k_dims * 4, g.k_dims);
+        assert_eq!(gt.v_dims, g.v_dims);
+        // thin at ratio 1 is MHA
+        let t = KvGeometry::thin(4096, 4096);
+        let m = KvGeometry::mha(4096);
+        assert_eq!(t.total_dims(), m.total_dims());
+    }
+
+    #[test]
+    fn eq10_at_batch_zero_is_weight_ratio() {
+        let s = eq10_speedup(10.0, 8.0, 1.0, 0.5, 0.0);
+        assert!((s - 10.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_bytes_linear_in_context_and_width() {
+        let g = KvGeometry::mha(1024);
+        let b1 = g.cache_bytes(1000, 8, 2.0);
+        assert_eq!(g.cache_bytes(2000, 8, 2.0), 2.0 * b1);
+        assert_eq!(g.cache_bytes(1000, 8, 4.0), 2.0 * b1);
+        assert_eq!(g.cache_bytes(1000, 16, 2.0), 2.0 * b1);
+    }
+
+    #[test]
+    fn table6_internal_consistency() {
+        for (label, k, v, total, _saved) in table6_rows() {
+            assert!((k + v - total).abs() < 1e-9, "{label}");
+        }
+    }
+
+    #[test]
+    fn table10_savings_consistent() {
+        for (label, k, v, total, saved_gb, saved_pct) in table10_rows() {
+            assert!((k + v - total).abs() < 1e-9, "{label}");
+            assert!(saved_pct >= 0.0 && saved_gb >= -1e-9, "{label}");
+        }
+    }
+}

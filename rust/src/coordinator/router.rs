@@ -1,0 +1,107 @@
+//! Router: the serving front end. Feeds arrival traces into the scheduler
+//! (open-loop with real wall-clock pacing, or closed-loop for steady-state
+//! throughput) and aggregates per-request metrics.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::metrics::ServeReport;
+use crate::coordinator::scheduler::Scheduler;
+use crate::coordinator::sequence::{FinishReason, SeqState};
+use crate::datagen::arrival::RequestSpec;
+use crate::substrate::rng::Rng;
+
+/// Generates prompt token ids for a request spec (synthetic content).
+pub fn synth_prompt(len: usize, vocab: usize, rng: &mut Rng) -> Vec<i32> {
+    (0..len.max(1))
+        .map(|_| rng.range(crate::tokenizer::N_SPECIALS, vocab) as i32)
+        .collect()
+}
+
+pub struct Router<'rt> {
+    pub sched: Scheduler<'rt>,
+}
+
+impl<'rt> Router<'rt> {
+    pub fn new(sched: Scheduler<'rt>) -> Router<'rt> {
+        Router { sched }
+    }
+
+    /// Run a trace to completion. Requests are injected when their arrival
+    /// time elapses (relative to the run start); in between, the scheduler
+    /// keeps stepping. Returns the aggregate report.
+    pub fn run_trace(&mut self, trace: &[RequestSpec], seed: u64)
+        -> Result<ServeReport> {
+        let vocab = self.sched.engine.cfg.vocab;
+        let mut rng = Rng::new(seed);
+        let prompts: Vec<Vec<i32>> = trace
+            .iter()
+            .map(|r| synth_prompt(r.prompt_len, vocab, &mut rng))
+            .collect();
+        let t0 = Instant::now();
+        let mut next = 0usize;
+        let mut report = ServeReport::default();
+        while next < trace.len() || self.sched.has_work() {
+            let now = t0.elapsed().as_secs_f64();
+            while next < trace.len() && trace[next].arrive_s <= now {
+                self.sched.submit(
+                    prompts[next].clone(),
+                    trace[next].gen_len,
+                    None,
+                );
+                report.prompt_tokens += trace[next].prompt_len as u64;
+                next += 1;
+            }
+            if self.sched.has_work() {
+                self.sched.step()?;
+            } else if next < trace.len() {
+                // idle until the next arrival
+                let wait = trace[next].arrive_s - t0.elapsed().as_secs_f64();
+                if wait > 0.0 {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(
+                        wait.min(0.01),
+                    ));
+                }
+            }
+        }
+        report.total_s = t0.elapsed().as_secs_f64();
+        self.collect(&mut report);
+        Ok(report)
+    }
+
+    /// Closed-loop: all requests at t=0 (steady-state throughput).
+    pub fn run_closed_loop(&mut self, trace: &[RequestSpec], seed: u64)
+        -> Result<ServeReport> {
+        let vocab = self.sched.engine.cfg.vocab;
+        let mut rng = Rng::new(seed);
+        let t0 = Instant::now();
+        let mut report = ServeReport::default();
+        for r in trace {
+            let prompt = synth_prompt(r.prompt_len, vocab, &mut rng);
+            report.prompt_tokens += prompt.len() as u64;
+            self.sched.submit(prompt, r.gen_len, None);
+        }
+        self.sched.run_to_completion()?;
+        report.total_s = t0.elapsed().as_secs_f64();
+        self.collect(&mut report);
+        Ok(report)
+    }
+
+    fn collect(&self, report: &mut ServeReport) {
+        for seq in &self.sched.finished {
+            report.n_requests += 1;
+            report.gen_tokens += seq.generated.len() as u64;
+            if seq.state == SeqState::Finished(FinishReason::CacheOverflow) {
+                report.rejected += 1;
+                continue;
+            }
+            if let Some(t) = seq.ttft_s() {
+                report.ttft.record_us(t * 1e6);
+            }
+            if let Some(t) = seq.e2e_s() {
+                report.e2e.record_us(t * 1e6);
+            }
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! Token sampling from a logits row: greedy, temperature, top-k.
+
+use crate::substrate::mathutil::{argmax, softmax};
+use crate::substrate::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub enum Sampler {
+    Greedy,
+    /// temperature > 0; top_k == 0 means no truncation.
+    TopK { temperature: f32, top_k: usize },
+}
+
+impl Sampler {
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> i32 {
+        match *self {
+            Sampler::Greedy => argmax(logits) as i32,
+            Sampler::TopK { temperature, top_k } => {
+                assert!(temperature > 0.0);
+                let mut idx: Vec<usize> = (0..logits.len()).collect();
+                if top_k > 0 && top_k < logits.len() {
+                    idx.sort_unstable_by(|&a, &b| {
+                        logits[b].partial_cmp(&logits[a]).unwrap()
+                    });
+                    idx.truncate(top_k);
+                }
+                let mut probs: Vec<f32> =
+                    idx.iter().map(|&i| logits[i] / temperature).collect();
+                softmax(&mut probs);
+                let w: Vec<f64> = probs.iter().map(|&p| p as f64).collect();
+                idx[rng.categorical(&w)] as i32
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let mut rng = Rng::new(0);
+        let logits = vec![0.0, 3.0, -1.0, 2.9];
+        assert_eq!(Sampler::Greedy.sample(&logits, &mut rng), 1);
+    }
+
+    #[test]
+    fn topk_restricts_support() {
+        let mut rng = Rng::new(1);
+        let logits = vec![5.0, 4.9, -50.0, -50.0];
+        let s = Sampler::TopK { temperature: 1.0, top_k: 2 };
+        for _ in 0..100 {
+            let t = s.sample(&logits, &mut rng);
+            assert!(t == 0 || t == 1, "sampled {t}");
+        }
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let mut rng = Rng::new(2);
+        let logits = vec![1.0, 1.2, 0.8];
+        let s = Sampler::TopK { temperature: 0.01, top_k: 0 };
+        for _ in 0..50 {
+            assert_eq!(s.sample(&logits, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn high_temperature_spreads_mass() {
+        let mut rng = Rng::new(3);
+        let logits = vec![1.0, 1.2, 0.8];
+        let s = Sampler::TopK { temperature: 100.0, top_k: 0 };
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            seen[s.sample(&logits, &mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+}

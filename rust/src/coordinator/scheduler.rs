@@ -1,0 +1,157 @@
+//! Continuous-batching scheduler: admission against the KV budget, one
+//! prefill per scheduling round interleaved with decode steps, preemption
+//! on cache pressure.
+//!
+//! Admission reserves the *full* context (prompt + max_new) per sequence —
+//! the same per-user reservation the paper's Table 10 capacity math uses,
+//! which is exactly where thin keys admit more concurrent users.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use anyhow::Result;
+
+use crate::coordinator::engine::Engine;
+use crate::coordinator::kvcache::{KvCacheManager, SeqId};
+use crate::coordinator::sequence::{FinishReason, Sequence};
+
+pub struct Scheduler<'rt> {
+    pub engine: Engine<'rt>,
+    pub kv: KvCacheManager,
+    pub max_batch: usize,
+    next_id: SeqId,
+    waiting: VecDeque<Sequence>,
+    running: BTreeMap<SeqId, Sequence>,
+    pub finished: Vec<Sequence>,
+}
+
+impl<'rt> Scheduler<'rt> {
+    pub fn new(engine: Engine<'rt>, kv: KvCacheManager, max_batch: usize)
+        -> Scheduler<'rt> {
+        Scheduler {
+            engine,
+            kv,
+            max_batch,
+            next_id: 1,
+            waiting: VecDeque::new(),
+            running: BTreeMap::new(),
+            finished: Vec::new(),
+        }
+    }
+
+    /// Enqueue a request. Returns its sequence id.
+    pub fn submit(&mut self, prompt: Vec<i32>, max_new: usize, eos: Option<i32>)
+        -> SeqId {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.waiting.push_back(Sequence::new(id, prompt, max_new, eos));
+        id
+    }
+
+    pub fn n_waiting(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn n_running(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.waiting.is_empty() || !self.running.is_empty()
+    }
+
+    fn reservation(seq: &Sequence) -> usize {
+        seq.prompt.len() + seq.max_new
+    }
+
+    /// Admit from the waiting queue while budget and batch slots allow.
+    /// At most `max_prefills` prefills per round (prefill is expensive and
+    /// would starve decode otherwise).
+    fn admit(&mut self, max_prefills: usize) -> Result<usize> {
+        let mut admitted = 0;
+        while admitted < max_prefills
+            && self.running.len() < self.max_batch
+            && !self.waiting.is_empty()
+        {
+            let need = Self::reservation(self.waiting.front().unwrap());
+            if !self.kv.can_admit(need) {
+                break; // head-of-line blocking by design (FIFO fairness)
+            }
+            let mut seq = self.waiting.pop_front().unwrap();
+            self.kv.allocate(seq.id, need)?;
+            self.engine.prefill(&mut seq)?;
+            if seq.is_finished() {
+                self.kv.release(seq.id);
+                self.engine.drop_seq(seq.id);
+                self.finished.push(seq);
+            } else {
+                self.running.insert(seq.id, seq);
+            }
+            admitted += 1;
+        }
+        Ok(admitted)
+    }
+
+    /// One scheduling round: admit then one decode step over all running.
+    /// Returns the number of tokens generated this round.
+    pub fn step(&mut self) -> Result<usize> {
+        self.admit(1)?;
+        if self.running.is_empty() {
+            return Ok(0);
+        }
+        let mut seqs: Vec<&mut Sequence> = self.running.values_mut().collect();
+        self.engine.decode_step(&mut seqs)?;
+        let produced = seqs.len();
+        drop(seqs);
+        // retire finished sequences
+        let done: Vec<SeqId> = self
+            .running
+            .values()
+            .filter(|s| s.is_finished())
+            .map(|s| s.id)
+            .collect();
+        for id in done {
+            let seq = self.running.remove(&id).unwrap();
+            self.kv.release(id);
+            self.engine.drop_seq(id);
+            self.finished.push(seq);
+        }
+        Ok(produced)
+    }
+
+    /// Preempt the most recently admitted running sequence back to the
+    /// waiting queue (used under cache pressure when extension-based
+    /// accounting is enabled; with full reservation this is rare).
+    pub fn preempt_one(&mut self) -> Option<SeqId> {
+        let id = *self.running.keys().next_back()?;
+        let mut seq = self.running.remove(&id).unwrap();
+        self.kv.release(id);
+        self.engine.drop_seq(id);
+        // restart from scratch on re-admission
+        seq.generated.clear();
+        seq.state = crate::coordinator::sequence::SeqState::Queued;
+        self.waiting.push_front(seq);
+        Some(id)
+    }
+
+    /// Drain everything (closed-loop execution).
+    pub fn run_to_completion(&mut self) -> Result<()> {
+        let mut stall = 0usize;
+        while self.has_work() {
+            let before = self.finished.len();
+            self.step()?;
+            if self.finished.len() == before && self.n_running() == 0 {
+                stall += 1;
+                if stall > 2 {
+                    // waiting requests that can never be admitted
+                    while let Some(mut seq) = self.waiting.pop_front() {
+                        seq.finish(FinishReason::CacheOverflow);
+                        self.finished.push(seq);
+                    }
+                }
+            } else {
+                stall = 0;
+            }
+        }
+        Ok(())
+    }
+}

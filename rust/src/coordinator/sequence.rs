@@ -1,0 +1,172 @@
+//! Request/sequence lifecycle: a request enters Queued, is admitted and
+//! prefetched (Prefill), generates under continuous batching (Decoding),
+//! and finishes on EOS / max_tokens / cache pressure.
+
+use std::time::Instant;
+
+pub type SeqId = u64;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeqState {
+    Queued,
+    Decoding,
+    Finished(FinishReason),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    MaxTokens,
+    Eos,
+    CacheOverflow,
+}
+
+#[derive(Clone, Debug)]
+pub struct Sequence {
+    pub id: SeqId,
+    pub prompt: Vec<i32>,
+    pub generated: Vec<i32>,
+    pub max_new: usize,
+    pub eos: Option<i32>,
+    pub state: SeqState,
+    // timing
+    pub arrived: Instant,
+    pub first_token_at: Option<Instant>,
+    pub finished_at: Option<Instant>,
+}
+
+impl Sequence {
+    pub fn new(id: SeqId, prompt: Vec<i32>, max_new: usize, eos: Option<i32>)
+        -> Sequence {
+        assert!(!prompt.is_empty(), "empty prompt");
+        Sequence {
+            id,
+            prompt,
+            generated: Vec::new(),
+            max_new,
+            eos,
+            state: SeqState::Queued,
+            arrived: Instant::now(),
+            first_token_at: None,
+            finished_at: None,
+        }
+    }
+
+    /// Total tokens whose K/V rows exist (prompt + generated).
+    pub fn len(&self) -> usize {
+        self.prompt.len() + self.generated.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // a sequence always has a non-empty prompt
+    }
+
+    /// Index where the NEXT generated token's K/V row will be written.
+    pub fn next_pos(&self) -> usize {
+        self.len()
+    }
+
+    pub fn last_token(&self) -> i32 {
+        *self
+            .generated
+            .last()
+            .unwrap_or_else(|| self.prompt.last().unwrap())
+    }
+
+    pub fn is_finished(&self) -> bool {
+        matches!(self.state, SeqState::Finished(_))
+    }
+
+    /// Record a generated token; returns true if the sequence finished.
+    pub fn push_token(&mut self, tok: i32) -> bool {
+        if self.first_token_at.is_none() {
+            self.first_token_at = Some(Instant::now());
+        }
+        self.generated.push(tok);
+        if Some(tok) == self.eos {
+            self.finish(FinishReason::Eos);
+            return true;
+        }
+        if self.generated.len() >= self.max_new {
+            self.finish(FinishReason::MaxTokens);
+            return true;
+        }
+        false
+    }
+
+    pub fn finish(&mut self, why: FinishReason) {
+        self.state = SeqState::Finished(why);
+        self.finished_at = Some(Instant::now());
+    }
+
+    pub fn ttft_s(&self) -> Option<f64> {
+        self.first_token_at
+            .map(|t| t.duration_since(self.arrived).as_secs_f64())
+    }
+
+    pub fn e2e_s(&self) -> Option<f64> {
+        self.finished_at
+            .map(|t| t.duration_since(self.arrived).as_secs_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_max_tokens() {
+        let mut s = Sequence::new(1, vec![5, 6], 3, None);
+        assert_eq!(s.state, SeqState::Queued);
+        assert_eq!(s.next_pos(), 2);
+        assert!(!s.push_token(7));
+        assert!(!s.push_token(8));
+        assert!(s.push_token(9));
+        assert_eq!(s.state, SeqState::Finished(FinishReason::MaxTokens));
+        assert_eq!(s.generated, vec![7, 8, 9]);
+        assert_eq!(s.len(), 5);
+        assert!(s.ttft_s().is_some() && s.e2e_s().is_some());
+    }
+
+    #[test]
+    fn lifecycle_eos() {
+        let mut s = Sequence::new(2, vec![1], 10, Some(99));
+        assert!(!s.push_token(5));
+        assert!(s.push_token(99));
+        assert_eq!(s.state, SeqState::Finished(FinishReason::Eos));
+    }
+
+    #[test]
+    fn last_token_tracks_generation() {
+        let mut s = Sequence::new(3, vec![1, 2, 3], 5, None);
+        assert_eq!(s.last_token(), 3);
+        s.push_token(42);
+        assert_eq!(s.last_token(), 42);
+        assert_eq!(s.next_pos(), 4);
+    }
+}
+
+#[cfg(test)]
+mod extra_tests {
+    use super::*;
+
+    #[test]
+    fn cache_overflow_finish_reason() {
+        let mut s = Sequence::new(9, vec![1, 2], 100, None);
+        s.finish(FinishReason::CacheOverflow);
+        assert!(s.is_finished());
+        assert_eq!(s.state, SeqState::Finished(FinishReason::CacheOverflow));
+    }
+
+    #[test]
+    fn eos_equal_to_max_tokens_prefers_eos() {
+        let mut s = Sequence::new(10, vec![1], 1, Some(7));
+        assert!(s.push_token(7));
+        assert_eq!(s.state, SeqState::Finished(FinishReason::Eos));
+    }
+
+    #[test]
+    #[should_panic(expected = "empty prompt")]
+    fn empty_prompt_rejected() {
+        let _ = Sequence::new(11, vec![], 4, None);
+    }
+}

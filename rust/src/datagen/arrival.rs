@@ -1,0 +1,109 @@
+//! Poisson request-arrival traces for the serving benchmarks (Table 11 and
+//! the capacity experiment): arrival times with exponential gaps, prompt
+//! and generation lengths from bounded log-normal-ish distributions.
+
+use crate::substrate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct RequestSpec {
+    pub arrive_s: f64,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    pub rate_per_s: f64,
+    pub n_requests: usize,
+    pub prompt_mean: usize,
+    pub prompt_max: usize,
+    pub gen_mean: usize,
+    pub gen_max: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            rate_per_s: 4.0,
+            n_requests: 64,
+            prompt_mean: 48,
+            prompt_max: 120,
+            gen_mean: 24,
+            gen_max: 64,
+        }
+    }
+}
+
+fn bounded_len(rng: &mut Rng, mean: usize, max: usize) -> usize {
+    // log-normal-ish: exp of a scaled normal, clamped to [1, max]
+    let x = (mean as f64) * (0.5 * rng.normal()).exp();
+    (x.round() as usize).clamp(1, max)
+}
+
+pub fn poisson_trace(cfg: &TraceConfig, seed: u64) -> Vec<RequestSpec> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(cfg.n_requests);
+    for _ in 0..cfg.n_requests {
+        t += rng.exponential(cfg.rate_per_s);
+        out.push(RequestSpec {
+            arrive_s: t,
+            prompt_len: bounded_len(&mut rng, cfg.prompt_mean, cfg.prompt_max),
+            gen_len: bounded_len(&mut rng, cfg.gen_mean, cfg.gen_max),
+        });
+    }
+    out
+}
+
+/// A closed-loop trace: all requests available at t=0 (for steady-state
+/// throughput measurement at a fixed batch size).
+pub fn closed_loop(n: usize, prompt_len: usize, gen_len: usize)
+    -> Vec<RequestSpec> {
+    (0..n)
+        .map(|_| RequestSpec { arrive_s: 0.0, prompt_len, gen_len })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_monotone_and_rate_reasonable() {
+        let cfg = TraceConfig { n_requests: 2000, rate_per_s: 10.0,
+                                ..Default::default() };
+        let tr = poisson_trace(&cfg, 0);
+        for w in tr.windows(2) {
+            assert!(w[1].arrive_s >= w[0].arrive_s);
+        }
+        let span = tr.last().unwrap().arrive_s;
+        let rate = tr.len() as f64 / span;
+        assert!((rate - 10.0).abs() < 1.0, "rate {rate}");
+    }
+
+    #[test]
+    fn lengths_bounded() {
+        let cfg = TraceConfig::default();
+        for r in poisson_trace(&cfg, 1) {
+            assert!(r.prompt_len >= 1 && r.prompt_len <= cfg.prompt_max);
+            assert!(r.gen_len >= 1 && r.gen_len <= cfg.gen_max);
+        }
+    }
+
+    #[test]
+    fn closed_loop_uniform() {
+        let tr = closed_loop(8, 32, 16);
+        assert_eq!(tr.len(), 8);
+        assert!(tr.iter().all(|r| r.arrive_s == 0.0 && r.prompt_len == 32
+                              && r.gen_len == 16));
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = TraceConfig::default();
+        let a = poisson_trace(&cfg, 7);
+        let b = poisson_trace(&cfg, 7);
+        assert_eq!(a.len(), b.len());
+        assert!(a.iter().zip(&b).all(|(x, y)| x.arrive_s == y.arrive_s));
+    }
+}

@@ -1,0 +1,102 @@
+//! Experiment 1 — the copy-back task (paper §8.1): `y_t = x_{t-K}`.
+//! Purely positional selection; the source offset is fixed regardless of
+//! content. Loss/accuracy are masked to positions t >= K.
+
+use crate::datagen::Batch;
+use crate::substrate::rng::Rng;
+
+pub const OFFSET_K: usize = 8;
+
+/// Vocabulary: ids 0..16 (matches the `copyback_*` configs' vocab of 32
+/// with headroom; the paper uses 16 random tokens).
+pub const TOKENS: i32 = 16;
+
+pub fn batch(b: usize, s: usize, rng: &mut Rng) -> Batch {
+    let mut out = Batch::zeros(b, s);
+    for i in 0..b {
+        for t in 0..s {
+            out.tokens[i * s + t] = rng.below(TOKENS as usize) as i32;
+        }
+        for t in 0..s {
+            if t >= OFFSET_K {
+                out.targets[i * s + t] = out.tokens[i * s + t - OFFSET_K];
+                out.mask[i * s + t] = 1.0;
+            }
+        }
+    }
+    out
+}
+
+/// Accuracy of predictions (B,S,V logits flattened) under the task mask.
+pub fn accuracy(logits: &[f32], vocab: usize, batch: &Batch) -> f64 {
+    let (b, s) = (batch.batch, batch.seq);
+    assert_eq!(logits.len(), b * s * vocab);
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for i in 0..b {
+        for t in 0..s {
+            if batch.mask[i * s + t] == 0.0 {
+                continue;
+            }
+            let row = &logits[(i * s + t) * vocab..(i * s + t + 1) * vocab];
+            if crate::substrate::mathutil::argmax(row) as i32
+                == batch.targets[i * s + t]
+            {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    correct as f64 / total.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn targets_are_shifted_inputs() {
+        let mut rng = Rng::new(0);
+        let b = batch(4, 32, &mut rng);
+        for i in 0..4 {
+            for t in OFFSET_K..32 {
+                assert_eq!(b.targets[i * 32 + t], b.tokens[i * 32 + t - OFFSET_K]);
+                assert_eq!(b.mask[i * 32 + t], 1.0);
+            }
+            for t in 0..OFFSET_K {
+                assert_eq!(b.mask[i * 32 + t], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let mut rng = Rng::new(1);
+        let b = batch(2, 64, &mut rng);
+        assert!(b.tokens.iter().all(|&t| (0..TOKENS).contains(&t)));
+    }
+
+    #[test]
+    fn oracle_accuracy_is_one() {
+        // Construct logits that put all mass on the true target.
+        let mut rng = Rng::new(2);
+        let b = batch(2, 16, &mut rng);
+        let v = 32usize;
+        let mut logits = vec![0.0f32; 2 * 16 * v];
+        for i in 0..2 {
+            for t in 0..16 {
+                logits[(i * 16 + t) * v + b.targets[i * 16 + t] as usize] = 9.0;
+            }
+        }
+        assert_eq!(accuracy(&logits, v, &b), 1.0);
+    }
+
+    #[test]
+    fn chance_accuracy_is_low() {
+        let mut rng = Rng::new(3);
+        let b = batch(8, 64, &mut rng);
+        let v = 32usize;
+        let logits = vec![0.0f32; 8 * 64 * v]; // argmax -> 0 everywhere
+        assert!(accuracy(&logits, v, &b) < 0.2);
+    }
+}

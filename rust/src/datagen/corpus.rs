@@ -1,0 +1,239 @@
+//! Zipf–Markov synthetic language — the WikiText/OpenWebText stand-in.
+//!
+//! A deterministic generative "language" with learnable structure at
+//! several orders, so thin-key sweeps produce the paper-shaped PPL curves:
+//!
+//! - **unigram**: Zipfian token frequencies (like natural text);
+//! - **bigram**: each token has a sparse successor table (syntax analog);
+//! - **topics**: a slow hidden topic state biases emission toward a topic
+//!   cluster (long-range semantic analog) — topic switches are rare;
+//! - **noise**: a uniform floor so the entropy is bounded away from zero.
+//!
+//! Corpus *size* is the regime knob: a small corpus with a big model
+//! overfits (WikiText-2-like, Exp 3); a large one underfits (WT-103-like,
+//! Exp 4). Token ids start at `tokenizer::N_SPECIALS`.
+
+use crate::datagen::Batch;
+use crate::substrate::rng::{Rng, Zipf};
+use crate::tokenizer::N_SPECIALS;
+
+pub struct CorpusModel {
+    vocab: usize,
+    usable: usize,
+    n_topics: usize,
+    succ: Vec<Vec<(i32, f64)>>,    // per-token successor table
+    topic_tokens: Vec<Vec<i32>>,   // per-topic characteristic cluster
+    zipf: Zipf,
+    topic_stay: f64,
+}
+
+impl CorpusModel {
+    /// `seed` determines the whole language; `vocab` must match the model
+    /// config's vocab (e.g. 512).
+    pub fn new(seed: u64, vocab: usize) -> Self {
+        let mut rng = Rng::new(seed);
+        let usable = vocab - N_SPECIALS;
+        let n_topics = 8;
+        let zipf = Zipf::new(usable, 1.05);
+        // sparse successor tables: 12 preferred successors per token
+        let mut succ = Vec::with_capacity(usable);
+        for _ in 0..usable {
+            let mut table = Vec::with_capacity(12);
+            for _ in 0..12 {
+                let t = zipf.sample(&mut rng) as i32;
+                let w = 0.2 + rng.f64();
+                table.push((t + N_SPECIALS as i32, w));
+            }
+            succ.push(table);
+        }
+        // topic clusters: 24 characteristic tokens each
+        let mut topic_tokens = Vec::with_capacity(n_topics);
+        for _ in 0..n_topics {
+            let toks: Vec<i32> = (0..24)
+                .map(|_| (rng.below(usable) + N_SPECIALS) as i32)
+                .collect();
+            topic_tokens.push(toks);
+        }
+        CorpusModel { vocab, usable, n_topics, succ, topic_tokens, zipf,
+                      topic_stay: 0.98 }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Generate a token stream of length `n` (deterministic given `rng`).
+    pub fn generate(&self, n: usize, rng: &mut Rng) -> Vec<i32> {
+        let mut out = Vec::with_capacity(n);
+        let mut topic = rng.below(self.n_topics);
+        let mut prev: i32 = (self.zipf.sample(rng) + N_SPECIALS) as i32;
+        out.push(prev);
+        while out.len() < n {
+            if rng.f64() > self.topic_stay {
+                topic = rng.below(self.n_topics);
+            }
+            let r = rng.f64();
+            let tok = if r < 0.55 {
+                // bigram: weighted successor of prev
+                let table = &self.succ[(prev as usize) - N_SPECIALS];
+                let weights: Vec<f64> = table.iter().map(|&(_, w)| w).collect();
+                table[rng.categorical(&weights)].0
+            } else if r < 0.75 {
+                // topic cluster token
+                let cluster = &self.topic_tokens[topic];
+                cluster[rng.below(cluster.len())]
+            } else if r < 0.97 {
+                // Zipf unigram
+                (self.zipf.sample(rng) + N_SPECIALS) as i32
+            } else {
+                // uniform noise floor
+                (rng.below(self.usable) + N_SPECIALS) as i32
+            };
+            out.push(tok);
+            prev = tok;
+        }
+        out
+    }
+
+    /// Characteristic token of a topic (for the topic probe).
+    pub fn topic_token(&self, topic: usize, i: usize) -> i32 {
+        self.topic_tokens[topic][i % self.topic_tokens[topic].len()]
+    }
+
+    pub fn n_topics(&self) -> usize {
+        self.n_topics
+    }
+}
+
+/// A tokenized corpus with train/val/test splits and batch iteration.
+pub struct Corpus {
+    pub train: Vec<i32>,
+    pub val: Vec<i32>,
+    pub test: Vec<i32>,
+}
+
+impl Corpus {
+    /// `n_train` tokens of train data; val/test are 10% each (min 4k).
+    pub fn generate(model: &CorpusModel, n_train: usize, seed: u64) -> Self {
+        let n_eval = (n_train / 10).max(4096);
+        let mut rng = Rng::new(seed);
+        Corpus {
+            train: model.generate(n_train, &mut rng),
+            val: model.generate(n_eval, &mut rng),
+            test: model.generate(n_eval, &mut rng),
+        }
+    }
+
+    /// Deterministic epoch iterator: contiguous (seq+1)-token windows,
+    /// shuffled, packed into batches (next-token targets, full mask).
+    pub fn batches(&self, split: &[i32], b: usize, s: usize, seed: u64)
+        -> Vec<Batch> {
+        let window = s + 1;
+        let n_windows = split.len() / window;
+        let mut order: Vec<usize> = (0..n_windows).collect();
+        let mut rng = Rng::new(seed);
+        rng.shuffle(&mut order);
+        let mut out = Vec::new();
+        for chunk in order.chunks(b) {
+            if chunk.len() < b {
+                break;
+            }
+            let mut batch = Batch::zeros(b, s);
+            for (row, &w) in chunk.iter().enumerate() {
+                let base = w * window;
+                for t in 0..s {
+                    batch.tokens[row * s + t] = split[base + t];
+                    batch.targets[row * s + t] = split[base + t + 1];
+                    batch.mask[row * s + t] = 1.0;
+                }
+            }
+            out.push(batch);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let m = CorpusModel::new(7, 512);
+        let a = m.generate(1000, &mut Rng::new(1));
+        let b = m.generate(1000, &mut Rng::new(1));
+        assert_eq!(a, b);
+        let c = m.generate(1000, &mut Rng::new(2));
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn tokens_in_range() {
+        let m = CorpusModel::new(3, 512);
+        let xs = m.generate(5000, &mut Rng::new(0));
+        assert!(xs.iter().all(|&t| (N_SPECIALS as i32..512).contains(&t)));
+    }
+
+    #[test]
+    fn zipfian_head_dominates() {
+        let m = CorpusModel::new(5, 512);
+        let xs = m.generate(50_000, &mut Rng::new(0));
+        let mut counts = vec![0usize; 512];
+        for &t in &xs {
+            counts[t as usize] += 1;
+        }
+        let mut sorted = counts.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        let top50: usize = sorted[..50].iter().sum();
+        assert!(top50 as f64 > 0.35 * xs.len() as f64, "head {top50}");
+    }
+
+    #[test]
+    fn bigram_structure_exists() {
+        // The most common successor of a frequent token should beat chance
+        // by a wide margin — that's what the LM learns.
+        let m = CorpusModel::new(9, 512);
+        let xs = m.generate(100_000, &mut Rng::new(0));
+        let mut counts = vec![0usize; 512];
+        for &t in &xs {
+            counts[t as usize] += 1;
+        }
+        let top = (0..512).max_by_key(|&i| counts[i]).unwrap() as i32;
+        let mut succ = vec![0usize; 512];
+        let mut total = 0usize;
+        for w in xs.windows(2) {
+            if w[0] == top {
+                succ[w[1] as usize] += 1;
+                total += 1;
+            }
+        }
+        let best = succ.iter().max().unwrap();
+        assert!(*best as f64 > 0.05 * total as f64,
+                "best successor {best}/{total}");
+    }
+
+    #[test]
+    fn batches_are_next_token_aligned() {
+        let m = CorpusModel::new(11, 512);
+        let c = Corpus::generate(&m, 20_000, 1);
+        let bs = c.batches(&c.train, 4, 32, 0);
+        assert!(!bs.is_empty());
+        for b in &bs {
+            for row in 0..4 {
+                for t in 0..31 {
+                    assert_eq!(b.targets[row * 32 + t], b.tokens[row * 32 + t + 1]);
+                }
+            }
+            assert!(b.mask.iter().all(|&x| x == 1.0));
+        }
+    }
+
+    #[test]
+    fn splits_disjoint_and_sized() {
+        let m = CorpusModel::new(13, 512);
+        let c = Corpus::generate(&m, 50_000, 1);
+        assert_eq!(c.train.len(), 50_000);
+        assert!(c.val.len() >= 4096 && c.test.len() >= 4096);
+        assert_ne!(c.train[..100], c.val[..100]);
+    }
+}

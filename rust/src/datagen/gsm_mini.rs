@@ -1,0 +1,224 @@
+//! gsm-mini — multi-step arithmetic with chain-of-thought, the GSM8K
+//! stand-in for Table 19 (domain-matched fine-tuning recovery).
+//!
+//! A problem is `a OP1 b OP2 c` over small integers; the CoT trace shows
+//! the intermediate result before the final answer:
+//!
+//! ```text
+//! <Q> a OP1 b OP2 c <A> (a OP1 b) <STEP> answer <EOS>
+//! ```
+//!
+//! Numbers are emitted as digit tokens (base 10, most significant first,
+//! `-` sign token for negatives). Exact-match evaluation decodes greedily
+//! after `<STEP>` and compares the digit string.
+
+use crate::datagen::Batch;
+use crate::substrate::rng::Rng;
+
+// Token ids live in the 300.. range of the shared vocab (512).
+pub const DIGIT_BASE: i32 = 300; // 300..310 = digits 0..9
+pub const T_PLUS: i32 = 310;
+pub const T_MINUS: i32 = 311;
+pub const T_MUL: i32 = 312;
+pub const T_Q: i32 = 313;
+pub const T_A: i32 = 314;
+pub const T_STEP: i32 = 315;
+pub const T_END: i32 = 316;
+pub const T_NEG: i32 = 317;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Problem {
+    pub a: i64,
+    pub b: i64,
+    pub c: i64,
+    pub op1: char,
+    pub op2: char,
+}
+
+impl Problem {
+    pub fn sample(rng: &mut Rng) -> Problem {
+        let ops = ['+', '-', '*'];
+        Problem {
+            a: rng.range(1, 50) as i64,
+            b: rng.range(1, 50) as i64,
+            c: rng.range(1, 20) as i64,
+            op1: ops[rng.below(3)],
+            op2: ops[rng.below(3)],
+        }
+    }
+
+    fn apply(op: char, x: i64, y: i64) -> i64 {
+        match op {
+            '+' => x + y,
+            '-' => x - y,
+            '*' => x * y,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Left-to-right evaluation (the CoT convention here, kept simple).
+    pub fn intermediate(&self) -> i64 {
+        Self::apply(self.op1, self.a, self.b)
+    }
+
+    pub fn answer(&self) -> i64 {
+        Self::apply(self.op2, self.intermediate(), self.c)
+    }
+}
+
+fn op_token(op: char) -> i32 {
+    match op {
+        '+' => T_PLUS,
+        '-' => T_MINUS,
+        '*' => T_MUL,
+        _ => unreachable!(),
+    }
+}
+
+/// Digit-token encoding of an integer.
+pub fn encode_number(x: i64) -> Vec<i32> {
+    let mut out = Vec::new();
+    if x < 0 {
+        out.push(T_NEG);
+    }
+    for ch in x.abs().to_string().bytes() {
+        out.push(DIGIT_BASE + (ch - b'0') as i32);
+    }
+    out
+}
+
+pub fn decode_number(toks: &[i32]) -> Option<i64> {
+    let mut s = String::new();
+    for &t in toks {
+        if t == T_NEG {
+            s.push('-');
+        } else if (DIGIT_BASE..DIGIT_BASE + 10).contains(&t) {
+            s.push((b'0' + (t - DIGIT_BASE) as u8) as char);
+        } else {
+            break;
+        }
+    }
+    s.parse().ok()
+}
+
+/// Full CoT sequence for a problem.
+pub fn encode_sequence(p: &Problem) -> Vec<i32> {
+    let mut seq = vec![T_Q];
+    seq.extend(encode_number(p.a));
+    seq.push(op_token(p.op1));
+    seq.extend(encode_number(p.b));
+    seq.push(op_token(p.op2));
+    seq.extend(encode_number(p.c));
+    seq.push(T_A);
+    seq.extend(encode_number(p.intermediate()));
+    seq.push(T_STEP);
+    seq.extend(encode_number(p.answer()));
+    seq.push(T_END);
+    seq
+}
+
+/// The prompt prefix (everything through `<A>`), for generation-based eval.
+pub fn encode_prompt(p: &Problem) -> Vec<i32> {
+    let mut seq = vec![T_Q];
+    seq.extend(encode_number(p.a));
+    seq.push(op_token(p.op1));
+    seq.extend(encode_number(p.b));
+    seq.push(op_token(p.op2));
+    seq.extend(encode_number(p.c));
+    seq.push(T_A);
+    seq
+}
+
+/// Fine-tuning batch: CoT sequences packed left-aligned; loss masked to the
+/// CoT+answer region (after `<A>`), mirroring instruction-tuning practice.
+pub fn batch(b: usize, s: usize, rng: &mut Rng) -> Batch {
+    let mut out = Batch::zeros(b, s);
+    for i in 0..b {
+        let p = Problem::sample(rng);
+        let seq = encode_sequence(&p);
+        let n = seq.len().min(s);
+        let a_pos = seq.iter().position(|&t| t == T_A).unwrap();
+        for t in 0..n {
+            out.tokens[i * s + t] = seq[t];
+        }
+        for t in 0..n.saturating_sub(1) {
+            out.targets[i * s + t] = seq[t + 1];
+            // train on predictions from <A> onward
+            if t >= a_pos {
+                out.mask[i * s + t] = 1.0;
+            }
+        }
+    }
+    out
+}
+
+/// Extract the predicted answer from a greedy-decoded continuation: tokens
+/// after the first `<STEP>`.
+pub fn parse_answer(generated: &[i32]) -> Option<i64> {
+    let pos = generated.iter().position(|&t| t == T_STEP)?;
+    decode_number(&generated[pos + 1..])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic_is_left_to_right() {
+        let p = Problem { a: 2, b: 3, c: 4, op1: '+', op2: '*' };
+        assert_eq!(p.intermediate(), 5);
+        assert_eq!(p.answer(), 20);
+    }
+
+    #[test]
+    fn number_roundtrip() {
+        for x in [-120i64, -1, 0, 7, 42, 2401] {
+            assert_eq!(decode_number(&encode_number(x)), Some(x));
+        }
+    }
+
+    #[test]
+    fn sequence_contains_cot_then_answer() {
+        let p = Problem { a: 10, b: 4, c: 3, op1: '-', op2: '*' };
+        let seq = encode_sequence(&p);
+        assert_eq!(seq[0], T_Q);
+        let a_pos = seq.iter().position(|&t| t == T_A).unwrap();
+        let step_pos = seq.iter().position(|&t| t == T_STEP).unwrap();
+        assert!(a_pos < step_pos);
+        assert_eq!(decode_number(&seq[a_pos + 1..step_pos]), Some(6));
+        assert_eq!(parse_answer(&seq[a_pos..]), Some(18));
+        assert_eq!(*seq.last().unwrap(), T_END);
+    }
+
+    #[test]
+    fn prompt_is_prefix_of_sequence() {
+        let mut rng = Rng::new(0);
+        for _ in 0..20 {
+            let p = Problem::sample(&mut rng);
+            let full = encode_sequence(&p);
+            let prompt = encode_prompt(&p);
+            assert_eq!(&full[..prompt.len()], &prompt[..]);
+        }
+    }
+
+    #[test]
+    fn batch_masks_only_after_answer_marker() {
+        let mut rng = Rng::new(1);
+        let b = batch(8, 32, &mut rng);
+        for i in 0..8 {
+            let row_tokens = &b.tokens[i * 32..(i + 1) * 32];
+            let a_pos = row_tokens.iter().position(|&t| t == T_A).unwrap();
+            for t in 0..a_pos {
+                assert_eq!(b.mask[i * 32 + t], 0.0);
+            }
+            assert!(b.mask[i * 32 + a_pos] == 1.0);
+        }
+    }
+
+    #[test]
+    fn tokens_fit_shared_vocab() {
+        let mut rng = Rng::new(2);
+        let b = batch(4, 32, &mut rng);
+        assert!(b.tokens.iter().all(|&t| t < 512));
+    }
+}

@@ -1,0 +1,111 @@
+//! Experiment 2 — content-based key-value retrieval (paper §8.2).
+//!
+//! A sequence of `N_PAIRS` random (key, value) pairs followed by a query
+//! key; the model must emit the value bound to that key. Pair positions are
+//! shuffled every sample so positional shortcuts are useless — selection
+//! must match *content*. Loss/accuracy masked to the answer position only.
+//!
+//! Token layout per sequence (length = 2*N_PAIRS + 2 = 18, padded to the
+//! artifact seq of 24):  k1 v1 k2 v2 ... k8 v8 <query-key> <answer-slot>
+
+use crate::datagen::Batch;
+use crate::substrate::rng::Rng;
+
+pub const N_PAIRS: usize = 8;
+/// Key tokens use ids [0, 16); value tokens use ids [16, 32).
+pub const N_KEYS: i32 = 16;
+pub const VALUE_BASE: i32 = 16;
+
+pub fn seq_len() -> usize {
+    2 * N_PAIRS + 2
+}
+
+pub fn batch(b: usize, s: usize, rng: &mut Rng) -> Batch {
+    assert!(s >= seq_len(), "artifact seq {s} < task seq {}", seq_len());
+    let mut out = Batch::zeros(b, s);
+    for i in 0..b {
+        // distinct keys, random values
+        let mut keys: Vec<i32> = (0..N_KEYS).collect();
+        rng.shuffle(&mut keys);
+        let keys = &keys[..N_PAIRS];
+        let values: Vec<i32> =
+            (0..N_PAIRS).map(|_| VALUE_BASE + rng.below(16) as i32).collect();
+        let mut order: Vec<usize> = (0..N_PAIRS).collect();
+        rng.shuffle(&mut order);
+        for (slot, &pi) in order.iter().enumerate() {
+            out.tokens[i * s + 2 * slot] = keys[pi];
+            out.tokens[i * s + 2 * slot + 1] = values[pi];
+        }
+        let qi = rng.below(N_PAIRS);
+        let qpos = 2 * N_PAIRS;
+        out.tokens[i * s + qpos] = keys[qi];
+        // The model predicts the value at the query position (next-token).
+        out.targets[i * s + qpos] = values[qi];
+        out.mask[i * s + qpos] = 1.0;
+    }
+    out
+}
+
+/// Accuracy at the answer position.
+pub fn accuracy(logits: &[f32], vocab: usize, batch: &Batch) -> f64 {
+    crate::datagen::copyback::accuracy(logits, vocab, batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exactly_one_masked_position_per_row() {
+        let mut rng = Rng::new(0);
+        let b = batch(16, 24, &mut rng);
+        for i in 0..16 {
+            let m: f32 = b.mask[i * 24..(i + 1) * 24].iter().sum();
+            assert_eq!(m, 1.0);
+        }
+    }
+
+    #[test]
+    fn query_key_appears_among_pairs_and_target_is_its_value() {
+        let mut rng = Rng::new(1);
+        let b = batch(8, 24, &mut rng);
+        let s = 24;
+        for i in 0..8 {
+            let qpos = 2 * N_PAIRS;
+            let qk = b.tokens[i * s + qpos];
+            let want = b.targets[i * s + qpos];
+            let mut found = false;
+            for p in 0..N_PAIRS {
+                if b.tokens[i * s + 2 * p] == qk {
+                    assert_eq!(b.tokens[i * s + 2 * p + 1], want);
+                    found = true;
+                }
+            }
+            assert!(found, "query key not among pairs");
+        }
+    }
+
+    #[test]
+    fn keys_and_values_in_disjoint_ranges() {
+        let mut rng = Rng::new(2);
+        let b = batch(8, 24, &mut rng);
+        for i in 0..8 {
+            for p in 0..N_PAIRS {
+                assert!(b.tokens[i * 24 + 2 * p] < N_KEYS);
+                assert!(b.tokens[i * 24 + 2 * p + 1] >= VALUE_BASE);
+            }
+        }
+    }
+
+    #[test]
+    fn positions_shuffle_across_samples() {
+        // The same key should not always land at slot 0.
+        let mut rng = Rng::new(3);
+        let mut first_tokens = std::collections::HashSet::new();
+        for _ in 0..32 {
+            let b = batch(1, 24, &mut rng);
+            first_tokens.insert(b.tokens[0]);
+        }
+        assert!(first_tokens.len() > 4);
+    }
+}

@@ -1,0 +1,45 @@
+//! Workload generators — every dataset/task the paper evaluates on, rebuilt
+//! as deterministic synthetic equivalents (DESIGN.md §2 substitution table):
+//!
+//! - [`copyback`] — Experiment 1 positional-selection task (y_t = x_{t-K}).
+//! - [`kvretrieval`] — Experiment 2 content-based key-value retrieval.
+//! - [`corpus`] — Zipf–Markov synthetic language (WikiText/OpenWebText
+//!   stand-in, with a size knob that switches overfit/underfit regimes).
+//! - [`gsm_mini`] — multi-step arithmetic with chain-of-thought traces
+//!   (GSM8K stand-in for Table 19 domain-matched fine-tuning).
+//! - [`probes`] — multiple-choice downstream probes (Tables 5/8 stand-ins).
+//! - [`arrival`] — Poisson request traces for the serving benches.
+
+pub mod copyback;
+pub mod kvretrieval;
+pub mod corpus;
+pub mod gsm_mini;
+pub mod probes;
+pub mod arrival;
+
+/// One training/eval batch in the exact layout the AOT artifacts expect:
+/// `tokens`/`targets` are (B, S) i32 row-major, `mask` is (B, S) f32.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub batch: usize,
+    pub seq: usize,
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub mask: Vec<f32>,
+}
+
+impl Batch {
+    pub fn zeros(batch: usize, seq: usize) -> Self {
+        Batch {
+            batch,
+            seq,
+            tokens: vec![0; batch * seq],
+            targets: vec![0; batch * seq],
+            mask: vec![0.0; batch * seq],
+        }
+    }
+
+    pub fn masked_tokens(&self) -> f64 {
+        self.mask.iter().map(|&x| x as f64).sum()
+    }
+}

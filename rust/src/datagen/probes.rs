@@ -1,0 +1,219 @@
+//! Downstream probe suite — synthetic stand-ins for the paper's five
+//! benchmarks (Tables 5/8). Each probe is a multiple-choice item scored by
+//! length-normalized sequence log-probability (the `acc_norm` protocol).
+//!
+//! | paper task   | probe here                                            |
+//! |--------------|-------------------------------------------------------|
+//! | Hellaswag    | `cloze`: true 8-token continuation vs 3 random spans  |
+//! | ARC          | `bigram`: most plausible next window by local syntax  |
+//! | WinoGrande   | `induction`: resolve `a→b` binding seen earlier       |
+//! | MMLU         | `topic`: pick the token cluster matching the context  |
+//! | GSM8K        | handled separately by generation (datagen::gsm_mini)  |
+
+use crate::datagen::corpus::CorpusModel;
+use crate::substrate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ProbeItem {
+    pub context: Vec<i32>,
+    pub options: Vec<Vec<i32>>,
+    pub answer: usize,
+}
+
+/// Hellaswag-mini: context from the corpus stream; the true continuation vs
+/// 3 spans sampled from elsewhere in the stream.
+pub fn cloze(model: &CorpusModel, n_items: usize, ctx: usize, cont: usize,
+             seed: u64) -> Vec<ProbeItem> {
+    let mut rng = Rng::new(seed);
+    let stream = model.generate(n_items * (ctx + cont) * 4 + 4096, &mut rng);
+    let mut items = Vec::with_capacity(n_items);
+    for i in 0..n_items {
+        let base = i * (ctx + cont) * 2;
+        let context = stream[base..base + ctx].to_vec();
+        let truth = stream[base + ctx..base + ctx + cont].to_vec();
+        let mut options = vec![truth];
+        for _ in 0..3 {
+            let off = rng.below(stream.len() - cont);
+            options.push(stream[off..off + cont].to_vec());
+        }
+        let answer = rng.below(4);
+        options.swap(0, answer);
+        items.push(ProbeItem { context, options, answer });
+    }
+    items
+}
+
+/// ARC-mini: the true continuation is the *immediate* next window (locally
+/// coherent); distractors are reversed/shuffled copies of it (locally
+/// incoherent) — tests sensitivity to local syntax.
+pub fn bigram(model: &CorpusModel, n_items: usize, ctx: usize, seed: u64)
+    -> Vec<ProbeItem> {
+    let cont = 6;
+    let mut rng = Rng::new(seed);
+    let stream = model.generate(n_items * (ctx + cont) * 2 + 4096, &mut rng);
+    let mut items = Vec::with_capacity(n_items);
+    for i in 0..n_items {
+        let base = i * (ctx + cont);
+        let context = stream[base..base + ctx].to_vec();
+        let truth = stream[base + ctx..base + ctx + cont].to_vec();
+        let mut rev = truth.clone();
+        rev.reverse();
+        let mut shuf = truth.clone();
+        rng.shuffle(&mut shuf);
+        let mut shuf2 = truth.clone();
+        shuf2.swap(0, cont - 1);
+        shuf2.swap(1, cont - 2);
+        let mut options = vec![truth, rev, shuf, shuf2];
+        let answer = rng.below(4);
+        options.swap(0, answer);
+        items.push(ProbeItem { context, options, answer });
+    }
+    items
+}
+
+/// WinoGrande-mini: a binding `x y` appears in context; later `x` recurs
+/// and the correct option continues with `y` (induction/coreference).
+pub fn induction(model: &CorpusModel, n_items: usize, ctx: usize, seed: u64)
+    -> Vec<ProbeItem> {
+    let mut rng = Rng::new(seed);
+    let stream = model.generate(n_items * ctx * 2 + 4096, &mut rng);
+    let mut items = Vec::with_capacity(n_items);
+    for i in 0..n_items {
+        let base = i * ctx;
+        let mut context = stream[base..base + ctx].to_vec();
+        // plant the binding twice: [.. x y .. x y .. x] -> ? y
+        let x = context[2];
+        let mut y = context[3];
+        if y == x {
+            // guarantee a non-degenerate binding
+            y = *stream[base + ctx..].iter().find(|&&t| t != x).unwrap();
+        }
+        let mid = ctx / 2;
+        context[3] = y;
+        context[mid] = x;
+        context[mid + 1] = y;
+        *context.last_mut().unwrap() = x;
+        // every occurrence of x inside the context must be followed by y
+        // (or be the trailing query) so the binding is unambiguous
+        for i in 0..ctx - 1 {
+            if context[i] == x {
+                context[i + 1] = y;
+            }
+        }
+        let mut options: Vec<Vec<i32>> = vec![vec![y]];
+        let mut used = vec![y];
+        while options.len() < 4 {
+            let d = stream[rng.below(stream.len())];
+            if !used.contains(&d) {
+                used.push(d);
+                options.push(vec![d]);
+            }
+        }
+        let answer = rng.below(4);
+        options.swap(0, answer);
+        items.push(ProbeItem { context, options, answer });
+    }
+    items
+}
+
+/// MMLU-mini: context drawn from one topic cluster; options are
+/// characteristic tokens of 4 different topics — pick the matching one.
+pub fn topic(model: &CorpusModel, n_items: usize, ctx: usize, seed: u64)
+    -> Vec<ProbeItem> {
+    let mut rng = Rng::new(seed);
+    let mut items = Vec::with_capacity(n_items);
+    for _ in 0..n_items {
+        let t_true = rng.below(model.n_topics());
+        // context saturated with the true topic's cluster tokens
+        let context: Vec<i32> =
+            (0..ctx).map(|j| model.topic_token(t_true, rng.below(24) + j)).collect();
+        let mut topics = vec![t_true];
+        while topics.len() < 4 {
+            let t = rng.below(model.n_topics());
+            if !topics.contains(&t) {
+                topics.push(t);
+            }
+        }
+        let mut options: Vec<Vec<i32>> = topics
+            .iter()
+            .map(|&t| (0..4).map(|j| model.topic_token(t, j)).collect())
+            .collect();
+        let answer = rng.below(4);
+        options.swap(0, answer);
+        items.push(ProbeItem { context, options, answer });
+    }
+    items
+}
+
+/// All four ranking probes, keyed by the paper task they stand in for.
+pub fn standard_suite(model: &CorpusModel, n_items: usize, seed: u64)
+    -> Vec<(&'static str, Vec<ProbeItem>)> {
+    vec![
+        ("hellaswag_mini", cloze(model, n_items, 24, 8, seed ^ 0x01)),
+        ("arc_mini", bigram(model, n_items, 24, seed ^ 0x02)),
+        ("winogrande_mini", induction(model, n_items, 24, seed ^ 0x03)),
+        ("mmlu_mini", topic(model, n_items, 24, seed ^ 0x04)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> CorpusModel {
+        CorpusModel::new(42, 512)
+    }
+
+    #[test]
+    fn items_have_four_options_and_valid_answer() {
+        let m = model();
+        for (name, items) in standard_suite(&m, 10, 0) {
+            assert_eq!(items.len(), 10, "{name}");
+            for it in &items {
+                assert_eq!(it.options.len(), 4);
+                assert!(it.answer < 4);
+                assert!(!it.context.is_empty());
+                assert!(it.options.iter().all(|o| !o.is_empty()));
+            }
+        }
+    }
+
+    #[test]
+    fn answers_are_uniformly_placed() {
+        let m = model();
+        let items = cloze(&m, 200, 16, 8, 1);
+        let mut counts = [0usize; 4];
+        for it in &items {
+            counts[it.answer] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 20), "{counts:?}");
+    }
+
+    #[test]
+    fn induction_truth_is_bound_token() {
+        let m = model();
+        for it in induction(&m, 20, 24, 3) {
+            let x = *it.context.last().unwrap();
+            // find the binding in context
+            let mut want = None;
+            for w in it.context.windows(2) {
+                if w[0] == x {
+                    want = Some(w[1]);
+                    break;
+                }
+            }
+            assert_eq!(it.options[it.answer][0], want.unwrap());
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let m = model();
+        let a = cloze(&m, 5, 8, 4, 9);
+        let b = cloze(&m, 5, 8, 4, 9);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.context, y.context);
+            assert_eq!(x.answer, y.answer);
+        }
+    }
+}

@@ -1,0 +1,64 @@
+//! Tables 6 and 10 + the §12 prefill roofline — pure analytical
+//! reproductions (these match the paper's numbers exactly; see the unit
+//! tests in coordinator::roofline that pin them).
+
+use crate::bench::Table;
+use crate::coordinator::roofline;
+
+pub fn table6() -> Table {
+    let mut t = Table::new(
+        "Table 6 — analytical KV cache @ LLaMA-7B, 128K ctx, bf16 (GiB)",
+        &["method", "K cache", "V cache", "KV total", "KV saved"],
+    );
+    for (label, k, v, total, saved) in roofline::table6_rows() {
+        t.row(&[
+            label.to_string(),
+            format!("{k:.1}"),
+            format!("{v:.1}"),
+            format!("{total:.1}"),
+            format!("{saved:.1}%"),
+        ]);
+    }
+    t
+}
+
+pub fn table10() -> Table {
+    let mut t = Table::new(
+        "Table 10 — KV cache per user (d_model 4096, 32 layers, fp16, GB)",
+        &["config", "K cache", "V cache", "total", "saved GB", "saved %"],
+    );
+    for (label, k, v, total, saved_gb, saved_pct) in roofline::table10_rows() {
+        t.row(&[
+            label,
+            format!("{k:.1}"),
+            format!("{v:.1}"),
+            format!("{total:.1}"),
+            format!("{saved_gb:.1}"),
+            format!("{saved_pct:.1}%"),
+        ]);
+    }
+    t
+}
+
+pub fn prefill_roofline() -> Table {
+    let mut t = Table::new(
+        "§12 — prefill arithmetic intensity (FLOP/byte of KV), H100 ridge ~295",
+        &["context", "intensity", "regime", "QK^T FLOP ratio full/thin(d/4)"],
+    );
+    for s in [512usize, 4096, 131072] {
+        let i = roofline::prefill_intensity(s, 32, 128, 128, 2.0);
+        let full = roofline::prefill_attention_flops(s, 32, 128, 0);
+        let thin = roofline::prefill_attention_flops(s, 32, 32, 0);
+        t.row(&[
+            s.to_string(),
+            format!("{i:.0}"),
+            if i > 295.0 { "compute-bound".into() } else { "bandwidth-bound".to_string() },
+            format!("{:.1}x", full / thin),
+        ]);
+    }
+    t
+}
+
+pub fn run() -> Vec<Table> {
+    vec![table6(), table10(), prefill_roofline()]
+}

@@ -1,0 +1,144 @@
+//! Shared experiment infrastructure: step budgets, corpora, checkpoint
+//! caching, and the pretrain/fine-tune protocols every experiment reuses.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::datagen::corpus::{Corpus, CorpusModel};
+use crate::datagen::Batch;
+use crate::runtime::{ParamStore, Runtime};
+use crate::train::{eval, Schedule, Trainer, TrainState};
+
+/// The corpus seed shared by all LM experiments (one "language").
+pub const CORPUS_SEED: u64 = 7;
+/// Overfit-regime corpus (WikiText-2 stand-in): ~23 windows/epoch.
+pub const SMALL_CORPUS: usize = 12_000;
+/// Underfit-regime corpus (WikiText-103 stand-in): > 1 epoch never seen.
+pub const LARGE_CORPUS: usize = 400_000;
+
+#[derive(Clone, Debug)]
+pub struct Opts {
+    /// Multiplier on every step budget (benches use ~0.1).
+    pub scale: f64,
+    pub seeds: Vec<u64>,
+}
+
+impl Default for Opts {
+    fn default() -> Self {
+        Opts { scale: 1.0, seeds: vec![137, 138] }
+    }
+}
+
+impl Opts {
+    pub fn quick() -> Self {
+        Opts { scale: 0.05, seeds: vec![137] }
+    }
+
+    pub fn steps(&self, base: usize) -> usize {
+        ((base as f64 * self.scale) as usize).max(8)
+    }
+}
+
+pub fn corpus_for(rt: &Runtime, cfg_name: &str, n_train: usize) -> Corpus {
+    let vocab = rt.manifest().config(cfg_name).unwrap().vocab;
+    let model = CorpusModel::new(CORPUS_SEED, vocab);
+    Corpus::generate(&model, n_train, 1)
+}
+
+pub fn corpus_model(rt: &Runtime, cfg_name: &str) -> CorpusModel {
+    let vocab = rt.manifest().config(cfg_name).unwrap().vocab;
+    CorpusModel::new(CORPUS_SEED, vocab)
+}
+
+fn ckpt_path(tag: &str) -> PathBuf {
+    crate::artifacts_dir().join("ckpt").join(format!("{tag}.tkw"))
+}
+
+/// Result of a (possibly cached) pretraining run.
+pub struct Pretrained {
+    pub params: ParamStore,
+    pub seconds: f64,
+    pub final_loss: f64,
+    pub cached: bool,
+}
+
+/// Standard LM pretraining protocol: cosine schedule, warmup 10%,
+/// lr 3e-3. Checkpoints cache on (cfg, steps, corpus size, seed).
+pub fn pretrain_lm(rt: &Runtime, cfg_name: &str, corpus: &Corpus,
+                   corpus_tag: &str, steps: usize, seed: u64)
+    -> Result<Pretrained> {
+    let tag = format!("{cfg_name}_{corpus_tag}_st{steps}_s{seed}");
+    let path = ckpt_path(&tag);
+    let cfg = rt.manifest().config(cfg_name)?.clone();
+    if path.exists() {
+        let params = ParamStore::load(&path)?;
+        if params.check_matches(&cfg).is_ok() {
+            return Ok(Pretrained {
+                params,
+                seconds: 0.0,
+                final_loss: f64::NAN,
+                cached: true,
+            });
+        }
+    }
+    let trainer = Trainer::new(rt, cfg_name, false)?;
+    let mut st = TrainState::new(&cfg, seed);
+    let sched = Schedule::warmup_cosine(3e-3, steps / 10, steps);
+    let batches =
+        corpus.batches(&corpus.train, cfg.train_batch, cfg.train_seq, seed);
+    let out = trainer.run(&mut st, steps, &sched, |i| {
+        batches[i % batches.len()].clone()
+    })?;
+    st.params.save(&path)?;
+    Ok(Pretrained {
+        params: st.params,
+        seconds: out.seconds,
+        final_loss: out.final_loss(),
+        cached: false,
+    })
+}
+
+/// QK-only fine-tuning protocol (the paper's 3-epoch recovery), over
+/// arbitrary batch sources.
+pub fn qk_finetune<F>(rt: &Runtime, cfg_name: &str, params: ParamStore,
+                      steps: usize, mut next_batch: F) -> Result<ParamStore>
+where
+    F: FnMut(usize) -> Batch,
+{
+    let trainer = Trainer::new(rt, cfg_name, true)?;
+    let mut st = TrainState::from_params(params);
+    let sched = Schedule::Constant { lr: 1e-3 };
+    trainer.run(&mut st, steps, &sched, |i| next_batch(i))?;
+    Ok(st.params)
+}
+
+/// Validation PPL with the standard eval slice (up to 8 batches).
+pub fn val_ppl(rt: &Runtime, cfg_name: &str, params: &ParamStore,
+               corpus: &Corpus) -> Result<f64> {
+    let cfg = rt.manifest().config(cfg_name)?.clone();
+    let batches =
+        corpus.batches(&corpus.val, cfg.train_batch, cfg.train_seq, 0);
+    let n = batches.len().min(8);
+    eval::eval_ppl(rt, &cfg, params, &batches[..n])
+}
+
+pub fn fmt(x: f64, digits: usize) -> String {
+    format!("{:.*}", digits, x)
+}
+
+pub fn fmt_pct(x: f64) -> String {
+    format!("{:+.1}%", x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opts_scaling() {
+        let o = Opts::quick();
+        assert!(o.steps(240) >= 8 && o.steps(240) < 240);
+        assert_eq!(Opts::default().steps(240), 240);
+    }
+}

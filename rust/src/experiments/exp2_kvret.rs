@@ -1,0 +1,61 @@
+//! Experiment 2 (paper §8.2, Table 13): content-based selection via
+//! key-value retrieval. Expectation: a sharp transition — 1 dim/head
+//! cannot separate keys by dot product (chance-ish accuracy), ≥2 dims/head
+//! reach (near-)perfect accuracy.
+
+use anyhow::Result;
+
+use crate::bench::Table;
+use crate::datagen::kvretrieval;
+use crate::experiments::common::Opts;
+use crate::runtime::Runtime;
+use crate::substrate::rng::Rng;
+use crate::train::{eval, Schedule, Trainer, TrainState};
+
+pub fn run(rt: &Runtime, opts: &Opts) -> Result<Table> {
+    let steps = opts.steps(1600);
+    let eval_every = (steps / 8).max(1);
+    let mut table = Table::new(
+        "Table 13 — key-value retrieval (content selection) by d_select",
+        &["d_select", "per head", "best acc", "converge step"],
+    );
+    for ds in [4usize, 8, 16, 32, 64] {
+        let cfg_name = format!("kvret_ds{ds}");
+        let trainer = Trainer::new(rt, &cfg_name, false)?;
+        let cfg = trainer.cfg.clone();
+        let mut st = TrainState::new(&cfg, opts.seeds[0]);
+        let mut rng = Rng::new(opts.seeds[0] ^ 0x2222);
+        let sched = Schedule::warmup_cosine(2e-3, steps / 20, steps);
+        let mut eval_rng = Rng::new(54321);
+        let eval_batches: Vec<_> = (0..3)
+            .map(|_| kvretrieval::batch(cfg.train_batch, cfg.train_seq,
+                                        &mut eval_rng))
+            .collect();
+        let mut best = 0.0f64;
+        let mut converge = None;
+        let mut done = 0usize;
+        while done < steps {
+            let chunk = eval_every.min(steps - done);
+            trainer.run(&mut st, chunk, &sched, |_| {
+                kvretrieval::batch(cfg.train_batch, cfg.train_seq, &mut rng)
+            })?;
+            done += chunk;
+            let acc =
+                eval::eval_accuracy(rt, &cfg, &st.params, &eval_batches)?;
+            if acc > best {
+                best = acc;
+            }
+            if acc >= 0.999 && converge.is_none() {
+                converge = Some(done);
+                break;
+            }
+        }
+        table.row(&[
+            ds.to_string(),
+            (ds / 4).to_string(),
+            format!("{:.1}%", 100.0 * best),
+            converge.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    Ok(table)
+}

@@ -1,0 +1,69 @@
+//! Experiments 3/4 (paper §8.3-8.4, Tables 14/15): d_select sweeps on the
+//! synthetic corpus in two regimes.
+//!
+//! - **small corpus** (overfit, WikiText-2-like): reducing QK capacity acts
+//!   as a regularizer — thin keys look costless or better.
+//! - **large corpus** (underfit, WikiText-103-like): the true, smooth,
+//!   monotone cost of d_select appears.
+
+use anyhow::Result;
+
+use crate::bench::Table;
+use crate::experiments::common::{self, Opts, LARGE_CORPUS, SMALL_CORPUS};
+use crate::runtime::Runtime;
+
+pub struct SweepRow {
+    pub d_select: usize,
+    pub val_ppl: f64,
+    pub train_loss: f64,
+    pub qk_saved_pct: f64,
+}
+
+pub fn sweep(rt: &Runtime, regime: &str, steps: usize, seed: u64)
+    -> Result<Vec<SweepRow>> {
+    let n_train = if regime == "small" { SMALL_CORPUS } else { LARGE_CORPUS };
+    let corpus = common::corpus_for(rt, "tinylm_ds64", n_train);
+    let full_qk =
+        rt.manifest().config("tinylm_ds64")?.qk_parameters() as f64;
+    let mut rows = Vec::new();
+    for ds in [8usize, 16, 32, 64] {
+        let cfg_name = format!("tinylm_ds{ds}");
+        let pre = common::pretrain_lm(rt, &cfg_name, &corpus,
+                                      &format!("lm{regime}"), steps, seed)?;
+        let ppl = common::val_ppl(rt, &cfg_name, &pre.params, &corpus)?;
+        let qk = rt.manifest().config(&cfg_name)?.qk_parameters() as f64;
+        rows.push(SweepRow {
+            d_select: ds,
+            val_ppl: ppl,
+            train_loss: pre.final_loss,
+            qk_saved_pct: 100.0 * (1.0 - qk / full_qk),
+        });
+    }
+    Ok(rows)
+}
+
+pub fn run(rt: &Runtime, opts: &Opts) -> Result<Vec<Table>> {
+    let mut tables = Vec::new();
+    for (regime, title, steps) in [
+        ("small", "Table 14 — d_select sweep, SMALL corpus (overfit regime)",
+         opts.steps(260)),
+        ("large", "Table 15 — d_select sweep, LARGE corpus (underfit regime)",
+         opts.steps(260)),
+    ] {
+        let rows = sweep(rt, regime, steps, opts.seeds[0])?;
+        let base = rows.last().unwrap().val_ppl; // ds=64 = full attention
+        let mut t = Table::new(title,
+            &["d_select", "per head", "val PPL", "dPPL", "QK saved"]);
+        for r in &rows {
+            t.row(&[
+                r.d_select.to_string(),
+                (r.d_select / 8).to_string(),
+                common::fmt(r.val_ppl, 2),
+                common::fmt_pct(100.0 * (r.val_ppl - base) / base),
+                format!("{:.0}%", r.qk_saved_pct),
+            ]);
+        }
+        tables.push(t);
+    }
+    Ok(tables)
+}

@@ -1,0 +1,100 @@
+//! Experiment 5 (paper §3.1, Tables 1/2): post-training SVD compression of
+//! the pretrained tinylm (the GPT-2 stand-in).
+//!
+//! Table 1: rank sweep × {both, K-only, Q-only}. Expected shape: K-only is
+//! far more forgiving than Q-only (the paper's 7x asymmetry at mid rank),
+//! and compressing both compounds catastrophically.
+//!
+//! Table 2: K-only SVD at rank r + QK-only fine-tuning recovers to within
+//! low single digits of an identically fine-tuned uncompressed control.
+
+use anyhow::Result;
+
+use crate::bench::Table;
+use crate::experiments::common::{self, Opts, LARGE_CORPUS};
+use crate::model::surgery::{self, AblationMode};
+use crate::runtime::{ParamStore, Runtime};
+
+pub const PRETRAIN_STEPS: usize = 360;
+
+/// Pretrain (or load) the deployed base model for Exp 5/8 experiments.
+pub fn base_model(rt: &Runtime, opts: &Opts)
+    -> Result<(ParamStore, crate::datagen::corpus::Corpus)> {
+    let corpus = common::corpus_for(rt, "tinylm_ds64", LARGE_CORPUS);
+    let pre = common::pretrain_lm(rt, "tinylm_ds64", &corpus, "base",
+                                  opts.steps(PRETRAIN_STEPS), opts.seeds[0])?;
+    Ok((pre.params, corpus))
+}
+
+pub fn table1(rt: &Runtime, opts: &Opts) -> Result<Table> {
+    let (params, corpus) = base_model(rt, opts)?;
+    let cfg = rt.manifest().config("tinylm_ds64")?.clone();
+    let baseline = common::val_ppl(rt, "tinylm_ds64", &params, &corpus)?;
+    let mut t = Table::new(
+        &format!(
+            "Table 1 — SVD compression of pretrained tinylm \
+             (baseline PPL {:.2}); d_qk_head = {}",
+            baseline, cfg.d_qk_head
+        ),
+        &["rank/head", "Both Q+K", "K-only", "Q-only"],
+    );
+    for r in [1usize, 2, 4, 6] {
+        let mut cells = vec![r.to_string()];
+        for mode in
+            [AblationMode::Both, AblationMode::KOnly, AblationMode::QOnly]
+        {
+            let ab = surgery::low_rank_ablation(&params, &cfg, r, mode)?;
+            let ppl = common::val_ppl(rt, "tinylm_ds64", &ab, &corpus)?;
+            cells.push(format!(
+                "{:.2} ({})",
+                ppl,
+                common::fmt_pct(100.0 * (ppl - baseline) / baseline)
+            ));
+        }
+        t.row(&cells);
+    }
+    Ok(t)
+}
+
+pub fn table2(rt: &Runtime, opts: &Opts) -> Result<Table> {
+    let (params, corpus) = base_model(rt, opts)?;
+    let full_cfg = rt.manifest().config("tinylm_ds64")?.clone();
+    let ft_steps = opts.steps(140);
+    let (b, s) = (full_cfg.train_batch, full_cfg.train_seq);
+    let batches = corpus.batches(&corpus.train, b, s, 99);
+
+    // identically fine-tuned uncompressed control
+    let control = common::qk_finetune(rt, "tinylm_ds64", params.clone(),
+                                      ft_steps,
+                                      |i| batches[i % batches.len()].clone())?;
+    let control_ppl = common::val_ppl(rt, "tinylm_ds64", &control, &corpus)?;
+
+    let mut t = Table::new(
+        &format!(
+            "Table 2 — K-only SVD + QK fine-tuning (control after FT: {:.2})",
+            control_ppl
+        ),
+        &["rank", "before FT", "after FT", "vs control", "K cache saved"],
+    );
+    for ds in [32usize, 16, 8] {
+        let thin_name = format!("tinylm_ds{ds}");
+        let thin_cfg = rt.manifest().config(&thin_name)?.clone();
+        let thin = surgery::factor_to_thin(&params, &full_cfg, &thin_cfg)?;
+        let before = common::val_ppl(rt, &thin_name, &thin, &corpus)?;
+        let tuned = common::qk_finetune(rt, &thin_name, thin, ft_steps,
+                                        |i| batches[i % batches.len()].clone())?;
+        let after = common::val_ppl(rt, &thin_name, &tuned, &corpus)?;
+        t.row(&[
+            format!("{} (d_K/{})", ds, 64 / ds),
+            common::fmt(before, 2),
+            common::fmt(after, 2),
+            common::fmt_pct(100.0 * (after - control_ppl) / control_ppl),
+            format!("{:.0}%", 100.0 * (1.0 - ds as f64 / 64.0)),
+        ]);
+    }
+    Ok(t)
+}
+
+pub fn run(rt: &Runtime, opts: &Opts) -> Result<Vec<Table>> {
+    Ok(vec![table1(rt, opts)?, table2(rt, opts)?])
+}

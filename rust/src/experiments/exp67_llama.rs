@@ -1,0 +1,210 @@
+//! Experiments 6/7/7b (paper §3.2-3.3 + §9, Tables 3/4/5/16/17, Figs 1/2):
+//! LLaMA-style architecture — d_select sweep, full-vs-thin from-scratch
+//! training trajectories at two token budgets, downstream probe parity,
+//! and the GQA/MLA comparison trained from scratch.
+
+use anyhow::Result;
+
+use crate::bench::Table;
+use crate::datagen::probes;
+use crate::experiments::common::{self, Opts, LARGE_CORPUS};
+use crate::runtime::Runtime;
+use crate::substrate::mathutil::{mean, std_dev};
+use crate::train::{eval, Schedule, Trainer, TrainState};
+
+/// Table 16: LLaMA-arch d_select sweep (same protocol as exp34 large).
+pub fn table16(rt: &Runtime, opts: &Opts) -> Result<Table> {
+    let corpus = common::corpus_for(rt, "llama_ds64", LARGE_CORPUS);
+    let steps = opts.steps(260);
+    let mut rows = Vec::new();
+    for ds in [8usize, 16, 32, 64] {
+        let cfg_name = format!("llama_ds{ds}");
+        let pre = common::pretrain_lm(rt, &cfg_name, &corpus, "lmlarge",
+                                      steps, opts.seeds[0])?;
+        let ppl = common::val_ppl(rt, &cfg_name, &pre.params, &corpus)?;
+        let cfg = rt.manifest().config(&cfg_name)?;
+        rows.push((ds, cfg.n_parameters(), ppl));
+    }
+    let base = rows.last().unwrap().2;
+    let mut t = Table::new(
+        "Table 16 — LLaMA-style architecture, d_select sweep (from scratch)",
+        &["d_select", "per head", "params", "val PPL", "dPPL", "QK saved"],
+    );
+    for (ds, params, ppl) in rows {
+        t.row(&[
+            ds.to_string(),
+            (ds / 4).to_string(),
+            format!("{:.2}M", params as f64 / 1e6),
+            common::fmt(ppl, 2),
+            common::fmt_pct(100.0 * (ppl - base) / base),
+            format!("{:.0}%", 100.0 * (1.0 - ds as f64 / 64.0)),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Table 17: MHA vs thin keys vs GQA vs MLA, all from scratch.
+pub fn table17(rt: &Runtime, opts: &Opts) -> Result<Table> {
+    let corpus = common::corpus_for(rt, "llama_ds64", LARGE_CORPUS);
+    let steps = opts.steps(260);
+    let variants: &[(&str, &str)] = &[
+        ("llama_ds64", "MHA (baseline)"),
+        ("llama_ds32", "Thin keys d_select=d/2"),
+        ("llama_ds16", "Thin keys d_select=d/4"),
+        ("llama_gqa2", "GQA 2 kv heads"),
+        ("llama_gqa1", "GQA 1 kv head (MQA)"),
+        ("llama_mla56", "MLA d_c=56"),
+        ("llama_mla36", "MLA d_c=36"),
+    ];
+    let mut rows = Vec::new();
+    for (cfg_name, label) in variants {
+        let pre = common::pretrain_lm(rt, cfg_name, &corpus, "lmlarge",
+                                      steps, opts.seeds[0])?;
+        let ppl = common::val_ppl(rt, cfg_name, &pre.params, &corpus)?;
+        let cfg = rt.manifest().config(cfg_name)?;
+        rows.push((label.to_string(), cfg.n_parameters(), cfg.kv_budget, ppl));
+    }
+    let (base_budget, base_ppl) = (rows[0].2, rows[0].3);
+    let mut t = Table::new(
+        "Table 17 — KV compression methods trained from scratch (LLaMA arch)",
+        &["method", "params", "KV budget", "KV saved", "val PPL", "dPPL"],
+    );
+    for (label, params, budget, ppl) in rows {
+        t.row(&[
+            label,
+            format!("{:.2}M", params as f64 / 1e6),
+            budget.to_string(),
+            format!("{:.1}%", 100.0 * (1.0 - budget as f64 / base_budget as f64)),
+            common::fmt(ppl, 2),
+            common::fmt_pct(100.0 * (ppl - base_ppl) / base_ppl),
+        ]);
+    }
+    Ok(t)
+}
+
+pub struct Trajectory {
+    pub cfg: String,
+    pub seed: u64,
+    pub checkpoints: Vec<(usize, f64)>, // (step, val ppl)
+    pub seconds: f64,
+    pub params: usize,
+}
+
+/// Train with periodic validation snapshots (Figures 1/2).
+pub fn trajectory(rt: &Runtime, cfg_name: &str, steps: usize, every: usize,
+                  seed: u64) -> Result<Trajectory> {
+    let corpus = common::corpus_for(rt, cfg_name, LARGE_CORPUS);
+    let trainer = Trainer::new(rt, cfg_name, false)?;
+    let cfg = trainer.cfg.clone();
+    let mut st = TrainState::new(&cfg, seed);
+    let sched = Schedule::warmup_cosine(3e-3, steps / 10, steps);
+    let batches =
+        corpus.batches(&corpus.train, cfg.train_batch, cfg.train_seq, seed);
+    let mut checkpoints = Vec::new();
+    let mut done = 0usize;
+    let mut train_secs = 0.0;
+    while done < steps {
+        let chunk = every.min(steps - done);
+        let out = trainer.run(&mut st, chunk, &sched, |i| {
+            batches[(done + i) % batches.len()].clone()
+        })?;
+        train_secs += out.seconds;
+        done += chunk;
+        let ppl = common::val_ppl(rt, cfg_name, &st.params, &corpus)?;
+        checkpoints.push((done, ppl));
+    }
+    // persist final weights for the probe evaluation
+    st.params
+        .save(&crate::artifacts_dir().join("ckpt")
+              .join(format!("{cfg_name}_traj{steps}_s{seed}.tkw")))?;
+    Ok(Trajectory {
+        cfg: cfg_name.to_string(),
+        seed,
+        checkpoints,
+        seconds: train_secs,
+        params: cfg.n_parameters(),
+    })
+}
+
+/// Tables 3/4 + Figures 1/2: full vs thin at two token budgets, 2 seeds.
+pub fn tables_3_4_figs(rt: &Runtime, opts: &Opts) -> Result<Vec<Table>> {
+    let mut tables = Vec::new();
+    for (label, base_steps) in
+        [("Table 3 + Fig 1 (short budget, tokens:params ~ 0.3)", 160usize),
+         ("Table 4 + Fig 2 (long budget, tokens:params ~ 1.9)", 640usize)]
+    {
+        let steps = opts.steps(base_steps);
+        let every = (steps / 8).max(1);
+        let mut results: Vec<(String, Vec<Trajectory>)> = Vec::new();
+        for cfg_name in ["llama_ds64", "llama_ds16"] {
+            let mut trajs = Vec::new();
+            for &seed in &opts.seeds {
+                trajs.push(trajectory(rt, cfg_name, steps, every, seed)?);
+            }
+            results.push((cfg_name.to_string(), trajs));
+        }
+        // summary table
+        let mut t = Table::new(label,
+            &["model", "params", "final PPL (mean±std)", "wall-clock (s)"]);
+        for (name, trajs) in &results {
+            let finals: Vec<f64> =
+                trajs.iter().map(|tr| tr.checkpoints.last().unwrap().1).collect();
+            let secs: Vec<f64> = trajs.iter().map(|tr| tr.seconds).collect();
+            t.row(&[
+                name.clone(),
+                format!("{:.2}M", trajs[0].params as f64 / 1e6),
+                format!("{:.2} ± {:.2}", mean(&finals), std_dev(&finals)),
+                format!("{:.1}", mean(&secs)),
+            ]);
+        }
+        tables.push(t);
+        // trajectory table (the Figure as a series)
+        let mut f = Table::new(
+            &format!("{label} — PPL trajectory (seed {})", opts.seeds[0]),
+            &["step", "full", "thin d/4"],
+        );
+        let full = &results[0].1[0];
+        let thin = &results[1].1[0];
+        for (i, &(step, ppl)) in full.checkpoints.iter().enumerate() {
+            f.row(&[
+                step.to_string(),
+                common::fmt(ppl, 2),
+                common::fmt(thin.checkpoints[i].1, 2),
+            ]);
+        }
+        tables.push(f);
+    }
+    Ok(tables)
+}
+
+/// Table 5: downstream probe parity of the long-budget from-scratch models.
+pub fn table5(rt: &Runtime, opts: &Opts) -> Result<Table> {
+    let steps = opts.steps(640);
+    let seed = opts.seeds[0];
+    let model = common::corpus_model(rt, "llama_ds64");
+    let mut t = Table::new(
+        "Table 5 — downstream probes, from-scratch full vs thin (d/4)",
+        &["probe", "full", "thin", "delta"],
+    );
+    let load = |cfg_name: &str| -> Result<crate::runtime::ParamStore> {
+        let p = crate::artifacts_dir().join("ckpt")
+            .join(format!("{cfg_name}_traj{steps}_s{seed}.tkw"));
+        crate::runtime::ParamStore::load(&p)
+    };
+    let full = load("llama_ds64")?;
+    let thin = load("llama_ds16")?;
+    let full_cfg = rt.manifest().config("llama_ds64")?.clone();
+    let thin_cfg = rt.manifest().config("llama_ds16")?.clone();
+    let n_items = (100.0 * opts.scale).max(20.0) as usize;
+    for (name, items) in probes::standard_suite(&model, n_items, 1234) {
+        let a = eval::probe_accuracy(rt, &full_cfg, &full, &items)?;
+        let b = eval::probe_accuracy(rt, &thin_cfg, &thin, &items)?;
+        t.row(&[
+            name.to_string(),
+            format!("{:.1}", 100.0 * a),
+            format!("{:.1}", 100.0 * b),
+            format!("{:+.1}", 100.0 * (b - a)),
+        ]);
+    }
+    Ok(t)
+}

@@ -1,0 +1,103 @@
+//! Experiment 8 (paper §3.4, Tables 7/8): SVD + QK fine-tuning on the GQA
+//! model (the Mistral-7B stand-in) — the pipeline must compose with GQA and
+//! show the same ~+2% @ /4 recovery shape as the MHA model, plus downstream
+//! probe deltas for compressed-then-finetuned models.
+
+use anyhow::Result;
+
+use crate::bench::Table;
+use crate::datagen::probes;
+use crate::experiments::common::{self, Opts, LARGE_CORPUS};
+use crate::model::surgery;
+use crate::runtime::{ParamStore, Runtime};
+use crate::train::eval;
+
+pub const PRETRAIN_STEPS: usize = 360;
+
+pub fn base_model(rt: &Runtime, opts: &Opts)
+    -> Result<(ParamStore, crate::datagen::corpus::Corpus)> {
+    let corpus = common::corpus_for(rt, "tinygqa_ds64", LARGE_CORPUS);
+    let pre = common::pretrain_lm(rt, "tinygqa_ds64", &corpus, "base",
+                                  opts.steps(PRETRAIN_STEPS), opts.seeds[0])?;
+    Ok((pre.params, corpus))
+}
+
+/// Table 7: rank sweep with before/after-FT PPL vs identically-FT control.
+pub fn table7(rt: &Runtime, opts: &Opts) -> Result<(Table, Vec<(String, ParamStore)>)> {
+    let (params, corpus) = base_model(rt, opts)?;
+    let full_cfg = rt.manifest().config("tinygqa_ds64")?.clone();
+    let ft_steps = opts.steps(140);
+    let (b, s) = (full_cfg.train_batch, full_cfg.train_seq);
+    let batches = corpus.batches(&corpus.train, b, s, 98);
+
+    let control = common::qk_finetune(rt, "tinygqa_ds64", params.clone(),
+                                      ft_steps,
+                                      |i| batches[i % batches.len()].clone())?;
+    let control_ppl = common::val_ppl(rt, "tinygqa_ds64", &control, &corpus)?;
+    let mut keep: Vec<(String, ParamStore)> =
+        vec![("control".into(), control)];
+
+    let mut t = Table::new(
+        &format!(
+            "Table 7 — GQA model (8q/2kv): SVD + QK-FT (control: {:.2})",
+            control_ppl
+        ),
+        &["rank", "before FT", "after FT", "vs control", "K cache saved"],
+    );
+    for ds in [32usize, 16, 8] {
+        let thin_name = format!("tinygqa_ds{ds}");
+        let thin_cfg = rt.manifest().config(&thin_name)?.clone();
+        let thin = surgery::factor_to_thin(&params, &full_cfg, &thin_cfg)?;
+        let before = common::val_ppl(rt, &thin_name, &thin, &corpus)?;
+        let tuned = common::qk_finetune(rt, &thin_name, thin, ft_steps,
+                                        |i| batches[i % batches.len()].clone())?;
+        let after = common::val_ppl(rt, &thin_name, &tuned, &corpus)?;
+        t.row(&[
+            format!("{} (d_K/{})", ds, 64 / ds),
+            common::fmt(before, 2),
+            common::fmt(after, 2),
+            common::fmt_pct(100.0 * (after - control_ppl) / control_ppl),
+            format!("{:.0}%", 100.0 * (1.0 - ds as f64 / 64.0)),
+        ]);
+        keep.push((thin_name, tuned));
+    }
+    Ok((t, keep))
+}
+
+/// Table 8: downstream probes of compressed+FT models vs the FT control.
+pub fn table8(rt: &Runtime, opts: &Opts, models: &[(String, ParamStore)])
+    -> Result<Table> {
+    let model = common::corpus_model(rt, "tinygqa_ds64");
+    let n_items = (100.0 * opts.scale).max(20.0) as usize;
+    let mut t = Table::new(
+        "Table 8 — downstream probes of SVD-compressed GQA model (+FT)",
+        &["probe", "ctrl+FT", "r/2 +FT", "r/4 +FT", "d(r/2)", "d(r/4)"],
+    );
+    let cfg_of = |name: &str| {
+        if name == "control" { "tinygqa_ds64".to_string() } else { name.to_string() }
+    };
+    for (probe_name, items) in probes::standard_suite(&model, n_items, 4321) {
+        let mut acc = Vec::new();
+        for (name, params) in
+            models.iter().filter(|(n, _)| n != "tinygqa_ds8")
+        {
+            let cfg = rt.manifest().config(&cfg_of(name))?.clone();
+            acc.push(100.0 * eval::probe_accuracy(rt, &cfg, params, &items)?);
+        }
+        t.row(&[
+            probe_name.to_string(),
+            format!("{:.1}", acc[0]),
+            format!("{:.1}", acc[1]),
+            format!("{:.1}", acc[2]),
+            format!("{:+.1}", acc[1] - acc[0]),
+            format!("{:+.1}", acc[2] - acc[0]),
+        ]);
+    }
+    Ok(t)
+}
+
+pub fn run(rt: &Runtime, opts: &Opts) -> Result<Vec<Table>> {
+    let (t7, models) = table7(rt, opts)?;
+    let t8 = table8(rt, opts, &models)?;
+    Ok(vec![t7, t8])
+}

@@ -1,0 +1,22 @@
+//! Experiment reproductions — one module per paper table/figure family
+//! (the per-experiment index lives in DESIGN.md §6).
+//!
+//! Every experiment is a pure function `run(&Runtime, &Opts) -> Vec<Table>`
+//! that trains/evaluates at the scaled-down geometry and prints the same
+//! rows the paper reports. Benches call these with `Opts::quick()`; the
+//! full protocol (recorded in EXPERIMENTS.md) uses `Opts::default()`.
+//! Pretrained checkpoints are cached under `artifacts/ckpt/` keyed by
+//! (config, protocol hash) so repeated invocations don't retrain.
+
+pub mod common;
+pub mod exp1_copyback;
+pub mod exp2_kvret;
+pub mod exp34_lm_sweep;
+pub mod exp5_svd;
+pub mod exp67_llama;
+pub mod exp8_gqa;
+pub mod exp19_domain_ft;
+pub mod serving;
+pub mod analytical;
+
+pub use common::Opts;

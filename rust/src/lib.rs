@@ -1,0 +1,46 @@
+//! # thinkeys — "Thin Keys, Full Values" full-stack reproduction
+//!
+//! A three-layer system reproducing the paper's factored-key KV-cache
+//! compression end to end:
+//!
+//! - **Layer 3 (this crate)**: the serving coordinator — request router,
+//!   continuous batcher, paged KV cache with *split thin-K / full-V pools*,
+//!   model surgery (truncated-SVD key factoring with query absorption), a
+//!   training harness that drives AOT train-step executables, and every
+//!   substrate those need (tensors, SVD, RNG, JSON, tokenizers, workload
+//!   generators, benchmarking, property testing).
+//! - **Layer 2**: JAX model family, lowered once to HLO text by
+//!   `python/compile/aot.py` (`make artifacts`).
+//! - **Layer 1**: Pallas asymmetric-attention kernels, lowered into the same
+//!   HLO (interpret mode; see DESIGN.md §7).
+//!
+//! Python never runs at request time: the runtime loads `artifacts/*.hlo.txt`
+//! through the PJRT C API (`xla` crate) and everything else is rust.
+
+pub mod substrate;
+pub mod tokenizer;
+pub mod datagen;
+pub mod runtime;
+pub mod model;
+pub mod train;
+pub mod coordinator;
+pub mod bench;
+pub mod proptest;
+pub mod experiments;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Root of the artifacts directory (overridable via `THINKEYS_ARTIFACTS`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    match std::env::var_os("THINKEYS_ARTIFACTS") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => {
+            // Resolve relative to the crate root so tests/benches work from
+            // any CWD inside the repo.
+            let mut p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+            p.push("artifacts");
+            p
+        }
+    }
+}

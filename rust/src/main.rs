@@ -1,0 +1,247 @@
+//! `thinkeys` — the leader binary.
+//!
+//! Subcommands:
+//!   info                      artifact/config inventory + kernel report
+//!   serve                     run a synthetic serving workload
+//!   train --config NAME       pretrain a config on the synthetic corpus
+//!   compress --rank-div N     factored-keys surgery on a checkpoint
+//!   experiments [LIST|all]    regenerate paper tables/figures
+//!
+//! Python never runs here: everything executes from artifacts/ built once
+//! by `make artifacts`.
+
+use anyhow::{bail, Result};
+
+use thinkeys::coordinator::engine::Engine;
+use thinkeys::coordinator::kvcache::{KvCacheConfig, KvCacheManager};
+use thinkeys::coordinator::router::Router;
+use thinkeys::coordinator::sampling::Sampler;
+use thinkeys::coordinator::scheduler::Scheduler;
+use thinkeys::datagen::arrival::{poisson_trace, TraceConfig};
+use thinkeys::experiments::{self, Opts};
+use thinkeys::runtime::{ParamStore, Runtime};
+use thinkeys::substrate::args::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().cloned().unwrap_or_else(|| "help".into());
+    let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
+    match cmd.as_str() {
+        "info" => info(),
+        "serve" => serve(rest),
+        "train" => train(rest),
+        "compress" => compress(rest),
+        "experiments" => run_experiments(rest),
+        _ => {
+            println!(
+                "thinkeys — Thin Keys, Full Values reproduction\n\n\
+                 usage: thinkeys <info|serve|train|compress|experiments> \
+                 [flags]\n\
+                 run `thinkeys <cmd> --help` for flags"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn info() -> Result<()> {
+    let rt = Runtime::new()?;
+    let m = rt.manifest();
+    println!("artifacts dir: {:?}", m.dir);
+    println!("{} configs, {} artifacts", m.configs.len(), m.artifacts.len());
+    println!("decode buckets: {:?}", m.decode_batches);
+    for (name, c) in &m.configs {
+        println!(
+            "  {name}: {} {}  d_model {} d_select {} heads {}/{} \
+             layers {} params {:.2}M  kv_budget {}",
+            c.arch, c.attn, c.d_model, c.d_select, c.n_heads, c.n_kv_heads,
+            c.n_layers, c.n_parameters() as f64 / 1e6, c.kv_budget
+        );
+    }
+    Ok(())
+}
+
+fn serve(argv: &[String]) -> Result<()> {
+    let p = Args::new("serve a synthetic trace on the factored-keys engine")
+        .flag_str("config", Some("servethin"), "serving config")
+        .flag_usize("requests", Some(32), "number of requests")
+        .flag_f64("rate", Some(4.0), "arrival rate (req/s)")
+        .flag_f64("budget-mb", Some(8.0), "KV cache budget (MB)")
+        .flag_usize("max-batch", Some(16), "max concurrent sequences")
+        .flag_bool("pallas", "use the Pallas-kernel decode artifacts")
+        .parse(argv)?;
+    let cfg_name = p.str("config")?;
+    let rt = Runtime::new()?;
+    let cfg = rt.manifest().config(&cfg_name)?.clone();
+    let params = ParamStore::init(&cfg, 42);
+    let eng = Engine::new(&rt, &cfg_name, params, p.bool("pallas"),
+                          Sampler::Greedy, 0)?;
+    let kv = KvCacheManager::new(KvCacheConfig {
+        n_layers: cfg.n_layers,
+        k_dims: cfg.k_cache_dims,
+        v_dims: cfg.v_cache_dims,
+        block_tokens: 16,
+        bytes_per_el_k: 2.0,
+        bytes_per_el_v: 2.0,
+        budget_bytes: p.f64("budget-mb")? * 1e6,
+    });
+    let sched = Scheduler::new(eng, kv, p.usize("max-batch")?);
+    let mut router = Router::new(sched);
+    let trace = poisson_trace(
+        &TraceConfig {
+            rate_per_s: p.f64("rate")?,
+            n_requests: p.usize("requests")?,
+            ..Default::default()
+        },
+        0,
+    );
+    let report = router.run_trace(&trace, 0)?;
+    println!("{}", report.report());
+    println!("\nengine:\n{}", router.sched.engine.metrics.report());
+    let stats = router.sched.kv.stats();
+    println!(
+        "\nkv pools: K used {:.2} MB / {:.2} MB, V used {:.2} MB / {:.2} MB \
+         (K fraction of live cache: {:.1}%)",
+        stats.k_bytes_used / 1e6,
+        stats.k_bytes_capacity / 1e6,
+        stats.v_bytes_used / 1e6,
+        stats.v_bytes_capacity / 1e6,
+        100.0 * stats.k_fraction()
+    );
+    Ok(())
+}
+
+fn train(argv: &[String]) -> Result<()> {
+    let p = Args::new("pretrain a config on the synthetic corpus")
+        .flag_str("config", Some("tinylm_ds64"), "model config")
+        .flag_usize("steps", Some(240), "optimizer steps")
+        .flag_usize("seed", Some(137), "seed")
+        .parse(argv)?;
+    let rt = Runtime::new()?;
+    let cfg_name = p.str("config")?;
+    let corpus = experiments::common::corpus_for(
+        &rt, &cfg_name, experiments::common::LARGE_CORPUS);
+    let pre = experiments::common::pretrain_lm(
+        &rt, &cfg_name, &corpus, "cli", p.usize("steps")?,
+        p.usize("seed")? as u64)?;
+    let ppl =
+        experiments::common::val_ppl(&rt, &cfg_name, &pre.params, &corpus)?;
+    println!(
+        "{} trained {} steps in {:.1}s (cached: {}), val PPL {:.2}",
+        cfg_name,
+        p.usize("steps")?,
+        pre.seconds,
+        pre.cached,
+        ppl
+    );
+    Ok(())
+}
+
+fn compress(argv: &[String]) -> Result<()> {
+    let p = Args::new("factored-keys surgery: full ckpt -> thin ckpt")
+        .flag_str("from", Some("tinylm_ds64"), "full config")
+        .flag_str("to", Some("tinylm_ds16"), "thin config")
+        .flag_str("ckpt", None, "input .tkw (default: fresh init)")
+        .flag_str("out", Some("/tmp/thin.tkw"), "output .tkw")
+        .parse(argv)?;
+    let rt = Runtime::new()?;
+    let full_cfg = rt.manifest().config(&p.str("from")?)?.clone();
+    let thin_cfg = rt.manifest().config(&p.str("to")?)?.clone();
+    let full = match p.str("ckpt") {
+        Ok(path) => ParamStore::load(std::path::Path::new(&path))?,
+        Err(_) => ParamStore::init(&full_cfg, 42),
+    };
+    let thin = thinkeys::model::surgery::factor_to_thin(
+        &full, &full_cfg, &thin_cfg)?;
+    let out = p.str("out")?;
+    thin.save(std::path::Path::new(&out))?;
+    println!(
+        "factored {} ({:.2}M params) -> {} ({:.2}M params), K cache dims \
+         {} -> {} ({:.0}% K cache saved); wrote {}",
+        full_cfg.name,
+        full.n_elements() as f64 / 1e6,
+        thin_cfg.name,
+        thin.n_elements() as f64 / 1e6,
+        full_cfg.k_cache_dims,
+        thin_cfg.k_cache_dims,
+        100.0 * (1.0 - thin_cfg.k_cache_dims as f64
+                 / full_cfg.k_cache_dims as f64),
+        out
+    );
+    Ok(())
+}
+
+fn run_experiments(argv: &[String]) -> Result<()> {
+    let p = Args::new("regenerate paper tables/figures")
+        .flag_f64("scale", Some(1.0), "step-budget multiplier")
+        .flag_usize("seeds", Some(2), "number of seeds (trajectories)")
+        .parse(argv)?;
+    let mut opts = Opts { scale: p.f64("scale")?, ..Default::default() };
+    opts.seeds.truncate(p.usize("seeds")?.max(1));
+    let which: Vec<String> = if p.positional.is_empty() {
+        vec!["all".into()]
+    } else {
+        p.positional.clone()
+    };
+    let all = which.iter().any(|w| w == "all");
+    let want = |name: &str| all || which.iter().any(|w| w == name);
+    let known = ["analytical", "exp1", "exp2", "exp34", "exp5", "exp6",
+                 "exp7", "exp8", "exp19", "serving"];
+    if !all && !which.iter().all(|w| known.contains(&w.as_str())) {
+        bail!("unknown experiment in {which:?}; known: {known:?} or all");
+    }
+    let rt = Runtime::new()?;
+
+    if want("analytical") {
+        for t in experiments::analytical::run() {
+            t.print();
+        }
+    }
+    if want("exp1") {
+        experiments::exp1_copyback::run(&rt, &opts)?.print();
+    }
+    if want("exp2") {
+        experiments::exp2_kvret::run(&rt, &opts)?.print();
+    }
+    if want("exp34") {
+        for t in experiments::exp34_lm_sweep::run(&rt, &opts)? {
+            t.print();
+        }
+    }
+    if want("exp5") {
+        for t in experiments::exp5_svd::run(&rt, &opts)? {
+            t.print();
+        }
+    }
+    if want("exp6") {
+        experiments::exp67_llama::table16(&rt, &opts)?.print();
+        experiments::exp67_llama::table17(&rt, &opts)?.print();
+    }
+    if want("exp7") {
+        for t in experiments::exp67_llama::tables_3_4_figs(&rt, &opts)? {
+            t.print();
+        }
+        experiments::exp67_llama::table5(&rt, &opts)?.print();
+    }
+    if want("exp8") {
+        for t in experiments::exp8_gqa::run(&rt, &opts)? {
+            t.print();
+        }
+    }
+    if want("exp19") {
+        experiments::exp19_domain_ft::run(&rt, &opts)?.print();
+    }
+    if want("serving") {
+        for t in experiments::serving::run(&rt, &opts)? {
+            t.print();
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,5 @@
+//! Model-level operations on parameter stores: factored-key surgery
+//! (the paper's §2.3 inference primitive) and low-rank ablation transforms
+//! (Table 1's K-only / Q-only / both modes).
+
+pub mod surgery;

@@ -1,0 +1,322 @@
+//! Factored keys (paper §2.3): per-head truncated SVD of the pretrained key
+//! projection with *query-side absorption*.
+//!
+//! For each kv head `j` with full per-head dim `d_h` and target rank `r`:
+//!
+//! ```text
+//! W_K^(j) ≈ A·Bᵀ,  A = U_r Σ_r ∈ R^{d×r}  (thin key projection — CACHED)
+//!                  B = V_r    ∈ R^{d_h×r}
+//! W_Q^(i)' = W_Q^(i) · V_r · sqrt(r/d_h)   for every query head i in j's
+//!                                          group (absorbed — EPHEMERAL)
+//! ```
+//!
+//! The `sqrt(r/d_h)` factor corrects the softmax scale: the thin model
+//! divides scores by `sqrt(r)` where the original divided by `sqrt(d_h)`,
+//! so raw scores are rescaled to keep `softmax(q'k'ᵀ/√r) ==
+//! softmax(qkᵀ/√d_h)` exactly (at full rank) — a subtlety the paper's
+//! "scores preserved exactly" claim glosses over but any implementation
+//! needs.
+//!
+//! Invariant (tested below + in `rust/tests/surgery_equivalence.rs`): the
+//! thin deployment's attention scores equal the scores of the *same* model
+//! with `W_K` replaced by its rank-r reconstruction — so Table 1's K-only
+//! PPL measurements are exactly the deployed factored-key PPL.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::manifest::ConfigEntry;
+use crate::runtime::params::ParamStore;
+use crate::substrate::linalg::{low_rank_approx, truncated_factor};
+use crate::substrate::tensor::Tensor;
+
+/// Which projections to compress in the Table-1 ablation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AblationMode {
+    KOnly,
+    QOnly,
+    Both,
+}
+
+/// Split a packed projection (d, n_heads*d_head) into per-head (d, d_head).
+fn split_heads(w: &Tensor, n_heads: usize) -> Vec<Tensor> {
+    let dh = w.shape[1] / n_heads;
+    (0..n_heads).map(|h| w.cols(h * dh, (h + 1) * dh)).collect()
+}
+
+fn join_heads(parts: &[Tensor]) -> Tensor {
+    let refs: Vec<&Tensor> = parts.iter().collect();
+    Tensor::hcat(&refs)
+}
+
+fn check_factorable(cfg: &ConfigEntry) -> Result<()> {
+    if cfg.attn == "mla" {
+        bail!("factored keys target MHA/GQA models; MLA already stores a latent");
+    }
+    Ok(())
+}
+
+/// Factor a pretrained full-dim model into the thin configuration.
+///
+/// `full` must match `full_cfg`; the result matches `thin_cfg` (same
+/// architecture, smaller `d_select`). Only `W_Q`/`W_K` change — everything
+/// else is copied verbatim (the paper's "nothing else in the network
+/// changes").
+pub fn factor_to_thin(
+    full: &ParamStore,
+    full_cfg: &ConfigEntry,
+    thin_cfg: &ConfigEntry,
+) -> Result<ParamStore> {
+    check_factorable(full_cfg)?;
+    full.check_matches(full_cfg)?;
+    for (a, b, what) in [
+        (full_cfg.arch.as_str(), thin_cfg.arch.as_str(), "arch"),
+        (full_cfg.attn.as_str(), thin_cfg.attn.as_str(), "attn"),
+    ] {
+        if a != b {
+            bail!("config mismatch: {what} {a:?} vs {b:?}");
+        }
+    }
+    if full_cfg.d_model != thin_cfg.d_model
+        || full_cfg.n_layers != thin_cfg.n_layers
+        || full_cfg.n_heads != thin_cfg.n_heads
+        || full_cfg.n_kv_heads != thin_cfg.n_kv_heads
+        || full_cfg.vocab != thin_cfg.vocab
+    {
+        bail!("factor_to_thin: architectures are not surgery-compatible");
+    }
+    let r = thin_cfg.d_qk_head;
+    let dh = full_cfg.d_qk_head;
+    if r > dh {
+        bail!("thin rank {r} exceeds full per-head dim {dh}");
+    }
+    let scale = ((r as f64) / (dh as f64)).sqrt() as f32;
+    let group = full_cfg.group();
+
+    let mut out_names = Vec::with_capacity(thin_cfg.params.len());
+    let mut out_tensors = Vec::with_capacity(thin_cfg.params.len());
+    for spec in &thin_cfg.params {
+        let t = if spec.name.ends_with(".attn.wk") {
+            let wk = full.get(&spec.name)?;
+            let heads = split_heads(wk, full_cfg.n_kv_heads);
+            let thin: Vec<Tensor> = heads
+                .iter()
+                .map(|h| truncated_factor(h, r).0)
+                .collect();
+            join_heads(&thin)
+        } else if spec.name.ends_with(".attn.wq") {
+            let layer = spec.name.trim_end_matches(".attn.wq");
+            let wq = full.get(&spec.name)?;
+            let wk = full.get(&format!("{layer}.attn.wk"))?;
+            let k_heads = split_heads(wk, full_cfg.n_kv_heads);
+            let q_heads = split_heads(wq, full_cfg.n_heads);
+            let absorbed: Vec<Tensor> = q_heads
+                .iter()
+                .enumerate()
+                .map(|(i, qh)| {
+                    let (_, vr) = truncated_factor(&k_heads[i / group], r);
+                    qh.matmul(&vr).scale(scale)
+                })
+                .collect();
+            join_heads(&absorbed)
+        } else {
+            full.get(&spec.name)?.clone()
+        };
+        if t.shape != spec.shape {
+            bail!(
+                "surgery produced {:?} for {:?}, spec wants {:?}",
+                t.shape,
+                spec.name,
+                spec.shape
+            );
+        }
+        out_names.push(spec.name.clone());
+        out_tensors.push(t);
+    }
+    let store = ParamStore { names: out_names, tensors: out_tensors };
+    store.check_matches(thin_cfg)?;
+    Ok(store)
+}
+
+/// Table-1 ablation: replace `W_K`/`W_Q` by their per-head rank-r
+/// reconstructions, keeping shapes (and therefore artifacts) unchanged.
+pub fn low_rank_ablation(
+    params: &ParamStore,
+    cfg: &ConfigEntry,
+    rank_per_head: usize,
+    mode: AblationMode,
+) -> Result<ParamStore> {
+    check_factorable(cfg)?;
+    params.check_matches(cfg)?;
+    let mut out = params.clone();
+    for layer in 0..cfg.n_layers {
+        if mode != AblationMode::QOnly {
+            let name = format!("l{layer}.attn.wk");
+            let wk = params.get(&name)?;
+            let heads = split_heads(wk, cfg.n_kv_heads);
+            let recon: Vec<Tensor> = heads
+                .iter()
+                .map(|h| low_rank_approx(h, rank_per_head))
+                .collect();
+            out.set(&name, join_heads(&recon))?;
+        }
+        if mode != AblationMode::KOnly {
+            let name = format!("l{layer}.attn.wq");
+            let wq = params.get(&name)?;
+            let heads = split_heads(wq, cfg.n_heads);
+            let recon: Vec<Tensor> = heads
+                .iter()
+                .map(|h| low_rank_approx(h, rank_per_head))
+                .collect();
+            out.set(&name, join_heads(&recon))?;
+        }
+    }
+    Ok(out)
+}
+
+/// K-cache bytes per token per layer for a config at a given element width
+/// (the physical saving the surgery buys — used by the capacity planner).
+pub fn k_cache_bytes_per_token(cfg: &ConfigEntry, bytes_per_el: f64) -> f64 {
+    cfg.k_cache_dims as f64 * bytes_per_el
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+    use crate::substrate::rng::Rng;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = crate::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Manifest::load(&dir).unwrap())
+    }
+
+    /// Raw attention scores for head `h` given x (n×d): (x·Wq_h)(x·Wk_h)ᵀ/√dh.
+    fn head_scores(x: &Tensor, wq: &Tensor, wk: &Tensor, h: usize,
+                   n_heads: usize, kv_h: usize, n_kv: usize) -> Tensor {
+        let q = split_heads(wq, n_heads)[h].clone();
+        let k = split_heads(wk, n_kv)[kv_h].clone();
+        let dh = q.shape[1] as f32;
+        let qs = x.matmul(&q);
+        let ks = x.matmul(&k);
+        qs.matmul(&ks.t()).scale(1.0 / dh.sqrt())
+    }
+
+    #[test]
+    fn full_rank_surgery_preserves_scores_exactly() {
+        let Some(m) = manifest() else { return };
+        // tinylm_ds64 -> tinylm_ds16? full dh=16; full-rank check needs a
+        // thin cfg with r == dh, which doesn't exist; emulate by factoring
+        // to ds128 itself is identity-rank. Use ds32 (r=4) for approx and
+        // verify the thin==reconstructed equivalence (the key invariant).
+        let full_cfg = m.config("tinylm_ds64").unwrap();
+        let thin_cfg = m.config("tinylm_ds32").unwrap();
+        let full = ParamStore::init(full_cfg, 5);
+        let thin = factor_to_thin(&full, full_cfg, thin_cfg).unwrap();
+        let recon = low_rank_ablation(&full, full_cfg, thin_cfg.d_qk_head,
+                                      AblationMode::KOnly).unwrap();
+        let mut rng = Rng::new(0);
+        let x = Tensor::randn(&[6, full_cfg.d_model], 0.5, &mut rng);
+        for layer in [0usize, 2] {
+            for h in [0usize, 7] {
+                let s_thin = head_scores(
+                    &x,
+                    thin.get(&format!("l{layer}.attn.wq")).unwrap(),
+                    thin.get(&format!("l{layer}.attn.wk")).unwrap(),
+                    h, 8, h, 8);
+                let s_recon = head_scores(
+                    &x,
+                    recon.get(&format!("l{layer}.attn.wq")).unwrap(),
+                    recon.get(&format!("l{layer}.attn.wk")).unwrap(),
+                    h, 8, h, 8);
+                let err = s_thin.max_abs_diff(&s_recon);
+                assert!(err < 1e-3,
+                        "thin vs reconstructed scores differ: {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn surgery_shrinks_only_qk() {
+        let Some(m) = manifest() else { return };
+        let full_cfg = m.config("tinylm_ds64").unwrap();
+        let thin_cfg = m.config("tinylm_ds32").unwrap();
+        let full = ParamStore::init(full_cfg, 1);
+        let thin = factor_to_thin(&full, full_cfg, thin_cfg).unwrap();
+        assert_eq!(thin.get("emb.tok").unwrap(), full.get("emb.tok").unwrap());
+        assert_eq!(
+            thin.get("l2.attn.wv").unwrap(),
+            full.get("l2.attn.wv").unwrap()
+        );
+        assert_eq!(
+            thin.get("l2.mlp.w1").unwrap(),
+            full.get("l2.mlp.w1").unwrap()
+        );
+        assert_eq!(thin.get("l0.attn.wk").unwrap().shape, vec![64, 8 * 4]);
+        assert!(thin.n_elements() < full.n_elements());
+    }
+
+    #[test]
+    fn gqa_absorption_maps_groups_correctly() {
+        let Some(m) = manifest() else { return };
+        let full_cfg = m.config("tinygqa_ds64").unwrap();
+        let thin_cfg = m.config("tinygqa_ds32").unwrap();
+        let full = ParamStore::init(full_cfg, 2);
+        let thin = factor_to_thin(&full, full_cfg, thin_cfg).unwrap();
+        // thin == reconstructed scores for a query head in the SECOND group
+        let recon = low_rank_ablation(&full, full_cfg, thin_cfg.d_qk_head,
+                                      AblationMode::KOnly).unwrap();
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&[5, full_cfg.d_model], 0.5, &mut rng);
+        // 8 q heads, 2 kv heads -> group 4; head 6 belongs to kv head 1
+        let s_thin = head_scores(
+            &x,
+            thin.get("l1.attn.wq").unwrap(),
+            thin.get("l1.attn.wk").unwrap(),
+            6, 8, 1, 2);
+        let s_recon = head_scores(
+            &x,
+            recon.get("l1.attn.wq").unwrap(),
+            recon.get("l1.attn.wk").unwrap(),
+            6, 8, 1, 2);
+        assert!(s_thin.max_abs_diff(&s_recon) < 1e-3);
+    }
+
+    #[test]
+    fn ablation_modes_touch_expected_tensors() {
+        let Some(m) = manifest() else { return };
+        let cfg = m.config("tinylm_ds64").unwrap();
+        let p = ParamStore::init(cfg, 4);
+        let k = low_rank_ablation(&p, cfg, 4, AblationMode::KOnly).unwrap();
+        assert_ne!(k.get("l0.attn.wk").unwrap(), p.get("l0.attn.wk").unwrap());
+        assert_eq!(k.get("l0.attn.wq").unwrap(), p.get("l0.attn.wq").unwrap());
+        let q = low_rank_ablation(&p, cfg, 4, AblationMode::QOnly).unwrap();
+        assert_eq!(q.get("l0.attn.wk").unwrap(), p.get("l0.attn.wk").unwrap());
+        assert_ne!(q.get("l0.attn.wq").unwrap(), p.get("l0.attn.wq").unwrap());
+        let b = low_rank_ablation(&p, cfg, 4, AblationMode::Both).unwrap();
+        assert_ne!(b.get("l0.attn.wk").unwrap(), p.get("l0.attn.wk").unwrap());
+        assert_ne!(b.get("l0.attn.wq").unwrap(), p.get("l0.attn.wq").unwrap());
+    }
+
+    #[test]
+    fn full_rank_ablation_is_identity() {
+        let Some(m) = manifest() else { return };
+        let cfg = m.config("tinylm_ds64").unwrap();
+        let p = ParamStore::init(cfg, 6);
+        let r = low_rank_ablation(&p, cfg, cfg.d_qk_head, AblationMode::Both)
+            .unwrap();
+        for (a, b) in p.tensors.iter().zip(&r.tensors) {
+            assert!(a.max_abs_diff(b) < 1e-3);
+        }
+    }
+
+    #[test]
+    fn rejects_mla() {
+        let Some(m) = manifest() else { return };
+        let cfg = m.config("llama_mla56").unwrap();
+        let p = ParamStore::init(cfg, 0);
+        assert!(low_rank_ablation(&p, cfg, 4, AblationMode::KOnly).is_err());
+    }
+}

@@ -1,0 +1,108 @@
+//! Mini property-testing framework (the registry has no proptest crate).
+//!
+//! A property is a closure over a seeded [`Rng`]; the runner executes it for
+//! N seeds and reports the first failing seed so failures reproduce exactly:
+//!
+//! ```
+//! use thinkeys::proptest::property;
+//! property("sort is idempotent", 100, |rng| {
+//!     let mut v: Vec<u64> = (0..rng.below(50)).map(|_| rng.next_u64()).collect();
+//!     v.sort(); let w = { let mut w = v.clone(); w.sort(); w };
+//!     if v == w { Ok(()) } else { Err("not idempotent".into()) }
+//! });
+//! ```
+//!
+//! No shrinking: cases are generated from a seed, so a failing case is
+//! already minimal to *reproduce* (rerun that seed); generators below are
+//! kept small-biased instead.
+
+use crate::substrate::rng::Rng;
+
+/// Run `cases` instances of the property; panics with the failing seed.
+pub fn property<F>(name: &str, cases: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xBEEF_0000 ^ seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property {name:?} failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Small-biased size: ~half the time < 8, otherwise up to `max`.
+pub fn small_size(rng: &mut Rng, max: usize) -> usize {
+    if rng.below(2) == 0 {
+        1 + rng.below(8.min(max))
+    } else {
+        1 + rng.below(max)
+    }
+}
+
+/// Check two f32 slices elementwise within atol+rtol; returns Err with the
+/// worst offender formatted.
+pub fn check_close(a: &[f32], b: &[f32], rtol: f32, atol: f32)
+    -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("len {} vs {}", a.len(), b.len()));
+    }
+    let mut worst = (0usize, 0.0f32);
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let err = (x - y).abs();
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if err > tol && err > worst.1 {
+            worst = (i, err);
+        }
+    }
+    if worst.1 > 0.0 {
+        return Err(format!(
+            "mismatch at [{}]: {} vs {} (err {})",
+            worst.0, a[worst.0], b[worst.0], worst.1
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        property("trivial", 25, |_rng| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at seed")]
+    fn failing_property_reports_seed() {
+        property("always-fails", 3, |_rng| Err("boom".into()));
+    }
+
+    #[test]
+    fn check_close_catches_mismatch() {
+        assert!(check_close(&[1.0, 2.0], &[1.0, 2.0], 1e-6, 1e-6).is_ok());
+        assert!(check_close(&[1.0, 2.0], &[1.0, 2.1], 1e-6, 1e-6).is_err());
+        assert!(check_close(&[1.0], &[1.0, 2.0], 0.1, 0.1).is_err());
+    }
+
+    #[test]
+    fn properties_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        property("record", 5, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        property("record", 5, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,204 @@
+//! PJRT execution: compile HLO-text artifacts once, cache the executables,
+//! execute with `Tensor`/`TensorI32` arguments.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: `HloModuleProto::
+//! from_text_file` → `XlaComputation::from_proto` → `client.compile` →
+//! `execute`, then unwrap the 1-tuple (aot.py lowers with
+//! `return_tuple=True`) and decompose into per-output literals.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::{ArtifactEntry, Manifest};
+use crate::substrate::tensor::{Tensor, TensorI32};
+
+/// A runtime argument: f32 tensor, i32 tensor, scalars, or a pre-built
+/// literal (the hot-path fast lane — skips the host-side conversion; see
+/// EXPERIMENTS.md §Perf).
+pub enum Arg<'a> {
+    F(&'a Tensor),
+    I(&'a TensorI32),
+    ScalarF(f32),
+    ScalarI(i32),
+    L(&'a xla::Literal),
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// (artifact, compile seconds) log — surfaced by the perf report.
+    pub compile_log: RefCell<Vec<(String, f64)>>,
+}
+
+impl Runtime {
+    /// Load the manifest from [`crate::artifacts_dir`] and create the CPU
+    /// PJRT client.
+    pub fn new() -> Result<Runtime> {
+        Self::with_dir(crate::artifacts_dir())
+    }
+
+    pub fn with_dir(dir: PathBuf) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir,
+            exes: RefCell::new(HashMap::new()),
+            compile_log: RefCell::new(Vec::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.manifest.artifact(name)
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    pub fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self.manifest.artifact(name)?;
+        let path = self.dir.join(&entry.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))?;
+        let secs = t0.elapsed().as_secs_f64();
+        self.compile_log.borrow_mut().push((name.to_string(), secs));
+        let rc = Rc::new(exe);
+        self.exes.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.exes.borrow().contains_key(name)
+    }
+
+    /// Execute an artifact with typed args; returns per-output literals.
+    pub fn execute(&self, name: &str, args: &[Arg]) -> Result<Vec<xla::Literal>> {
+        let entry = self.manifest.artifact(name)?;
+        if args.len() != entry.inputs.len() {
+            bail!(
+                "{name}: got {} args, artifact wants {}",
+                args.len(),
+                entry.inputs.len()
+            );
+        }
+        // Build owned literals for tensor/scalar args; Arg::L passes a
+        // caller-cached literal through without conversion.
+        let mut owned: Vec<Option<xla::Literal>> = Vec::with_capacity(args.len());
+        for (a, spec) in args.iter().zip(&entry.inputs) {
+            let lit = match a {
+                Arg::F(t) => {
+                    if t.shape != spec.shape {
+                        bail!(
+                            "{name}: input {:?} shape {:?} != expected {:?}",
+                            spec.name, t.shape, spec.shape
+                        );
+                    }
+                    Some(tensor_to_literal(t)?)
+                }
+                Arg::I(t) => {
+                    if t.shape != spec.shape {
+                        bail!(
+                            "{name}: input {:?} shape {:?} != expected {:?}",
+                            spec.name, t.shape, spec.shape
+                        );
+                    }
+                    Some(tensor_i32_to_literal(t)?)
+                }
+                Arg::ScalarF(v) => Some(xla::Literal::scalar(*v)),
+                Arg::ScalarI(v) => Some(xla::Literal::scalar(*v)),
+                Arg::L(_) => None,
+            };
+            owned.push(lit);
+        }
+        let refs: Vec<&xla::Literal> = args
+            .iter()
+            .zip(&owned)
+            .map(|(a, o)| match (a, o) {
+                (Arg::L(l), _) => *l,
+                (_, Some(lit)) => lit,
+                _ => unreachable!(),
+            })
+            .collect();
+        let exe = self.load(name)?;
+        let result = exe
+            .execute::<&xla::Literal>(&refs)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("download {name}: {e}"))?;
+        let outs = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {name}: {e}"))?;
+        if outs.len() != entry.outputs.len() {
+            bail!(
+                "{name}: got {} outputs, manifest says {}",
+                outs.len(),
+                entry.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+}
+
+// --- literal conversions ---
+
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&t.data);
+    if t.shape.is_empty() {
+        // scalar: reshape to rank-0
+        return lit
+            .reshape(&[])
+            .map_err(|e| anyhow::anyhow!("reshape scalar: {e}"));
+    }
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape: {e}"))
+}
+
+pub fn tensor_i32_to_literal(t: &TensorI32) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&t.data);
+    if t.shape.is_empty() {
+        return lit
+            .reshape(&[])
+            .map_err(|e| anyhow::anyhow!("reshape scalar: {e}"));
+    }
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape: {e}"))
+}
+
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow::anyhow!("shape: {e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("to_vec<f32>: {e}"))?;
+    Ok(Tensor::new(&dims, data))
+}
+
+pub fn literal_to_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow::anyhow!("scalar: {e}"))
+}

@@ -1,0 +1,360 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the rust runtime: model configs (with ordered parameter specs and
+//! init recipes) and the artifact inventory (file, kind, geometry, exact
+//! input/output signatures).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::substrate::json::Value;
+
+#[derive(Clone, Debug)]
+pub struct ParamSpecEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: String, // "normal" | "normal_scaled" | "zeros" | "ones"
+    pub std: f64,
+    pub wd: bool,
+    pub qk: bool,
+}
+
+impl ParamSpecEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Mirror of python `configs.ModelConfig` (+ derived fields + param specs).
+#[derive(Clone, Debug)]
+pub struct ConfigEntry {
+    pub name: String,
+    pub arch: String,
+    pub attn: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_select: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub d_c: usize,
+    pub d_r: usize,
+    pub d_qk_head: usize,
+    pub d_v_head: usize,
+    pub k_cache_dims: usize,
+    pub v_cache_dims: usize,
+    pub kv_budget: usize,
+    pub train_batch: usize,
+    pub train_seq: usize,
+    pub params: Vec<ParamSpecEntry>,
+}
+
+impl ConfigEntry {
+    pub fn n_parameters(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    pub fn qk_parameters(&self) -> usize {
+        self.params.iter().filter(|p| p.qk).map(|p| p.numel()).sum()
+    }
+
+    /// GQA group size (query heads per kv head).
+    pub fn group(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub name: String,
+    pub dtype: String, // "float32" | "int32"
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub kind: String, // train | qkft | evalloss | logits | prefill | decode
+    pub config: String,
+    pub geom: BTreeMap<String, String>,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: Vec<String>,
+    pub n_params: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct AdamConfig {
+    pub b1: f64,
+    pub b2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub adam: AdamConfig,
+    pub decode_batches: Vec<usize>,
+    pub prefill_seq: usize,
+    pub configs: BTreeMap<String, ConfigEntry>,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "cannot read {path:?} — run `make artifacts` first \
+                 (python never runs at request time, but it must run once \
+                 at build time)"
+            )
+        })?;
+        let v = Value::parse(&text)?;
+        if v.get("version")?.as_usize()? != 1 {
+            bail!("unsupported manifest version");
+        }
+        let adam_v = v.get("adam")?;
+        let adam = AdamConfig {
+            b1: adam_v.get("b1")?.as_f64()?,
+            b2: adam_v.get("b2")?.as_f64()?,
+            eps: adam_v.get("eps")?.as_f64()?,
+            weight_decay: adam_v.get("weight_decay")?.as_f64()?,
+        };
+        let decode_batches = v
+            .get("decode_batches")?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        let prefill_seq = v.get("prefill_seq")?.as_usize()?;
+
+        let mut configs = BTreeMap::new();
+        for (name, cv) in v.get("configs")?.as_obj()? {
+            let params = cv
+                .get("params")?
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpecEntry {
+                        name: p.get("name")?.as_str()?.to_string(),
+                        shape: p.get("shape")?.shape_vec()?,
+                        init: p.get("init")?.as_str()?.to_string(),
+                        std: p.get("std")?.as_f64()?,
+                        wd: p.get("wd")?.as_bool()?,
+                        qk: p.get("qk")?.as_bool()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let g = |k: &str| -> Result<usize> { cv.get(k)?.as_usize() };
+            configs.insert(
+                name.clone(),
+                ConfigEntry {
+                    name: name.clone(),
+                    arch: cv.get("arch")?.as_str()?.to_string(),
+                    attn: cv.get("attn")?.as_str()?.to_string(),
+                    vocab: g("vocab")?,
+                    d_model: g("d_model")?,
+                    n_layers: g("n_layers")?,
+                    n_heads: g("n_heads")?,
+                    n_kv_heads: g("n_kv_heads")?,
+                    d_select: g("d_select")?,
+                    d_ff: g("d_ff")?,
+                    max_seq: g("max_seq")?,
+                    d_c: g("d_c")?,
+                    d_r: g("d_r")?,
+                    d_qk_head: g("d_qk_head")?,
+                    d_v_head: g("d_v_head")?,
+                    k_cache_dims: g("k_cache_dims")?,
+                    v_cache_dims: g("v_cache_dims")?,
+                    kv_budget: g("kv_budget")?,
+                    train_batch: g("train_batch")?,
+                    train_seq: g("train_seq")?,
+                    params,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for av in v.get("artifacts")?.as_arr()? {
+            let inputs = av
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(|i| {
+                    let t = i.as_arr()?;
+                    Ok(InputSpec {
+                        name: t[0].as_str()?.to_string(),
+                        dtype: t[1].as_str()?.to_string(),
+                        shape: t[2].shape_vec()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = av
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(|o| Ok(o.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?;
+            let mut geom = BTreeMap::new();
+            for (k, gv) in av.get("geom")?.as_obj()? {
+                let s = match gv {
+                    Value::Str(s) => s.clone(),
+                    Value::Num(n) => format!("{}", *n as i64),
+                    _ => bail!("bad geom value"),
+                };
+                geom.insert(k.clone(), s);
+            }
+            let name = av.get("name")?.as_str()?.to_string();
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name,
+                    file: av.get("file")?.as_str()?.to_string(),
+                    kind: av.get("kind")?.as_str()?.to_string(),
+                    config: av.get("config")?.as_str()?.to_string(),
+                    geom,
+                    inputs,
+                    outputs,
+                    n_params: av.get("n_params")?.as_usize()?,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            adam,
+            decode_batches,
+            prefill_seq,
+            configs,
+            artifacts,
+        })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigEntry> {
+        self.configs
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown config {name:?}"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact {name:?}"))
+    }
+
+    /// Artifact naming convention helpers (mirror aot.py `add()`).
+    pub fn train_name(&self, cfg: &str) -> String {
+        let c = &self.configs[cfg];
+        format!("train_{cfg}_b{}_s{}", c.train_batch, c.train_seq)
+    }
+
+    pub fn qkft_name(&self, cfg: &str) -> String {
+        let c = &self.configs[cfg];
+        format!("qkft_{cfg}_b{}_s{}", c.train_batch, c.train_seq)
+    }
+
+    pub fn evalloss_name(&self, cfg: &str) -> String {
+        let c = &self.configs[cfg];
+        format!("evalloss_{cfg}_b{}_s{}", c.train_batch, c.train_seq)
+    }
+
+    pub fn logits_name(&self, cfg: &str) -> String {
+        let c = &self.configs[cfg];
+        format!("logits_{cfg}_b{}_s{}", c.train_batch, c.train_seq)
+    }
+
+    pub fn prefill_name(&self, cfg: &str, pallas: bool) -> String {
+        let suffix = if pallas { "_pallas" } else { "" };
+        format!("prefill_{cfg}_s{}{suffix}", self.prefill_seq)
+    }
+
+    pub fn decode_name(&self, cfg: &str, batch: usize, pallas: bool) -> String {
+        let suffix = if pallas { "_pallas" } else { "" };
+        format!("decode_{cfg}_b{batch}{suffix}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = crate::artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(&dir).unwrap())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(m) = manifest() else { return };
+        assert!(m.configs.len() >= 20, "{}", m.configs.len());
+        assert!(m.artifacts.len() >= 80);
+        assert_eq!(m.decode_batches, vec![1, 2, 4, 8, 16, 32]);
+        let c = m.config("tinylm_ds64").unwrap();
+        assert_eq!(c.d_model, 64);
+        assert_eq!(c.d_qk_head, 8);
+        assert_eq!(c.kv_budget, 128);
+        let thin = m.config("tinylm_ds32").unwrap();
+        assert_eq!(thin.d_qk_head, 4);
+        assert!(thin.n_parameters() < c.n_parameters());
+    }
+
+    #[test]
+    fn param_specs_ordered_and_typed() {
+        let Some(m) = manifest() else { return };
+        let c = m.config("llama_ds32").unwrap();
+        assert_eq!(c.params[0].name, "emb.tok");
+        assert_eq!(c.params[0].shape, vec![c.vocab, c.d_model]);
+        assert!(c.params.iter().any(|p| p.qk && p.name.contains("wq")));
+        assert!(c.params.iter().any(|p| p.init == "normal_scaled"));
+        // llama has no biases / learned positions
+        assert!(!c.params.iter().any(|p| p.name == "emb.pos"));
+    }
+
+    #[test]
+    fn naming_helpers_resolve_to_real_artifacts() {
+        let Some(m) = manifest() else { return };
+        for n in [
+            m.train_name("tinylm_ds64"),
+            m.qkft_name("tinylm_ds32"),
+            m.evalloss_name("tinylm_ds32"),
+            m.logits_name("copyback_ds4"),
+            m.prefill_name("servethin", false),
+            m.decode_name("servethin", 8, false),
+            m.decode_name("servethin", 8, true),
+        ] {
+            assert!(m.artifacts.contains_key(&n), "missing artifact {n}");
+            assert!(m.dir.join(&m.artifacts[&n].file).exists());
+        }
+    }
+
+    #[test]
+    fn artifact_inputs_start_with_params() {
+        let Some(m) = manifest() else { return };
+        let a = m.artifact(&m.train_name("copyback_ds4")).unwrap();
+        let c = m.config("copyback_ds4").unwrap();
+        assert_eq!(a.n_params, c.params.len());
+        for (i, p) in c.params.iter().enumerate() {
+            assert_eq!(a.inputs[i].name, p.name);
+            assert_eq!(a.inputs[i].shape, p.shape);
+        }
+        assert_eq!(a.inputs.len(), 3 * c.params.len() + 5);
+    }
+
+    #[test]
+    fn thin_param_savings_match_paper_ratio() {
+        let Some(m) = manifest() else { return };
+        // d_select = d_model/4 -> 75% QK parameter saving (paper §1)
+        let full = m.config("tinylm_ds64").unwrap().qk_parameters() as f64;
+        let thin = m.config("tinylm_ds16").unwrap().qk_parameters() as f64;
+        assert!((1.0 - thin / full - 0.75).abs() < 0.01);
+    }
+}

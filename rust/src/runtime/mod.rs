@@ -1,0 +1,14 @@
+//! AOT runtime: loads `artifacts/manifest.json` + `*.hlo.txt` produced by
+//! `make artifacts` and executes them on the PJRT CPU client.
+//!
+//! This is the only boundary between rust and the XLA world; everything
+//! above it (training harness, serving engine, experiments) works with
+//! [`crate::substrate::tensor::Tensor`]s and artifact names.
+
+pub mod manifest;
+pub mod client;
+pub mod params;
+
+pub use client::Runtime;
+pub use manifest::{ArtifactEntry, ConfigEntry, Manifest, ParamSpecEntry};
+pub use params::ParamStore;

@@ -1,0 +1,200 @@
+//! Named, ordered parameter store — the host-side twin of the flat HLO
+//! argument list. Ordering always follows the manifest's param specs, so a
+//! `ParamStore` can be splatted directly into a train/eval/serve call.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::manifest::ConfigEntry;
+use crate::substrate::rng::Rng;
+use crate::substrate::tensor::Tensor;
+use crate::substrate::tensorfile;
+
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    pub names: Vec<String>,
+    pub tensors: Vec<Tensor>,
+}
+
+impl ParamStore {
+    /// Initialize per the manifest init specs (normal / scaled / zeros /
+    /// ones) — the rust twin of python `model.init_params`.
+    pub fn init(cfg: &ConfigEntry, seed: u64) -> ParamStore {
+        let mut rng = Rng::new(seed);
+        let mut names = Vec::with_capacity(cfg.params.len());
+        let mut tensors = Vec::with_capacity(cfg.params.len());
+        for spec in &cfg.params {
+            let t = match spec.init.as_str() {
+                "zeros" => Tensor::zeros(&spec.shape),
+                "ones" => Tensor::ones(&spec.shape),
+                // "normal" and "normal_scaled" differ only in std, which the
+                // manifest carries explicitly.
+                _ => Tensor::randn(&spec.shape, spec.std as f32, &mut rng),
+            };
+            names.push(spec.name.clone());
+            tensors.push(t);
+        }
+        ParamStore { names, tensors }
+    }
+
+    /// Zeros with the same names/shapes (Adam m/v state).
+    pub fn zeros_like(&self) -> ParamStore {
+        ParamStore {
+            names: self.names.clone(),
+            tensors: self.tensors.iter().map(|t| Tensor::zeros(&t.shape)).collect(),
+        }
+    }
+
+    pub fn index_of(&self, name: &str) -> Result<usize> {
+        self.names
+            .iter()
+            .position(|n| n == name)
+            .ok_or_else(|| anyhow::anyhow!("no parameter {name:?}"))
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        Ok(&self.tensors[self.index_of(name)?])
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) -> Result<()> {
+        let i = self.index_of(name)?;
+        if self.tensors[i].shape != t.shape {
+            bail!(
+                "set {name:?}: shape {:?} != existing {:?}",
+                t.shape,
+                self.tensors[i].shape
+            );
+        }
+        self.tensors[i] = t;
+        Ok(())
+    }
+
+    pub fn n_elements(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Replace all tensors from freshly downloaded literals (same order).
+    pub fn replace_from(&mut self, tensors: Vec<Tensor>) -> Result<()> {
+        if tensors.len() != self.tensors.len() {
+            bail!("replace_from: {} vs {}", tensors.len(), self.tensors.len());
+        }
+        for (old, new) in self.tensors.iter().zip(&tensors) {
+            if old.shape != new.shape {
+                bail!("replace_from shape {:?} vs {:?}", new.shape, old.shape);
+            }
+        }
+        self.tensors = tensors;
+        Ok(())
+    }
+
+    /// Validate against a config's specs (names, order, shapes).
+    pub fn check_matches(&self, cfg: &ConfigEntry) -> Result<()> {
+        if self.names.len() != cfg.params.len() {
+            bail!(
+                "param count {} != config {} ({})",
+                self.names.len(),
+                cfg.params.len(),
+                cfg.name
+            );
+        }
+        for (i, spec) in cfg.params.iter().enumerate() {
+            if self.names[i] != spec.name {
+                bail!("param {i}: {:?} != spec {:?}", self.names[i], spec.name);
+            }
+            if self.tensors[i].shape != spec.shape {
+                bail!(
+                    "param {:?}: shape {:?} != spec {:?}",
+                    spec.name,
+                    self.tensors[i].shape,
+                    spec.shape
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let pairs: Vec<(String, &Tensor)> = self
+            .names
+            .iter()
+            .cloned()
+            .zip(self.tensors.iter())
+            .collect();
+        tensorfile::save(path, &pairs)
+    }
+
+    pub fn load(path: &Path) -> Result<ParamStore> {
+        let (names, mut map) = tensorfile::load(path)?;
+        let tensors = names
+            .iter()
+            .map(|n| map.remove(n).unwrap())
+            .collect();
+        Ok(ParamStore { names, tensors })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn cfg() -> Option<ConfigEntry> {
+        let dir = crate::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Manifest::load(&dir).unwrap().config("tinylm_ds32").unwrap().clone())
+    }
+
+    #[test]
+    fn init_matches_specs() {
+        let Some(c) = cfg() else { return };
+        let p = ParamStore::init(&c, 0);
+        p.check_matches(&c).unwrap();
+        // ln gains init to ones, embeddings to noise
+        assert!(p.get("l0.ln1.g").unwrap().data.iter().all(|&x| x == 1.0));
+        assert!(p.get("emb.tok").unwrap().data.iter().any(|&x| x != 0.0));
+        // scaled init has smaller magnitude than base init
+        let wo = p.get("l0.attn.wo").unwrap();
+        let wq = p.get("l0.attn.wq").unwrap();
+        let rms = |t: &Tensor| {
+            (t.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
+                / t.len() as f64)
+                .sqrt()
+        };
+        assert!(rms(wo) < rms(wq));
+    }
+
+    #[test]
+    fn deterministic_init() {
+        let Some(c) = cfg() else { return };
+        let a = ParamStore::init(&c, 7);
+        let b = ParamStore::init(&c, 7);
+        assert_eq!(a.tensors, b.tensors);
+        let c2 = ParamStore::init(&c, 8);
+        assert_ne!(a.tensors, c2.tensors);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let Some(c) = cfg() else { return };
+        let p = ParamStore::init(&c, 3);
+        let path = std::env::temp_dir().join("params_roundtrip.tkw");
+        p.save(&path).unwrap();
+        let q = ParamStore::load(&path).unwrap();
+        assert_eq!(p.names, q.names);
+        assert_eq!(p.tensors, q.tensors);
+        q.check_matches(&c).unwrap();
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn set_rejects_bad_shape() {
+        let Some(c) = cfg() else { return };
+        let mut p = ParamStore::init(&c, 0);
+        assert!(p.set("emb.tok", Tensor::zeros(&[2, 2])).is_err());
+        let shape = p.get("ln_f.g").unwrap().shape.clone();
+        assert!(p.set("ln_f.g", Tensor::zeros(&shape)).is_ok());
+    }
+}

@@ -1,0 +1,233 @@
+//! Tiny declarative CLI argument parser (no clap in the vendored registry).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and generated `--help` text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug)]
+enum Kind {
+    Str(Option<String>),
+    Usize(Option<usize>),
+    F64(Option<f64>),
+    Bool,
+}
+
+#[derive(Clone, Debug)]
+struct Spec {
+    name: String,
+    kind: Kind,
+    help: String,
+}
+
+/// Declarative parser: declare flags, then `parse()`.
+pub struct Args {
+    about: String,
+    specs: Vec<Spec>,
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(about: &str) -> Self {
+        Args {
+            about: about.to_string(),
+            specs: Vec::new(),
+            values: BTreeMap::new(),
+            bools: BTreeMap::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    pub fn flag_str(mut self, name: &str, default: Option<&str>, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.into(),
+            kind: Kind::Str(default.map(|s| s.to_string())),
+            help: help.into(),
+        });
+        self
+    }
+
+    pub fn flag_usize(mut self, name: &str, default: Option<usize>, help: &str) -> Self {
+        self.specs.push(Spec { name: name.into(), kind: Kind::Usize(default), help: help.into() });
+        self
+    }
+
+    pub fn flag_f64(mut self, name: &str, default: Option<f64>, help: &str) -> Self {
+        self.specs.push(Spec { name: name.into(), kind: Kind::F64(default), help: help.into() });
+        self
+    }
+
+    pub fn flag_bool(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec { name: name.into(), kind: Kind::Bool, help: help.into() });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{}\n\nFlags:\n", self.about);
+        for s in &self.specs {
+            let d = match &s.kind {
+                Kind::Str(Some(d)) => format!(" (default: {d})"),
+                Kind::Usize(Some(d)) => format!(" (default: {d})"),
+                Kind::F64(Some(d)) => format!(" (default: {d})"),
+                Kind::Bool => " (boolean)".to_string(),
+                _ => String::new(),
+            };
+            out.push_str(&format!("  --{:<18} {}{}\n", s.name, s.help, d));
+        }
+        out
+    }
+
+    /// Parse a token stream (without argv[0]).
+    pub fn parse(mut self, argv: &[String]) -> Result<Parsed> {
+        let known: BTreeMap<String, Kind> =
+            self.specs.iter().map(|s| (s.name.clone(), s.kind.clone())).collect();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped == "help" {
+                    bail!("{}", self.usage());
+                }
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let kind = match known.get(&name) {
+                    Some(k) => k,
+                    None => bail!("unknown flag --{name}\n{}", self.usage()),
+                };
+                match kind {
+                    Kind::Bool => {
+                        self.bools.insert(name, true);
+                    }
+                    _ => {
+                        let v = match inline_val {
+                            Some(v) => v,
+                            None => {
+                                i += 1;
+                                argv.get(i)
+                                    .cloned()
+                                    .ok_or_else(|| {
+                                        anyhow::anyhow!("--{name} needs a value")
+                                    })?
+                            }
+                        };
+                        self.values.insert(name, v);
+                    }
+                }
+            } else {
+                self.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(Parsed { specs: self.specs, values: self.values, bools: self.bools,
+                    positional: self.positional })
+    }
+}
+
+pub struct Parsed {
+    specs: Vec<Spec>,
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    fn spec(&self, name: &str) -> Result<&Spec> {
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .ok_or_else(|| anyhow::anyhow!("flag --{name} was never declared"))
+    }
+
+    pub fn str(&self, name: &str) -> Result<String> {
+        if let Some(v) = self.values.get(name) {
+            return Ok(v.clone());
+        }
+        match &self.spec(name)?.kind {
+            Kind::Str(Some(d)) => Ok(d.clone()),
+            Kind::Str(None) => bail!("missing required flag --{name}"),
+            _ => bail!("--{name} is not a string flag"),
+        }
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize> {
+        if let Some(v) = self.values.get(name) {
+            return Ok(v.parse()?);
+        }
+        match &self.spec(name)?.kind {
+            Kind::Usize(Some(d)) => Ok(*d),
+            Kind::Usize(None) => bail!("missing required flag --{name}"),
+            _ => bail!("--{name} is not a usize flag"),
+        }
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64> {
+        if let Some(v) = self.values.get(name) {
+            return Ok(v.parse()?);
+        }
+        match &self.spec(name)?.kind {
+            Kind::F64(Some(d)) => Ok(*d),
+            Kind::F64(None) => bail!("missing required flag --{name}"),
+            _ => bail!("--{name} is not an f64 flag"),
+        }
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        self.bools.get(name).copied().unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn base() -> Args {
+        Args::new("test")
+            .flag_str("name", Some("deflt"), "a name")
+            .flag_usize("steps", Some(100), "steps")
+            .flag_f64("lr", None, "learning rate")
+            .flag_bool("fast", "go fast")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let p = base().parse(&argv(&["--steps", "5", "--lr=0.1"])).unwrap();
+        assert_eq!(p.str("name").unwrap(), "deflt");
+        assert_eq!(p.usize("steps").unwrap(), 5);
+        assert_eq!(p.f64("lr").unwrap(), 0.1);
+        assert!(!p.bool("fast"));
+    }
+
+    #[test]
+    fn bools_and_positional() {
+        let p = base().parse(&argv(&["exp5", "--fast", "pos2"])).unwrap();
+        assert!(p.bool("fast"));
+        assert_eq!(p.positional, vec!["exp5", "pos2"]);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let p = base().parse(&argv(&[])).unwrap();
+        assert!(p.f64("lr").is_err());
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(base().parse(&argv(&["--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn equals_form() {
+        let p = base().parse(&argv(&["--name=abc"])).unwrap();
+        assert_eq!(p.str("name").unwrap(), "abc");
+    }
+}

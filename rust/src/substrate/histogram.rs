@@ -1,0 +1,164 @@
+//! Log-bucketed latency histogram + streaming counters for the serving
+//! metrics (p50/p90/p99 without storing every sample).
+
+/// Histogram over microsecond latencies with ~4% resolution log buckets.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum_us: f64,
+    min_us: f64,
+    max_us: f64,
+}
+
+const BUCKETS: usize = 512;
+const GROWTH: f64 = 1.04;
+const BASE_US: f64 = 1.0;
+
+fn bucket_of(us: f64) -> usize {
+    if us <= BASE_US {
+        return 0;
+    }
+    let b = (us / BASE_US).ln() / GROWTH.ln();
+    (b as usize).min(BUCKETS - 1)
+}
+
+fn bucket_upper(i: usize) -> f64 {
+    BASE_US * GROWTH.powi(i as i32 + 1)
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![0; BUCKETS],
+            total: 0,
+            sum_us: 0.0,
+            min_us: f64::INFINITY,
+            max_us: 0.0,
+        }
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        self.counts[bucket_of(us)] += 1;
+        self.total += 1;
+        self.sum_us += us;
+        self.min_us = self.min_us.min(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.record_us(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_us / self.total as f64
+        }
+    }
+
+    pub fn max_us(&self) -> f64 {
+        if self.total == 0 { 0.0 } else { self.max_us }
+    }
+
+    /// Quantile in microseconds (upper bound of the containing bucket).
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return bucket_upper(i).min(self.max_us.max(BASE_US));
+            }
+        }
+        self.max_us
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_us += other.sum_us;
+        self.min_us = self.min_us.min(other.min_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.0}us p50={:.0}us p90={:.0}us p99={:.0}us max={:.0}us",
+            self.total,
+            self.mean_us(),
+            self.quantile_us(0.50),
+            self.quantile_us(0.90),
+            self.quantile_us(0.99),
+            self.max_us()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_roughly_correct() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.record_us(i as f64);
+        }
+        let p50 = h.quantile_us(0.5);
+        let p99 = h.quantile_us(0.99);
+        assert!((p50 - 500.0).abs() < 500.0 * 0.08, "p50 {p50}");
+        assert!((p99 - 990.0).abs() < 990.0 * 0.08, "p99 {p99}");
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean_us() - 500.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile_us(0.9), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for i in 0..100 {
+            a.record_us(10.0 + i as f64);
+            b.record_us(1000.0 + i as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 200);
+        assert!(a.quantile_us(0.25) < 200.0);
+        assert!(a.quantile_us(0.75) > 900.0);
+    }
+
+    #[test]
+    fn monotone_quantiles() {
+        let mut h = Histogram::new();
+        let mut x = 1.0;
+        for _ in 0..500 {
+            h.record_us(x);
+            x *= 1.01;
+        }
+        assert!(h.quantile_us(0.1) <= h.quantile_us(0.5));
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
+    }
+}

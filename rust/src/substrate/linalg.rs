@@ -1,0 +1,324 @@
+//! Linear algebra substrate: one-sided Jacobi SVD (no external BLAS/LAPACK).
+//!
+//! This is the engine behind factored keys (paper §2.3): the coordinator
+//! factors each pretrained key projection `W_K ≈ U_r Σ_r V_rᵀ` offline and
+//! absorbs `V_r` into the query projection. One-sided Jacobi is simple,
+//! numerically robust, and exact enough for weight matrices of the sizes we
+//! handle (d_model × d_head).
+
+use crate::substrate::tensor::Tensor;
+
+/// Full SVD of a (m×n) matrix with m ≥ n: returns (U: m×n, S: n, V: n×n)
+/// such that A = U · diag(S) · Vᵀ, with S sorted descending.
+pub struct Svd {
+    pub u: Tensor,
+    pub s: Vec<f32>,
+    pub v: Tensor, // (n, n); columns are right singular vectors
+}
+
+/// One-sided Jacobi SVD. Panics if m < n (callers transpose as needed —
+/// `svd_any` handles both orientations).
+pub fn svd(a: &Tensor) -> Svd {
+    assert_eq!(a.rank(), 2);
+    let (m, n) = (a.shape[0], a.shape[1]);
+    assert!(m >= n, "svd requires m >= n (got {m}x{n}); use svd_any");
+
+    // Work on columns: u[j] is column j of the evolving A, v accumulates
+    // the right rotations starting from identity.
+    let mut cols: Vec<Vec<f64>> = (0..n)
+        .map(|j| (0..m).map(|i| a.data[i * n + j] as f64).collect())
+        .collect();
+    let mut v: Vec<Vec<f64>> = (0..n)
+        .map(|j| (0..n).map(|i| if i == j { 1.0 } else { 0.0 }).collect())
+        .collect();
+
+    let eps = 1e-12;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let (mut aii, mut ajj, mut aij) = (0.0f64, 0.0f64, 0.0f64);
+                for t in 0..m {
+                    aii += cols[i][t] * cols[i][t];
+                    ajj += cols[j][t] * cols[j][t];
+                    aij += cols[i][t] * cols[j][t];
+                }
+                if aij.abs() <= eps * (aii * ajj).sqrt() + 1e-300 {
+                    continue;
+                }
+                off += aij.abs();
+                // Jacobi rotation zeroing the (i,j) inner product.
+                let tau = (ajj - aii) / (2.0 * aij);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for k in 0..m {
+                    let (x, y) = (cols[i][k], cols[j][k]);
+                    cols[i][k] = c * x - s * y;
+                    cols[j][k] = s * x + c * y;
+                }
+                for k in 0..n {
+                    let (x, y) = (v[i][k], v[j][k]);
+                    v[i][k] = c * x - s * y;
+                    v[j][k] = s * x + c * y;
+                }
+            }
+        }
+        if off < 1e-14 {
+            break;
+        }
+    }
+
+    // Singular values = column norms; normalize U columns; sort descending.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = cols
+        .iter()
+        .map(|c| c.iter().map(|x| x * x).sum::<f64>().sqrt())
+        .collect();
+    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+
+    let mut u = Tensor::zeros(&[m, n]);
+    let mut s_out = vec![0.0f32; n];
+    let mut v_out = Tensor::zeros(&[n, n]);
+    for (new_j, &old_j) in order.iter().enumerate() {
+        let nrm = norms[old_j];
+        s_out[new_j] = nrm as f32;
+        for i in 0..m {
+            let val = if nrm > 1e-30 { cols[old_j][i] / nrm } else { 0.0 };
+            u.data[i * n + new_j] = val as f32;
+        }
+        for i in 0..n {
+            v_out.data[i * n + new_j] = v[old_j][i] as f32;
+        }
+    }
+    Svd { u, s: s_out, v: v_out }
+}
+
+/// SVD for any orientation; returns (U: m×k, S: k, V: n×k) with
+/// k = min(m, n) and A = U diag(S) Vᵀ.
+pub fn svd_any(a: &Tensor) -> Svd {
+    let (m, n) = (a.shape[0], a.shape[1]);
+    if m >= n {
+        svd(a)
+    } else {
+        // A = U S Vᵀ  ⇔  Aᵀ = V S Uᵀ
+        let s = svd(&a.t());
+        Svd { u: s.v, s: s.s, v: s.u }
+    }
+}
+
+/// Rank-r truncation: returns (A_thin = U_r·Σ_r : m×r, V_r : n×r).
+/// `A ≈ A_thin · V_rᵀ` — the paper's `W_K ≈ A·B` with `B = V_rᵀ`.
+pub fn truncated_factor(a: &Tensor, r: usize) -> (Tensor, Tensor) {
+    let d = svd_any(a);
+    let k = d.s.len();
+    assert!(r <= k, "rank {r} > min dim {k}");
+    let mut us = d.u.cols(0, r);
+    // scale columns by singular values
+    let rdim = r;
+    for row in 0..us.shape[0] {
+        for j in 0..rdim {
+            us.data[row * rdim + j] *= d.s[j];
+        }
+    }
+    let vr = d.v.cols(0, r);
+    (us, vr)
+}
+
+/// Best rank-r approximation (Eckart–Young): U_r Σ_r V_rᵀ, same shape as A.
+pub fn low_rank_approx(a: &Tensor, r: usize) -> Tensor {
+    let (us, vr) = truncated_factor(a, r);
+    us.matmul(&vr.t())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::rng::Rng;
+
+    fn reconstruct(d: &Svd) -> Tensor {
+        let k = d.s.len();
+        let mut us = d.u.clone();
+        for row in 0..us.shape[0] {
+            for j in 0..k {
+                us.data[row * k + j] *= d.s[j];
+            }
+        }
+        us.matmul(&d.v.t())
+    }
+
+    #[test]
+    fn svd_reconstructs_random() {
+        let mut rng = Rng::new(0);
+        for &(m, n) in &[(8usize, 8usize), (16, 4), (64, 16), (5, 9)] {
+            let a = Tensor::randn(&[m, n], 1.0, &mut rng);
+            let d = svd_any(&a);
+            let r = reconstruct(&d);
+            let err = a.max_abs_diff(&r);
+            assert!(err < 1e-4, "{m}x{n} err {err}");
+        }
+    }
+
+    #[test]
+    fn singular_values_sorted_nonnegative() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(&[20, 10], 1.0, &mut rng);
+        let d = svd(&a);
+        for w in d.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6);
+        }
+        assert!(d.s.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn u_and_v_orthonormal() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(&[12, 6], 1.0, &mut rng);
+        let d = svd(&a);
+        let utu = d.u.t().matmul(&d.u);
+        let vtv = d.v.t().matmul(&d.v);
+        for i in 0..6 {
+            for j in 0..6 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((utu.at(&[i, j]) - want).abs() < 1e-4);
+                assert!((vtv.at(&[i, j]) - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix_svd() {
+        let mut a = Tensor::zeros(&[4, 4]);
+        for (i, &v) in [3.0f32, 1.0, 4.0, 2.0].iter().enumerate() {
+            a.set(&[i, i], v);
+        }
+        let d = svd(&a);
+        assert!((d.s[0] - 4.0).abs() < 1e-5);
+        assert!((d.s[1] - 3.0).abs() < 1e-5);
+        assert!((d.s[3] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn truncation_error_matches_tail_singular_values() {
+        // Eckart–Young: ||A - A_r||_F² = Σ_{i>r} σ_i².
+        let mut rng = Rng::new(3);
+        let a = Tensor::randn(&[32, 8], 1.0, &mut rng);
+        let d = svd(&a);
+        for r in [2usize, 4, 6, 8] {
+            let ar = low_rank_approx(&a, r);
+            let mut diff = a.clone();
+            for (x, y) in diff.data.iter_mut().zip(&ar.data) {
+                *x -= y;
+            }
+            let err = diff.frobenius();
+            let want: f64 = d.s[r..]
+                .iter()
+                .map(|&x| (x as f64) * (x as f64))
+                .sum::<f64>()
+                .sqrt();
+            assert!((err - want).abs() < 1e-3, "r {r}: {err} vs {want}");
+        }
+    }
+
+    #[test]
+    fn truncation_error_monotone_in_rank() {
+        let mut rng = Rng::new(4);
+        let a = Tensor::randn(&[24, 12], 1.0, &mut rng);
+        let mut last = f64::INFINITY;
+        for r in [2usize, 4, 8, 12] {
+            let ar = low_rank_approx(&a, r);
+            let mut diff = a.clone();
+            for (x, y) in diff.data.iter_mut().zip(&ar.data) {
+                *x -= y;
+            }
+            let err = diff.frobenius();
+            assert!(err <= last + 1e-6, "rank {r}");
+            last = err;
+        }
+        assert!(last < 1e-4); // full rank ⇒ exact
+    }
+
+    #[test]
+    fn truncated_factor_shapes() {
+        let mut rng = Rng::new(5);
+        let a = Tensor::randn(&[64, 16], 1.0, &mut rng);
+        let (thin, vr) = truncated_factor(&a, 4);
+        assert_eq!(thin.shape, vec![64, 4]);
+        assert_eq!(vr.shape, vec![16, 4]);
+        // A ≈ thin · vrᵀ at the Eckart–Young error
+        let approx = thin.matmul(&vr.t());
+        let d = svd(&a);
+        let mut diff = a.clone();
+        for (x, y) in diff.data.iter_mut().zip(&approx.data) {
+            *x -= y;
+        }
+        let want: f64 =
+            d.s[4..].iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+        assert!((diff.frobenius() - want).abs() < 1e-3);
+    }
+
+    #[test]
+    fn low_rank_matrix_recovered_exactly() {
+        // Build an exactly rank-3 matrix; rank-3 truncation must be exact.
+        let mut rng = Rng::new(6);
+        let b = Tensor::randn(&[20, 3], 1.0, &mut rng);
+        let c = Tensor::randn(&[3, 10], 1.0, &mut rng);
+        let a = b.matmul(&c);
+        let ar = low_rank_approx(&a, 3);
+        assert!(a.max_abs_diff(&ar) < 1e-4);
+    }
+}
+
+#[cfg(test)]
+mod extra_tests {
+    use super::*;
+    use crate::substrate::rng::Rng;
+
+    #[test]
+    fn svd_of_zero_matrix() {
+        let a = Tensor::zeros(&[6, 3]);
+        let d = svd(&a);
+        assert!(d.s.iter().all(|&x| x == 0.0));
+        let r = low_rank_approx(&a, 2);
+        assert!(r.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn svd_of_rank_one() {
+        let mut rng = Rng::new(77);
+        let u = Tensor::randn(&[10, 1], 1.0, &mut rng);
+        let v = Tensor::randn(&[1, 5], 1.0, &mut rng);
+        let a = u.matmul(&v);
+        let d = svd(&a);
+        assert!(d.s[0] > 1e-3);
+        for &s in &d.s[1..] {
+            assert!(s < 1e-5, "rank-1 matrix has extra singular value {s}");
+        }
+    }
+
+    #[test]
+    fn svd_tall_skinny_and_wide() {
+        let mut rng = Rng::new(78);
+        for shape in [[40usize, 3], [3, 40]] {
+            let a = Tensor::randn(&shape, 1.0, &mut rng);
+            let d = svd_any(&a);
+            assert_eq!(d.s.len(), 3);
+            let (thin, vr) = truncated_factor(&a, 3);
+            let approx = thin.matmul(&vr.t());
+            assert!(a.max_abs_diff(&approx) < 1e-4);
+            let _ = d;
+        }
+    }
+
+    #[test]
+    fn singular_values_match_frobenius() {
+        // ||A||_F^2 == sum sigma_i^2
+        let mut rng = Rng::new(79);
+        let a = Tensor::randn(&[12, 7], 1.0, &mut rng);
+        let d = svd(&a);
+        let fro2: f64 = a.frobenius().powi(2);
+        let s2: f64 = d.s.iter().map(|&x| (x as f64).powi(2)).sum();
+        assert!((fro2 - s2).abs() / fro2 < 1e-6);
+    }
+}

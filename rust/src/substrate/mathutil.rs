@@ -1,0 +1,125 @@
+//! Numeric helpers used across evaluation and sampling: stable softmax /
+//! log-softmax, argmax, perplexity aggregation, simple stats.
+
+/// Stable in-place softmax.
+pub fn softmax(xs: &mut [f32]) {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut z = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - m).exp();
+        z += *x;
+    }
+    for x in xs.iter_mut() {
+        *x /= z;
+    }
+}
+
+/// Stable log-sum-exp.
+pub fn logsumexp(xs: &[f32]) -> f32 {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        return m;
+    }
+    m + xs.iter().map(|&x| (x - m).exp()).sum::<f32>().ln()
+}
+
+/// Log-probability of a specific class under the logits.
+pub fn log_prob(logits: &[f32], class: usize) -> f32 {
+    logits[class] - logsumexp(logits)
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Perplexity from accumulated (sum NLL, token count).
+pub fn ppl(sum_nll: f64, count: f64) -> f64 {
+    if count <= 0.0 {
+        return f64::NAN;
+    }
+    (sum_nll / count).exp()
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64)
+        .sqrt()
+}
+
+/// Relative change in percent: 100·(new-old)/old.
+pub fn rel_pct(old: f64, new: f64) -> f64 {
+    100.0 * (new - old) / old
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut xs = vec![1.0, 2.0, 3.0, -5.0];
+        softmax(&mut xs);
+        let s: f32 = xs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(xs[2] > xs[1] && xs[1] > xs[0] && xs[0] > xs[3]);
+    }
+
+    #[test]
+    fn softmax_stable_for_large_inputs() {
+        let mut xs = vec![1000.0, 1001.0];
+        softmax(&mut xs);
+        assert!(xs.iter().all(|x| x.is_finite()));
+        assert!((xs[1] / xs[0] - std::f32::consts::E).abs() < 1e-3);
+    }
+
+    #[test]
+    fn logsumexp_matches_naive_for_small() {
+        let xs = vec![0.1f32, -0.4, 0.7];
+        let naive = xs.iter().map(|x| x.exp()).sum::<f32>().ln();
+        assert!((logsumexp(&xs) - naive).abs() < 1e-6);
+    }
+
+    #[test]
+    fn log_prob_normalizes() {
+        let logits = vec![1.0f32, 2.0, 3.0];
+        let total: f32 = (0..3).map(|c| log_prob(&logits, c).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.0, 5.0, 2.0]), 1);
+        assert_eq!(argmax(&[3.0]), 0);
+    }
+
+    #[test]
+    fn ppl_identity() {
+        // uniform over V => ppl == V
+        let v = 512.0f64;
+        assert!((ppl(v.ln() * 100.0, 100.0) - v).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stats() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.138089935).abs() < 1e-6);
+        assert!((rel_pct(20.0, 21.0) - 5.0).abs() < 1e-12);
+    }
+}

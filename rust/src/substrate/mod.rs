@@ -1,0 +1,13 @@
+//! Hand-rolled substrates. The vendored crate registry carries only `xla` +
+//! `anyhow`, so everything a framework normally pulls in — RNG, tensors,
+//! linear algebra (truncated SVD), JSON, CLI parsing, a weights file format,
+//! histograms — is implemented here from scratch, each with its own tests.
+
+pub mod rng;
+pub mod tensor;
+pub mod linalg;
+pub mod json;
+pub mod args;
+pub mod tensorfile;
+pub mod histogram;
+pub mod mathutil;

@@ -1,0 +1,269 @@
+//! Dense row-major f32 tensors — the host-side data structure flowing
+//! between the coordinator, the model surgery, and the PJRT runtime.
+//!
+//! This is deliberately a *small* tensor library: the heavy math runs inside
+//! the AOT-compiled XLA executables; rust only needs construction, layout
+//! surgery (reshape/slice/concat), matmul for the SVD/absorption path, and
+//! conversions to/from `xla::Literal`.
+
+use crate::substrate::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} vs data len {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![1.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Self {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, std);
+        t
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Total bytes when stored at the given per-element width (cache
+    /// accounting uses this to model bf16/int8/int4 deployments).
+    pub fn nbytes(&self, bytes_per_el: f64) -> f64 {
+        self.len() as f64 * bytes_per_el
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let st = self.strides();
+        let off: usize = idx.iter().zip(&st).map(|(i, s)| i * s).sum();
+        self.data[off]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let st = self.strides();
+        let off: usize = idx.iter().zip(&st).map(|(i, s)| i * s).sum();
+        self.data[off] = v;
+    }
+
+    /// 2-D matmul: (m,k) x (k,n) -> (m,n). Blocked i-k-j loop order (cache
+    /// friendly); used only on small matrices (surgery / probes).
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(other.rank(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    /// 2-D transpose.
+    pub fn t(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::new(&[n, m], out)
+    }
+
+    /// Select columns [lo, hi) of a 2-D tensor.
+    pub fn cols(&self, lo: usize, hi: usize) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        assert!(lo <= hi && hi <= n);
+        let w = hi - lo;
+        let mut out = Vec::with_capacity(m * w);
+        for i in 0..m {
+            out.extend_from_slice(&self.data[i * n + lo..i * n + hi]);
+        }
+        Tensor::new(&[m, w], out)
+    }
+
+    /// Concatenate 2-D tensors along columns.
+    pub fn hcat(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let m = parts[0].shape[0];
+        let n: usize = parts.iter().map(|p| p.shape[1]).sum();
+        let mut out = Vec::with_capacity(m * n);
+        for i in 0..m {
+            for p in parts {
+                let w = p.shape[1];
+                out.extend_from_slice(&p.data[i * w..(i + 1) * w]);
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    pub fn scale(mut self, c: f32) -> Tensor {
+        for v in self.data.iter_mut() {
+            *v *= c;
+        }
+        self
+    }
+
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// An i32 tensor (token ids, positions).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl TensorI32 {
+    pub fn new(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        TensorI32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        TensorI32 { shape: shape.to_vec(), data: vec![0; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: i32) -> Self {
+        TensorI32 { shape: vec![], data: vec![v] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::new(&[3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.shape, vec![2, 2]);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(0);
+        let a = Tensor::randn(&[5, 5], 1.0, &mut rng);
+        let mut eye = Tensor::zeros(&[5, 5]);
+        for i in 0..5 {
+            eye.set(&[i, i], 1.0);
+        }
+        let b = a.matmul(&eye);
+        assert!(a.max_abs_diff(&b) < 1e-6);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(&[3, 7], 1.0, &mut rng);
+        assert_eq!(a, a.t().t());
+        assert_eq!(a.at(&[2, 5]), a.t().at(&[5, 2]));
+    }
+
+    #[test]
+    fn cols_and_hcat_roundtrip() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(&[4, 6], 1.0, &mut rng);
+        let l = a.cols(0, 2);
+        let r = a.cols(2, 6);
+        assert_eq!(Tensor::hcat(&[&l, &r]), a);
+    }
+
+    #[test]
+    fn strides_and_at() {
+        let t = Tensor::new(&[2, 3, 4], (0..24).map(|x| x as f32).collect());
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+        assert_eq!(t.at(&[1, 2, 3]), 23.0);
+        assert_eq!(t.at(&[0, 1, 0]), 4.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(&[2, 2], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn nbytes_models_dtypes() {
+        let t = Tensor::zeros(&[10, 10]);
+        assert_eq!(t.nbytes(4.0), 400.0); // f32
+        assert_eq!(t.nbytes(2.0), 200.0); // bf16
+        assert_eq!(t.nbytes(0.5), 50.0); // int4
+    }
+}

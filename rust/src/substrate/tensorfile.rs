@@ -1,0 +1,132 @@
+//! `.tkw` — the checkpoint file format (no npz/safetensors available).
+//!
+//! Layout: `b"TKW1"` magic, u32 LE header length, JSON header
+//! `{"tensors": [{"name", "shape", "offset", "len"}...]}`, then raw f32 LE
+//! data. Offsets are element offsets into the data section.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::substrate::json::{self, Value};
+use crate::substrate::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"TKW1";
+
+/// Save named tensors (order preserved in the header).
+pub fn save(path: &Path, tensors: &[(String, &Tensor)]) -> Result<()> {
+    let mut entries = Vec::new();
+    let mut offset = 0usize;
+    for (name, t) in tensors {
+        entries.push(json::obj(vec![
+            ("name", json::s(name)),
+            ("shape", json::arr(
+                t.shape.iter().map(|&d| json::num(d as f64)).collect())),
+            ("offset", json::num(offset as f64)),
+            ("len", json::num(t.len() as f64)),
+        ]));
+        offset += t.len();
+    }
+    let header = json::obj(vec![("tensors", json::arr(entries))]).to_string();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(header.len() as u32).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for (_, t) in tensors {
+        for &v in &t.data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    f.flush()?;
+    Ok(())
+}
+
+/// Load all tensors; returns (ordered names, name → tensor).
+pub fn load(path: &Path) -> Result<(Vec<String>, BTreeMap<String, Tensor>)> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {path:?}"))?);
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: not a TKW1 file");
+    }
+    let mut lenb = [0u8; 4];
+    f.read_exact(&mut lenb)?;
+    let hlen = u32::from_le_bytes(lenb) as usize;
+    let mut hbuf = vec![0u8; hlen];
+    f.read_exact(&mut hbuf)?;
+    let header = Value::parse(std::str::from_utf8(&hbuf)?)?;
+    let mut raw = Vec::new();
+    f.read_to_end(&mut raw)?;
+    if raw.len() % 4 != 0 {
+        bail!("{path:?}: data section not f32-aligned");
+    }
+    let data: Vec<f32> = raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+
+    let mut names = Vec::new();
+    let mut out = BTreeMap::new();
+    for e in header.get("tensors")?.as_arr()? {
+        let name = e.get("name")?.as_str()?.to_string();
+        let shape = e.get("shape")?.shape_vec()?;
+        let off = e.get("offset")?.as_usize()?;
+        let len = e.get("len")?.as_usize()?;
+        if off + len > data.len() {
+            bail!("{path:?}: tensor {name} out of bounds");
+        }
+        let t = Tensor::new(&shape, data[off..off + len].to_vec());
+        names.push(name.clone());
+        out.insert(name, t);
+    }
+    Ok((names, out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::rng::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(0);
+        let a = Tensor::randn(&[4, 8], 1.0, &mut rng);
+        let b = Tensor::randn(&[3], 0.5, &mut rng);
+        let c = Tensor::scalar(7.0);
+        let dir = std::env::temp_dir().join("tkw_test");
+        let path = dir.join("x.tkw");
+        save(&path, &[("w.a".into(), &a), ("w.b".into(), &b), ("s".into(), &c)])
+            .unwrap();
+        let (names, m) = load(&path).unwrap();
+        assert_eq!(names, vec!["w.a", "w.b", "s"]);
+        assert_eq!(m["w.a"], a);
+        assert_eq!(m["w.b"], b);
+        assert_eq!(m["s"], c);
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("tkw_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.tkw");
+        std::fs::write(&path, b"NOPE1234").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn empty_tensor_list() {
+        let path = std::env::temp_dir().join("tkw_test_empty.tkw");
+        save(&path, &[]).unwrap();
+        let (names, m) = load(&path).unwrap();
+        assert!(names.is_empty() && m.is_empty());
+        std::fs::remove_file(path).unwrap();
+    }
+}

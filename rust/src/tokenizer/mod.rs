@@ -1,0 +1,143 @@
+//! Tokenizers: word-level with min-frequency vocabulary truncation (the
+//! protocol of paper Experiments 3/4/6) and a byte-level fallback.
+//!
+//! IDs 0..N_SPECIALS are reserved: `<pad>`, `<unk>`, `<bos>`, `<eos>`.
+
+use std::collections::{BTreeMap, HashMap};
+
+pub const PAD: i32 = 0;
+pub const UNK: i32 = 1;
+pub const BOS: i32 = 2;
+pub const EOS: i32 = 3;
+pub const N_SPECIALS: usize = 4;
+
+pub trait Tokenizer {
+    fn vocab_size(&self) -> usize;
+    fn encode(&self, text: &str) -> Vec<i32>;
+    fn decode(&self, ids: &[i32]) -> String;
+}
+
+/// Word-level tokenizer built from a corpus with min-frequency truncation.
+pub struct WordTokenizer {
+    word_to_id: HashMap<String, i32>,
+    id_to_word: Vec<String>,
+}
+
+impl WordTokenizer {
+    /// Build from whitespace-tokenized text. Words with count < `min_freq`
+    /// map to `<unk>`. `max_vocab` caps the vocabulary (most frequent kept).
+    pub fn build(corpus: &str, min_freq: usize, max_vocab: usize) -> Self {
+        let mut counts: BTreeMap<&str, usize> = BTreeMap::new();
+        for w in corpus.split_whitespace() {
+            *counts.entry(w).or_default() += 1;
+        }
+        let mut items: Vec<(&str, usize)> = counts
+            .into_iter()
+            .filter(|&(_, c)| c >= min_freq)
+            .collect();
+        // Sort by (-count, word) for deterministic ids.
+        items.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+        items.truncate(max_vocab.saturating_sub(N_SPECIALS));
+
+        let mut id_to_word: Vec<String> =
+            ["<pad>", "<unk>", "<bos>", "<eos>"].iter().map(|s| s.to_string()).collect();
+        let mut word_to_id = HashMap::new();
+        for (w, _) in items {
+            word_to_id.insert(w.to_string(), id_to_word.len() as i32);
+            id_to_word.push(w.to_string());
+        }
+        WordTokenizer { word_to_id, id_to_word }
+    }
+}
+
+impl Tokenizer for WordTokenizer {
+    fn vocab_size(&self) -> usize {
+        self.id_to_word.len()
+    }
+
+    fn encode(&self, text: &str) -> Vec<i32> {
+        text.split_whitespace()
+            .map(|w| self.word_to_id.get(w).copied().unwrap_or(UNK))
+            .collect()
+    }
+
+    fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .map(|&i| {
+                self.id_to_word
+                    .get(i as usize)
+                    .map(|s| s.as_str())
+                    .unwrap_or("<oov>")
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// Byte-level tokenizer: ids are 4 + byte value (vocab 260).
+pub struct ByteTokenizer;
+
+impl Tokenizer for ByteTokenizer {
+    fn vocab_size(&self) -> usize {
+        N_SPECIALS + 256
+    }
+
+    fn encode(&self, text: &str) -> Vec<i32> {
+        text.bytes().map(|b| N_SPECIALS as i32 + b as i32).collect()
+    }
+
+    fn decode(&self, ids: &[i32]) -> String {
+        let bytes: Vec<u8> = ids
+            .iter()
+            .filter(|&&i| i >= N_SPECIALS as i32 && i < (N_SPECIALS + 256) as i32)
+            .map(|&i| (i - N_SPECIALS as i32) as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_tokenizer_roundtrip_known_words() {
+        let t = WordTokenizer::build("a b c a b a", 1, 100);
+        assert_eq!(t.vocab_size(), N_SPECIALS + 3);
+        let ids = t.encode("a c b");
+        assert_eq!(t.decode(&ids), "a c b");
+        // most frequent word gets the first id
+        assert_eq!(t.encode("a")[0], N_SPECIALS as i32);
+    }
+
+    #[test]
+    fn min_freq_maps_rare_to_unk() {
+        let t = WordTokenizer::build("x x x rare", 2, 100);
+        assert_eq!(t.encode("rare"), vec![UNK]);
+        assert_eq!(t.encode("x"), vec![N_SPECIALS as i32]);
+    }
+
+    #[test]
+    fn max_vocab_truncates_by_frequency() {
+        let t = WordTokenizer::build("a a a b b c", 1, N_SPECIALS + 2);
+        assert_eq!(t.vocab_size(), N_SPECIALS + 2);
+        assert_ne!(t.encode("a"), vec![UNK]);
+        assert_ne!(t.encode("b"), vec![UNK]);
+        assert_eq!(t.encode("c"), vec![UNK]);
+    }
+
+    #[test]
+    fn deterministic_ids() {
+        let a = WordTokenizer::build("z y x z y z", 1, 100);
+        let b = WordTokenizer::build("z y x z y z", 1, 100);
+        assert_eq!(a.encode("x y z"), b.encode("x y z"));
+    }
+
+    #[test]
+    fn byte_tokenizer_roundtrip() {
+        let t = ByteTokenizer;
+        let ids = t.encode("hello µ");
+        assert_eq!(t.decode(&ids), "hello µ");
+        assert_eq!(t.vocab_size(), 260);
+    }
+}

@@ -1,0 +1,189 @@
+//! Evaluation: perplexity (via `evalloss` artifacts), task accuracy and
+//! multiple-choice probe scoring (via `logits` artifacts), and batched
+//! greedy generation for exact-match tasks (gsm-mini).
+
+use anyhow::Result;
+
+use crate::datagen::probes::ProbeItem;
+use crate::datagen::Batch;
+use crate::runtime::client::{literal_to_f32, literal_to_tensor, Arg, Runtime};
+use crate::runtime::manifest::ConfigEntry;
+use crate::runtime::params::ParamStore;
+use crate::substrate::mathutil::{argmax, log_prob, ppl};
+use crate::substrate::tensor::{Tensor, TensorI32};
+
+fn param_args<'a>(params: &'a ParamStore) -> Vec<Arg<'a>> {
+    params.tensors.iter().map(Arg::F).collect()
+}
+
+/// Mean perplexity over batches (exact masked-token aggregation).
+pub fn eval_ppl(rt: &Runtime, cfg: &ConfigEntry, params: &ParamStore,
+                batches: &[Batch]) -> Result<f64> {
+    let artifact = rt.manifest().evalloss_name(&cfg.name);
+    let (b, s) = (cfg.train_batch, cfg.train_seq);
+    let mut sum_nll = 0.0f64;
+    let mut count = 0.0f64;
+    for batch in batches {
+        let tokens = TensorI32::new(&[b, s], batch.tokens.clone());
+        let targets = TensorI32::new(&[b, s], batch.targets.clone());
+        let mask = Tensor::new(&[b, s], batch.mask.clone());
+        let mut args = param_args(params);
+        args.push(Arg::I(&tokens));
+        args.push(Arg::I(&targets));
+        args.push(Arg::F(&mask));
+        let outs = rt.execute(&artifact, &args)?;
+        sum_nll += literal_to_f32(&outs[0])? as f64;
+        count += literal_to_f32(&outs[1])? as f64;
+    }
+    Ok(ppl(sum_nll, count))
+}
+
+/// Full logits (B,S,V) for a batch.
+pub fn logits_for(rt: &Runtime, cfg: &ConfigEntry, params: &ParamStore,
+                  batch: &Batch) -> Result<Tensor> {
+    let artifact = rt.manifest().logits_name(&cfg.name);
+    let (b, s) = (cfg.train_batch, cfg.train_seq);
+    let tokens = TensorI32::new(&[b, s], batch.tokens.clone());
+    let mut args = param_args(params);
+    args.push(Arg::I(&tokens));
+    let outs = rt.execute(&artifact, &args)?;
+    literal_to_tensor(&outs[0])
+}
+
+/// Accuracy under a task mask (argmax == target at masked positions),
+/// averaged over the provided batches.
+pub fn eval_accuracy(rt: &Runtime, cfg: &ConfigEntry, params: &ParamStore,
+                     batches: &[Batch]) -> Result<f64> {
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for batch in batches {
+        let logits = logits_for(rt, cfg, params, batch)?;
+        let v = cfg.vocab;
+        let s = cfg.train_seq;
+        for i in 0..batch.batch {
+            for t in 0..s {
+                if batch.mask[i * s + t] == 0.0 {
+                    continue;
+                }
+                let row = &logits.data[(i * s + t) * v..(i * s + t + 1) * v];
+                if argmax(row) as i32 == batch.targets[i * s + t] {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+    }
+    Ok(correct as f64 / total.max(1) as f64)
+}
+
+/// Length-normalized option log-probability (the `acc_norm` protocol).
+/// Each (context, option) pair occupies one row of a logits batch.
+pub fn probe_accuracy(rt: &Runtime, cfg: &ConfigEntry, params: &ParamStore,
+                      items: &[ProbeItem]) -> Result<f64> {
+    let (b, s) = (cfg.train_batch, cfg.train_seq);
+    let v = cfg.vocab;
+    // flatten items x options into rows
+    struct Row {
+        item: usize,
+        option: usize,
+        ctx_len: usize,
+        opt_len: usize,
+        tokens: Vec<i32>,
+    }
+    let mut rows = Vec::new();
+    for (ii, it) in items.iter().enumerate() {
+        for (oi, opt) in it.options.iter().enumerate() {
+            let mut toks = it.context.clone();
+            toks.extend_from_slice(opt);
+            assert!(toks.len() <= s, "probe row {} > seq {s}", toks.len());
+            rows.push(Row {
+                item: ii,
+                option: oi,
+                ctx_len: it.context.len(),
+                opt_len: opt.len(),
+                tokens: toks,
+            });
+        }
+    }
+    let mut scores = vec![vec![f64::NEG_INFINITY; 4]; items.len()];
+    for chunk in rows.chunks(b) {
+        let mut batch = Batch::zeros(b, s);
+        for (r, row) in chunk.iter().enumerate() {
+            for (t, &tok) in row.tokens.iter().enumerate() {
+                batch.tokens[r * s + t] = tok;
+            }
+        }
+        let logits = logits_for(rt, cfg, params, &batch)?;
+        for (r, row) in chunk.iter().enumerate() {
+            let mut lp = 0.0f64;
+            for j in 0..row.opt_len {
+                // token at position ctx_len+j is predicted at ctx_len+j-1
+                let pos = row.ctx_len + j - 1;
+                let lrow = &logits.data[(r * s + pos) * v..(r * s + pos + 1) * v];
+                lp += log_prob(lrow, row.tokens[row.ctx_len + j] as usize) as f64;
+            }
+            scores[row.item][row.option] = lp / row.opt_len as f64;
+        }
+    }
+    let mut correct = 0usize;
+    for (it, sc) in items.iter().zip(&scores) {
+        let best = sc
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if best == it.answer {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / items.len().max(1) as f64)
+}
+
+/// Batched greedy generation via the logits artifact (teacher-forced
+/// re-scoring each step — O(new_tokens) forward passes, used only for the
+/// short gsm-mini answers).
+pub fn greedy_generate(rt: &Runtime, cfg: &ConfigEntry, params: &ParamStore,
+                       prompts: &[Vec<i32>], max_new: usize, stop: i32)
+    -> Result<Vec<Vec<i32>>> {
+    let (b, s) = (cfg.train_batch, cfg.train_seq);
+    let v = cfg.vocab;
+    let mut outputs: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+    for (chunk_idx, chunk) in prompts.chunks(b).enumerate() {
+        let mut seqs: Vec<Vec<i32>> = chunk.to_vec();
+        let mut done = vec![false; chunk.len()];
+        for _ in 0..max_new {
+            let mut batch = Batch::zeros(b, s);
+            for (r, seq) in seqs.iter().enumerate() {
+                for (t, &tok) in seq.iter().take(s).enumerate() {
+                    batch.tokens[r * s + t] = tok;
+                }
+            }
+            let logits = logits_for(rt, cfg, params, &batch)?;
+            let mut all_done = true;
+            for (r, seq) in seqs.iter_mut().enumerate() {
+                if done[r] || seq.len() >= s {
+                    done[r] = true;
+                    continue;
+                }
+                let pos = seq.len() - 1;
+                let lrow = &logits.data[(r * s + pos) * v..(r * s + pos + 1) * v];
+                let next = argmax(lrow) as i32;
+                seq.push(next);
+                if next == stop {
+                    done[r] = true;
+                } else {
+                    all_done = false;
+                }
+            }
+            if all_done {
+                break;
+            }
+        }
+        for (r, seq) in seqs.into_iter().enumerate() {
+            let prompt_len = chunk[r].len();
+            outputs[chunk_idx * b + r] = seq[prompt_len..].to_vec();
+        }
+    }
+    Ok(outputs)
+}

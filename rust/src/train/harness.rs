@@ -1,0 +1,146 @@
+//! The train loop: state threading through the AOT train-step artifact.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::datagen::Batch;
+use crate::runtime::client::{literal_to_f32, literal_to_tensor, Arg, Runtime};
+use crate::runtime::manifest::ConfigEntry;
+use crate::runtime::params::ParamStore;
+use crate::substrate::tensor::{Tensor, TensorI32};
+use crate::train::schedule::Schedule;
+
+/// Optimizer-carrying training state.
+#[derive(Clone)]
+pub struct TrainState {
+    pub params: ParamStore,
+    pub m: ParamStore,
+    pub v: ParamStore,
+    pub step: usize,
+}
+
+impl TrainState {
+    pub fn new(cfg: &ConfigEntry, seed: u64) -> TrainState {
+        let params = ParamStore::init(cfg, seed);
+        let m = params.zeros_like();
+        let v = params.zeros_like();
+        TrainState { params, m, v, step: 0 }
+    }
+
+    /// Fresh optimizer state around existing parameters (fine-tuning).
+    pub fn from_params(params: ParamStore) -> TrainState {
+        let m = params.zeros_like();
+        let v = params.zeros_like();
+        TrainState { params, m, v, step: 0 }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TrainOutcome {
+    pub losses: Vec<f64>,
+    pub seconds: f64,
+    pub tokens: f64,
+}
+
+impl TrainOutcome {
+    pub fn final_loss(&self) -> f64 {
+        *self.losses.last().unwrap_or(&f64::NAN)
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.seconds > 0.0 { self.tokens / self.seconds } else { 0.0 }
+    }
+}
+
+/// Drives one artifact (train or qkft) for one config.
+pub struct Trainer<'rt> {
+    pub rt: &'rt Runtime,
+    pub artifact: String,
+    pub cfg: ConfigEntry,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg_name: &str, qk_only: bool) -> Result<Self> {
+        let m = rt.manifest();
+        let cfg = m.config(cfg_name)?.clone();
+        let artifact = if qk_only {
+            m.qkft_name(cfg_name)
+        } else {
+            m.train_name(cfg_name)
+        };
+        if !m.artifacts.contains_key(&artifact) {
+            bail!("no artifact {artifact} (re-run `make artifacts`)");
+        }
+        Ok(Trainer { rt, artifact, cfg })
+    }
+
+    /// One optimizer step; returns the loss. `state.step` increments.
+    pub fn step(&self, state: &mut TrainState, batch: &Batch, lr: f64)
+        -> Result<f64> {
+        let (b, s) = (self.cfg.train_batch, self.cfg.train_seq);
+        if batch.batch != b || batch.seq != s {
+            bail!(
+                "batch geometry ({}, {}) != artifact ({b}, {s})",
+                batch.batch, batch.seq
+            );
+        }
+        let tokens = TensorI32::new(&[b, s], batch.tokens.clone());
+        let targets = TensorI32::new(&[b, s], batch.targets.clone());
+        let mask = Tensor::new(&[b, s], batch.mask.clone());
+
+        let n = state.params.tensors.len();
+        let mut args: Vec<Arg> = Vec::with_capacity(3 * n + 5);
+        for t in &state.params.tensors {
+            args.push(Arg::F(t));
+        }
+        for t in &state.m.tensors {
+            args.push(Arg::F(t));
+        }
+        for t in &state.v.tensors {
+            args.push(Arg::F(t));
+        }
+        args.push(Arg::I(&tokens));
+        args.push(Arg::I(&targets));
+        args.push(Arg::F(&mask));
+        args.push(Arg::ScalarF(lr as f32));
+        args.push(Arg::ScalarF((state.step + 1) as f32));
+
+        let outs = self.rt.execute(&self.artifact, &args)?;
+        let loss = literal_to_f32(&outs[0])? as f64;
+        let mut tensors = Vec::with_capacity(3 * n);
+        for lit in &outs[1..] {
+            tensors.push(literal_to_tensor(lit)?);
+        }
+        let vs = tensors.split_off(2 * n);
+        let ms = tensors.split_off(n);
+        state.params.replace_from(tensors)?;
+        state.m.replace_from(ms)?;
+        state.v.replace_from(vs)?;
+        state.step += 1;
+        if !loss.is_finite() {
+            bail!("non-finite loss at step {}", state.step);
+        }
+        Ok(loss)
+    }
+
+    /// Run `n_steps` pulling batches from `next_batch`.
+    pub fn run<F>(&self, state: &mut TrainState, n_steps: usize,
+                  sched: &Schedule, mut next_batch: F) -> Result<TrainOutcome>
+    where
+        F: FnMut(usize) -> Batch,
+    {
+        let t0 = Instant::now();
+        let mut out = TrainOutcome::default();
+        for i in 0..n_steps {
+            let batch = next_batch(i);
+            let lr = sched.lr(state.step);
+            let ntok = batch.masked_tokens();
+            let loss = self.step(state, &batch, lr)?;
+            out.losses.push(loss);
+            out.tokens += ntok;
+        }
+        out.seconds = t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+}

@@ -1,0 +1,14 @@
+//! Training harness — drives the AOT train-step executables from rust.
+//!
+//! The optimizer (AdamW) lives *inside* the HLO artifact; rust owns the
+//! state between steps (params + first/second moments), the learning-rate
+//! schedule, data order, and evaluation cadence. `kind = train` updates all
+//! parameters; `kind = qkft` updates only the QK projections (paper's
+//! 3-epoch recovery fine-tuning).
+
+pub mod schedule;
+pub mod harness;
+pub mod eval;
+
+pub use harness::{TrainOutcome, TrainState, Trainer};
+pub use schedule::Schedule;

@@ -1,0 +1,72 @@
+//! Learning-rate schedules: linear warmup + cosine decay (the paper's
+//! training protocol), plus constant for fine-tuning.
+
+#[derive(Clone, Debug)]
+pub enum Schedule {
+    Constant { lr: f64 },
+    WarmupCosine { base: f64, min: f64, warmup: usize, total: usize },
+}
+
+impl Schedule {
+    pub fn warmup_cosine(base: f64, warmup: usize, total: usize) -> Schedule {
+        Schedule::WarmupCosine { base, min: base * 0.1, warmup, total }
+    }
+
+    /// LR at a 0-based step index.
+    pub fn lr(&self, step: usize) -> f64 {
+        match *self {
+            Schedule::Constant { lr } => lr,
+            Schedule::WarmupCosine { base, min, warmup, total } => {
+                if warmup > 0 && step < warmup {
+                    return base * (step + 1) as f64 / warmup as f64;
+                }
+                let t = (step - warmup) as f64
+                    / (total.saturating_sub(warmup)).max(1) as f64;
+                let t = t.min(1.0);
+                min + 0.5 * (base - min) * (1.0 + (std::f64::consts::PI * t).cos())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = Schedule::warmup_cosine(1.0, 10, 100);
+        assert!((s.lr(0) - 0.1).abs() < 1e-12);
+        assert!((s.lr(4) - 0.5).abs() < 1e-12);
+        assert!((s.lr(9) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_decays_to_min() {
+        let s = Schedule::warmup_cosine(1.0, 10, 100);
+        assert!((s.lr(10) - 1.0).abs() < 1e-3);
+        let mid = s.lr(55);
+        assert!(mid < 1.0 && mid > 0.1);
+        assert!((s.lr(99) - 0.1).abs() < 0.01);
+        // past the end: stays at min
+        assert!((s.lr(500) - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn monotone_after_warmup() {
+        let s = Schedule::warmup_cosine(3e-3, 20, 300);
+        let mut last = f64::INFINITY;
+        for step in 20..300 {
+            let lr = s.lr(step);
+            assert!(lr <= last + 1e-12);
+            last = lr;
+        }
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = Schedule::Constant { lr: 5e-5 };
+        assert_eq!(s.lr(0), 5e-5);
+        assert_eq!(s.lr(12345), 5e-5);
+    }
+}

@@ -1,0 +1,207 @@
+//! Property-based tests over the substrates and coordinator invariants,
+//! via the in-tree mini proptest framework.
+
+use thinkeys::coordinator::kvcache::{KvCacheConfig, KvCacheManager};
+use thinkeys::datagen::{copyback, gsm_mini, kvretrieval};
+use thinkeys::proptest::{check_close, property, small_size};
+use thinkeys::substrate::linalg::{low_rank_approx, svd_any};
+use thinkeys::substrate::mathutil::{logsumexp, softmax};
+use thinkeys::substrate::rng::Rng;
+use thinkeys::substrate::tensor::Tensor;
+use thinkeys::substrate::json::Value;
+
+#[test]
+fn prop_svd_reconstructs_any_shape() {
+    property("svd reconstruction", 40, |rng| {
+        let m = small_size(rng, 24);
+        let n = small_size(rng, 24);
+        let a = Tensor::randn(&[m, n], 1.0, rng);
+        let d = svd_any(&a);
+        let k = d.s.len();
+        let mut us = d.u.clone();
+        for row in 0..us.shape[0] {
+            for j in 0..k {
+                us.data[row * k + j] *= d.s[j];
+            }
+        }
+        let r = us.matmul(&d.v.t());
+        check_close(&a.data, &r.data, 1e-3, 1e-3)
+    });
+}
+
+#[test]
+fn prop_low_rank_error_bounded_by_tail() {
+    property("eckart-young bound", 25, |rng| {
+        let m = 4 + small_size(rng, 12);
+        let n = 2 + small_size(rng, 6).min(m - 1);
+        let a = Tensor::randn(&[m, n], 1.0, rng);
+        let d = svd_any(&a);
+        let r = 1 + rng.below(n.min(d.s.len()));
+        let ar = low_rank_approx(&a, r);
+        let mut diff = a.clone();
+        for (x, y) in diff.data.iter_mut().zip(&ar.data) {
+            *x -= y;
+        }
+        let err = diff.frobenius();
+        let tail: f64 = d.s[r.min(d.s.len())..]
+            .iter()
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt();
+        if err <= tail + 1e-2 {
+            Ok(())
+        } else {
+            Err(format!("err {err} > tail {tail} (rank {r}, {m}x{n})"))
+        }
+    });
+}
+
+#[test]
+fn prop_softmax_is_distribution() {
+    property("softmax sums to 1", 50, |rng| {
+        let n = small_size(rng, 200);
+        let mut xs: Vec<f32> =
+            (0..n).map(|_| (rng.normal() * 20.0) as f32).collect();
+        softmax(&mut xs);
+        let s: f32 = xs.iter().sum();
+        if (s - 1.0).abs() < 1e-4 && xs.iter().all(|x| *x >= 0.0) {
+            Ok(())
+        } else {
+            Err(format!("sum {s}"))
+        }
+    });
+}
+
+#[test]
+fn prop_logsumexp_bounds() {
+    property("max <= lse <= max + ln n", 50, |rng| {
+        let n = small_size(rng, 100);
+        let xs: Vec<f32> =
+            (0..n).map(|_| (rng.normal() * 50.0) as f32).collect();
+        let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let l = logsumexp(&xs);
+        if l >= m - 1e-4 && l <= m + (n as f32).ln() + 1e-4 {
+            Ok(())
+        } else {
+            Err(format!("lse {l} max {m} n {n}"))
+        }
+    });
+}
+
+#[test]
+fn prop_kvcache_accounting_balances() {
+    property("kv alloc/free balances", 30, |rng| {
+        let mut m = KvCacheManager::new(KvCacheConfig {
+            n_layers: 2 + rng.below(4),
+            k_dims: 8 << rng.below(4),
+            v_dims: 64,
+            block_tokens: 8 << rng.below(3),
+            bytes_per_el_k: 2.0,
+            bytes_per_el_v: 2.0,
+            budget_bytes: 2e6,
+        });
+        let cap0 = m.free_token_capacity();
+        let mut live: Vec<u64> = Vec::new();
+        for i in 0..40u64 {
+            match rng.below(3) {
+                0 => {
+                    let want = 1 + rng.below(64);
+                    if m.can_admit(want) {
+                        m.allocate(i + 1, want).map_err(|e| e.to_string())?;
+                        live.push(i + 1);
+                    }
+                }
+                1 => {
+                    if let Some(&id) =
+                        live.get(rng.below(live.len().max(1)).min(
+                            live.len().saturating_sub(1)))
+                    {
+                        if !live.is_empty() {
+                            let _ = m.extend(id, 1 + rng.below(8));
+                        }
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let id = live.swap_remove(rng.below(live.len()));
+                        m.release(id);
+                    }
+                }
+            }
+        }
+        for id in live {
+            m.release(id);
+        }
+        if m.free_token_capacity() == cap0 && m.stats().tokens == 0 {
+            Ok(())
+        } else {
+            Err(format!("leak: {} vs {}", m.free_token_capacity(), cap0))
+        }
+    });
+}
+
+#[test]
+fn prop_gsm_roundtrip_any_problem() {
+    property("gsm encode/parse roundtrip", 60, |rng| {
+        let p = gsm_mini::Problem::sample(rng);
+        let seq = gsm_mini::encode_sequence(&p);
+        let a_pos = seq.iter().position(|&t| t == gsm_mini::T_A).unwrap();
+        match gsm_mini::parse_answer(&seq[a_pos..]) {
+            Some(ans) if ans == p.answer() => Ok(()),
+            other => Err(format!("{p:?} -> {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn prop_task_batches_respect_masks() {
+    property("task masks select supervised positions", 30, |rng| {
+        let b = copyback::batch(4, 32, rng);
+        for i in 0..4 {
+            for t in 0..32 {
+                let masked = b.mask[i * 32 + t] == 1.0;
+                if masked != (t >= copyback::OFFSET_K) {
+                    return Err(format!("copyback mask wrong at {t}"));
+                }
+            }
+        }
+        let kb = kvretrieval::batch(4, 24, rng);
+        let per_row: Vec<f32> = (0..4)
+            .map(|i| kb.mask[i * 24..(i + 1) * 24].iter().sum())
+            .collect();
+        if per_row.iter().all(|&x| x == 1.0) {
+            Ok(())
+        } else {
+            Err(format!("kvret mask {per_row:?}"))
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    property("json roundtrip", 40, |rng| {
+        fn gen(rng: &mut Rng, depth: usize) -> Value {
+            match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+                0 => Value::Null,
+                1 => Value::Bool(rng.below(2) == 0),
+                2 => Value::Num((rng.normal() * 100.0).round()),
+                3 => Value::Str(format!("s{}\n\"{}\"", rng.below(100),
+                                        rng.below(10))),
+                4 => Value::Arr((0..rng.below(4))
+                    .map(|_| gen(rng, depth - 1))
+                    .collect()),
+                _ => Value::Obj((0..rng.below(4))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect()),
+            }
+        }
+        let v = gen(rng, 3);
+        let parsed =
+            Value::parse(&v.to_string()).map_err(|e| e.to_string())?;
+        if parsed == v {
+            Ok(())
+        } else {
+            Err(format!("{v:?} != {parsed:?}"))
+        }
+    });
+}

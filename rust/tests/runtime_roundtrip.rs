@@ -1,0 +1,117 @@
+//! Integration: the python-AOT → rust-PJRT bridge works end to end —
+//! train steps reduce loss, eval PPL is sane, QK-FT touches only QK,
+//! and the factored-keys equivalence holds through real executables.
+
+use thinkeys::datagen::{copyback, corpus::{Corpus, CorpusModel}};
+use thinkeys::model::surgery::{self, AblationMode};
+use thinkeys::runtime::{ParamStore, Runtime};
+use thinkeys::substrate::rng::Rng;
+use thinkeys::train::{eval, Schedule, Trainer, TrainState};
+
+fn runtime() -> Runtime {
+    Runtime::new().expect("run `make artifacts` before cargo test")
+}
+
+#[test]
+fn train_step_memorizes_fixed_batch() {
+    // Overfit one batch: the optimizer path must drive loss well below the
+    // uniform baseline ln(16)=2.77 within a few dozen steps.
+    let rt = runtime();
+    let trainer = Trainer::new(&rt, "copyback_ds16", false).unwrap();
+    let (b, s) = (trainer.cfg.train_batch, trainer.cfg.train_seq);
+    let mut st = TrainState::new(&trainer.cfg, 0);
+    let mut rng = Rng::new(1);
+    let fixed = copyback::batch(b, s, &mut rng);
+    let sched = Schedule::Constant { lr: 3e-3 };
+    let out = trainer.run(&mut st, 60, &sched, |_| fixed.clone()).unwrap();
+    let first = out.losses[0];
+    let last = out.final_loss();
+    assert!(last < 1.5, "failed to memorize: {first} -> {last}");
+    assert_eq!(st.step, 60);
+}
+
+#[test]
+fn eval_ppl_of_random_model_is_near_vocab() {
+    // An untrained model's PPL should be ~vocab (uniform predictions).
+    let rt = runtime();
+    let cfg = rt.manifest().config("tinylm_ds32").unwrap().clone();
+    let params = ParamStore::init(&cfg, 0);
+    let model = CorpusModel::new(7, cfg.vocab);
+    let corpus = Corpus::generate(&model, 30_000, 0);
+    let batches = corpus.batches(&corpus.val, cfg.train_batch, cfg.train_seq, 0);
+    let ppl = eval::eval_ppl(&rt, &cfg, &params, &batches[..4]).unwrap();
+    assert!(
+        ppl > 0.25 * cfg.vocab as f64 && ppl < 4.0 * cfg.vocab as f64,
+        "untrained ppl {ppl}"
+    );
+}
+
+#[test]
+fn qkft_updates_only_qk_params() {
+    let rt = runtime();
+    let trainer = Trainer::new(&rt, "tinylm_ds32", true).unwrap();
+    let mut st = TrainState::new(&trainer.cfg, 0);
+    let before = st.params.clone();
+    let model = CorpusModel::new(7, trainer.cfg.vocab);
+    let corpus = Corpus::generate(&model, 10_000, 0);
+    let batches =
+        corpus.batches(&corpus.train, trainer.cfg.train_batch,
+                       trainer.cfg.train_seq, 0);
+    trainer.step(&mut st, &batches[0], 1e-3).unwrap();
+    for (i, spec) in trainer.cfg.params.iter().enumerate() {
+        let changed =
+            before.tensors[i].max_abs_diff(&st.params.tensors[i]) > 0.0;
+        assert_eq!(changed, spec.qk, "{}", spec.name);
+    }
+}
+
+#[test]
+fn factored_model_matches_reconstructed_model_ppl() {
+    // The paper's deployment claim: K-only low-rank reconstruction PPL
+    // (same shapes as original) equals the thin deployment PPL (surgeried
+    // weights on the thin artifact family) — here through real HLO.
+    let rt = runtime();
+    let m = rt.manifest();
+    let full_cfg = m.config("tinylm_ds64").unwrap().clone();
+    let thin_cfg = m.config("tinylm_ds32").unwrap().clone();
+    let full = ParamStore::init(&full_cfg, 11);
+    let model = CorpusModel::new(7, full_cfg.vocab);
+    let corpus = Corpus::generate(&model, 20_000, 0);
+    let batches =
+        corpus.batches(&corpus.val, full_cfg.train_batch, full_cfg.train_seq, 0);
+    let eval_batches = &batches[..2];
+
+    let recon = surgery::low_rank_ablation(
+        &full, &full_cfg, thin_cfg.d_qk_head, AblationMode::KOnly).unwrap();
+    let thin = surgery::factor_to_thin(&full, &full_cfg, &thin_cfg).unwrap();
+
+    let ppl_recon =
+        eval::eval_ppl(&rt, &full_cfg, &recon, eval_batches).unwrap();
+    let ppl_thin =
+        eval::eval_ppl(&rt, &thin_cfg, &thin, eval_batches).unwrap();
+    let rel = (ppl_recon - ppl_thin).abs() / ppl_recon;
+    assert!(
+        rel < 1e-3,
+        "deployment mismatch: recon {ppl_recon} vs thin {ppl_thin}"
+    );
+}
+
+#[test]
+fn logits_artifact_shape_and_finiteness() {
+    let rt = runtime();
+    let cfg = rt.manifest().config("copyback_ds4").unwrap().clone();
+    let params = ParamStore::init(&cfg, 0);
+    let mut rng = Rng::new(0);
+    let batch = copyback::batch(cfg.train_batch, cfg.train_seq, &mut rng);
+    let logits = eval::logits_for(&rt, &cfg, &params, &batch).unwrap();
+    assert_eq!(logits.shape,
+               vec![cfg.train_batch, cfg.train_seq, cfg.vocab]);
+    assert!(logits.data.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn wrong_arg_count_is_rejected() {
+    let rt = runtime();
+    let name = rt.manifest().logits_name("copyback_ds4");
+    assert!(rt.execute(&name, &[]).is_err());
+}

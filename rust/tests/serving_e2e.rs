@@ -1,0 +1,228 @@
+//! Serving-stack integration: engine prefill/decode correctness against
+//! the logits oracle, continuous batching under membership churn, KV
+//! accounting, and the factored-key serving path.
+
+use thinkeys::coordinator::engine::Engine;
+use thinkeys::coordinator::kvcache::{KvCacheConfig, KvCacheManager};
+use thinkeys::coordinator::router::{synth_prompt, Router};
+use thinkeys::coordinator::sampling::Sampler;
+use thinkeys::coordinator::scheduler::Scheduler;
+use thinkeys::coordinator::sequence::Sequence;
+use thinkeys::datagen::arrival::closed_loop;
+use thinkeys::datagen::Batch;
+use thinkeys::model::surgery;
+use thinkeys::runtime::{ParamStore, Runtime};
+use thinkeys::substrate::mathutil::argmax;
+use thinkeys::substrate::rng::Rng;
+use thinkeys::train::eval::logits_for;
+
+fn runtime() -> Runtime {
+    Runtime::new().expect("run `make artifacts` first")
+}
+
+fn engine<'a>(rt: &'a Runtime, cfg: &str, seed: u64) -> Engine<'a> {
+    let params = ParamStore::init(rt.manifest().config(cfg).unwrap(), 42);
+    Engine::new(rt, cfg, params, false, Sampler::Greedy, seed).unwrap()
+}
+
+fn kv_for(rt: &Runtime, cfg: &str, budget_mb: f64) -> KvCacheManager {
+    let c = rt.manifest().config(cfg).unwrap();
+    KvCacheManager::new(KvCacheConfig {
+        n_layers: c.n_layers,
+        k_dims: c.k_cache_dims,
+        v_dims: c.v_cache_dims,
+        block_tokens: 16,
+        bytes_per_el_k: 2.0,
+        bytes_per_el_v: 2.0,
+        budget_bytes: budget_mb * 1e6,
+    })
+}
+
+/// The engine's greedy generation must match teacher-forced greedy argmax
+/// through the logits artifact (prefill/decode == forward parity, but now
+/// through the serving path with batching and cache packing).
+#[test]
+fn engine_matches_teacher_forced_greedy() {
+    let rt = runtime();
+    let cfg = rt.manifest().config("servefull").unwrap().clone();
+    let mut eng = engine(&rt, "servefull", 0);
+    let mut rng = Rng::new(9);
+    let prompt = synth_prompt(12, cfg.vocab, &mut rng);
+    let mut seq = Sequence::new(1, prompt.clone(), 6, None);
+    eng.prefill(&mut seq).unwrap();
+    while !seq.is_finished() {
+        let mut seqs = vec![&mut seq];
+        eng.decode_step(&mut seqs).unwrap();
+    }
+    assert_eq!(seq.generated.len(), 6);
+
+    // teacher-forced reference: extend the prompt token by token via the
+    // logits artifact and take argmax each step
+    let params = ParamStore::init(&cfg, 42);
+    let (b, s) = (cfg.train_batch, cfg.train_seq);
+    let _ = b;
+    let mut toks = prompt.clone();
+    let mut want = Vec::new();
+    for _ in 0..6 {
+        let mut batch = Batch::zeros(cfg.train_batch, s);
+        for (t, &x) in toks.iter().enumerate() {
+            batch.tokens[t] = x;
+        }
+        let logits = logits_for(&rt, &cfg, &params, &batch).unwrap();
+        let pos = toks.len() - 1;
+        let row = &logits.data[pos * cfg.vocab..(pos + 1) * cfg.vocab];
+        let next = argmax(row) as i32;
+        want.push(next);
+        toks.push(next);
+    }
+    assert_eq!(seq.generated, want,
+               "engine generation diverged from teacher-forced reference");
+}
+
+/// Two sequences decoded together must produce the same tokens as each
+/// decoded alone (batching must not leak state across lanes).
+#[test]
+fn batched_decode_matches_individual() {
+    let rt = runtime();
+    let cfg = rt.manifest().config("servethin").unwrap().clone();
+    let mut rng = Rng::new(3);
+    let p1 = synth_prompt(10, cfg.vocab, &mut rng);
+    let p2 = synth_prompt(17, cfg.vocab, &mut rng);
+
+    let run_alone = |prompt: &Vec<i32>| {
+        let mut eng = engine(&rt, "servethin", 0);
+        let mut seq = Sequence::new(1, prompt.clone(), 5, None);
+        eng.prefill(&mut seq).unwrap();
+        while !seq.is_finished() {
+            let mut seqs = vec![&mut seq];
+            eng.decode_step(&mut seqs).unwrap();
+        }
+        seq.generated
+    };
+    let alone1 = run_alone(&p1);
+    let alone2 = run_alone(&p2);
+
+    let mut eng = engine(&rt, "servethin", 0);
+    let mut s1 = Sequence::new(1, p1, 5, None);
+    let mut s2 = Sequence::new(2, p2, 5, None);
+    eng.prefill(&mut s1).unwrap();
+    eng.prefill(&mut s2).unwrap();
+    while !s1.is_finished() || !s2.is_finished() {
+        let mut seqs: Vec<&mut Sequence> = Vec::new();
+        if !s1.is_finished() {
+            seqs.push(&mut s1);
+        }
+        if !s2.is_finished() {
+            seqs.push(&mut s2);
+        }
+        eng.decode_step(&mut seqs).unwrap();
+    }
+    assert_eq!(s1.generated, alone1, "lane 0 diverged under batching");
+    assert_eq!(s2.generated, alone2, "lane 1 diverged under batching");
+}
+
+/// Membership churn: a sequence joining mid-flight (regroup + repack) must
+/// not corrupt the cache of already-running sequences.
+#[test]
+fn regroup_preserves_cache_state() {
+    let rt = runtime();
+    let cfg = rt.manifest().config("servefull").unwrap().clone();
+    let mut rng = Rng::new(5);
+    let p1 = synth_prompt(8, cfg.vocab, &mut rng);
+    let p2 = synth_prompt(8, cfg.vocab, &mut rng);
+
+    let alone = {
+        let mut eng = engine(&rt, "servefull", 0);
+        let mut seq = Sequence::new(1, p1.clone(), 8, None);
+        eng.prefill(&mut seq).unwrap();
+        while !seq.is_finished() {
+            let mut seqs = vec![&mut seq];
+            eng.decode_step(&mut seqs).unwrap();
+        }
+        seq.generated
+    };
+
+    let mut eng = engine(&rt, "servefull", 0);
+    let mut s1 = Sequence::new(1, p1, 8, None);
+    eng.prefill(&mut s1).unwrap();
+    // decode 3 steps solo
+    for _ in 0..3 {
+        let mut seqs = vec![&mut s1];
+        eng.decode_step(&mut seqs).unwrap();
+    }
+    // second sequence joins: bucket 1 -> 2, full repack
+    let mut s2 = Sequence::new(2, p2, 4, None);
+    eng.prefill(&mut s2).unwrap();
+    while !s1.is_finished() {
+        let mut seqs: Vec<&mut Sequence> = vec![&mut s1];
+        if !s2.is_finished() {
+            seqs.push(&mut s2);
+        }
+        eng.decode_step(&mut seqs).unwrap();
+    }
+    assert_eq!(s1.generated, alone,
+               "regroup corrupted a running sequence's cache");
+    assert!(eng.metrics.regroups >= 2);
+}
+
+/// Factored serving: surgery weights on the thin artifact family generate
+/// and the thin K arena is 4x smaller.
+#[test]
+fn factored_serving_path_works() {
+    let rt = runtime();
+    let m = rt.manifest();
+    let full_cfg = m.config("servefull").unwrap().clone();
+    let thin_cfg = m.config("servethin").unwrap().clone();
+    let full = ParamStore::init(&full_cfg, 42);
+    let thin = surgery::factor_to_thin(&full, &full_cfg, &thin_cfg).unwrap();
+    let mut eng =
+        Engine::new(&rt, "servethin", thin, false, Sampler::Greedy, 0).unwrap();
+    let mut rng = Rng::new(1);
+    let mut seq =
+        Sequence::new(1, synth_prompt(20, thin_cfg.vocab, &mut rng), 8, None);
+    eng.prefill(&mut seq).unwrap();
+    while !seq.is_finished() {
+        let mut seqs = vec![&mut seq];
+        eng.decode_step(&mut seqs).unwrap();
+    }
+    assert_eq!(seq.generated.len(), 8);
+    assert_eq!(thin_cfg.k_cache_dims * 4, full_cfg.k_cache_dims);
+}
+
+/// Full router stack: closed-loop trace completes, metrics populated, KV
+/// accounting returns to empty.
+#[test]
+fn router_closed_loop_end_to_end() {
+    let rt = runtime();
+    let eng = engine(&rt, "servethin", 7);
+    let kv = kv_for(&rt, "servethin", 4.0);
+    let sched = Scheduler::new(eng, kv, 8);
+    let mut router = Router::new(sched);
+    let trace = closed_loop(12, 24, 8);
+    let report = router.run_closed_loop(&trace, 0).unwrap();
+    assert_eq!(report.n_requests, 12);
+    assert_eq!(report.rejected, 0);
+    assert_eq!(report.gen_tokens, 12 * 8);
+    assert!(report.gen_tokens_per_sec() > 0.0);
+    assert!(report.ttft.count() == 12 && report.e2e.count() == 12);
+    let stats = router.sched.kv.stats();
+    assert_eq!(stats.seqs, 0, "cache not fully released: {stats:?}");
+    assert!(router.sched.engine.metrics.mean_occupancy() > 0.3);
+}
+
+/// Admission control: an over-budget burst is partially admitted, the rest
+/// completes as capacity frees up — nothing deadlocks, accounting is exact.
+#[test]
+fn admission_under_pressure() {
+    let rt = runtime();
+    let eng = engine(&rt, "servefull", 11);
+    // tiny budget: ~3 concurrent sequences of (24 prompt + 8 gen + pad)
+    let kv = kv_for(&rt, "servefull", 0.12);
+    let sched = Scheduler::new(eng, kv, 8);
+    let mut router = Router::new(sched);
+    let trace = closed_loop(6, 24, 8);
+    let report = router.run_closed_loop(&trace, 0).unwrap();
+    assert_eq!(report.n_requests, 6);
+    assert_eq!(report.gen_tokens, 6 * 8);
+    assert_eq!(router.sched.kv.stats().seqs, 0);
+}

@@ -1,0 +1,80 @@
+//! Training-pipeline integration at quick budgets: the experiment
+//! protocols produce sane, paper-shaped results end to end.
+
+use thinkeys::experiments::common::{self, Opts};
+use thinkeys::experiments::{exp1_copyback, exp34_lm_sweep};
+use thinkeys::model::surgery;
+use thinkeys::runtime::Runtime;
+
+fn runtime() -> Runtime {
+    Runtime::new().expect("run `make artifacts` first")
+}
+
+#[test]
+fn lm_pretrain_improves_over_random_and_caches() {
+    let rt = runtime();
+    let corpus = common::corpus_for(&rt, "tinylm_ds32", 40_000);
+    let pre = common::pretrain_lm(&rt, "tinylm_ds32", &corpus, "testcache",
+                                  40, 999).unwrap();
+    let ppl = common::val_ppl(&rt, "tinylm_ds32", &pre.params, &corpus)
+        .unwrap();
+    // random-init PPL is ~vocab (512); 40 steps should cut it well down
+    assert!(ppl < 350.0, "ppl {ppl}");
+    // second call must hit the checkpoint cache
+    let again = common::pretrain_lm(&rt, "tinylm_ds32", &corpus, "testcache",
+                                    40, 999).unwrap();
+    assert!(again.cached);
+    let ppl2 = common::val_ppl(&rt, "tinylm_ds32", &again.params, &corpus)
+        .unwrap();
+    assert!((ppl - ppl2).abs() < 1e-6);
+}
+
+#[test]
+fn copyback_learns_above_chance() {
+    let rt = runtime();
+    let row = exp1_copyback::run_config(&rt, "copyback_ds16", 240, 60, 2e-3,
+                                        1).unwrap();
+    // chance is 1/16 = 6.25%; 4 dims/head must beat it decisively within
+    // a short budget (the full sweep incl. ds4 runs in experiments exp1)
+    assert!(row.best_acc > 0.3, "acc {}", row.best_acc);
+}
+
+#[test]
+fn lm_sweep_rows_are_ordered_reasonably() {
+    let rt = runtime();
+    let rows = exp34_lm_sweep::sweep(&rt, "small", 30, 7).unwrap();
+    assert_eq!(rows.len(), 4);
+    // QK savings must be monotone decreasing in d_select
+    for w in rows.windows(2) {
+        assert!(w[0].qk_saved_pct > w[1].qk_saved_pct);
+    }
+    assert!(rows.iter().all(|r| r.val_ppl.is_finite() && r.val_ppl > 1.0));
+}
+
+#[test]
+fn qk_finetune_recovers_factored_model() {
+    // After aggressive factoring, a few QK-FT steps must improve PPL.
+    let rt = runtime();
+    let corpus = common::corpus_for(&rt, "tinylm_ds64", 40_000);
+    let pre = common::pretrain_lm(&rt, "tinylm_ds64", &corpus, "testqkft",
+                                  60, 998).unwrap();
+    let full_cfg = rt.manifest().config("tinylm_ds64").unwrap().clone();
+    let thin_cfg = rt.manifest().config("tinylm_ds8").unwrap().clone();
+    let thin =
+        surgery::factor_to_thin(&pre.params, &full_cfg, &thin_cfg).unwrap();
+    let before = common::val_ppl(&rt, "tinylm_ds8", &thin, &corpus).unwrap();
+    let batches = corpus.batches(&corpus.train, full_cfg.train_batch,
+                                 full_cfg.train_seq, 5);
+    let tuned = common::qk_finetune(&rt, "tinylm_ds8", thin, 30,
+                                    |i| batches[i % batches.len()].clone())
+        .unwrap();
+    let after = common::val_ppl(&rt, "tinylm_ds8", &tuned, &corpus).unwrap();
+    assert!(after < before, "QK-FT did not help: {before} -> {after}");
+}
+
+#[test]
+fn opts_quick_is_fast_enough_for_benches() {
+    let o = Opts::quick();
+    assert!(o.steps(900) <= 90);
+    assert_eq!(o.seeds.len(), 1);
+}
