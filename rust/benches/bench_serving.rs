@@ -16,7 +16,8 @@ fn main() {
     let rt = Runtime::new().expect("make artifacts first");
     let mut t = Table::new(
         "Closed-loop serving under a fixed 2 MB KV budget",
-        &["config", "tok/s", "concurrent capacity (tokens)", "occupancy"],
+        &["config", "tok/s", "concurrent capacity (tokens)", "occupancy",
+          "copyback B (vs full repack)"],
     );
     for cfg_name in ["servefull", "servethin"] {
         let cfg = rt.manifest().config(cfg_name).unwrap().clone();
@@ -38,14 +39,17 @@ fn main() {
         let report = router
             .run_closed_loop(&closed_loop(16, 32, 12), 0)
             .unwrap();
+        let m = &router.sched.engine.metrics;
         t.row(&[
             cfg_name.to_string(),
             format!("{:.1}", report.gen_tokens_per_sec()),
             capacity.to_string(),
-            format!("{:.2}", router.sched.engine.metrics.mean_occupancy()),
+            format!("{:.2}", m.mean_occupancy()),
+            format!("{} (vs {})", m.copyback_bytes, m.copyback_bytes_full),
         ]);
     }
     t.print();
+    serving::regroup_copyback_table(&rt, "servethin").unwrap().print();
     serving::capacity_table().print();
 
     // Pallas-kernel decode path (L1 lowered into the serving HLO)

@@ -1,10 +1,13 @@
 //! Regenerates paper Table 12 (Experiment 1: copy-back / positional
 //! selection by d_select). Quick budget; the full protocol is
-//! `thinkeys experiments exp1`.
-use thinkeys::experiments::{exp1_copyback, Opts};
+//! `thinkeys experiments exp1`. Also reports the serving-side copy-back
+//! accounting: host bytes moved by the engine's incremental lane-stable
+//! regroup vs the full park/unpark baseline on a steady-state retirement.
+use thinkeys::experiments::{exp1_copyback, serving, Opts};
 use thinkeys::runtime::Runtime;
 
 fn main() {
     let rt = Runtime::new().expect("make artifacts first");
     exp1_copyback::run(&rt, &Opts::quick()).unwrap().print();
+    serving::regroup_copyback_table(&rt, "servethin").unwrap().print();
 }

@@ -2,11 +2,24 @@
 //! physical cache storage.
 //!
 //! HLO executables are shape-specialized, so decode runs over *batch
-//! buckets* {1,2,4,8,16,32}; the engine keeps the active sequences packed
-//! into a dense group arena `(L, B, N, KD/VD)` matching the current bucket
-//! and "parks" per-sequence cache rows host-side when membership changes.
-//! In steady state (no joins/leaves) the previous step's output caches are
-//! fed straight back in — no repacking.
+//! buckets* {1,2,4,8,16,32}; the engine packs active sequences into a
+//! dense group arena `(L, B, N, KD/VD)` matching the current bucket. Lane
+//! assignment is an explicit [`LaneMap`] (`SeqId → lane`) — the single
+//! source of truth for where a sequence's cache rows live — and regroup
+//! is *incremental and lane-stable*: a retirement just vacates its lane
+//! (zero copies; the hole is fed a dummy token until reused), a join
+//! writes only the joining lane, and lanes move only when the bucket
+//! itself grows or shrinks (with hysteresis, so churn at a bucket
+//! boundary does not thrash). `EngineMetrics::copyback_bytes` counts the
+//! host bytes actually moved, next to the bytes the old full park/unpark
+//! design would have moved for the same membership changes.
+//!
+//! Accounting contract with the scheduler: `rows(id)` reports the cache
+//! rows physically written per sequence; the scheduler mirrors it into
+//! `KvCacheManager::commit_rows` so the logical block tables and the
+//! physical arena always agree, and both are freed on the same
+//! retirement event (`Scheduler::free_seq` → `kv.release` +
+//! `engine.drop_seq`).
 //!
 //! The *thin* K arena is the paper's saving made concrete: `KD =
 //! n_kv_heads · d_qk_head` is 4x smaller for `servethin` than `servefull`
@@ -16,6 +29,7 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
+use crate::coordinator::lanes::{self, LaneMap};
 use crate::coordinator::metrics::EngineMetrics;
 use crate::coordinator::sampling::Sampler;
 use crate::coordinator::sequence::{SeqId, Sequence};
@@ -46,17 +60,19 @@ pub struct Engine<'rt> {
     /// serve time, so the host->literal conversion happens once, not per
     /// step).
     param_lits: Vec<xla::Literal>,
-    /// Steady-state cache literals (L3-opt-2: while group membership is
-    /// unchanged, the previous step's output caches are fed straight back
-    /// without literal<->tensor round trips).
+    /// Steady-state cache literals (L3-opt-2: while lane assignment covers
+    /// the active set, the previous step's output caches are fed straight
+    /// back without literal<->tensor round trips — including across
+    /// zero-copy retirements).
     k_lit: Option<xla::Literal>,
     v_lit: Option<xla::Literal>,
     // group state
-    lanes: Vec<Option<SeqId>>,
+    lanes: LaneMap,
     k_group: Tensor,
     v_group: Tensor,
     parked: HashMap<SeqId, Parked>,
-    /// Cache rows actually written per live sequence (= tokens fed so far).
+    /// Cache rows actually written per live sequence (= tokens fed so
+    /// far). Physical-side half of the unified accounting contract.
     rows: HashMap<SeqId, usize>,
     pub metrics: EngineMetrics,
 }
@@ -81,7 +97,7 @@ impl<'rt> Engine<'rt> {
             param_lits,
             k_lit: None,
             v_lit: None,
-            lanes: Vec::new(),
+            lanes: LaneMap::new(),
             k_group: Tensor::zeros(&[0]),
             v_group: Tensor::zeros(&[0]),
             parked: HashMap::new(),
@@ -98,8 +114,24 @@ impl<'rt> Engine<'rt> {
         self.rt.manifest().prefill_seq
     }
 
+    /// Cache rows physically written for `id` (0 if unknown). The
+    /// scheduler mirrors this into the KV block accounting.
+    pub fn rows(&self, id: SeqId) -> usize {
+        self.rows.get(&id).copied().unwrap_or(0)
+    }
+
+    /// The lane a sequence currently decodes in, if it is grouped.
+    pub fn lane_of(&self, id: SeqId) -> Option<usize> {
+        self.lanes.lane_of(id)
+    }
+
     fn param_args(&self) -> Vec<Arg<'_>> {
         self.param_lits.iter().map(Arg::L).collect()
+    }
+
+    /// Bytes of one cache row (K + V) across all layers.
+    fn row_bytes(&self) -> usize {
+        self.cfg.n_layers * (self.cfg.k_cache_dims + self.cfg.v_cache_dims) * 4
     }
 
     /// Prefill a queued sequence: fill its cache rows, sample the first
@@ -155,37 +187,36 @@ impl<'rt> Engine<'rt> {
         Ok(())
     }
 
-    /// Smallest exported decode bucket that fits `n` lanes.
-    fn bucket_for(&self, n: usize) -> Result<usize> {
-        self.rt
-            .manifest()
-            .decode_batches
-            .iter()
-            .copied()
-            .find(|&b| b >= n)
-            .ok_or_else(|| {
-                anyhow::anyhow!(
-                    "no decode bucket >= {n} (max {:?})",
-                    self.rt.manifest().decode_batches.last()
-                )
-            })
+    /// Bucket to repack into for `n` active lanes: minimal on first group
+    /// and growth, sticky on shrink (see [`lanes::target_bucket`]).
+    fn target_bucket(&self, n: usize) -> Result<usize> {
+        lanes::target_bucket(
+            &self.rt.manifest().decode_batches,
+            n,
+            self.lanes.bucket(),
+        )
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "no decode bucket >= {n} (max {:?})",
+                self.rt.manifest().decode_batches.last()
+            )
+        })
     }
 
-    /// Write a parked sequence's rows into group lane `lane`.
+    /// Write a parked sequence's rows into group lane `lane` (one
+    /// contiguous copy per layer per arena).
     fn unpark_into(&mut self, id: SeqId, lane: usize) {
         let (l, n) = (self.cfg.n_layers, self.cfg.max_seq);
         let (kd, vd) = (self.cfg.k_cache_dims, self.cfg.v_cache_dims);
-        let b = self.lanes.len();
+        let b = self.lanes.bucket();
         let p = self.parked.get(&id).expect("unpark of unknown seq");
         for li in 0..l {
-            for t in 0..p.len {
-                let gk = ((li * b + lane) * n + t) * kd;
-                self.k_group.data[gk..gk + kd].copy_from_slice(
-                    &p.k[(li * p.len + t) * kd..(li * p.len + t + 1) * kd]);
-                let gv = ((li * b + lane) * n + t) * vd;
-                self.v_group.data[gv..gv + vd].copy_from_slice(
-                    &p.v[(li * p.len + t) * vd..(li * p.len + t + 1) * vd]);
-            }
+            let gk = (li * b + lane) * n * kd;
+            self.k_group.data[gk..gk + p.len * kd]
+                .copy_from_slice(&p.k[li * p.len * kd..(li + 1) * p.len * kd]);
+            let gv = (li * b + lane) * n * vd;
+            self.v_group.data[gv..gv + p.len * vd]
+                .copy_from_slice(&p.v[li * p.len * vd..(li + 1) * p.len * vd]);
         }
     }
 
@@ -193,62 +224,82 @@ impl<'rt> Engine<'rt> {
     fn park_from(&mut self, id: SeqId, lane: usize, len: usize) {
         let (l, n) = (self.cfg.n_layers, self.cfg.max_seq);
         let (kd, vd) = (self.cfg.k_cache_dims, self.cfg.v_cache_dims);
-        let b = self.lanes.len();
+        let b = self.lanes.bucket();
         let mut parked = Parked {
             len,
             k: vec![0.0; l * len * kd],
             v: vec![0.0; l * len * vd],
         };
         for li in 0..l {
-            for t in 0..len {
-                let gk = ((li * b + lane) * n + t) * kd;
-                parked.k[(li * len + t) * kd..(li * len + t + 1) * kd]
-                    .copy_from_slice(&self.k_group.data[gk..gk + kd]);
-                let gv = ((li * b + lane) * n + t) * vd;
-                parked.v[(li * len + t) * vd..(li * len + t + 1) * vd]
-                    .copy_from_slice(&self.v_group.data[gv..gv + vd]);
-            }
+            let gk = (li * b + lane) * n * kd;
+            parked.k[li * len * kd..(li + 1) * len * kd]
+                .copy_from_slice(&self.k_group.data[gk..gk + len * kd]);
+            let gv = (li * b + lane) * n * vd;
+            parked.v[li * len * vd..(li + 1) * len * vd]
+                .copy_from_slice(&self.v_group.data[gv..gv + len * vd]);
         }
         self.parked.insert(id, parked);
     }
 
-    /// Re-pack the decode group to hold exactly the `active` sequence ids
-    /// (in order), parking every current member's live rows first so no
-    /// cache state is lost on membership changes (including preemption).
+    /// Incrementally repack the decode group to cover the `active`
+    /// sequence ids: stable sequences keep their lanes (zero copies),
+    /// live leavers are parked, joiners are unparked into holes, and only
+    /// a bucket resize moves kept lanes (each copied once, directly
+    /// between arenas — not the old park+unpark double copy).
     fn regroup(&mut self, active: &[SeqId]) -> Result<()> {
-        let current: Vec<SeqId> = self.lanes.iter().flatten().copied().collect();
-        if current == active && !self.lanes.is_empty() {
-            return Ok(());
+        let bucket = self.target_bucket(active.len())?;
+        let plan = self.lanes.plan(active, bucket);
+        let cost = lanes::copy_cost(
+            &plan,
+            |id| self.rows.get(&id).copied().unwrap_or(0),
+            self.row_bytes(),
+        );
+        // park live leavers while their lanes still hold the latest rows
+        for &(id, lane) in &plan.leave {
+            if let Some(&len) = self.rows.get(&id) {
+                self.park_from(id, lane, len);
+            }
+            self.metrics.lane_leaves += 1;
         }
-        // park all current members (their latest rows live in the group)
-        let to_park: Vec<(SeqId, usize)> = self
-            .lanes
-            .iter()
-            .enumerate()
-            .filter_map(|(lane, s)| s.map(|id| (id, lane)))
-            .collect();
-        for (id, lane) in to_park {
-            if let Some(&rows) = self.rows.get(&id) {
-                self.park_from(id, lane, rows);
+        if plan.resize {
+            let (l, n) = (self.cfg.n_layers, self.cfg.max_seq);
+            let (kd, vd) = (self.cfg.k_cache_dims, self.cfg.v_cache_dims);
+            let old_b = self.lanes.bucket();
+            let old_k = std::mem::replace(
+                &mut self.k_group, Tensor::zeros(&[l, bucket, n, kd]));
+            let old_v = std::mem::replace(
+                &mut self.v_group, Tensor::zeros(&[l, bucket, n, vd]));
+            for &(id, from, to) in &plan.keep {
+                let len = self.rows.get(&id).copied().unwrap_or(0);
+                for li in 0..l {
+                    let src = (li * old_b + from) * n * kd;
+                    let dst = (li * bucket + to) * n * kd;
+                    self.k_group.data[dst..dst + len * kd]
+                        .copy_from_slice(&old_k.data[src..src + len * kd]);
+                    let src = (li * old_b + from) * n * vd;
+                    let dst = (li * bucket + to) * n * vd;
+                    self.v_group.data[dst..dst + len * vd]
+                        .copy_from_slice(&old_v.data[src..src + len * vd]);
+                }
             }
         }
-        // build the new group
-        let bucket = self.bucket_for(active.len())?;
-        let (l, n) = (self.cfg.n_layers, self.cfg.max_seq);
-        let (kd, vd) = (self.cfg.k_cache_dims, self.cfg.v_cache_dims);
-        self.lanes = vec![None; bucket];
-        self.k_group = Tensor::zeros(&[l, bucket, n, kd]);
-        self.v_group = Tensor::zeros(&[l, bucket, n, vd]);
-        for (lane, &id) in active.iter().enumerate() {
-            self.lanes[lane] = Some(id);
+        self.lanes.apply(&plan);
+        for &(id, lane) in &plan.join {
             self.unpark_into(id, lane);
+            // the arena is now the live copy; drop the parked snapshot
+            self.parked.remove(&id);
+            self.metrics.lane_joins += 1;
         }
         self.metrics.regroups += 1;
+        self.metrics.copyback_bytes += cost.actual;
+        self.metrics.copyback_bytes_full += cost.full_equiv;
         Ok(())
     }
 
     /// One continuous-batching decode step over the given active
-    /// sequences. Samples and records one token per sequence.
+    /// sequences. Samples and records one token per sequence, feeding
+    /// each lane from the lane map (never from enumeration order — see
+    /// the lane-misalignment regression tests).
     pub fn decode_step(&mut self, seqs: &mut [&mut Sequence]) -> Result<()> {
         if seqs.is_empty() {
             return Ok(());
@@ -259,10 +310,12 @@ impl<'rt> Engine<'rt> {
             }
         }
         let active: Vec<SeqId> = seqs.iter().map(|s| s.id).collect();
-        let current: Vec<SeqId> =
-            self.lanes.iter().flatten().copied().collect();
-        if current != active || self.k_lit.is_none() {
-            // materialize the latest cache state for parking, then repack
+        let in_sync = self.k_lit.is_some()
+            && self.lanes.live() == active.len()
+            && active.iter().all(|&id| self.lanes.lane_of(id).is_some());
+        if !in_sync {
+            // materialize the latest cache state for repacking, then feed
+            // the repacked arenas back to the literal fast path
             if let (Some(kl), Some(vl)) = (self.k_lit.take(), self.v_lit.take())
             {
                 self.k_group = literal_to_tensor(&kl)?;
@@ -274,11 +327,14 @@ impl<'rt> Engine<'rt> {
             self.v_lit = Some(crate::runtime::client::tensor_to_literal(
                 &self.v_group)?);
         }
-        let b = self.lanes.len();
+        let b = self.lanes.bucket();
 
+        // holes (vacated lanes) decode a dummy token at position 0; the
+        // row they write is overwritten when a joiner reuses the lane
         let mut toks = vec![0i32; b];
         let mut pos = vec![0i32; b];
-        for (lane, s) in seqs.iter().enumerate() {
+        for s in seqs.iter() {
+            let lane = self.lanes.lane_of(s.id).expect("active seq has a lane");
             toks[lane] = s.last_token();
             pos[lane] = (s.len() - 1) as i32;
         }
@@ -305,27 +361,35 @@ impl<'rt> Engine<'rt> {
         self.v_lit = Some(outs.remove(2));
         self.k_lit = Some(outs.remove(1));
         let v = self.cfg.vocab;
-        for (lane, s) in seqs.iter_mut().enumerate() {
+        for s in seqs.iter_mut() {
+            let lane = self.lanes.lane_of(s.id).expect("active seq has a lane");
             // this step wrote the row for the token we just fed
             self.rows.insert(s.id, s.len());
             let row = &logits.data[lane * v..(lane + 1) * v];
             let tok = self.sampler.sample(row, &mut self.rng);
             s.push_token(tok);
         }
-        // finished sequences leave the group on the next regroup
+        // finished sequences vacate their lanes via drop_seq (zero-copy)
         Ok(())
     }
 
-    /// Forget a sequence's cache storage.
+    /// Forget a sequence's cache storage. If it held a lane, the lane
+    /// becomes a hole — no bytes move, no regroup is scheduled; survivors
+    /// keep decoding from their existing lanes.
     pub fn drop_seq(&mut self, id: SeqId) {
         self.parked.remove(&id);
         self.rows.remove(&id);
-        // group tensors must be re-materialized from the literals on the
-        // next decode (membership changed)
-        for lane in self.lanes.iter_mut() {
-            if *lane == Some(id) {
-                *lane = None;
-            }
+        if self.lanes.remove(id) {
+            self.metrics.lane_leaves += 1;
+            // what the old full park/unpark design would have copied for
+            // this retirement: every survivor out and back in
+            let survivors: u64 = self
+                .lanes
+                .ids()
+                .map(|sid| self.rows.get(&sid).copied().unwrap_or(0) as u64)
+                .sum();
+            let full = 2 * survivors * self.row_bytes() as u64;
+            self.metrics.copyback_bytes_full += full;
         }
     }
 
@@ -343,7 +407,9 @@ mod tests {
     use super::*;
 
     // Engine behaviour against real artifacts is covered by
-    // rust/tests/serving_e2e.rs; here we test the pure helpers.
+    // rust/tests/serving_e2e.rs; lane assignment and repack planning are
+    // unit tested in crate::coordinator::lanes. Here we test the
+    // remaining pure helpers.
 
     #[test]
     fn bucket_selection_logic() {

@@ -50,6 +50,10 @@ impl KvCacheConfig {
 #[derive(Clone, Debug, Default)]
 struct BlockTable {
     n_tokens: usize,
+    /// Cache rows the engine has physically written for this sequence —
+    /// mirrored from `Engine::rows` by the scheduler so the logical
+    /// reservation and the physical arena stay in agreement.
+    rows_written: usize,
     k_blocks: Vec<usize>,
     v_blocks: Vec<usize>,
 }
@@ -84,6 +88,8 @@ pub struct KvCacheManager {
 pub struct CacheStats {
     pub seqs: usize,
     pub tokens: usize,
+    /// Rows physically written by the engine, summed over live sequences.
+    pub tokens_written: usize,
     pub k_blocks_used: usize,
     pub v_blocks_used: usize,
     pub k_bytes_used: f64,
@@ -126,6 +132,12 @@ impl KvCacheManager {
     pub fn free_token_capacity(&self) -> usize {
         self.k_pool.free.len().min(self.v_pool.free.len())
             * self.cfg.block_tokens
+    }
+
+    /// Total K+V block capacity in tokens — the largest reservation that
+    /// could ever be admitted, even into an empty cache.
+    pub fn total_token_capacity(&self) -> usize {
+        self.k_pool.total.min(self.v_pool.total) * self.cfg.block_tokens
     }
 
     pub fn can_admit(&self, n_tokens: usize) -> bool {
@@ -178,6 +190,29 @@ impl KvCacheManager {
         Ok(())
     }
 
+    /// Record the cache rows the engine has physically written for `seq`.
+    /// Fails if the sequence is unknown or the arena outgrew the logical
+    /// reservation — either means the two accountings diverged.
+    pub fn commit_rows(&mut self, seq: SeqId, rows: usize) -> Result<()> {
+        let t = self
+            .tables
+            .get_mut(&seq)
+            .ok_or_else(|| anyhow::anyhow!("commit_rows: unknown sequence {seq}"))?;
+        if rows > t.n_tokens {
+            bail!(
+                "sequence {seq} wrote {rows} rows but reserved only {} tokens",
+                t.n_tokens
+            );
+        }
+        t.rows_written = rows;
+        Ok(())
+    }
+
+    /// Physically written rows for `seq`, if it is allocated.
+    pub fn rows_written(&self, seq: SeqId) -> Option<usize> {
+        self.tables.get(&seq).map(|t| t.rows_written)
+    }
+
     pub fn release(&mut self, seq: SeqId) {
         if let Some(t) = self.tables.remove(&seq) {
             self.k_pool.free.extend(t.k_blocks);
@@ -194,6 +229,7 @@ impl KvCacheManager {
         CacheStats {
             seqs: self.tables.len(),
             tokens: self.tables.values().map(|t| t.n_tokens).sum(),
+            tokens_written: self.tables.values().map(|t| t.rows_written).sum(),
             k_blocks_used: self.k_pool.used(),
             v_blocks_used: self.v_pool.used(),
             k_bytes_used: self.k_pool.used() as f64 * bt
@@ -290,6 +326,38 @@ mod tests {
         int4_thin.bytes_per_el_k = 0.5;
         let ratio = bf16_full.k_bytes_per_token() / int4_thin.k_bytes_per_token();
         assert!((ratio - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn commit_rows_tracks_physical_writes() {
+        let mut m = KvCacheManager::new(cfg(32, 4.0));
+        m.allocate(1, 100).unwrap();
+        assert_eq!(m.rows_written(1), Some(0));
+        m.commit_rows(1, 40).unwrap();
+        assert_eq!(m.rows_written(1), Some(40));
+        assert_eq!(m.stats().tokens_written, 40);
+        m.release(1);
+        assert_eq!(m.rows_written(1), None);
+        assert_eq!(m.stats().tokens_written, 0);
+    }
+
+    #[test]
+    fn commit_rows_rejects_divergence() {
+        let mut m = KvCacheManager::new(cfg(32, 4.0));
+        assert!(m.commit_rows(1, 1).is_err(), "unknown sequence");
+        m.allocate(1, 32).unwrap();
+        assert!(m.commit_rows(1, 33).is_err(), "arena outgrew reservation");
+        assert!(m.commit_rows(1, 32).is_ok());
+    }
+
+    #[test]
+    fn total_capacity_covers_empty_cache_admission() {
+        let mut m = KvCacheManager::new(cfg(128, 0.5));
+        let total = m.total_token_capacity();
+        assert_eq!(total, m.free_token_capacity());
+        m.allocate(1, 32).unwrap();
+        assert_eq!(m.total_token_capacity(), total);
+        assert!(m.free_token_capacity() < total);
     }
 
     #[test]

@@ -1,0 +1,323 @@
+//! Lane-stable group membership for the decode engine.
+//!
+//! The decode arena packs sequences into `bucket` lanes. Membership churn
+//! (retirements, admissions, preemptions) used to trigger a full
+//! park/unpark cycle — every member copied host-side twice per change —
+//! and, worse, the engine fed tokens to lanes by *enumeration order*, so a
+//! retirement in a low lane silently shifted every survivor's input into
+//! the wrong lane. [`LaneMap`] is the fix: an explicit `SeqId → lane`
+//! assignment that is the single source of truth for where a sequence's
+//! cache rows live, plus an incremental [`RegroupPlan`] that keeps stable
+//! sequences in place (zero copies), writes only joining lanes, and moves
+//! lanes only when the bucket itself is resized.
+//!
+//! Everything here is pure bookkeeping (no tensors, no runtime), so the
+//! lane-misalignment regression and the copy-cost accounting are unit
+//! tested without compiled artifacts.
+
+use std::collections::HashMap;
+
+use crate::coordinator::sequence::SeqId;
+
+/// Explicit sequence→lane assignment. Invariants: `of[id] == lane` iff
+/// `lanes[lane] == Some(id)`; a sequence's lane never changes except when
+/// the bucket is resized.
+#[derive(Clone, Debug, Default)]
+pub struct LaneMap {
+    lanes: Vec<Option<SeqId>>,
+    of: HashMap<SeqId, usize>,
+}
+
+/// Incremental membership change: which sequences stay (and where), which
+/// join into holes, which leave, and whether the arena must be resized.
+#[derive(Clone, Debug)]
+pub struct RegroupPlan {
+    /// Target bucket (lane count) after the change.
+    pub bucket: usize,
+    /// True when the arena must be reallocated (bucket changed); every
+    /// kept lane is then copied into the new layout.
+    pub resize: bool,
+    /// `(id, old_lane, new_lane)` — sequences that survive the change.
+    /// Without a resize `old_lane == new_lane` and no bytes move.
+    pub keep: Vec<(SeqId, usize, usize)>,
+    /// `(id, lane)` — sequences unparked into a (possibly freed) lane.
+    pub join: Vec<(SeqId, usize)>,
+    /// `(id, old_lane)` — live sequences leaving the group (must be
+    /// parked before their lane is reused).
+    pub leave: Vec<(SeqId, usize)>,
+}
+
+/// Host bytes moved by a plan, next to what the old full park/unpark
+/// design would have moved for the same membership change.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CopyCost {
+    /// Bytes the incremental repack actually copies.
+    pub actual: u64,
+    /// Bytes the full park-everything/unpark-everything baseline copies:
+    /// every previous member out, every new member back in.
+    pub full_equiv: u64,
+}
+
+impl LaneMap {
+    pub fn new() -> LaneMap {
+        LaneMap::default()
+    }
+
+    /// Current lane count (0 before the first regroup).
+    pub fn bucket(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Number of occupied lanes.
+    pub fn live(&self) -> usize {
+        self.of.len()
+    }
+
+    pub fn lane_of(&self, id: SeqId) -> Option<usize> {
+        self.of.get(&id).copied()
+    }
+
+    /// Occupied sequence ids, in lane order.
+    pub fn ids(&self) -> impl Iterator<Item = SeqId> + '_ {
+        self.lanes.iter().flatten().copied()
+    }
+
+    /// Vacate a sequence's lane (zero-copy retirement: the hole persists
+    /// until a join or resize reuses it). Returns true if it was present.
+    pub fn remove(&mut self, id: SeqId) -> bool {
+        match self.of.remove(&id) {
+            Some(lane) => {
+                self.lanes[lane] = None;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Compute the incremental change from the current assignment to
+    /// `active` (in order) at `bucket` lanes. `active` must fit `bucket`.
+    pub fn plan(&self, active: &[SeqId], bucket: usize) -> RegroupPlan {
+        assert!(active.len() <= bucket, "active {} > bucket {bucket}", active.len());
+        let resize = bucket != self.lanes.len();
+        let leave: Vec<(SeqId, usize)> = self
+            .lanes
+            .iter()
+            .enumerate()
+            .filter_map(|(lane, s)| s.map(|id| (id, lane)))
+            .filter(|(id, _)| !active.contains(id))
+            .collect();
+        let stays: Vec<(SeqId, usize)> = self
+            .lanes
+            .iter()
+            .enumerate()
+            .filter_map(|(lane, s)| s.map(|id| (id, lane)))
+            .filter(|(id, _)| active.contains(id))
+            .collect();
+        let mut used = vec![false; bucket];
+        let mut keep = Vec::with_capacity(stays.len());
+        // In lane order: keep the old index whenever it exists in the new
+        // bucket (always true on grow), else compact into the lowest free
+        // lane (shrink only).
+        for (id, old) in stays {
+            let new = if old < bucket && !used[old] {
+                old
+            } else {
+                (0..bucket).find(|&l| !used[l]).expect("bucket too small")
+            };
+            used[new] = true;
+            keep.push((id, old, new));
+        }
+        let mut join = Vec::new();
+        for &id in active {
+            if self.of.contains_key(&id) {
+                continue;
+            }
+            let lane = (0..bucket).find(|&l| !used[l]).expect("bucket too small");
+            used[lane] = true;
+            join.push((id, lane));
+        }
+        RegroupPlan { bucket, resize, keep, join, leave }
+    }
+
+    /// Rebuild the assignment from an applied plan.
+    pub fn apply(&mut self, plan: &RegroupPlan) {
+        self.lanes = vec![None; plan.bucket];
+        self.of.clear();
+        for &(id, _, lane) in &plan.keep {
+            self.lanes[lane] = Some(id);
+            self.of.insert(id, lane);
+        }
+        for &(id, lane) in &plan.join {
+            self.lanes[lane] = Some(id);
+            self.of.insert(id, lane);
+        }
+    }
+}
+
+/// Bucket selection with shrink hysteresis: grow to the smallest exported
+/// bucket that fits, but only shrink once the group fits in *half* the
+/// current bucket (avoids repack thrash around a bucket boundary).
+/// Returns `None` when `n` exceeds the largest bucket.
+pub fn target_bucket(buckets: &[usize], n: usize, current: usize) -> Option<usize> {
+    let minimal = buckets.iter().copied().find(|&b| b >= n)?;
+    if current == 0 || minimal > current {
+        Some(minimal)
+    } else if minimal * 2 <= current {
+        Some(minimal)
+    } else {
+        Some(current)
+    }
+}
+
+/// Host bytes a plan copies (and what the full park/unpark baseline would
+/// have copied). `rows(id)` = cache rows currently written for `id`;
+/// `row_bytes` = bytes per row across all layers (K + V).
+pub fn copy_cost(
+    plan: &RegroupPlan,
+    rows: impl Fn(SeqId) -> usize,
+    row_bytes: usize,
+) -> CopyCost {
+    let sum = |ids: &mut dyn Iterator<Item = SeqId>| -> u64 {
+        ids.map(|id| rows(id) as u64).sum()
+    };
+    let kept = sum(&mut plan.keep.iter().map(|&(id, _, _)| id));
+    let joined = sum(&mut plan.join.iter().map(|&(id, _)| id));
+    let left = sum(&mut plan.leave.iter().map(|&(id, _)| id));
+    let moved = if plan.resize {
+        kept
+    } else {
+        // without a resize, kept lanes stay physically in place
+        0
+    };
+    CopyCost {
+        actual: (moved + joined + left) * row_bytes as u64,
+        full_equiv: ((kept + left) + (kept + joined)) * row_bytes as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grouped(active: &[SeqId], bucket: usize) -> LaneMap {
+        let mut lm = LaneMap::new();
+        let plan = lm.plan(active, bucket);
+        lm.apply(&plan);
+        lm
+    }
+
+    #[test]
+    fn initial_grouping_assigns_lanes_in_order() {
+        let lm = grouped(&[7, 3, 9], 4);
+        assert_eq!(lm.bucket(), 4);
+        assert_eq!(lm.live(), 3);
+        assert_eq!(lm.lane_of(7), Some(0));
+        assert_eq!(lm.lane_of(3), Some(1));
+        assert_eq!(lm.lane_of(9), Some(2));
+        assert_eq!(lm.ids().collect::<Vec<_>>(), vec![7, 3, 9]);
+    }
+
+    /// The lane-misalignment regression: retiring the sequence in lane 0
+    /// must NOT shift the survivor down. The old engine fed tokens by
+    /// `seqs.iter().enumerate()`, which after a lane-0 retirement put the
+    /// survivor's token into lane 0 while its cache rows lived in lane 1.
+    #[test]
+    fn retiring_lane_zero_keeps_survivor_lane() {
+        let mut lm = grouped(&[1, 2], 2);
+        assert!(lm.remove(1));
+        // survivor must still decode out of lane 1, not enumeration
+        // index 0
+        assert_eq!(lm.lane_of(2), Some(1));
+        assert_eq!(lm.live(), 1);
+        // a later join reuses the hole without touching the survivor
+        let plan = lm.plan(&[2, 3], 2);
+        assert!(!plan.resize);
+        assert_eq!(plan.keep, vec![(2, 1, 1)]);
+        assert_eq!(plan.join, vec![(3, 0)]);
+        assert!(plan.leave.is_empty());
+        lm.apply(&plan);
+        assert_eq!(lm.lane_of(2), Some(1));
+        assert_eq!(lm.lane_of(3), Some(0));
+    }
+
+    #[test]
+    fn single_leave_in_large_bucket_is_zero_copy() {
+        // B=8, one retirement: the incremental plan copies nothing; the
+        // full park/unpark baseline copies every survivor out and back in.
+        let ids: Vec<SeqId> = (1..=8).collect();
+        let mut lm = grouped(&ids, 8);
+        assert!(lm.remove(3));
+        let active: Vec<SeqId> = ids.iter().copied().filter(|&i| i != 3).collect();
+        let plan = lm.plan(&active, 8);
+        assert!(!plan.resize);
+        assert!(plan.join.is_empty() && plan.leave.is_empty());
+        let cost = copy_cost(&plan, |_| 100, 64);
+        assert_eq!(cost.actual, 0);
+        // 7 survivors parked + 7 unparked
+        assert_eq!(cost.full_equiv, 14 * 100 * 64);
+        assert!(cost.full_equiv >= 4 * cost.actual.max(1));
+    }
+
+    #[test]
+    fn live_leave_is_parked_and_costed() {
+        let lm = grouped(&[1, 2], 2);
+        // seq 1 still live but excluded from the active set: it must be
+        // parked (one lane copied), survivor compacted on the shrink
+        let plan = lm.plan(&[2], 1);
+        assert!(plan.resize);
+        assert_eq!(plan.leave, vec![(1, 0)]);
+        assert_eq!(plan.keep, vec![(2, 1, 0)]);
+        let cost = copy_cost(&plan, |_| 10, 8);
+        // park leaver + move survivor
+        assert_eq!(cost.actual, 2 * 10 * 8);
+        // baseline: park both, unpark survivor
+        assert_eq!(cost.full_equiv, 3 * 10 * 8);
+    }
+
+    #[test]
+    fn grow_preserves_lane_indices() {
+        let mut lm = grouped(&[1, 2], 2);
+        let plan = lm.plan(&[1, 2, 3], 4);
+        assert!(plan.resize);
+        assert_eq!(plan.keep, vec![(1, 0, 0), (2, 1, 1)]);
+        assert_eq!(plan.join, vec![(3, 2)]);
+        lm.apply(&plan);
+        assert_eq!(lm.lane_of(1), Some(0));
+        assert_eq!(lm.lane_of(2), Some(1));
+    }
+
+    #[test]
+    fn shrink_compacts_displaced_lanes_only() {
+        let mut lm = grouped(&(1..=8).collect::<Vec<_>>(), 8);
+        for id in [1, 2, 3, 4, 6, 8] {
+            assert!(lm.remove(id));
+        }
+        // survivors in lanes 4 and 6 → compact into bucket 2
+        let plan = lm.plan(&[5, 7], 2);
+        assert!(plan.resize);
+        assert_eq!(plan.keep, vec![(5, 4, 0), (7, 6, 1)]);
+    }
+
+    #[test]
+    fn bucket_hysteresis() {
+        let buckets = [1usize, 2, 4, 8, 16, 32];
+        // first group and growth take the minimal bucket
+        assert_eq!(target_bucket(&buckets, 3, 0), Some(4));
+        assert_eq!(target_bucket(&buckets, 9, 8), Some(16));
+        // one leave inside a bucket does not shrink
+        assert_eq!(target_bucket(&buckets, 7, 8), Some(8));
+        assert_eq!(target_bucket(&buckets, 5, 8), Some(8));
+        // shrink only once the group fits half the bucket
+        assert_eq!(target_bucket(&buckets, 4, 8), Some(4));
+        assert_eq!(target_bucket(&buckets, 1, 2), Some(1));
+        // over the largest exported bucket
+        assert_eq!(target_bucket(&buckets, 33, 32), None);
+    }
+
+    #[test]
+    fn remove_unknown_is_noop() {
+        let mut lm = grouped(&[1], 1);
+        assert!(!lm.remove(99));
+        assert_eq!(lm.live(), 1);
+    }
+}

@@ -11,6 +11,15 @@ pub struct EngineMetrics {
     pub decode_tokens: u64,
     pub decode_steps: u64,
     pub regroups: u64,
+    /// Sequences that joined a decode lane (unparked into the arena).
+    pub lane_joins: u64,
+    /// Sequences that vacated a decode lane (retirement or parking).
+    pub lane_leaves: u64,
+    /// Host bytes the incremental lane-stable repack actually copied.
+    pub copyback_bytes: u64,
+    /// Host bytes the full park/unpark baseline would have copied for the
+    /// same membership changes (every member out + every member back in).
+    pub copyback_bytes_full: u64,
     /// Sum of (active/bucket) per decode step — mean = batch efficiency.
     pub occupancy_sum: f64,
 }
@@ -33,10 +42,30 @@ impl EngineMetrics {
         }
     }
 
+    /// How many times fewer bytes the incremental repack copied vs the
+    /// full park/unpark baseline (None while nothing was copied).
+    pub fn copyback_savings(&self) -> Option<f64> {
+        if self.copyback_bytes_full == 0 {
+            None
+        } else if self.copyback_bytes == 0 {
+            Some(f64::INFINITY)
+        } else {
+            Some(self.copyback_bytes_full as f64 / self.copyback_bytes as f64)
+        }
+    }
+
     pub fn report(&self) -> String {
+        let savings = match self.copyback_savings() {
+            Some(s) if s.is_finite() => format!("{s:.1}x saved"),
+            Some(_) => "all saved".to_string(),
+            None => "no churn".to_string(),
+        };
         format!(
             "prefill: {} ({} tokens)\ndecode:  {} ({} tokens, {} steps, \
-             {:.2} occupancy, {} regroups)\ndecode throughput: {:.1} tok/s",
+             {:.2} occupancy, {} regroups)\n\
+             lanes:   {} joins, {} leaves, copyback {} B vs {} B \
+             full-repack baseline ({savings})\n\
+             decode throughput: {:.1} tok/s",
             self.prefill.summary(),
             self.prefill_tokens,
             self.decode.summary(),
@@ -44,14 +73,21 @@ impl EngineMetrics {
             self.decode_steps,
             self.mean_occupancy(),
             self.regroups,
+            self.lane_joins,
+            self.lane_leaves,
+            self.copyback_bytes,
+            self.copyback_bytes_full,
             self.decode_tokens_per_sec()
         )
     }
 }
 
-/// Per-request latency summary produced by the router.
+/// Per-request latency summary produced by the router. Rejected requests
+/// (cache overflow, prefill failure) are counted only in `rejected` —
+/// they contribute neither tokens nor requests to the throughput rates.
 #[derive(Clone, Debug, Default)]
 pub struct ServeReport {
+    /// Requests that completed generation (excludes `rejected`).
     pub n_requests: usize,
     pub total_s: f64,
     pub prompt_tokens: u64,
@@ -114,9 +150,20 @@ mod tests {
     }
 
     #[test]
+    fn copyback_savings_ratio() {
+        let mut m = EngineMetrics::default();
+        assert_eq!(m.copyback_savings(), None);
+        m.copyback_bytes_full = 800;
+        assert_eq!(m.copyback_savings(), Some(f64::INFINITY));
+        m.copyback_bytes = 100;
+        assert_eq!(m.copyback_savings(), Some(8.0));
+    }
+
+    #[test]
     fn reports_render() {
         let m = EngineMetrics::default();
         assert!(m.report().contains("decode throughput"));
+        assert!(m.report().contains("copyback"));
         let r = ServeReport { n_requests: 3, total_s: 1.5, gen_tokens: 30,
                               ..Default::default() };
         assert!(r.report().contains("3 requests"));

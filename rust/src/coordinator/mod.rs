@@ -11,6 +11,7 @@
 //! - [`kvcache`]   — split-pool paged block allocator + accounting
 //! - [`sequence`]  — request/sequence lifecycle state
 //! - [`sampling`]  — greedy / temperature·top-k sampling
+//! - [`lanes`]     — lane-stable group membership + incremental regroup
 //! - [`engine`]    — execution: prefill/decode artifacts + cache packing
 //! - [`scheduler`] — continuous batching policy over the engine
 //! - [`router`]    — front end: arrival traces → scheduler → metrics
@@ -21,6 +22,7 @@
 pub mod kvcache;
 pub mod sequence;
 pub mod sampling;
+pub mod lanes;
 pub mod engine;
 pub mod scheduler;
 pub mod router;

@@ -90,12 +90,18 @@ impl<'rt> Router<'rt> {
 
     fn collect(&self, report: &mut ServeReport) {
         for seq in &self.sched.finished {
-            report.n_requests += 1;
-            report.gen_tokens += seq.generated.len() as u64;
-            if seq.state == SeqState::Finished(FinishReason::CacheOverflow) {
+            // rejected requests produced no service: they must not inflate
+            // requests_per_sec or contribute generated tokens
+            if matches!(
+                seq.state,
+                SeqState::Finished(FinishReason::CacheOverflow)
+                    | SeqState::Finished(FinishReason::PrefillFailed)
+            ) {
                 report.rejected += 1;
                 continue;
             }
+            report.n_requests += 1;
+            report.gen_tokens += seq.generated.len() as u64;
             if let Some(t) = seq.ttft_s() {
                 report.ttft.record_us(t * 1e6);
             }

@@ -5,6 +5,12 @@
 //! Admission reserves the *full* context (prompt + max_new) per sequence —
 //! the same per-user reservation the paper's Table 10 capacity math uses,
 //! which is exactly where thin keys admit more concurrent users.
+//!
+//! The scheduler is also the keeper of the unified accounting contract:
+//! after every prefill/decode it mirrors the engine's physically written
+//! rows into `KvCacheManager::commit_rows`, and a sequence's logical
+//! blocks and physical arena rows are always freed together on the same
+//! event ([`Scheduler::free_seq`]).
 
 use std::collections::{BTreeMap, VecDeque};
 
@@ -63,6 +69,13 @@ impl<'rt> Scheduler<'rt> {
         seq.prompt.len() + seq.max_new
     }
 
+    /// Free a sequence's logical KV blocks and physical cache rows on the
+    /// same event — the two accountings never disagree about liveness.
+    fn free_seq(&mut self, id: SeqId) {
+        self.kv.release(id);
+        self.engine.drop_seq(id);
+    }
+
     /// Admit from the waiting queue while budget and batch slots allow.
     /// At most `max_prefills` prefills per round (prefill is expensive and
     /// would starve decode otherwise).
@@ -78,10 +91,18 @@ impl<'rt> Scheduler<'rt> {
             }
             let mut seq = self.waiting.pop_front().unwrap();
             self.kv.allocate(seq.id, need)?;
-            self.engine.prefill(&mut seq)?;
+            if self.engine.prefill(&mut seq).is_err() {
+                // roll the reservation back and fail the request visibly
+                // instead of leaking the blocks and dropping the sequence
+                self.free_seq(seq.id);
+                seq.finish(FinishReason::PrefillFailed);
+                self.finished.push(seq);
+                admitted += 1;
+                continue;
+            }
+            self.kv.commit_rows(seq.id, self.engine.rows(seq.id))?;
             if seq.is_finished() {
-                self.kv.release(seq.id);
-                self.engine.drop_seq(seq.id);
+                self.free_seq(seq.id);
                 self.finished.push(seq);
             } else {
                 self.running.insert(seq.id, seq);
@@ -102,17 +123,17 @@ impl<'rt> Scheduler<'rt> {
         self.engine.decode_step(&mut seqs)?;
         let produced = seqs.len();
         drop(seqs);
-        // retire finished sequences
-        let done: Vec<SeqId> = self
-            .running
-            .values()
-            .filter(|s| s.is_finished())
-            .map(|s| s.id)
-            .collect();
+        // mirror physical rows into the block accounting, retire finished
+        let mut done: Vec<SeqId> = Vec::new();
+        for s in self.running.values() {
+            self.kv.commit_rows(s.id, self.engine.rows(s.id))?;
+            if s.is_finished() {
+                done.push(s.id);
+            }
+        }
         for id in done {
             let seq = self.running.remove(&id).unwrap();
-            self.kv.release(id);
-            self.engine.drop_seq(id);
+            self.free_seq(id);
             self.finished.push(seq);
         }
         Ok(produced)
@@ -124,11 +145,10 @@ impl<'rt> Scheduler<'rt> {
     pub fn preempt_one(&mut self) -> Option<SeqId> {
         let id = *self.running.keys().next_back()?;
         let mut seq = self.running.remove(&id).unwrap();
-        self.kv.release(id);
-        self.engine.drop_seq(id);
-        // restart from scratch on re-admission
-        seq.generated.clear();
-        seq.state = crate::coordinator::sequence::SeqState::Queued;
+        self.free_seq(id);
+        // restart from scratch on re-admission; TTFT restarts too, so
+        // latency histograms measure the admission that actually served
+        seq.reset_for_restart();
         self.waiting.push_front(seq);
         Some(id)
     }
@@ -142,16 +162,38 @@ impl<'rt> Scheduler<'rt> {
             if self.finished.len() == before && self.n_running() == 0 {
                 stall += 1;
                 if stall > 2 {
-                    // waiting requests that can never be admitted
-                    while let Some(mut seq) = self.waiting.pop_front() {
-                        seq.finish(FinishReason::CacheOverflow);
-                        self.finished.push(seq);
-                    }
+                    self.flush_unservable(stall);
                 }
             } else {
                 stall = 0;
             }
         }
         Ok(())
+    }
+
+    /// Stall handling: reject only requests whose full reservation exceeds
+    /// the *total* cache capacity — those can never be admitted, even into
+    /// an empty cache. Requests that would fit once capacity frees stay
+    /// queued and keep retrying. A deep stall (should be unreachable with
+    /// exact accounting) rejects the head of line to guarantee progress.
+    fn flush_unservable(&mut self, stall: usize) {
+        let cap = self.kv.total_token_capacity();
+        let before = self.finished.len();
+        let mut keep = VecDeque::with_capacity(self.waiting.len());
+        while let Some(mut seq) = self.waiting.pop_front() {
+            if Self::reservation(&seq) > cap {
+                seq.finish(FinishReason::CacheOverflow);
+                self.finished.push(seq);
+            } else {
+                keep.push_back(seq);
+            }
+        }
+        self.waiting = keep;
+        if self.finished.len() == before && stall > 5 {
+            if let Some(mut seq) = self.waiting.pop_front() {
+                seq.finish(FinishReason::CacheOverflow);
+                self.finished.push(seq);
+            }
+        }
     }
 }

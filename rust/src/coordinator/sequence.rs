@@ -18,6 +18,10 @@ pub enum FinishReason {
     MaxTokens,
     Eos,
     CacheOverflow,
+    /// Admission succeeded but the engine rejected the prefill (e.g. the
+    /// prompt exceeds the prefill bucket); the KV reservation is rolled
+    /// back and the request reported as rejected, never silently dropped.
+    PrefillFailed,
 }
 
 #[derive(Clone, Debug)]
@@ -91,6 +95,16 @@ impl Sequence {
             return true;
         }
         false
+    }
+
+    /// Roll the sequence back to Queued for re-admission after preemption.
+    /// Clears generation *and* first-token timing, so TTFT measured after
+    /// the restart reflects the re-admission, not the first admission.
+    pub fn reset_for_restart(&mut self) {
+        self.generated.clear();
+        self.first_token_at = None;
+        self.finished_at = None;
+        self.state = SeqState::Queued;
     }
 
     pub fn finish(&mut self, why: FinishReason) {
@@ -168,5 +182,21 @@ mod extra_tests {
     #[should_panic(expected = "empty prompt")]
     fn empty_prompt_rejected() {
         let _ = Sequence::new(11, vec![], 4, None);
+    }
+
+    #[test]
+    fn restart_clears_generation_and_ttft() {
+        let mut s = Sequence::new(12, vec![1, 2], 8, None);
+        s.push_token(5);
+        s.push_token(6);
+        assert!(s.first_token_at.is_some());
+        s.reset_for_restart();
+        assert_eq!(s.state, SeqState::Queued);
+        assert!(s.generated.is_empty());
+        assert!(s.first_token_at.is_none(), "stale TTFT survives preemption");
+        assert!(s.ttft_s().is_none());
+        // the next token after re-admission re-stamps TTFT
+        s.push_token(7);
+        assert!(s.first_token_at.is_some());
     }
 }

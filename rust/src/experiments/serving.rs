@@ -101,6 +101,71 @@ pub fn table11_predicted() -> Table {
     t
 }
 
+/// Copy-back cost of a steady-state membership change: group 8 sequences
+/// (B=8), retire one, keep decoding. Reports the host bytes the
+/// incremental lane-stable repack moved against what the full
+/// park/unpark baseline would have moved — the serving-side companion to
+/// the paper's Table 12 copy-back experiment.
+pub fn regroup_copyback_table(rt: &Runtime, cfg_name: &str) -> Result<Table> {
+    let cfg = rt.manifest().config(cfg_name)?.clone();
+    let params = ParamStore::init(&cfg, 42);
+    let mut eng = Engine::new(rt, cfg_name, params, false,
+                              Sampler::Greedy, 0)?;
+    let mut rng = Rng::new(4);
+    let mut seqs: Vec<Sequence> = (0..8)
+        .map(|i| {
+            let max_new = if i == 0 { 2 } else { 12 };
+            Sequence::new(i as u64 + 1,
+                          synth_prompt(16, cfg.vocab, &mut rng),
+                          max_new, None)
+        })
+        .collect();
+    for s in seqs.iter_mut() {
+        eng.prefill(s)?;
+    }
+    // decode at B=8 until the short sequence retires
+    while !seqs[0].is_finished() {
+        let mut refs: Vec<&mut Sequence> =
+            seqs.iter_mut().filter(|s| !s.is_finished()).collect();
+        eng.decode_step(&mut refs)?;
+    }
+    let group_actual = eng.metrics.copyback_bytes;
+    let group_full = eng.metrics.copyback_bytes_full;
+    eng.drop_seq(seqs[0].id);
+    // steady state with the vacated lane
+    for _ in 0..4 {
+        let mut refs: Vec<&mut Sequence> =
+            seqs.iter_mut().filter(|s| !s.is_finished()).collect();
+        eng.decode_step(&mut refs)?;
+    }
+    let retire_actual = eng.metrics.copyback_bytes - group_actual;
+    let retire_full = eng.metrics.copyback_bytes_full - group_full;
+    let savings = |a: u64, f: u64| {
+        if a == 0 {
+            "all".to_string()
+        } else {
+            format!("{:.1}x", f as f64 / a as f64)
+        }
+    };
+    let mut t = Table::new(
+        "Regroup copy-back, incremental vs full park/unpark (B=8)",
+        &["membership change", "incremental B", "full-repack B", "saved"],
+    );
+    t.row(&[
+        "initial group (8 joins)".into(),
+        group_actual.to_string(),
+        group_full.to_string(),
+        savings(group_actual, group_full),
+    ]);
+    t.row(&[
+        "one retirement, steady state".into(),
+        retire_actual.to_string(),
+        retire_full.to_string(),
+        savings(retire_actual, retire_full),
+    ]);
+    Ok(t)
+}
+
 /// Headline capacity comparison (paper §1 / Table 10).
 pub fn capacity_table() -> Table {
     let c = crate::coordinator::capacity::headline_comparison(

@@ -7,7 +7,7 @@ use thinkeys::coordinator::kvcache::{KvCacheConfig, KvCacheManager};
 use thinkeys::coordinator::router::{synth_prompt, Router};
 use thinkeys::coordinator::sampling::Sampler;
 use thinkeys::coordinator::scheduler::Scheduler;
-use thinkeys::coordinator::sequence::Sequence;
+use thinkeys::coordinator::sequence::{FinishReason, SeqState, Sequence};
 use thinkeys::datagen::arrival::closed_loop;
 use thinkeys::datagen::Batch;
 use thinkeys::model::surgery;
@@ -208,6 +208,151 @@ fn router_closed_loop_end_to_end() {
     let stats = router.sched.kv.stats();
     assert_eq!(stats.seqs, 0, "cache not fully released: {stats:?}");
     assert!(router.sched.engine.metrics.mean_occupancy() > 0.3);
+}
+
+/// THE lane-misalignment regression: retiring the sequence in lane 0 must
+/// not shift the survivor's decode feed. Under the old enumeration-based
+/// lane assignment this test fails — after seq 1 retired, seq 2's tokens
+/// were fed into lane 0 while its cache rows lived in lane 1, silently
+/// corrupting its generation. The lane map keeps the survivor in lane 1
+/// with zero bytes copied.
+#[test]
+fn retirement_keeps_surviving_lanes_aligned() {
+    let rt = runtime();
+    let cfg = rt.manifest().config("servefull").unwrap().clone();
+    let mut rng = Rng::new(13);
+    let p1 = synth_prompt(6, cfg.vocab, &mut rng);
+    let p2 = synth_prompt(9, cfg.vocab, &mut rng);
+
+    let alone2 = {
+        let mut eng = engine(&rt, "servefull", 0);
+        let mut seq = Sequence::new(2, p2.clone(), 10, None);
+        eng.prefill(&mut seq).unwrap();
+        while !seq.is_finished() {
+            let mut seqs = vec![&mut seq];
+            eng.decode_step(&mut seqs).unwrap();
+        }
+        seq.generated
+    };
+
+    let mut eng = engine(&rt, "servefull", 0);
+    let mut s1 = Sequence::new(1, p1, 2, None);
+    let mut s2 = Sequence::new(2, p2, 10, None);
+    eng.prefill(&mut s1).unwrap();
+    eng.prefill(&mut s2).unwrap();
+    while !s1.is_finished() {
+        let mut seqs: Vec<&mut Sequence> = vec![&mut s1, &mut s2];
+        eng.decode_step(&mut seqs).unwrap();
+    }
+    assert_eq!(eng.lane_of(1), Some(0));
+    assert_eq!(eng.lane_of(2), Some(1));
+    // retire lane 0 exactly the way the scheduler does
+    eng.drop_seq(1);
+    let copied_before = eng.metrics.copyback_bytes;
+    while !s2.is_finished() {
+        let mut seqs = vec![&mut s2];
+        eng.decode_step(&mut seqs).unwrap();
+    }
+    assert_eq!(eng.lane_of(2), Some(1), "survivor's lane moved");
+    assert_eq!(eng.metrics.copyback_bytes, copied_before,
+               "zero-copy retirement copied bytes");
+    assert_eq!(s2.generated, alone2,
+               "decode fed the survivor's tokens into the wrong lane");
+}
+
+/// Acceptance: a steady-state single retirement at B=8 copies O(changed
+/// lanes) — zero bytes here — while the full park/unpark baseline copies
+/// every surviving lane out and back in (>= 4x more).
+#[test]
+fn single_retirement_copyback_is_incremental() {
+    let rt = runtime();
+    let cfg = rt.manifest().config("servethin").unwrap().clone();
+    let mut eng = engine(&rt, "servethin", 0);
+    let mut rng = Rng::new(8);
+    let mut seqs: Vec<Sequence> = (0..8)
+        .map(|i| {
+            let max_new = if i == 0 { 2 } else { 10 };
+            Sequence::new(i as u64 + 1,
+                          synth_prompt(12, cfg.vocab, &mut rng),
+                          max_new, None)
+        })
+        .collect();
+    for s in seqs.iter_mut() {
+        eng.prefill(s).unwrap();
+    }
+    while !seqs[0].is_finished() {
+        let mut refs: Vec<&mut Sequence> =
+            seqs.iter_mut().filter(|s| !s.is_finished()).collect();
+        eng.decode_step(&mut refs).unwrap();
+    }
+    let (a0, f0) =
+        (eng.metrics.copyback_bytes, eng.metrics.copyback_bytes_full);
+    eng.drop_seq(1);
+    for _ in 0..3 {
+        let mut refs: Vec<&mut Sequence> =
+            seqs.iter_mut().filter(|s| !s.is_finished()).collect();
+        eng.decode_step(&mut refs).unwrap();
+    }
+    let actual = eng.metrics.copyback_bytes - a0;
+    let full = eng.metrics.copyback_bytes_full - f0;
+    assert_eq!(actual, 0, "steady-state retirement copied {actual} bytes");
+    assert!(full > 0, "baseline accounting missed the membership change");
+    assert!(full >= 4 * actual.max(1),
+            "copy savings below 4x: {actual} vs {full}");
+    assert_eq!(eng.lane_of(1), None);
+    for id in 2..=8u64 {
+        assert!(eng.lane_of(id).is_some(), "survivor {id} lost its lane");
+    }
+}
+
+/// A failed prefill must roll back its KV reservation (no leak) and fail
+/// the request visibly instead of vanishing half-admitted.
+#[test]
+fn prefill_failure_releases_reservation() {
+    let rt = runtime();
+    let eng = engine(&rt, "servethin", 3);
+    let too_long = eng.max_prompt() + 1;
+    let kv = kv_for(&rt, "servethin", 16.0);
+    let mut sched = Scheduler::new(eng, kv, 8);
+    let cap0 = sched.kv.free_token_capacity();
+    let vocab = sched.engine.cfg.vocab;
+    let mut rng = Rng::new(2);
+    sched.submit(synth_prompt(too_long, vocab, &mut rng), 4, None);
+    sched.step().unwrap();
+    assert_eq!(sched.n_running(), 0);
+    assert_eq!(sched.n_waiting(), 0);
+    assert_eq!(sched.finished.len(), 1);
+    assert_eq!(sched.finished[0].state,
+               SeqState::Finished(FinishReason::PrefillFailed));
+    assert_eq!(sched.kv.free_token_capacity(), cap0,
+               "prefill failure leaked KV blocks");
+    assert_eq!(sched.kv.stats().seqs, 0);
+}
+
+/// Preemption restarts TTFT: the recorded first-token time must reflect
+/// the admission that actually served the request, not the first one.
+#[test]
+fn preemption_resets_ttft() {
+    let rt = runtime();
+    let eng = engine(&rt, "servethin", 5);
+    let kv = kv_for(&rt, "servethin", 16.0);
+    let mut sched = Scheduler::new(eng, kv, 8);
+    let vocab = sched.engine.cfg.vocab;
+    let mut rng = Rng::new(6);
+    let id = sched.submit(synth_prompt(8, vocab, &mut rng), 5, None);
+    sched.step().unwrap(); // admit + prefill + one decode token
+    assert_eq!(sched.n_running(), 1);
+    let t_preempt = std::time::Instant::now();
+    assert_eq!(sched.preempt_one(), Some(id));
+    assert_eq!(sched.n_running(), 0);
+    assert_eq!(sched.n_waiting(), 1);
+    assert_eq!(sched.kv.stats().seqs, 0, "preemption must release blocks");
+    sched.run_to_completion().unwrap();
+    assert_eq!(sched.finished.len(), 1);
+    let seq = &sched.finished[0];
+    assert_eq!(seq.generated.len(), 5);
+    assert!(seq.first_token_at.unwrap() >= t_preempt,
+            "TTFT measured against the pre-preemption admission");
 }
 
 /// Admission control: an over-budget burst is partially admitted, the rest
