@@ -1,0 +1,16 @@
+PYTHON ?= python3
+
+# Export every entry point to HLO text + manifest.json (incremental: only
+# re-lowers artifacts whose content hash changed). This is the only python
+# that ever runs; the rust binary is self-contained afterwards.
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
+
+test-python:
+	cd python && $(PYTHON) -m pytest tests -q
+
+# Tier-1 gate (see ROADMAP.md).
+tier1:
+	cd rust && cargo build --release && cargo test -q
+
+.PHONY: artifacts test-python tier1

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from jax._src.lib import xla_client as xc
 
 from .configs import (REGISTRY, DECODE_BATCHES, PREFILL_SEQ, config_dict,
-                      train_geometry)
+                      decode_tiers, train_geometry)
 from . import model as M
 from .kernels.asym_attention import vmem_report
 
@@ -109,15 +109,20 @@ def artifact_plan():
         b, s = train_geometry(cfg)
         add("logits", cfg, b=b, s=s)
 
-    # Serving artifacts.
+    # Serving artifacts. Decode is specialized on (batch bucket, context
+    # tier): the engine selects the smallest arena tier covering the
+    # longest live sequence, so short-context serving never pays
+    # max_seq-sized arenas (ISSUE 2).
     for name in ("servefull", "servethin"):
         cfg = REGISTRY[name]
         add("prefill", cfg, s=PREFILL_SEQ)
         for b in DECODE_BATCHES:
-            add("decode", cfg, b=b)
+            for n in decode_tiers(cfg.max_seq):
+                add("decode", cfg, b=b, n=n)
         # Pallas-kernel path (Layer 1 lowered into the same HLO).
         add("prefill", cfg, s=PREFILL_SEQ, impl="pallas")
-        add("decode", cfg, b=8, impl="pallas")
+        for n in decode_tiers(cfg.max_seq):
+            add("decode", cfg, b=8, n=n, impl="pallas")
     return plan
 
 
@@ -161,13 +166,13 @@ def build_entry(kind, cfg, geom):
         b = geom["b"]
         kd = cfg.k_cache_dims()
         vd = cfg.v_cache_dims()
-        n = cfg.max_seq
-        fn = M.make_decode(cfg, b, impl=impl)
+        n = geom.get("n", cfg.max_seq)
+        fn = M.make_decode(cfg, b, n=n, impl=impl)
         specs = _param_arg_specs(cfg) + [
             _spec((cfg.n_layers, b, n, kd)), _spec((cfg.n_layers, b, n, vd)),
             _spec((b,), I32), _spec((b,), I32)]
         return fn, specs, pnames + ["k_cache", "v_cache", "tokens", "pos"], \
-            ["logits", "k_cache", "v_cache"]
+            ["logits", "k_cache", "v_cache", "k_rows", "v_rows"]
     raise ValueError(kind)
 
 
@@ -240,6 +245,10 @@ def main():
         "adam": {"b1": M.ADAM_B1, "b2": M.ADAM_B2, "eps": M.ADAM_EPS,
                  "weight_decay": M.WEIGHT_DECAY},
         "decode_batches": list(DECODE_BATCHES),
+        "decode_tiers": {
+            name: decode_tiers(REGISTRY[name].max_seq)
+            for name in sorted({a["config"] for a in artifacts
+                                if a["kind"] == "decode"})},
         "prefill_seq": PREFILL_SEQ,
         "configs": configs_out,
         "artifacts": artifacts,

@@ -165,6 +165,26 @@ def train_geometry(cfg: ModelConfig):
 DECODE_BATCHES = (1, 2, 4, 8, 16, 32)
 PREFILL_SEQ = 128  # prompt bucket for serving prefill (B=1)
 
+# Smallest decode cache-arena tier. Decode artifacts are specialized on a
+# second axis besides the batch bucket: the arena length N, in powers of
+# two from here up to the config's max_seq. The engine picks the smallest
+# tier covering the longest live sequence, so arena memory, upload bytes,
+# and per-step attention work scale with live lengths instead of the model
+# max context (ISSUE 2 / Eq. 10: decode is bandwidth-bound on bytes/step).
+DECODE_TIER_MIN = 32
+
+
+def decode_tiers(max_seq):
+    """Arena-length tiers for a serving config: powers of two from
+    DECODE_TIER_MIN up to (and always including) max_seq."""
+    tiers = []
+    n = DECODE_TIER_MIN
+    while n < max_seq:
+        tiers.append(n)
+        n *= 2
+    tiers.append(max_seq)
+    return tiers
+
 
 def config_dict(cfg: ModelConfig) -> dict:
     d = asdict(cfg)

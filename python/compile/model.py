@@ -377,16 +377,26 @@ def make_prefill(cfg: ModelConfig, seq, impl="ref"):
     return fn
 
 
-def make_decode(cfg: ModelConfig, batch, impl="ref"):
+def make_decode(cfg: ModelConfig, batch, n=None, impl="ref"):
     """Batched single-token decode against dense cache arenas.
+
+    ``n`` is the cache arena length (a context tier <= cfg.max_seq; defaults
+    to cfg.max_seq). Artifacts are exported for every (batch bucket, tier)
+    pair so serving cost scales with live context, not model max context.
 
     args: *params, k_cache (L,B,N,KD), v_cache (L,B,N,VD),
           tokens (B,) i32, pos (B,) i32   [pos = index of THIS token]
-    returns: (logits (B, vocab), k_cache', v_cache')
+    returns: (logits (B, vocab), k_cache', v_cache',
+              k_rows (L,B,KD), v_rows (L,B,VD))
+
+    k_rows/v_rows are the cache rows written THIS step (one per lane per
+    layer) — the delta the host mirrors in O(L*B*(KD+VD)) per step instead
+    of downloading the full arenas on membership changes.
     """
-    n = len(param_specs(cfg))
+    nparams = len(param_specs(cfg))
     hkv, dqk, dvh = cfg.n_kv_heads, cfg.d_qk_head, cfg.d_v_head
-    N = cfg.max_seq
+    N = cfg.max_seq if n is None else n
+    assert N <= cfg.max_seq, (N, cfg.max_seq)
 
     def write_row(cache_layer, row, pos):
         """cache_layer (B,N,D), row (B,D), pos (B,) -> updated (B,N,D)."""
@@ -395,22 +405,26 @@ def make_decode(cfg: ModelConfig, batch, impl="ref"):
         )(cache_layer, row, pos)
 
     def fn(*args):
-        p = unflatten(cfg, list(args[:n]))
-        k_cache, v_cache, tokens, pos = args[n:]
+        p = unflatten(cfg, list(args[:nparams]))
+        k_cache, v_cache, tokens, pos = args[nparams:]
         b = tokens.shape[0]
         x = p["emb.tok"][tokens][:, None]            # (B,1,d)
         positions = pos[:, None]                     # (B,1)
         if cfg.arch == "vanilla":
             x = x + jnp.take(p["emb.pos"], pos, axis=0)[:, None]
-        new_k, new_v = [], []
+        new_k, new_v, row_k, row_v = [], [], [], []
         for i in range(cfg.n_layers):
             L = f"l{i}"
             xn = _norm(cfg, p, f"{L}.ln1", x)
             q, k, v = _attn_qkv(cfg, p, L, xn, positions)  # (B,H,1,dqk) etc.
-            kc = write_row(k_cache[i], _unheads(k)[:, 0], pos)
-            vc = write_row(v_cache[i], _unheads(v)[:, 0], pos)
+            krow = _unheads(k)[:, 0]                       # (B, KD)
+            vrow = _unheads(v)[:, 0]                       # (B, VD)
+            kc = write_row(k_cache[i], krow, pos)
+            vc = write_row(v_cache[i], vrow, pos)
             new_k.append(kc)
             new_v.append(vc)
+            row_k.append(krow)
+            row_v.append(vrow)
             kh = kc.reshape(b, N, hkv, dqk).transpose(0, 2, 1, 3)
             vh = vc.reshape(b, N, hkv, dvh).transpose(0, 2, 1, 3)
             if impl == "pallas":
@@ -422,6 +436,7 @@ def make_decode(cfg: ModelConfig, batch, impl="ref"):
             x = x + _mlp(cfg, p, L, xn)
         x = _norm(cfg, p, "ln_f", x)
         logits = x[:, 0] @ p["emb.tok"].T
-        return (logits, jnp.stack(new_k), jnp.stack(new_v))
+        return (logits, jnp.stack(new_k), jnp.stack(new_v),
+                jnp.stack(row_k), jnp.stack(row_v))
 
     return fn

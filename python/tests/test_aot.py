@@ -9,7 +9,8 @@ import numpy as np
 import pytest
 
 from compile.aot import artifact_plan, build_entry
-from compile.configs import REGISTRY, config_dict, train_geometry
+from compile.configs import (DECODE_BATCHES, REGISTRY, config_dict,
+                             decode_tiers, train_geometry)
 from compile import model as M
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
@@ -28,7 +29,7 @@ def test_plan_names_unique():
     ("evalloss", "tinylm_ds64", {"b": 8, "s": 64}),
     ("logits", "kvret_ds8", {"b": 32, "s": 24}),
     ("prefill", "servethin", {"s": 128}),
-    ("decode", "servethin", {"b": 4}),
+    ("decode", "servethin", {"b": 4, "n": 64}),
 ])
 def test_build_entry_specs(kind, cfgname, geom):
     cfg = REGISTRY[cfgname]
@@ -40,6 +41,36 @@ def test_build_entry_specs(kind, cfgname, geom):
     # parameter arg shapes must match the specs order exactly
     for s, p in zip(specs[:nparams], M.param_specs(cfg)):
         assert tuple(s.shape) == tuple(p.shape)
+
+
+def test_decode_tiers_shape():
+    assert decode_tiers(256) == [32, 64, 128, 256]
+    assert decode_tiers(32) == [32]
+    assert decode_tiers(48) == [32, 48]  # max_seq always included
+
+
+def test_plan_covers_full_bucket_tier_grid():
+    """Every serving config exports decode_{cfg}_b{B}_n{N} for the full
+    (batch bucket x context tier) grid, plus the b=8 pallas column."""
+    plan = artifact_plan()
+    names = {n for n, _, _, _ in plan}
+    for cfg_name in ("servefull", "servethin"):
+        cfg = REGISTRY[cfg_name]
+        for b in DECODE_BATCHES:
+            for n in decode_tiers(cfg.max_seq):
+                assert f"decode_{cfg_name}_b{b}_n{n}" in names
+        for n in decode_tiers(cfg.max_seq):
+            assert f"decode_{cfg_name}_b8_n{n}_pallas" in names
+
+
+def test_decode_entry_returns_delta_rows():
+    cfg = REGISTRY["servethin"]
+    _, specs, in_names, out_names = build_entry(
+        "decode", cfg, {"b": 2, "n": 32})
+    assert out_names == ["logits", "k_cache", "v_cache", "k_rows", "v_rows"]
+    by_name = dict(zip(in_names, specs))
+    assert tuple(by_name["k_cache"].shape) == (
+        cfg.n_layers, 2, 32, cfg.k_cache_dims())
 
 
 def test_manifest_consistent_with_registry():
@@ -74,11 +105,16 @@ def test_manifest_decode_cache_shapes():
         if art["kind"] != "decode":
             continue
         cfg = REGISTRY[art["config"]]
+        tiers = man["decode_tiers"][art["config"]]
+        assert tiers == decode_tiers(cfg.max_seq)
+        n = art["geom"]["n"]
+        assert n in tiers
         by_name = {i[0]: i for i in art["inputs"]}
         assert by_name["k_cache"][2] == [
-            cfg.n_layers, art["geom"]["b"], cfg.max_seq, cfg.k_cache_dims()]
+            cfg.n_layers, art["geom"]["b"], n, cfg.k_cache_dims()]
         assert by_name["v_cache"][2] == [
-            cfg.n_layers, art["geom"]["b"], cfg.max_seq, cfg.v_cache_dims()]
+            cfg.n_layers, art["geom"]["b"], n, cfg.v_cache_dims()]
+        assert art["outputs"][-2:] == ["k_rows", "v_rows"]
 
 
 def test_hlo_text_is_parseable_header():

@@ -50,10 +50,40 @@ def test_prefill_decode_parity(name):
     va = jnp.zeros((L, 1, N, vc.shape[-1])).at[:, 0, :S].set(vc)
     decode = M.make_decode(cfg, 1)
     for t in range(7, 12):
-        lg, ka, va = decode(*plist, ka, va, toks[:, t],
-                            jnp.array([t], jnp.int32))
+        lg, ka, va, kr, vr = decode(*plist, ka, va, toks[:, t],
+                                    jnp.array([t], jnp.int32))
         np.testing.assert_allclose(np.asarray(lg[0]), np.asarray(full[0, t]),
                                    rtol=1e-4, atol=1e-4)
+        # the delta outputs are exactly the rows written at position t
+        np.testing.assert_allclose(np.asarray(kr), np.asarray(ka[:, :, t]),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(vr), np.asarray(va[:, :, t]),
+                                   rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("name", ["servethin", "llama_ds32"])
+def test_decode_tier_parity(name):
+    """Decoding in a small arena tier must produce the same logits as the
+    full max_seq arena (the tier only truncates never-written rows)."""
+    cfg, p = setup_cfg(name)
+    plist = M.flatten(cfg, p)
+    S, L, tier = 12, cfg.n_layers, 32
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, S + 6), 0, cfg.vocab)
+    out = M.make_prefill(cfg, S)(*plist, toks[:, :S], jnp.asarray(S, jnp.int32))
+    _, kc, vc = out
+    run = {}
+    for n in (tier, cfg.max_seq):
+        ka = jnp.zeros((L, 1, n, kc.shape[-1])).at[:, 0, :S].set(kc)
+        va = jnp.zeros((L, 1, n, vc.shape[-1])).at[:, 0, :S].set(vc)
+        decode = M.make_decode(cfg, 1, n=n)
+        logs = []
+        for t in range(S, S + 6):
+            lg, ka, va, _, _ = decode(*plist, ka, va, toks[:, t],
+                                      jnp.array([t], jnp.int32))
+            logs.append(np.asarray(lg))
+        run[n] = logs
+    for a, b in zip(run[tier], run[cfg.max_seq]):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
 
 
 def test_prefill_zeroes_padded_cache_rows():

@@ -17,7 +17,7 @@ fn main() {
     let mut t = Table::new(
         "Closed-loop serving under a fixed 2 MB KV budget",
         &["config", "tok/s", "concurrent capacity (tokens)", "occupancy",
-          "copyback B (vs full repack)"],
+          "copyback B (vs full repack)", "sync up/down B", "delta B/step"],
     );
     for cfg_name in ["servefull", "servethin"] {
         let cfg = rt.manifest().config(cfg_name).unwrap().clone();
@@ -46,9 +46,19 @@ fn main() {
             capacity.to_string(),
             format!("{:.2}", m.mean_occupancy()),
             format!("{} (vs {})", m.copyback_bytes, m.copyback_bytes_full),
+            format!("{}/{}", m.sync_upload_bytes, m.sync_download_bytes),
+            format!("{:.0}", m.row_sync_bytes_per_step()),
         ]);
+        assert_eq!(m.sync_download_bytes, 0,
+                   "full-arena download regression in {cfg_name}");
     }
     t.print();
+    // before/after the context-tiered artifact grid at short contexts —
+    // the Eq. 10 bytes-per-step win made visible
+    serving::tiered_decode_table(&rt, &thinkeys::experiments::Opts::quick())
+        .unwrap()
+        .print();
+    serving::mixed_length_table(&rt, "servethin").unwrap().print();
     serving::regroup_copyback_table(&rt, "servethin").unwrap().print();
     serving::capacity_table().print();
 

@@ -1,18 +1,34 @@
 //! Execution engine: runs the prefill/decode artifacts and owns the
 //! physical cache storage.
 //!
-//! HLO executables are shape-specialized, so decode runs over *batch
-//! buckets* {1,2,4,8,16,32}; the engine packs active sequences into a
-//! dense group arena `(L, B, N, KD/VD)` matching the current bucket. Lane
-//! assignment is an explicit [`LaneMap`] (`SeqId → lane`) — the single
-//! source of truth for where a sequence's cache rows live — and regroup
-//! is *incremental and lane-stable*: a retirement just vacates its lane
-//! (zero copies; the hole is fed a dummy token until reused), a join
-//! writes only the joining lane, and lanes move only when the bucket
-//! itself grows or shrinks (with hysteresis, so churn at a bucket
-//! boundary does not thrash). `EngineMetrics::copyback_bytes` counts the
+//! HLO executables are shape-specialized, so decode runs over a
+//! two-axis artifact grid: *batch buckets* {1,2,4,8,16,32} × *context
+//! tiers* (powers of two up to `max_seq`, see EXPERIMENTS.md). The engine
+//! packs active sequences into a dense group arena `(L, B, N, KD/VD)`
+//! where `B` is the current bucket and `N` the current tier — the
+//! smallest exported arena length covering the longest live sequence
+//! (with grow-on-demand / shrink-with-hysteresis, [`lanes::target_tier`]),
+//! so arena memory and per-step attention work scale with live context,
+//! not model max context.
+//!
+//! Lane assignment is an explicit [`LaneMap`] (`SeqId → lane`) — the
+//! single source of truth for where a sequence's cache rows live — and
+//! regroup is *incremental and lane-stable*: a retirement just vacates
+//! its lane (zero copies; the hole is fed a dummy token until reused), a
+//! join writes only the joining lane, and lanes move only when the bucket
+//! or tier itself changes. `EngineMetrics::copyback_bytes` counts the
 //! host bytes actually moved, next to the bytes the old full park/unpark
 //! design would have moved for the same membership changes.
+//!
+//! Host↔device sync contract (EXPERIMENTS.md §Sync): the decode
+//! artifacts return, besides the updated arenas, the per-step written
+//! rows `(L, B, KD)`/`(L, B, VD)`. The engine scatters those into
+//! `k_group`/`v_group`, keeping an **always-current host mirror** at
+//! O(L·B·(KD+VD)) per step — so membership changes repack the mirror
+//! directly and *never* download the full arenas
+//! (`EngineMetrics::sync_download_bytes` stays 0). Uploads happen only on
+//! join / bucket resize / tier switch (`sync_upload_bytes`); per-step
+//! host traffic is independent of `max_seq`.
 //!
 //! Accounting contract with the scheduler: `rows(id)` reports the cache
 //! rows physically written per sequence; the scheduler mirrors it into
@@ -51,23 +67,33 @@ pub struct Engine<'rt> {
     rt: &'rt Runtime,
     pub cfg: ConfigEntry,
     /// Model weights (read-only once the engine is built — the param
-    /// literals below are converted a single time; see §Perf).
+    /// literals below are converted a single time; see EXPERIMENTS.md
+    /// §Perf).
     pub params: ParamStore,
     pub pallas: bool,
     pub sampler: Sampler,
+    /// Force a fixed arena tier instead of auto-selecting the smallest
+    /// covering one. `Some(cfg.max_seq)` reproduces the pre-tiering
+    /// engine (every arena sized at max context) — the benchmark
+    /// baseline.
+    pub pin_tier: Option<usize>,
     rng: Rng,
     /// Pre-converted parameter literals (L3-opt-1: params never change at
     /// serve time, so the host->literal conversion happens once, not per
     /// step).
     param_lits: Vec<xla::Literal>,
-    /// Steady-state cache literals (L3-opt-2: while lane assignment covers
-    /// the active set, the previous step's output caches are fed straight
-    /// back without literal<->tensor round trips — including across
-    /// zero-copy retirements).
+    /// Steady-state cache literals (L3-opt-2: while lane assignment and
+    /// tier cover the active set, the previous step's output caches are
+    /// fed straight back without literal<->tensor round trips — including
+    /// across zero-copy retirements).
     k_lit: Option<xla::Literal>,
     v_lit: Option<xla::Literal>,
     // group state
     lanes: LaneMap,
+    /// Current arena length N (context tier); 0 before the first group.
+    tier: usize,
+    /// Always-current host mirrors of the decode arenas, delta-synced
+    /// from the per-step `k_rows`/`v_rows` outputs.
     k_group: Tensor,
     v_group: Tensor,
     parked: HashMap<SeqId, Parked>,
@@ -93,11 +119,13 @@ impl<'rt> Engine<'rt> {
             params,
             pallas,
             sampler,
+            pin_tier: None,
             rng: Rng::new(seed),
             param_lits,
             k_lit: None,
             v_lit: None,
             lanes: LaneMap::new(),
+            tier: 0,
             k_group: Tensor::zeros(&[0]),
             v_group: Tensor::zeros(&[0]),
             parked: HashMap::new(),
@@ -112,6 +140,11 @@ impl<'rt> Engine<'rt> {
 
     pub fn max_prompt(&self) -> usize {
         self.rt.manifest().prefill_seq
+    }
+
+    /// Current arena length N (0 before the first decode group).
+    pub fn current_tier(&self) -> usize {
+        self.tier
     }
 
     /// Cache rows physically written for `id` (0 if unknown). The
@@ -132,6 +165,20 @@ impl<'rt> Engine<'rt> {
     /// Bytes of one cache row (K + V) across all layers.
     fn row_bytes(&self) -> usize {
         self.cfg.n_layers * (self.cfg.k_cache_dims + self.cfg.v_cache_dims) * 4
+    }
+
+    /// THE designated path for downloading a full cache arena literal to
+    /// host — it counts the bytes into `sync_download_bytes`, which the
+    /// steady-churn regression test and bench_serving assert is 0. The
+    /// delta-synced mirror removed every caller; if a future change needs
+    /// an arena download again it must go through here (a bare
+    /// `literal_to_tensor` on an arena is a review error), making the
+    /// regression visible in the metric instead of silent.
+    #[allow(dead_code)]
+    fn download_arena(&mut self, lit: &xla::Literal) -> Result<Tensor> {
+        let t = literal_to_tensor(lit)?;
+        self.metrics.sync_download_bytes += (t.data.len() * 4) as u64;
+        Ok(t)
     }
 
     /// Prefill a queued sequence: fill its cache rows, sample the first
@@ -161,24 +208,25 @@ impl<'rt> Engine<'rt> {
         self.metrics.prefill.record(t0.elapsed());
         self.metrics.prefill_tokens += p as u64;
         let logits = literal_to_tensor(&outs[0])?; // (1, V)
-        let kc = literal_to_tensor(&outs[1])?; // (L, S, KD)
-        let vc = literal_to_tensor(&outs[2])?; // (L, S, VD)
 
-        // park rows 0..p
+        // Park rows 0..p straight from the output literals (L, S, KD/VD):
+        // compact each layer's first p rows in place, then truncate — no
+        // intermediate full-S Tensor and no second full-arena copy.
         let (l, kd, vd) = (self.cfg.n_layers, self.cfg.k_cache_dims,
                            self.cfg.v_cache_dims);
-        let mut parked = Parked {
-            len: p,
-            k: vec![0.0; l * p * kd],
-            v: vec![0.0; l * p * vd],
-        };
+        let mut k = outs[1]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("download k_cache: {e}"))?;
+        let mut v = outs[2]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("download v_cache: {e}"))?;
         for li in 0..l {
-            let ksrc = &kc.data[li * s * kd..(li * s + p) * kd];
-            parked.k[li * p * kd..(li + 1) * p * kd].copy_from_slice(ksrc);
-            let vsrc = &vc.data[li * s * vd..(li * s + p) * vd];
-            parked.v[li * p * vd..(li + 1) * p * vd].copy_from_slice(vsrc);
+            k.copy_within(li * s * kd..(li * s + p) * kd, li * p * kd);
+            v.copy_within(li * s * vd..(li * s + p) * vd, li * p * vd);
         }
-        self.parked.insert(seq.id, parked);
+        k.truncate(l * p * kd);
+        v.truncate(l * p * vd);
+        self.parked.insert(seq.id, Parked { len: p, k, v });
         self.rows.insert(seq.id, p);
 
         let tok = self.sampler.sample(&logits.data, &mut self.rng);
@@ -203,10 +251,26 @@ impl<'rt> Engine<'rt> {
         })
     }
 
+    /// Arena tier for the longest active sequence needing `need` rows:
+    /// smallest covering tier on growth, sticky shrink with ~2x headroom
+    /// (see [`lanes::target_tier`]); `pin_tier` overrides.
+    fn target_tier(&self, need: usize) -> Result<usize> {
+        if let Some(t) = self.pin_tier {
+            if t < need {
+                bail!("pinned tier {t} < required rows {need}");
+            }
+            return Ok(t);
+        }
+        let tiers = self.rt.manifest().tiers_for(&self.cfg.name);
+        lanes::target_tier(&tiers, need, self.tier).ok_or_else(|| {
+            anyhow::anyhow!("no decode tier >= {need} (tiers {tiers:?})")
+        })
+    }
+
     /// Write a parked sequence's rows into group lane `lane` (one
     /// contiguous copy per layer per arena).
     fn unpark_into(&mut self, id: SeqId, lane: usize) {
-        let (l, n) = (self.cfg.n_layers, self.cfg.max_seq);
+        let (l, n) = (self.cfg.n_layers, self.tier);
         let (kd, vd) = (self.cfg.k_cache_dims, self.cfg.v_cache_dims);
         let b = self.lanes.bucket();
         let p = self.parked.get(&id).expect("unpark of unknown seq");
@@ -220,9 +284,10 @@ impl<'rt> Engine<'rt> {
         }
     }
 
-    /// Copy a lane's live rows back into the parked store.
+    /// Copy a lane's live rows from the (always-current) mirror back into
+    /// the parked store.
     fn park_from(&mut self, id: SeqId, lane: usize, len: usize) {
-        let (l, n) = (self.cfg.n_layers, self.cfg.max_seq);
+        let (l, n) = (self.cfg.n_layers, self.tier);
         let (kd, vd) = (self.cfg.k_cache_dims, self.cfg.v_cache_dims);
         let b = self.lanes.bucket();
         let mut parked = Parked {
@@ -242,46 +307,68 @@ impl<'rt> Engine<'rt> {
     }
 
     /// Incrementally repack the decode group to cover the `active`
-    /// sequence ids: stable sequences keep their lanes (zero copies),
-    /// live leavers are parked, joiners are unparked into holes, and only
-    /// a bucket resize moves kept lanes (each copied once, directly
-    /// between arenas — not the old park+unpark double copy).
-    fn regroup(&mut self, active: &[SeqId]) -> Result<()> {
+    /// sequence ids at arena tier `tier`: stable sequences keep their
+    /// lanes (zero copies), live leavers are parked, joiners are unparked
+    /// into holes, and kept lanes move only on a bucket resize or tier
+    /// switch (each copied once, directly between arenas — not the old
+    /// park+unpark double copy). Operates entirely on the host mirror —
+    /// no device downloads.
+    fn regroup(&mut self, active: &[SeqId], tier: usize) -> Result<()> {
         let bucket = self.target_bucket(active.len())?;
         let plan = self.lanes.plan(active, bucket);
-        let cost = lanes::copy_cost(
+        let mut cost = lanes::copy_cost(
             &plan,
             |id| self.rows.get(&id).copied().unwrap_or(0),
             self.row_bytes(),
         );
-        // park live leavers while their lanes still hold the latest rows
+        if tier != self.tier && !plan.resize {
+            // a tier-only switch still copies every kept lane into the
+            // newly sized arena
+            let kept: u64 = plan
+                .keep
+                .iter()
+                .map(|&(id, _, _)| {
+                    self.rows.get(&id).copied().unwrap_or(0) as u64
+                })
+                .sum();
+            cost.actual += kept * self.row_bytes() as u64;
+        }
+        // park live leavers while the mirror still holds their rows at
+        // the old bucket/tier strides
         for &(id, lane) in &plan.leave {
             if let Some(&len) = self.rows.get(&id) {
                 self.park_from(id, lane, len);
             }
             self.metrics.lane_leaves += 1;
         }
-        if plan.resize {
-            let (l, n) = (self.cfg.n_layers, self.cfg.max_seq);
+        if plan.resize || tier != self.tier {
+            let l = self.cfg.n_layers;
             let (kd, vd) = (self.cfg.k_cache_dims, self.cfg.v_cache_dims);
-            let old_b = self.lanes.bucket();
+            let (old_b, old_n) = (self.lanes.bucket(), self.tier);
             let old_k = std::mem::replace(
-                &mut self.k_group, Tensor::zeros(&[l, bucket, n, kd]));
+                &mut self.k_group, Tensor::zeros(&[l, bucket, tier, kd]));
             let old_v = std::mem::replace(
-                &mut self.v_group, Tensor::zeros(&[l, bucket, n, vd]));
+                &mut self.v_group, Tensor::zeros(&[l, bucket, tier, vd]));
             for &(id, from, to) in &plan.keep {
                 let len = self.rows.get(&id).copied().unwrap_or(0);
                 for li in 0..l {
-                    let src = (li * old_b + from) * n * kd;
-                    let dst = (li * bucket + to) * n * kd;
+                    let src = (li * old_b + from) * old_n * kd;
+                    let dst = (li * bucket + to) * tier * kd;
                     self.k_group.data[dst..dst + len * kd]
                         .copy_from_slice(&old_k.data[src..src + len * kd]);
-                    let src = (li * old_b + from) * n * vd;
-                    let dst = (li * bucket + to) * n * vd;
+                    let src = (li * old_b + from) * old_n * vd;
+                    let dst = (li * bucket + to) * tier * vd;
                     self.v_group.data[dst..dst + len * vd]
                         .copy_from_slice(&old_v.data[src..src + len * vd]);
                 }
             }
+            if tier != self.tier {
+                self.metrics.tier_switches += 1;
+            }
+            self.tier = tier;
+            self.metrics.arena_bytes =
+                ((self.k_group.data.len() + self.v_group.data.len()) * 4)
+                    as u64;
         }
         self.lanes.apply(&plan);
         for &(id, lane) in &plan.join {
@@ -310,24 +397,30 @@ impl<'rt> Engine<'rt> {
             }
         }
         let active: Vec<SeqId> = seqs.iter().map(|s| s.id).collect();
+        // rows the arena must hold: the longest sequence writes row
+        // len-1 this step and attends to rows 0..len
+        let need = seqs.iter().map(|s| s.len()).max().unwrap();
+        let tier = self.target_tier(need)?;
         let in_sync = self.k_lit.is_some()
+            && tier == self.tier
             && self.lanes.live() == active.len()
             && active.iter().all(|&id| self.lanes.lane_of(id).is_some());
         if !in_sync {
-            // materialize the latest cache state for repacking, then feed
-            // the repacked arenas back to the literal fast path
-            if let (Some(kl), Some(vl)) = (self.k_lit.take(), self.v_lit.take())
-            {
-                self.k_group = literal_to_tensor(&kl)?;
-                self.v_group = literal_to_tensor(&vl)?;
-            }
-            self.regroup(&active)?;
+            // the host mirror is always current (delta-synced every
+            // step), so a membership change or tier switch repacks it
+            // directly — there is no full-arena download here, only the
+            // upload of the repacked arenas
+            self.regroup(&active, tier)?;
             self.k_lit = Some(crate::runtime::client::tensor_to_literal(
                 &self.k_group)?);
             self.v_lit = Some(crate::runtime::client::tensor_to_literal(
                 &self.v_group)?);
+            self.metrics.sync_upload_bytes +=
+                ((self.k_group.data.len() + self.v_group.data.len()) * 4)
+                    as u64;
         }
         let b = self.lanes.bucket();
+        let n = self.tier;
 
         // holes (vacated lanes) decode a dummy token at position 0; the
         // row they write is overwritten when a joiner reuses the lane
@@ -341,7 +434,7 @@ impl<'rt> Engine<'rt> {
         let tokens = TensorI32::new(&[b], toks);
         let positions = TensorI32::new(&[b], pos);
         let artifact =
-            self.rt.manifest().decode_name(&self.cfg.name, b, self.pallas);
+            self.rt.manifest().decode_name(&self.cfg.name, b, n, self.pallas);
         let t0 = std::time::Instant::now();
         let outs = {
             let mut args = self.param_args();
@@ -355,11 +448,35 @@ impl<'rt> Engine<'rt> {
         self.metrics.decode_steps += 1;
         self.metrics.decode_tokens += seqs.len() as u64;
         self.metrics.occupancy_sum += seqs.len() as f64 / b as f64;
+        *self.metrics.tier_steps.entry(n).or_insert(0) += 1;
 
         let logits = literal_to_tensor(&outs[0])?; // (B, V)
+        let k_rows = literal_to_tensor(&outs[3])?; // (L, B, KD)
+        let v_rows = literal_to_tensor(&outs[4])?; // (L, B, VD)
         let mut outs = outs;
         self.v_lit = Some(outs.remove(2));
         self.k_lit = Some(outs.remove(1));
+        let l = self.cfg.n_layers;
+        let (kd, vd) = (self.cfg.k_cache_dims, self.cfg.v_cache_dims);
+        self.metrics.row_sync_bytes +=
+            ((k_rows.data.len() + v_rows.data.len()) * 4) as u64;
+        // delta-sync: scatter this step's written rows into the host
+        // mirror — O(L·B·(KD+VD)) per step, independent of max_seq — so
+        // the next membership change repacks without any arena download
+        for s in seqs.iter() {
+            let lane = self.lanes.lane_of(s.id).expect("active seq has a lane");
+            let row = s.len() - 1;
+            for li in 0..l {
+                let src = (li * b + lane) * kd;
+                let dst = ((li * b + lane) * n + row) * kd;
+                self.k_group.data[dst..dst + kd]
+                    .copy_from_slice(&k_rows.data[src..src + kd]);
+                let src = (li * b + lane) * vd;
+                let dst = ((li * b + lane) * n + row) * vd;
+                self.v_group.data[dst..dst + vd]
+                    .copy_from_slice(&v_rows.data[src..src + vd]);
+            }
+        }
         let v = self.cfg.vocab;
         for s in seqs.iter_mut() {
             let lane = self.lanes.lane_of(s.id).expect("active seq has a lane");
@@ -404,16 +521,13 @@ impl<'rt> Engine<'rt> {
 
 #[cfg(test)]
 mod tests {
-    use super::*;
-
     // Engine behaviour against real artifacts is covered by
-    // rust/tests/serving_e2e.rs; lane assignment and repack planning are
-    // unit tested in crate::coordinator::lanes. Here we test the
-    // remaining pure helpers.
+    // rust/tests/serving_e2e.rs; lane assignment, repack planning, and
+    // bucket/tier selection are unit tested in crate::coordinator::lanes.
 
     #[test]
     fn bucket_selection_logic() {
-        // mirror of bucket_for's search, without a Runtime
+        // mirror of target_bucket's growth search, without a Runtime
         let buckets = [1usize, 2, 4, 8, 16, 32];
         let pick = |n: usize| buckets.iter().copied().find(|&b| b >= n);
         assert_eq!(pick(1), Some(1));

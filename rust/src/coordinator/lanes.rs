@@ -169,6 +169,37 @@ pub fn target_bucket(buckets: &[usize], n: usize, current: usize) -> Option<usiz
     }
 }
 
+/// Context-tier selection with asymmetric hysteresis, the arena-length
+/// twin of [`target_bucket`]. `need` is the rows the longest live sequence
+/// requires; `current` is the arena's current tier (0 before the first
+/// group).
+///
+/// Grow: to the smallest exported tier that fits (tiers are geometric, so
+/// a growing sequence re-crosses a boundary only after doubling). Shrink:
+/// only down to a tier that still leaves ~2x headroom over `need`, and
+/// only when that tier is at most *half* the current one — so a longest
+/// sequence oscillating at a tier boundary (grow past it, retire back
+/// under it) never thrashes the arena.
+///
+/// Returns `None` when `need` exceeds the largest exported tier.
+pub fn target_tier(tiers: &[usize], need: usize, current: usize) -> Option<usize> {
+    let fit = tiers.iter().copied().find(|&t| t >= need)?;
+    if current == 0 || fit > current {
+        return Some(fit);
+    }
+    // candidate shrink target keeps one tier (~2x) of headroom above need
+    let roomy = tiers
+        .iter()
+        .copied()
+        .find(|&t| t >= 2 * need)
+        .unwrap_or(*tiers.last().unwrap());
+    if roomy * 2 <= current {
+        Some(roomy)
+    } else {
+        Some(current)
+    }
+}
+
 /// Host bytes a plan copies (and what the full park/unpark baseline would
 /// have copied). `rows(id)` = cache rows currently written for `id`;
 /// `row_bytes` = bytes per row across all layers (K + V).
@@ -312,6 +343,56 @@ mod tests {
         assert_eq!(target_bucket(&buckets, 1, 2), Some(1));
         // over the largest exported bucket
         assert_eq!(target_bucket(&buckets, 33, 32), None);
+    }
+
+    #[test]
+    fn tier_grows_to_minimal_fit() {
+        let tiers = [32usize, 64, 128, 256];
+        assert_eq!(target_tier(&tiers, 1, 0), Some(32));
+        assert_eq!(target_tier(&tiers, 33, 0), Some(64));
+        assert_eq!(target_tier(&tiers, 33, 32), Some(64));
+        assert_eq!(target_tier(&tiers, 129, 64), Some(256));
+        assert_eq!(target_tier(&tiers, 256, 128), Some(256));
+        // beyond the largest exported tier
+        assert_eq!(target_tier(&tiers, 257, 256), None);
+    }
+
+    #[test]
+    fn tier_shrinks_only_with_headroom() {
+        let tiers = [32usize, 64, 128, 256];
+        // need 20 at tier 256: roomy = 64 (>= 2*20), 64*2 <= 256 -> shrink
+        assert_eq!(target_tier(&tiers, 20, 256), Some(64));
+        // need 40 at tier 128: roomy = 128, no shrink possible
+        assert_eq!(target_tier(&tiers, 40, 128), Some(128));
+        // need 16 at tier 64: roomy = 32, 32*2 <= 64 -> shrink to 32
+        assert_eq!(target_tier(&tiers, 16, 64), Some(32));
+        // need 17 at tier 64: roomy = 64 -> stay
+        assert_eq!(target_tier(&tiers, 17, 64), Some(64));
+    }
+
+    /// THE tier-thrash regression: a longest sequence oscillating at a
+    /// tier boundary (grow past 64, retire back just under it, repeat)
+    /// must not bounce the arena between 64 and 128 every few steps.
+    #[test]
+    fn tier_boundary_oscillation_does_not_thrash() {
+        let tiers = [32usize, 64, 128, 256];
+        // longest sequence crosses 64 -> grow
+        let t1 = target_tier(&tiers, 65, 64).unwrap();
+        assert_eq!(t1, 128);
+        // it retires; the next-longest is just under the boundary. The
+        // naive rule (shrink when fit*2 <= current) would shrink to 64
+        // here and re-grow next time a sequence crosses — thrash.
+        for need in [64, 63, 60, 40] {
+            assert_eq!(target_tier(&tiers, need, t1), Some(128),
+                       "need {need} must not shrink 128 -> 64");
+        }
+        // only once live lengths drop far enough that 64 is itself roomy
+        // (2x headroom) does the arena come back down...
+        assert_eq!(target_tier(&tiers, 32, t1), Some(64));
+        // ...and after shrinking to 64 with need <= 32, re-growing
+        // requires a sequence to double past 64 again: no oscillation.
+        assert_eq!(target_tier(&tiers, 33, 64), Some(64));
+        assert_eq!(target_tier(&tiers, 64, 64), Some(64));
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! Serving metrics: engine-level step timings and router-level per-request
 //! latency/throughput summaries.
 
+use std::collections::BTreeMap;
+
 use crate::substrate::histogram::Histogram;
 
 #[derive(Clone, Debug, Default)]
@@ -22,6 +24,26 @@ pub struct EngineMetrics {
     pub copyback_bytes_full: u64,
     /// Sum of (active/bucket) per decode step — mean = batch efficiency.
     pub occupancy_sum: f64,
+    /// Host→device bytes uploaded into the decode arenas. Uploads happen
+    /// only on membership changes (join / bucket resize / tier switch) —
+    /// never per step.
+    pub sync_upload_bytes: u64,
+    /// Device→host FULL-ARENA cache downloads. The delta-synced host
+    /// mirror makes these unnecessary; the counter is the regression
+    /// tripwire — it must stay 0 (asserted by the steady-churn e2e test
+    /// and reported by bench_serving).
+    pub sync_download_bytes: u64,
+    /// Per-step delta-row download bytes (`k_rows`/`v_rows`), the O(L·B)
+    /// host traffic that replaced the O(L·B·max_seq) arena round trips.
+    pub row_sync_bytes: u64,
+    /// Current decode arena allocation (K+V, bytes) — a gauge, sized by
+    /// the active tier and bucket rather than max context.
+    pub arena_bytes: u64,
+    /// Context-tier switches (arena grow or shrink).
+    pub tier_switches: u64,
+    /// Decode steps executed per context tier — per-tier occupancy of the
+    /// artifact grid (mixed-length workloads exercise several tiers).
+    pub tier_steps: BTreeMap<usize, u64>,
 }
 
 impl EngineMetrics {
@@ -54,17 +76,34 @@ impl EngineMetrics {
         }
     }
 
+    /// Mean delta-sync bytes per decode step — the per-step host traffic,
+    /// which is O(L·B·(KD+VD)) and independent of max_seq.
+    pub fn row_sync_bytes_per_step(&self) -> f64 {
+        if self.decode_steps == 0 {
+            0.0
+        } else {
+            self.row_sync_bytes as f64 / self.decode_steps as f64
+        }
+    }
+
     pub fn report(&self) -> String {
         let savings = match self.copyback_savings() {
             Some(s) if s.is_finite() => format!("{s:.1}x saved"),
             Some(_) => "all saved".to_string(),
             None => "no churn".to_string(),
         };
+        let tiers: Vec<String> = self
+            .tier_steps
+            .iter()
+            .map(|(t, n)| format!("n{t}:{n}"))
+            .collect();
         format!(
             "prefill: {} ({} tokens)\ndecode:  {} ({} tokens, {} steps, \
              {:.2} occupancy, {} regroups)\n\
              lanes:   {} joins, {} leaves, copyback {} B vs {} B \
              full-repack baseline ({savings})\n\
+             sync:    up {} B, down {} B (full-arena), delta {:.0} B/step, \
+             arena {} B, {} tier switches [{}]\n\
              decode throughput: {:.1} tok/s",
             self.prefill.summary(),
             self.prefill_tokens,
@@ -77,6 +116,12 @@ impl EngineMetrics {
             self.lane_leaves,
             self.copyback_bytes,
             self.copyback_bytes_full,
+            self.sync_upload_bytes,
+            self.sync_download_bytes,
+            self.row_sync_bytes_per_step(),
+            self.arena_bytes,
+            self.tier_switches,
+            tiers.join(" "),
             self.decode_tokens_per_sec()
         )
     }
@@ -160,10 +205,23 @@ mod tests {
     }
 
     #[test]
+    fn row_sync_per_step() {
+        let mut m = EngineMetrics::default();
+        assert_eq!(m.row_sync_bytes_per_step(), 0.0);
+        m.decode_steps = 4;
+        m.row_sync_bytes = 400;
+        assert!((m.row_sync_bytes_per_step() - 100.0).abs() < 1e-12);
+    }
+
+    #[test]
     fn reports_render() {
-        let m = EngineMetrics::default();
+        let mut m = EngineMetrics::default();
+        m.tier_steps.insert(32, 5);
+        m.tier_steps.insert(256, 1);
         assert!(m.report().contains("decode throughput"));
         assert!(m.report().contains("copyback"));
+        assert!(m.report().contains("n32:5"));
+        assert!(m.report().contains("tier switches"));
         let r = ServeReport { n_requests: 3, total_s: 1.5, gen_tokens: 30,
                               ..Default::default() };
         assert!(r.report().contains("3 requests"));

@@ -8,26 +8,34 @@ use anyhow::Result;
 
 use crate::bench::Table;
 use crate::coordinator::engine::Engine;
+use crate::coordinator::kvcache::{KvCacheConfig, KvCacheManager};
 use crate::coordinator::roofline::{self, eq10_speedup, GB};
-use crate::coordinator::router::synth_prompt;
+use crate::coordinator::router::{synth_prompt, Router};
 use crate::coordinator::sampling::Sampler;
+use crate::coordinator::scheduler::Scheduler;
 use crate::coordinator::sequence::Sequence;
+use crate::datagen::arrival::RequestSpec;
 use crate::experiments::common::Opts;
 use crate::runtime::{ParamStore, Runtime};
 use crate::substrate::rng::Rng;
 
-/// Steady-state decode throughput (tokens/s) at a fixed batch size.
-pub fn decode_throughput(rt: &Runtime, cfg_name: &str, batch: usize,
-                         steps: usize, pallas: bool) -> Result<f64> {
+/// Steady-state decode throughput (tokens/s) at a fixed batch size and
+/// prompt length. `pin_tier` forces a fixed arena tier (`Some(max_seq)`
+/// reproduces the pre-tiering engine — the benchmark baseline); `None`
+/// auto-selects the smallest covering tier.
+pub fn decode_throughput_opts(rt: &Runtime, cfg_name: &str, batch: usize,
+                              steps: usize, pallas: bool, prompt_len: usize,
+                              pin_tier: Option<usize>) -> Result<f64> {
     let cfg = rt.manifest().config(cfg_name)?.clone();
     let params = ParamStore::init(&cfg, 42);
     let mut eng = Engine::new(rt, cfg_name, params, pallas,
                               Sampler::Greedy, 0)?;
+    eng.pin_tier = pin_tier;
     let mut rng = Rng::new(1);
     let mut seqs: Vec<Sequence> = (0..batch)
         .map(|i| {
             Sequence::new(i as u64 + 1,
-                          synth_prompt(32, cfg.vocab, &mut rng),
+                          synth_prompt(prompt_len, cfg.vocab, &mut rng),
                           steps + 8, None)
         })
         .collect();
@@ -46,6 +54,101 @@ pub fn decode_throughput(rt: &Runtime, cfg_name: &str, batch: usize,
     }
     let secs = t0.elapsed().as_secs_f64();
     Ok((batch * steps) as f64 / secs)
+}
+
+/// Steady-state decode throughput (tokens/s) at a fixed batch size.
+pub fn decode_throughput(rt: &Runtime, cfg_name: &str, batch: usize,
+                         steps: usize, pallas: bool) -> Result<f64> {
+    decode_throughput_opts(rt, cfg_name, batch, steps, pallas, 32, None)
+}
+
+/// Before/after the context-tiered arena grid, at short contexts: the
+/// pre-tiering engine sizes every decode arena at `max_seq` (pinned
+/// tier), the tiered engine at the smallest tier covering the live
+/// context. This is where Eq. 10's bytes-per-step argument bites — the
+/// `servethin` config only shows its bandwidth win once the coordinator
+/// stops moving max_seq-sized arenas.
+pub fn tiered_decode_table(rt: &Runtime, opts: &Opts) -> Result<Table> {
+    let steps = opts.steps(30);
+    let mut t = Table::new(
+        "Decode throughput at short context (prompt 16, B=4): \
+         max_seq arenas (before) vs context-tiered arenas (after)",
+        &["config", "pinned max_seq tok/s", "tiered tok/s", "speedup"],
+    );
+    for cfg_name in ["servefull", "servethin"] {
+        let max_seq = rt.manifest().config(cfg_name)?.max_seq;
+        let before = decode_throughput_opts(
+            rt, cfg_name, 4, steps, false, 16, Some(max_seq))?;
+        let after = decode_throughput_opts(
+            rt, cfg_name, 4, steps, false, 16, None)?;
+        t.row(&[
+            cfg_name.to_string(),
+            format!("{before:.1}"),
+            format!("{after:.1}"),
+            format!("{:.2}x", after / before),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Mixed-length serving scenario: a short-chat + long-document arrival
+/// mix — the workload where context tiering pays off. Reports per-tier
+/// occupancy of the (bucket × tier) artifact grid and the host-transfer
+/// byte counters (uploads only on membership changes, zero full-arena
+/// downloads, O(L·B) delta rows per step).
+pub fn mixed_length_table(rt: &Runtime, cfg_name: &str) -> Result<Table> {
+    let cfg = rt.manifest().config(cfg_name)?.clone();
+    let params = ParamStore::init(&cfg, 42);
+    let eng = Engine::new(rt, cfg_name, params, false, Sampler::Greedy, 0)?;
+    let kv = KvCacheManager::new(KvCacheConfig {
+        n_layers: cfg.n_layers,
+        k_dims: cfg.k_cache_dims,
+        v_dims: cfg.v_cache_dims,
+        block_tokens: 16,
+        bytes_per_el_k: 2.0,
+        bytes_per_el_v: 2.0,
+        budget_bytes: 4e6,
+    });
+    let sched = Scheduler::new(eng, kv, 16);
+    let mut router = Router::new(sched);
+    // 12 short chats interleaved with 4 long documents
+    let trace: Vec<RequestSpec> = (0..16)
+        .map(|i| {
+            let doc = i % 4 == 3;
+            RequestSpec {
+                arrive_s: 0.0,
+                prompt_len: if doc { 96 } else { 12 },
+                gen_len: if doc { 24 } else { 8 },
+            }
+        })
+        .collect();
+    let report = router.run_closed_loop(&trace, 0)?;
+    let m = &router.sched.engine.metrics;
+    let mut t = Table::new(
+        &format!(
+            "Mixed-length serving ({cfg_name}): 12 chats (12+8) + 4 docs \
+             (96+24), max_seq {}",
+            cfg.max_seq
+        ),
+        &["metric", "value"],
+    );
+    for (tier, steps) in &m.tier_steps {
+        t.row(&[
+            format!("decode steps @ tier n={tier}"),
+            format!("{steps} ({:.0}%)",
+                    100.0 * *steps as f64 / m.decode_steps as f64),
+        ]);
+    }
+    t.row(&["tier switches".into(), m.tier_switches.to_string()]);
+    t.row(&["arena bytes (final)".into(), m.arena_bytes.to_string()]);
+    t.row(&["host→device upload B".into(), m.sync_upload_bytes.to_string()]);
+    t.row(&["device→host full-arena B".into(),
+            m.sync_download_bytes.to_string()]);
+    t.row(&["delta-sync B/step".into(),
+            format!("{:.0}", m.row_sync_bytes_per_step())]);
+    t.row(&["gen tok/s".into(),
+            format!("{:.1}", report.gen_tokens_per_sec())]);
+    Ok(t)
 }
 
 /// Measured decode throughput table (our stack) + measured speedups.
@@ -186,6 +289,7 @@ pub fn run(rt: &Runtime, opts: &Opts) -> Result<Vec<Table>> {
     Ok(vec![
         table11_predicted(),
         table11_measured(rt, opts)?,
+        tiered_decode_table(rt, opts)?,
         capacity_table(),
     ])
 }

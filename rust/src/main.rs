@@ -57,6 +57,9 @@ fn info() -> Result<()> {
     println!("artifacts dir: {:?}", m.dir);
     println!("{} configs, {} artifacts", m.configs.len(), m.artifacts.len());
     println!("decode buckets: {:?}", m.decode_batches);
+    for (cfg, tiers) in &m.decode_tiers {
+        println!("decode tiers for {cfg}: {tiers:?}");
+    }
     for (name, c) in &m.configs {
         println!(
             "  {name}: {} {}  d_model {} d_select {} heads {}/{} \

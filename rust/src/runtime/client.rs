@@ -128,7 +128,30 @@ impl Runtime {
                 }
                 Arg::ScalarF(v) => Some(xla::Literal::scalar(*v)),
                 Arg::ScalarI(v) => Some(xla::Literal::scalar(*v)),
-                Arg::L(_) => None,
+                Arg::L(l) => {
+                    // Cached literals skip conversion but NOT validation: a
+                    // stale cache literal (e.g. kept across a bucket/tier
+                    // resize) would otherwise reach XLA and fail with an
+                    // opaque executable error.
+                    let shape = l.array_shape().map_err(|e| {
+                        anyhow::anyhow!(
+                            "{name}: cached literal input {:?} has no array \
+                             shape: {e}",
+                            spec.name
+                        )
+                    })?;
+                    let dims: Vec<usize> =
+                        shape.dims().iter().map(|&d| d as usize).collect();
+                    if dims != spec.shape {
+                        bail!(
+                            "{name}: cached literal input {:?} shape {:?} != \
+                             expected {:?} (stale literal after a bucket/tier \
+                             resize?)",
+                            spec.name, dims, spec.shape
+                        );
+                    }
+                    None
+                }
             };
             owned.push(lit);
         }

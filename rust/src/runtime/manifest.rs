@@ -99,6 +99,12 @@ pub struct Manifest {
     pub dir: PathBuf,
     pub adam: AdamConfig,
     pub decode_batches: Vec<usize>,
+    /// Context-tier axis of the decode artifact grid: serving config →
+    /// exported arena lengths N (ascending, last == max_seq). Decode
+    /// artifacts are specialized per (batch bucket, tier) so the engine
+    /// can size its arenas to the live context instead of max context.
+    /// Empty for manifests exported before tiering (single max_seq tier).
+    pub decode_tiers: BTreeMap<String, Vec<usize>>,
     pub prefill_seq: usize,
     pub configs: BTreeMap<String, ConfigEntry>,
     pub artifacts: BTreeMap<String, ArtifactEntry>,
@@ -131,6 +137,17 @@ impl Manifest {
             .iter()
             .map(|x| x.as_usize())
             .collect::<Result<Vec<_>>>()?;
+        let mut decode_tiers = BTreeMap::new();
+        if let Some(dt) = v.opt("decode_tiers") {
+            for (name, tv) in dt.as_obj()? {
+                let tiers = tv
+                    .as_arr()?
+                    .iter()
+                    .map(|x| x.as_usize())
+                    .collect::<Result<Vec<_>>>()?;
+                decode_tiers.insert(name.clone(), tiers);
+            }
+        }
         let prefill_seq = v.get("prefill_seq")?.as_usize()?;
 
         let mut configs = BTreeMap::new();
@@ -229,6 +246,7 @@ impl Manifest {
             dir: dir.to_path_buf(),
             adam,
             decode_batches,
+            decode_tiers,
             prefill_seq,
             configs,
             artifacts,
@@ -273,9 +291,32 @@ impl Manifest {
         format!("prefill_{cfg}_s{}{suffix}", self.prefill_seq)
     }
 
-    pub fn decode_name(&self, cfg: &str, batch: usize, pallas: bool) -> String {
+    /// Arena-length tiers exported for `cfg`'s decode artifacts, ascending.
+    /// Falls back to a single full-context tier for manifests exported
+    /// before the (bucket × tier) grid existed.
+    pub fn tiers_for(&self, cfg: &str) -> Vec<usize> {
+        if let Some(t) = self.decode_tiers.get(cfg) {
+            if !t.is_empty() {
+                return t.clone();
+            }
+        }
+        self.configs
+            .get(cfg)
+            .map(|c| vec![c.max_seq])
+            .unwrap_or_default()
+    }
+
+    /// `decode_{cfg}_b{batch}_n{tier}` on tiered manifests; pre-tier
+    /// manifests keep the legacy un-suffixed name (tier is then always
+    /// max_seq).
+    pub fn decode_name(&self, cfg: &str, batch: usize, tier: usize,
+                       pallas: bool) -> String {
         let suffix = if pallas { "_pallas" } else { "" };
-        format!("decode_{cfg}_b{batch}{suffix}")
+        if self.decode_tiers.contains_key(cfg) {
+            format!("decode_{cfg}_b{batch}_n{tier}{suffix}")
+        } else {
+            format!("decode_{cfg}_b{batch}{suffix}")
+        }
     }
 }
 
@@ -322,18 +363,72 @@ mod tests {
     #[test]
     fn naming_helpers_resolve_to_real_artifacts() {
         let Some(m) = manifest() else { return };
+        let tier = *m.tiers_for("servethin").first().unwrap();
         for n in [
             m.train_name("tinylm_ds64"),
             m.qkft_name("tinylm_ds32"),
             m.evalloss_name("tinylm_ds32"),
             m.logits_name("copyback_ds4"),
             m.prefill_name("servethin", false),
-            m.decode_name("servethin", 8, false),
-            m.decode_name("servethin", 8, true),
+            m.decode_name("servethin", 8, tier, false),
+            m.decode_name("servethin", 8, tier, true),
         ] {
             assert!(m.artifacts.contains_key(&n), "missing artifact {n}");
             assert!(m.dir.join(&m.artifacts[&n].file).exists());
         }
+    }
+
+    /// Tier roundtrip: the manifest records the context-tier axis, every
+    /// (bucket × tier) decode name resolves to a real artifact, and the
+    /// recorded cache input shapes are sized by the tier, not max_seq.
+    #[test]
+    fn decode_tier_grid_resolves_for_every_tier() {
+        let Some(m) = manifest() else { return };
+        for cfg_name in ["servefull", "servethin"] {
+            let cfg = m.config(cfg_name).unwrap();
+            let tiers = m.tiers_for(cfg_name);
+            assert!(!tiers.is_empty());
+            assert_eq!(*tiers.last().unwrap(), cfg.max_seq);
+            assert!(tiers.windows(2).all(|w| w[0] < w[1]), "{tiers:?}");
+            for &b in &m.decode_batches {
+                for &n in &tiers {
+                    let name = m.decode_name(cfg_name, b, n, false);
+                    let a = m
+                        .artifact(&name)
+                        .unwrap_or_else(|_| panic!("missing {name}"));
+                    let kc = a
+                        .inputs
+                        .iter()
+                        .find(|i| i.name == "k_cache")
+                        .unwrap();
+                    assert_eq!(
+                        kc.shape,
+                        vec![cfg.n_layers, b, n, cfg.k_cache_dims]
+                    );
+                    // the delta-sync contract: per-step written rows are
+                    // exported alongside the full arenas
+                    assert_eq!(
+                        &a.outputs[a.outputs.len() - 2..],
+                        ["k_rows".to_string(), "v_rows".to_string()]
+                    );
+                }
+            }
+        }
+    }
+
+    /// Pre-tier manifests (no `decode_tiers` key) keep resolving: a single
+    /// max_seq tier and the legacy artifact name.
+    #[test]
+    fn legacy_manifest_tier_fallback() {
+        let Some(mut m) = manifest() else { return };
+        m.decode_tiers.clear();
+        let max = m.config("servethin").unwrap().max_seq;
+        assert_eq!(m.tiers_for("servethin"), vec![max]);
+        assert_eq!(
+            m.decode_name("servethin", 8, max, false),
+            "decode_servethin_b8"
+        );
+        assert_eq!(m.tiers_for("no_such_config"), Vec::<usize>::new());
     }
 
     #[test]

@@ -305,6 +305,172 @@ fn single_retirement_copyback_is_incremental() {
     }
 }
 
+/// THE delta-sync acceptance test: under steady membership churn
+/// (retire → join cycles) the engine never downloads the full cache
+/// arenas — the host mirror is kept current from the per-step delta rows
+/// — uploads happen only on membership changes, per-step host traffic is
+/// O(L·B) (independent of max_seq), and survivors' generations stay
+/// byte-identical to solo runs.
+#[test]
+fn steady_churn_is_delta_synced() {
+    let rt = runtime();
+    let cfg = rt.manifest().config("servethin").unwrap().clone();
+    let mut rng = Rng::new(21);
+    let p_short = synth_prompt(7, cfg.vocab, &mut rng);
+    let p_long = synth_prompt(11, cfg.vocab, &mut rng);
+    let p_join = synth_prompt(9, cfg.vocab, &mut rng);
+
+    let alone = {
+        let mut eng = engine(&rt, "servethin", 0);
+        let mut seq = Sequence::new(2, p_long.clone(), 14, None);
+        eng.prefill(&mut seq).unwrap();
+        while !seq.is_finished() {
+            let mut seqs = vec![&mut seq];
+            eng.decode_step(&mut seqs).unwrap();
+        }
+        seq.generated
+    };
+
+    let mut eng = engine(&rt, "servethin", 0);
+    let mut s1 = Sequence::new(1, p_short, 3, None);
+    let mut s2 = Sequence::new(2, p_long, 14, None);
+    eng.prefill(&mut s1).unwrap();
+    eng.prefill(&mut s2).unwrap();
+    while !s1.is_finished() {
+        let mut seqs: Vec<&mut Sequence> = vec![&mut s1, &mut s2];
+        eng.decode_step(&mut seqs).unwrap();
+    }
+    // retire s1 (hole), decode s2 alone for a few steps: steady state,
+    // no uploads
+    eng.drop_seq(1);
+    for _ in 0..3 {
+        let mut seqs = vec![&mut s2];
+        eng.decode_step(&mut seqs).unwrap();
+    }
+    let upload_steady = eng.metrics.sync_upload_bytes;
+    for _ in 0..2 {
+        let mut seqs = vec![&mut s2];
+        eng.decode_step(&mut seqs).unwrap();
+    }
+    assert_eq!(eng.metrics.sync_upload_bytes, upload_steady,
+               "steady-state decode uploaded arena bytes");
+    // a joiner reuses the hole: exactly one more upload, still zero
+    // downloads
+    let mut s3 = Sequence::new(3, p_join, 6, None);
+    eng.prefill(&mut s3).unwrap();
+    while !s2.is_finished() {
+        let mut seqs: Vec<&mut Sequence> = vec![&mut s2];
+        if !s3.is_finished() {
+            seqs.push(&mut s3);
+        }
+        eng.decode_step(&mut seqs).unwrap();
+    }
+    assert!(eng.metrics.sync_upload_bytes > upload_steady,
+            "join must re-upload the repacked arenas");
+    assert_eq!(eng.metrics.sync_download_bytes, 0,
+               "delta-synced mirror must never download the full arenas");
+    assert_eq!(s2.generated, alone,
+               "churn (retire + join) corrupted the survivor's cache");
+    // per-step host traffic is O(L·B·(KD+VD)) — no max_seq term (the
+    // bucket never exceeded 2 in this run)
+    let m = &eng.metrics;
+    let lane_row = cfg.n_layers * (cfg.k_cache_dims + cfg.v_cache_dims) * 4;
+    assert!(m.row_sync_bytes > 0);
+    assert!(m.row_sync_bytes_per_step() <= (2 * lane_row) as f64,
+            "per-step delta sync moved more than L*B*(KD+VD) bytes");
+}
+
+/// A sequence growing across a tier boundary mid-generation: the arena
+/// must grow (tier switch), the kept rows must move intact, and the
+/// generation must still match the teacher-forced reference.
+#[test]
+fn tier_growth_preserves_generation() {
+    let rt = runtime();
+    let cfg = rt.manifest().config("servefull").unwrap().clone();
+    let mut eng = engine(&rt, "servefull", 0);
+    let mut rng = Rng::new(17);
+    let prompt = synth_prompt(12, cfg.vocab, &mut rng);
+    let gen = 30; // 12 + 30 = 42 rows: crosses the n=32 tier into n=64
+    let mut seq = Sequence::new(1, prompt.clone(), gen, None);
+    eng.prefill(&mut seq).unwrap();
+    while !seq.is_finished() {
+        let mut seqs = vec![&mut seq];
+        eng.decode_step(&mut seqs).unwrap();
+    }
+    assert!(eng.metrics.tier_switches >= 1, "no tier growth recorded");
+    assert_eq!(eng.current_tier(), 64);
+    assert_eq!(eng.metrics.sync_download_bytes, 0);
+
+    // teacher-forced greedy reference through the logits artifact
+    let params = ParamStore::init(&cfg, 42);
+    let s = cfg.train_seq;
+    let mut toks = prompt;
+    let mut want = Vec::new();
+    for _ in 0..gen {
+        let mut batch = Batch::zeros(cfg.train_batch, s);
+        for (t, &x) in toks.iter().enumerate() {
+            batch.tokens[t] = x;
+        }
+        let logits = logits_for(&rt, &cfg, &params, &batch).unwrap();
+        let pos = toks.len() - 1;
+        let row = &logits.data[pos * cfg.vocab..(pos + 1) * cfg.vocab];
+        let next = argmax(row) as i32;
+        want.push(next);
+        toks.push(next);
+    }
+    assert_eq!(seq.generated, want,
+               "tier growth corrupted the decode cache");
+}
+
+/// When the long sequence retires, the arena shrinks back (with 2x
+/// headroom hysteresis) and the short survivor's generation is unchanged
+/// — shrink copies the kept rows correctly and never downloads.
+#[test]
+fn tier_shrinks_after_long_sequence_retires() {
+    let rt = runtime();
+    let cfg = rt.manifest().config("servethin").unwrap().clone();
+    let mut rng = Rng::new(23);
+    let p_doc = synth_prompt(90, cfg.vocab, &mut rng);
+    let p_chat = synth_prompt(10, cfg.vocab, &mut rng);
+
+    let alone = {
+        let mut eng = engine(&rt, "servethin", 0);
+        let mut seq = Sequence::new(2, p_chat.clone(), 30, None);
+        eng.prefill(&mut seq).unwrap();
+        while !seq.is_finished() {
+            let mut seqs = vec![&mut seq];
+            eng.decode_step(&mut seqs).unwrap();
+        }
+        seq.generated
+    };
+
+    let mut eng = engine(&rt, "servethin", 0);
+    let mut doc = Sequence::new(1, p_doc, 4, None);
+    let mut chat = Sequence::new(2, p_chat, 30, None);
+    eng.prefill(&mut doc).unwrap();
+    eng.prefill(&mut chat).unwrap();
+    while !doc.is_finished() {
+        let mut seqs: Vec<&mut Sequence> = vec![&mut doc, &mut chat];
+        eng.decode_step(&mut seqs).unwrap();
+    }
+    // the doc (94 rows) forced tier 128; once it retires the chat
+    // (~15 rows) shrinks the arena with 2x headroom
+    assert_eq!(eng.current_tier(), 128);
+    eng.drop_seq(1);
+    let switches_before = eng.metrics.tier_switches;
+    while !chat.is_finished() {
+        let mut seqs = vec![&mut chat];
+        eng.decode_step(&mut seqs).unwrap();
+    }
+    assert!(eng.metrics.tier_switches > switches_before,
+            "arena never shrank after the long sequence retired");
+    assert!(eng.current_tier() < 128,
+            "tier stuck at {}", eng.current_tier());
+    assert_eq!(eng.metrics.sync_download_bytes, 0);
+    assert_eq!(chat.generated, alone,
+               "tier shrink corrupted the survivor's cache");
+}
+
 /// A failed prefill must roll back its KV reservation (no leak) and fail
 /// the request visibly instead of vanishing half-admitted.
 #[test]
