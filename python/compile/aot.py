@@ -22,8 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax._src.lib import xla_client as xc
 
-from .configs import (REGISTRY, DECODE_BATCHES, PREFILL_SEQ, config_dict,
-                      decode_tiers, train_geometry)
+from .configs import (REGISTRY, DECODE_BATCHES, PREFILL_CHUNKS, PREFILL_SEQ,
+                      config_dict, decode_tiers, train_geometry)
 from . import model as M
 from .kernels.asym_attention import vmem_report
 
@@ -116,6 +116,11 @@ def artifact_plan():
     for name in ("servefull", "servethin"):
         cfg = REGISTRY[name]
         add("prefill", cfg, s=PREFILL_SEQ)
+        # Resumable chunked-prefill artifacts (ref impl only; the chunk
+        # attention is a C x S window the Pallas prefill kernel does not
+        # cover): prefill_{cfg}_c{C}, recorded as manifest prefill_chunks.
+        for c in PREFILL_CHUNKS:
+            add("prefill", cfg, c=c)
         for b in DECODE_BATCHES:
             for n in decode_tiers(cfg.max_seq):
                 add("decode", cfg, b=b, n=n)
@@ -156,6 +161,17 @@ def build_entry(kind, cfg, geom):
         fn = M.make_logits(cfg, impl=impl)
         specs = _param_arg_specs(cfg) + [_spec((b, s), I32)]
         return fn, specs, pnames + ["tokens"], ["logits"]
+    if kind == "prefill" and "c" in geom:
+        c, s = geom["c"], PREFILL_SEQ
+        kd = cfg.k_cache_dims()
+        vd = cfg.v_cache_dims()
+        fn = M.make_prefill_chunk(cfg, c, s, impl=impl)
+        specs = _param_arg_specs(cfg) + [
+            _spec((cfg.n_layers, s, kd)), _spec((cfg.n_layers, s, vd)),
+            _spec((1, c), I32), _spec((), I32), _spec((), I32)]
+        return fn, specs, \
+            pnames + ["k_cache", "v_cache", "tokens", "start", "length"], \
+            ["last_logits", "k_cache", "v_cache", "k_rows", "v_rows"]
     if kind == "prefill":
         s = geom["s"]
         fn = M.make_prefill(cfg, s, impl=impl)
@@ -250,6 +266,11 @@ def main():
             for name in sorted({a["config"] for a in artifacts
                                 if a["kind"] == "decode"})},
         "prefill_seq": PREFILL_SEQ,
+        "prefill_chunks": {
+            name: list(PREFILL_CHUNKS)
+            for name in sorted({a["config"] for a in artifacts
+                                if a["kind"] == "prefill"
+                                and "c" in a["geom"]})},
         "configs": configs_out,
         "artifacts": artifacts,
     }

@@ -165,6 +165,15 @@ def train_geometry(cfg: ModelConfig):
 DECODE_BATCHES = (1, 2, 4, 8, 16, 32)
 PREFILL_SEQ = 128  # prompt bucket for serving prefill (B=1)
 
+# Chunked-prefill axis: besides the monolithic prefill_{cfg}_s{S} artifact,
+# serving configs export resumable chunk artifacts prefill_{cfg}_c{C} that
+# process C prompt positions against the S-length arena (ISSUE 3). The
+# scheduler interleaves one chunk per round with decode steps so a long
+# document never stalls interactive decode for a whole prompt; chunk sizes
+# trade per-chunk overhead (C small -> more XLA dispatches per prompt)
+# against decode stall (C large -> longer pause at each chunk boundary).
+PREFILL_CHUNKS = (16, 32, 64)
+
 # Smallest decode cache-arena tier. Decode artifacts are specialized on a
 # second axis besides the batch bucket: the arena length N, in powers of
 # two from here up to the config's max_seq. The engine picks the smallest

@@ -45,6 +45,35 @@ def attention_prefill(q, k, v, lengths=None, causal=True):
     return jnp.einsum("bhqk,bhkd->bhqd", w, v)
 
 
+def attention_prefill_chunk(q, k_cache, v_cache, qpos):
+    """Chunked-prefill attention: a window of C queries against a dense
+    cache arena that already holds every earlier row (and this chunk's own
+    rows, written before the call).
+
+    q: (B, H, C, dqk)  k_cache: (B, Hkv, N, dqk)  v_cache: (B, Hkv, N, dv)
+    qpos: (B, C) int32 — ABSOLUTE position of each chunk query; key j is
+    valid for query i iff j <= qpos[i] (the causal mask of the single-shot
+    prefill, expressed against arena indices).
+    Returns (B, H, C, dv).
+
+    Kept score-identical to :func:`attention_prefill` at N == S: the same
+    NEG_INF masking, softmax over the same N-long key axis, so a chunked
+    pass reproduces the single-shot prefill bit-for-bit.
+    """
+    b, h, c, dqk = q.shape
+    n = k_cache.shape[2]
+    group = h // k_cache.shape[1]
+    k = repeat_kv(k_cache, group)
+    v = repeat_kv(v_cache, group)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(
+        jnp.asarray(dqk, q.dtype))
+    ki = jnp.arange(n)[None, None, None, :]
+    scores = jnp.where(ki <= qpos[:, None, :, None], scores, NEG_INF)
+    w = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v)
+
+
 def attention_decode(q, k_cache, v_cache, pos):
     """Single-token decode attention against a dense cache arena.
 

@@ -377,6 +377,68 @@ def make_prefill(cfg: ModelConfig, seq, impl="ref"):
     return fn
 
 
+def make_prefill_chunk(cfg: ModelConfig, chunk, seq, impl="ref"):
+    """Resumable chunked prefill: process prompt positions
+    [start, start+chunk) against a `seq`-length cache arena already holding
+    rows [0, start).
+
+    args: *params, k_cache (L, seq, KD), v_cache (L, seq, VD),
+          tokens (1, chunk) i32, start () i32, length () i32
+    returns: (last_logits (1, vocab), k_cache', v_cache',
+              k_rows (L, chunk, KD), v_rows (L, chunk, VD))
+
+    `length` is the TOTAL prompt length; rows at positions >= length are
+    zeroed exactly as make_prefill zeroes them, so running ceil(p/chunk)
+    chunks leaves the arena bit-identical to the single-shot artifact (the
+    parity contract enforced by rust/tests/serving_e2e.rs). last_logits is
+    taken at the last valid position covered by this chunk — only the
+    final chunk's value is meaningful (the others are mid-prompt logits).
+    k_rows/v_rows are this chunk's written rows — the delta the engine
+    scatters into its host mirror so chunked prefill never downloads the
+    full arenas between chunks.
+    """
+    assert impl == "ref", "chunked prefill is exported ref-only (see aot.py)"
+    n = len(param_specs(cfg))
+    _cache_dims(cfg)  # assert non-MLA
+
+    def fn(*args):
+        p = unflatten(cfg, list(args[:n]))
+        k_cache, v_cache, tokens, start, length = args[n:]
+        b, c = tokens.shape                          # (1, chunk)
+        qpos = start + jnp.arange(c, dtype=jnp.int32)[None]   # (1, c) absolute
+        x = p["emb.tok"][tokens]
+        if cfg.arch == "vanilla":
+            x = x + jnp.take(p["emb.pos"], qpos[0], axis=0)[None]
+        valid = (qpos[0] < length)[None, :, None].astype(jnp.float32)
+        new_k, new_v, row_k, row_v = [], [], [], []
+        hkv, dqk, dvh = cfg.n_kv_heads, cfg.d_qk_head, cfg.d_v_head
+        for i in range(cfg.n_layers):
+            L = f"l{i}"
+            xn = _norm(cfg, p, f"{L}.ln1", x)
+            q, k, v = _attn_qkv(cfg, p, L, xn, qpos)  # (1,H,c,dqk) etc.
+            krows = (_unheads(k) * valid)[0]          # (c, KD)
+            vrows = (_unheads(v) * valid)[0]          # (c, VD)
+            kc = jax.lax.dynamic_update_slice(k_cache[i], krows, (start, 0))
+            vc = jax.lax.dynamic_update_slice(v_cache[i], vrows, (start, 0))
+            new_k.append(kc)
+            new_v.append(vc)
+            row_k.append(krows)
+            row_v.append(vrows)
+            kh = kc.reshape(seq, hkv, dqk).transpose(1, 0, 2)[None]
+            vh = vc.reshape(seq, hkv, dvh).transpose(1, 0, 2)[None]
+            o = ref.attention_prefill_chunk(q, kh, vh, qpos)
+            x = x + _unheads(o) @ p[f"{L}.attn.wo"]
+            xn = _norm(cfg, p, f"{L}.ln2", x)
+            x = x + _mlp(cfg, p, L, xn)
+        x = _norm(cfg, p, "ln_f", x)
+        last = x[0, jnp.clip(length - 1 - start, 0, c - 1)][None]  # (1, d)
+        logits = last @ p["emb.tok"].T
+        return (logits, jnp.stack(new_k), jnp.stack(new_v),
+                jnp.stack(row_k), jnp.stack(row_v))
+
+    return fn
+
+
 def make_decode(cfg: ModelConfig, batch, n=None, impl="ref"):
     """Batched single-token decode against dense cache arenas.
 

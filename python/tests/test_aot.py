@@ -9,8 +9,9 @@ import numpy as np
 import pytest
 
 from compile.aot import artifact_plan, build_entry
-from compile.configs import (DECODE_BATCHES, REGISTRY, config_dict,
-                             decode_tiers, train_geometry)
+from compile.configs import (DECODE_BATCHES, PREFILL_CHUNKS, PREFILL_SEQ,
+                             REGISTRY, config_dict, decode_tiers,
+                             train_geometry)
 from compile import model as M
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
@@ -61,6 +62,47 @@ def test_plan_covers_full_bucket_tier_grid():
                 assert f"decode_{cfg_name}_b{b}_n{n}" in names
         for n in decode_tiers(cfg.max_seq):
             assert f"decode_{cfg_name}_b8_n{n}_pallas" in names
+
+
+def test_plan_covers_prefill_chunk_axis():
+    """Every serving config exports prefill_{cfg}_c{C} for each chunk size,
+    alongside the monolithic prefill_{cfg}_s{S}."""
+    plan = artifact_plan()
+    names = {n for n, _, _, _ in plan}
+    for cfg_name in ("servefull", "servethin"):
+        assert f"prefill_{cfg_name}_s{PREFILL_SEQ}" in names
+        for c in PREFILL_CHUNKS:
+            assert f"prefill_{cfg_name}_c{c}" in names
+
+
+def test_prefill_chunk_entry_specs():
+    """Chunk entries take the S-length arenas + (1,C) tokens + start/length
+    scalars and return the delta rows the engine mirrors host-side."""
+    cfg = REGISTRY["servethin"]
+    _, specs, in_names, out_names = build_entry("prefill", cfg, {"c": 32})
+    assert out_names == ["last_logits", "k_cache", "v_cache",
+                         "k_rows", "v_rows"]
+    by_name = dict(zip(in_names, specs))
+    assert tuple(by_name["k_cache"].shape) == (
+        cfg.n_layers, PREFILL_SEQ, cfg.k_cache_dims())
+    assert tuple(by_name["v_cache"].shape) == (
+        cfg.n_layers, PREFILL_SEQ, cfg.v_cache_dims())
+    assert tuple(by_name["tokens"].shape) == (1, 32)
+    assert tuple(by_name["start"].shape) == ()
+    assert tuple(by_name["length"].shape) == ()
+
+
+def test_manifest_prefill_chunks_recorded():
+    path = os.path.join(ART_DIR, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not exported")
+    with open(path) as f:
+        man = json.load(f)
+    for cfg_name in ("servefull", "servethin"):
+        assert man["prefill_chunks"][cfg_name] == list(PREFILL_CHUNKS)
+        for c in PREFILL_CHUNKS:
+            assert any(a["name"] == f"prefill_{cfg_name}_c{c}"
+                       for a in man["artifacts"])
 
 
 def test_decode_entry_returns_delta_rows():

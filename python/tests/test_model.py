@@ -86,6 +86,49 @@ def test_decode_tier_parity(name):
         np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("name", ["servefull", "servethin"])
+@pytest.mark.parametrize("plen", [8, 37, 128])
+def test_chunked_prefill_bit_identical_to_single_shot(name, plen):
+    """The chunked-prefill contract (ISSUE 3): running ceil(p/C) chunks of
+    make_prefill_chunk — carrying the arenas across calls and accumulating
+    only the per-chunk delta rows host-side, exactly as the rust engine
+    does — must reproduce the single-shot prefill BIT-FOR-BIT: last
+    logits, final arenas, and the delta-row mirror. Covers a prompt
+    shorter than the chunk (8), one not divisible by any chunk (37), and
+    the full bucket (128)."""
+    from compile.configs import PREFILL_CHUNKS, PREFILL_SEQ
+    cfg, p = setup_cfg(name)
+    plist = M.flatten(cfg, p)
+    S, L = PREFILL_SEQ, cfg.n_layers
+    KD, VD = cfg.k_cache_dims(), cfg.v_cache_dims()
+    toks = np.zeros((1, S), np.int32)
+    toks[0, :plen] = np.random.RandomState(plen).randint(4, cfg.vocab, plen)
+    log_a, kc_a, vc_a = map(np.asarray, jax.jit(M.make_prefill(cfg, S))(
+        *plist, jnp.asarray(toks), jnp.asarray(plen, jnp.int32)))
+    for C in PREFILL_CHUNKS:
+        chunk = jax.jit(M.make_prefill_chunk(cfg, C, S))
+        ka, va = jnp.zeros((L, S, KD)), jnp.zeros((L, S, VD))
+        mirror_k = np.zeros((L, S, KD), np.float32)
+        mirror_v = np.zeros((L, S, VD), np.float32)
+        start, log_b = 0, None
+        while start < plen:
+            ctoks = np.zeros((1, C), np.int32)
+            n_valid = min(C, plen - start)
+            ctoks[0, :n_valid] = toks[0, start:start + n_valid]
+            log_b, ka, va, kr, vr = chunk(
+                *plist, ka, va, jnp.asarray(ctoks),
+                jnp.asarray(start, jnp.int32), jnp.asarray(plen, jnp.int32))
+            mirror_k[:, start:start + C] = np.asarray(kr)
+            mirror_v[:, start:start + C] = np.asarray(vr)
+            start += C
+        assert np.array_equal(log_a, np.asarray(log_b)), (name, plen, C)
+        assert np.array_equal(kc_a, np.asarray(ka)), (name, plen, C)
+        assert np.array_equal(vc_a, np.asarray(va)), (name, plen, C)
+        # the host mirror built from delta rows alone matches the arena
+        assert np.array_equal(kc_a[:, :plen], mirror_k[:, :plen])
+        assert np.array_equal(vc_a[:, :plen], mirror_v[:, :plen])
+
+
 def test_prefill_zeroes_padded_cache_rows():
     cfg, p = setup_cfg("servefull")
     plist = M.flatten(cfg, p)

@@ -59,6 +59,29 @@ fn main() {
         .unwrap()
         .print();
     serving::mixed_length_table(&rt, "servethin").unwrap().print();
+
+    // chunked prefill vs monolithic on the mixed chat+doc trace (ISSUE 3
+    // acceptance): interactive decode-TTFT p99 must be STRICTLY lower
+    // with chunking — a chat arriving mid-document waits at most one
+    // chunk boundary instead of the whole document prompt
+    let (chunk_table, p99s) =
+        serving::chunked_prefill_table(&rt, "servethin").unwrap();
+    chunk_table.print();
+    let mono_p99 = p99s
+        .iter()
+        .find(|(m, _)| m.is_none())
+        .map(|&(_, p)| p)
+        .expect("monolithic row");
+    let best_chunked = p99s
+        .iter()
+        .filter(|(m, _)| m.is_some())
+        .map(|&(_, p)| p)
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        best_chunked < mono_p99,
+        "chunked prefill did not improve interactive TTFT p99: \
+         monolithic {mono_p99:.0}us vs best chunked {best_chunked:.0}us"
+    );
     serving::regroup_copyback_table(&rt, "servethin").unwrap().print();
     serving::capacity_table().print();
 

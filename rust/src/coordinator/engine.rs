@@ -37,6 +37,17 @@
 //! retirement event (`Scheduler::free_seq` → `kv.release` +
 //! `engine.drop_seq`).
 //!
+//! Prefill runs either monolithically ([`Engine::prefill`], one
+//! `prefill_{cfg}_s{S}` call for the whole prompt) or **chunked**
+//! ([`Engine::prefill_chunk`], resumable `prefill_{cfg}_c{C}` calls of C
+//! prompt positions each, ISSUE 3): between chunks the partially filled
+//! arenas stay parked as device literals and the host mirror accumulates
+//! only the per-chunk delta rows, so the scheduler can interleave decode
+//! rounds — and preempt a long document's ingestion at a chunk boundary —
+//! without a long prompt ever stalling interactive lanes for its whole
+//! length. Both paths park bit-identical rows (the parity tests in
+//! rust/tests/serving_e2e.rs and python/tests/test_model.py).
+//!
 //! The *thin* K arena is the paper's saving made concrete: `KD =
 //! n_kv_heads · d_qk_head` is 4x smaller for `servethin` than `servefull`
 //! while `VD` is identical.
@@ -59,6 +70,23 @@ use crate::substrate::tensor::{Tensor, TensorI32};
 #[derive(Clone, Debug)]
 struct Parked {
     len: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// In-flight chunked prefill (ISSUE 3): the sequence's prompt has been
+/// ingested up to `done` tokens. The partially filled `(L, S, KD/VD)`
+/// arenas are carried across chunks as device literals (fed straight back
+/// via `Arg::L`, never round-tripped through host tensors), and the host
+/// mirror accumulates only the per-chunk delta rows `k_rows`/`v_rows` —
+/// the prefill twin of the decode delta-sync contract, so chunked prefill
+/// never downloads a full arena between chunks either.
+struct ChunkProgress {
+    done: usize,
+    k_lit: xla::Literal,
+    v_lit: xla::Literal,
+    /// Host mirror of the prefill arenas, `(L, S, KD)` / `(L, S, VD)`,
+    /// current up to row `done`; compacted into [`Parked`] on completion.
     k: Vec<f32>,
     v: Vec<f32>,
 }
@@ -97,9 +125,15 @@ pub struct Engine<'rt> {
     k_group: Tensor,
     v_group: Tensor,
     parked: HashMap<SeqId, Parked>,
+    /// In-flight chunked prefills (prompt partially ingested).
+    chunking: HashMap<SeqId, ChunkProgress>,
     /// Cache rows actually written per live sequence (= tokens fed so
-    /// far). Physical-side half of the unified accounting contract.
+    /// far; for an in-flight chunked prefill, the chunked progress).
+    /// Physical-side half of the unified accounting contract.
     rows: HashMap<SeqId, usize>,
+    /// Logits of the most recent completed prefill (monolithic or final
+    /// chunk) — exposed for the chunked-vs-monolithic parity tests.
+    last_prefill_logits: Option<Tensor>,
     pub metrics: EngineMetrics,
 }
 
@@ -129,7 +163,9 @@ impl<'rt> Engine<'rt> {
             k_group: Tensor::zeros(&[0]),
             v_group: Tensor::zeros(&[0]),
             parked: HashMap::new(),
+            chunking: HashMap::new(),
             rows: HashMap::new(),
+            last_prefill_logits: None,
             metrics: EngineMetrics::default(),
         })
     }
@@ -147,6 +183,11 @@ impl<'rt> Engine<'rt> {
         self.tier
     }
 
+    /// Current decode bucket B / lane count (0 before the first group).
+    pub fn current_bucket(&self) -> usize {
+        self.lanes.bucket()
+    }
+
     /// Cache rows physically written for `id` (0 if unknown). The
     /// scheduler mirrors this into the KV block accounting.
     pub fn rows(&self, id: SeqId) -> usize {
@@ -156,6 +197,35 @@ impl<'rt> Engine<'rt> {
     /// The lane a sequence currently decodes in, if it is grouped.
     pub fn lane_of(&self, id: SeqId) -> Option<usize> {
         self.lanes.lane_of(id)
+    }
+
+    /// Prompt tokens ingested so far by an in-flight chunked prefill
+    /// (None once complete, or if never chunk-prefilled).
+    pub fn prefill_progress(&self, id: SeqId) -> Option<usize> {
+        self.chunking.get(&id).map(|p| p.done)
+    }
+
+    /// Chunk lengths available for this config (empty on pre-chunking
+    /// manifests — chunked mode is then unavailable).
+    pub fn chunk_sizes(&self) -> Vec<usize> {
+        self.rt.manifest().chunks_for(&self.cfg.name)
+    }
+
+    /// Logits of the most recent completed prefill (monolithic or final
+    /// chunk) — the chunked-vs-monolithic parity oracle.
+    pub fn last_prefill_logits(&self) -> Option<&Tensor> {
+        self.last_prefill_logits.as_ref()
+    }
+
+    /// The parked cache rows of a sequence that finished prefill but has
+    /// not joined a decode lane yet: `(len, k, v)` with k `(L, len, KD)`
+    /// and v `(L, len, VD)` row-major. Parity-test surface: chunked and
+    /// monolithic prefill must park bit-identical rows.
+    pub fn parked_snapshot(&self, id: SeqId)
+        -> Option<(usize, &[f32], &[f32])> {
+        self.parked
+            .get(&id)
+            .map(|p| (p.len, p.k.as_slice(), p.v.as_slice()))
     }
 
     fn param_args(&self) -> Vec<Arg<'_>> {
@@ -210,16 +280,31 @@ impl<'rt> Engine<'rt> {
         let logits = literal_to_tensor(&outs[0])?; // (1, V)
 
         // Park rows 0..p straight from the output literals (L, S, KD/VD):
-        // compact each layer's first p rows in place, then truncate — no
-        // intermediate full-S Tensor and no second full-arena copy.
-        let (l, kd, vd) = (self.cfg.n_layers, self.cfg.k_cache_dims,
-                           self.cfg.v_cache_dims);
-        let mut k = outs[1]
+        // park_prefilled compacts each layer's first p rows in place and
+        // truncates — no intermediate full-S Tensor and no second
+        // full-arena copy.
+        let k = outs[1]
             .to_vec::<f32>()
             .map_err(|e| anyhow::anyhow!("download k_cache: {e}"))?;
-        let mut v = outs[2]
+        let v = outs[2]
             .to_vec::<f32>()
             .map_err(|e| anyhow::anyhow!("download v_cache: {e}"))?;
+        self.park_prefilled(seq, k, v, logits);
+        Ok(())
+    }
+
+    /// Shared prefill epilogue — THE single definition of how a finished
+    /// prefill parks its rows and samples the first token, so the
+    /// monolithic and chunked paths cannot drift apart (their bit-parity
+    /// is a tested contract): compact the `(L, S, D)` buffers' first `p`
+    /// rows in place, truncate, park, record the physical rows, sample
+    /// from `logits`, and transition the sequence to Decoding.
+    fn park_prefilled(&mut self, seq: &mut Sequence, mut k: Vec<f32>,
+                      mut v: Vec<f32>, logits: Tensor) {
+        let s = self.max_prompt();
+        let p = seq.prompt.len();
+        let (l, kd, vd) = (self.cfg.n_layers, self.cfg.k_cache_dims,
+                           self.cfg.v_cache_dims);
         for li in 0..l {
             k.copy_within(li * s * kd..(li * s + p) * kd, li * p * kd);
             v.copy_within(li * s * vd..(li * s + p) * vd, li * p * vd);
@@ -228,11 +313,125 @@ impl<'rt> Engine<'rt> {
         v.truncate(l * p * vd);
         self.parked.insert(seq.id, Parked { len: p, k, v });
         self.rows.insert(seq.id, p);
-
         let tok = self.sampler.sample(&logits.data, &mut self.rng);
+        self.last_prefill_logits = Some(logits);
         seq.state = crate::coordinator::sequence::SeqState::Decoding;
         seq.push_token(tok);
-        Ok(())
+    }
+
+    /// Advance a sequence's prefill by ONE chunk of `chunk` prompt
+    /// positions (resumable; ISSUE 3). Returns `Ok(true)` when the whole
+    /// prompt has been ingested — the first token is then sampled and the
+    /// rows parked exactly as [`Engine::prefill`] would have parked them
+    /// (bit-identical, see the parity tests). `Ok(false)` means the
+    /// prompt is partially ingested: the arenas stay parked as device
+    /// literals in [`ChunkProgress`] and the scheduler may interleave
+    /// decode rounds (or higher-priority prefills) before the next chunk.
+    ///
+    /// `rows(id)` tracks the chunked progress, so the scheduler's
+    /// `commit_rows` mirror stays exact mid-prefill too.
+    pub fn prefill_chunk(&mut self, seq: &mut Sequence, chunk: usize)
+        -> Result<bool> {
+        let s = self.max_prompt();
+        let p = seq.prompt.len();
+        if p > s {
+            bail!("prompt {p} exceeds prefill bucket {s}");
+        }
+        if p + seq.max_new > self.cfg.max_seq {
+            bail!(
+                "prompt {p} + max_new {} exceeds context {}",
+                seq.max_new, self.cfg.max_seq
+            );
+        }
+        if self.pallas {
+            // the chunk artifacts are ref-only (aot.py exports no _pallas
+            // chunk column); mixing ref chunked prefill with pallas decode
+            // would silently break the chunked==monolithic parity contract
+            bail!(
+                "chunked prefill has no pallas artifact path — serve with \
+                 --chunk-tokens 0 or without --pallas"
+            );
+        }
+        let chunks = self.chunk_sizes();
+        if !chunks.contains(&chunk) {
+            bail!("chunk {chunk} not exported (available: {chunks:?})");
+        }
+        let (l, kd, vd) = (self.cfg.n_layers, self.cfg.k_cache_dims,
+                           self.cfg.v_cache_dims);
+        if !self.chunking.contains_key(&seq.id) {
+            // first chunk: fresh zero arenas, uploaded once as literals —
+            // counted against the sync contract like any arena upload
+            let prog = ChunkProgress {
+                done: 0,
+                k_lit: crate::runtime::client::tensor_to_literal(
+                    &Tensor::zeros(&[l, s, kd]))?,
+                v_lit: crate::runtime::client::tensor_to_literal(
+                    &Tensor::zeros(&[l, s, vd]))?,
+                k: vec![0.0; l * s * kd],
+                v: vec![0.0; l * s * vd],
+            };
+            self.metrics.sync_upload_bytes +=
+                (l * s * (kd + vd) * 4) as u64;
+            self.chunking.insert(seq.id, prog);
+            self.rows.insert(seq.id, 0);
+        }
+        let start = self.chunking[&seq.id].done;
+        debug_assert!(start < p, "chunk past end of prompt");
+        let n_valid = chunk.min(p - start);
+        let mut toks = vec![0i32; chunk];
+        toks[..n_valid].copy_from_slice(&seq.prompt[start..start + n_valid]);
+        let tokens = TensorI32::new(&[1, chunk], toks);
+        let artifact =
+            self.rt.manifest().prefill_chunk_name(&self.cfg.name, chunk);
+        let t0 = std::time::Instant::now();
+        let outs = {
+            let prog = &self.chunking[&seq.id];
+            let mut args = self.param_args();
+            args.push(Arg::L(&prog.k_lit));
+            args.push(Arg::L(&prog.v_lit));
+            args.push(Arg::I(&tokens));
+            args.push(Arg::ScalarI(start as i32));
+            args.push(Arg::ScalarI(p as i32));
+            self.rt.execute(&artifact, &args)?
+        };
+        self.metrics.prefill.record(t0.elapsed());
+        self.metrics.prefill_chunks += 1;
+        self.metrics.prefill_tokens += n_valid as u64;
+        let logits = literal_to_tensor(&outs[0])?; // (1, V)
+        let k_rows = outs[3]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("download k_rows: {e}"))?;
+        let v_rows = outs[4]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("download v_rows: {e}"))?;
+        let mut outs = outs;
+        let v_lit = outs.remove(2);
+        let k_lit = outs.remove(1);
+        let prog = self.chunking.get_mut(&seq.id).expect("chunk progress");
+        prog.k_lit = k_lit;
+        prog.v_lit = v_lit;
+        // delta-sync: scatter this chunk's written rows (L, chunk, KD/VD)
+        // into the host mirror at [start, start+n_valid)
+        for li in 0..l {
+            let src = li * chunk * kd;
+            let dst = (li * s + start) * kd;
+            prog.k[dst..dst + n_valid * kd]
+                .copy_from_slice(&k_rows[src..src + n_valid * kd]);
+            let src = li * chunk * vd;
+            let dst = (li * s + start) * vd;
+            prog.v[dst..dst + n_valid * vd]
+                .copy_from_slice(&v_rows[src..src + n_valid * vd]);
+        }
+        prog.done = start + n_valid;
+        self.rows.insert(seq.id, prog.done);
+        if prog.done < p {
+            return Ok(false);
+        }
+        // final chunk: the host mirror holds every prompt row — park it
+        // through the same epilogue the monolithic prefill uses
+        let prog = self.chunking.remove(&seq.id).expect("chunk progress");
+        self.park_prefilled(seq, prog.k, prog.v, logits);
+        Ok(true)
     }
 
     /// Bucket to repack into for `n` active lanes: minimal on first group
@@ -495,6 +694,7 @@ impl<'rt> Engine<'rt> {
     /// keep decoding from their existing lanes.
     pub fn drop_seq(&mut self, id: SeqId) {
         self.parked.remove(&id);
+        self.chunking.remove(&id); // cancel an in-flight chunked prefill
         self.rows.remove(&id);
         if self.lanes.remove(id) {
             self.metrics.lane_leaves += 1;
@@ -510,12 +710,20 @@ impl<'rt> Engine<'rt> {
         }
     }
 
-    /// Bytes of host cache storage currently parked (diagnostics).
+    /// Bytes of host cache storage currently parked (diagnostics) —
+    /// completed-prefill rows plus in-flight chunked-prefill mirrors.
     pub fn parked_bytes(&self) -> usize {
-        self.parked
+        let parked: usize = self
+            .parked
             .values()
             .map(|p| (p.k.len() + p.v.len()) * 4)
-            .sum()
+            .sum();
+        let chunking: usize = self
+            .chunking
+            .values()
+            .map(|p| (p.k.len() + p.v.len()) * 4)
+            .sum();
+        parked + chunking
     }
 }
 

@@ -10,6 +10,13 @@ pub struct EngineMetrics {
     pub prefill: Histogram,
     pub decode: Histogram,
     pub prefill_tokens: u64,
+    /// Chunked-prefill invocations (each processes up to `--chunk-tokens`
+    /// prompt positions; a monolithic prefill counts 0 here).
+    pub prefill_chunks: u64,
+    /// Scheduling rounds where an in-flight chunked prefill wanted to
+    /// advance but the round's token budget was already spent by decode
+    /// lanes — the backpressure signal for sizing `round_budget`.
+    pub chunk_stall_steps: u64,
     pub decode_tokens: u64,
     pub decode_steps: u64,
     pub regroups: u64,
@@ -24,9 +31,12 @@ pub struct EngineMetrics {
     pub copyback_bytes_full: u64,
     /// Sum of (active/bucket) per decode step — mean = batch efficiency.
     pub occupancy_sum: f64,
-    /// Host→device bytes uploaded into the decode arenas. Uploads happen
-    /// only on membership changes (join / bucket resize / tier switch) —
-    /// never per step.
+    /// Host→device bytes uploaded into cache arenas: decode-arena uploads
+    /// on membership changes (join / bucket resize / tier switch — never
+    /// per step) plus the zero-arena initialization of each chunked
+    /// prefill. Monolithic prefill uploads no arena (the artifact
+    /// allocates its own), so chunked mode's extra traffic is visible
+    /// here rather than hidden.
     pub sync_upload_bytes: u64,
     /// Device→host FULL-ARENA cache downloads. The delta-synced host
     /// mirror makes these unnecessary; the counter is the regression
@@ -98,7 +108,8 @@ impl EngineMetrics {
             .map(|(t, n)| format!("n{t}:{n}"))
             .collect();
         format!(
-            "prefill: {} ({} tokens)\ndecode:  {} ({} tokens, {} steps, \
+            "prefill: {} ({} tokens, {} chunks, {} stalled rounds)\n\
+             decode:  {} ({} tokens, {} steps, \
              {:.2} occupancy, {} regroups)\n\
              lanes:   {} joins, {} leaves, copyback {} B vs {} B \
              full-repack baseline ({savings})\n\
@@ -107,6 +118,8 @@ impl EngineMetrics {
              decode throughput: {:.1} tok/s",
             self.prefill.summary(),
             self.prefill_tokens,
+            self.prefill_chunks,
+            self.chunk_stall_steps,
             self.decode.summary(),
             self.decode_tokens,
             self.decode_steps,
@@ -138,6 +151,11 @@ pub struct ServeReport {
     pub prompt_tokens: u64,
     pub gen_tokens: u64,
     pub ttft: Histogram,
+    /// TTFT split by priority class — the chunked-prefill acceptance
+    /// metric is `ttft_interactive.quantile_us(0.99)` under the mixed
+    /// chat+doc trace (see `serving::chunked_prefill_table`).
+    pub ttft_interactive: Histogram,
+    pub ttft_batch: Histogram,
     pub e2e: Histogram,
     pub rejected: usize,
 }
@@ -170,6 +188,16 @@ impl ServeReport {
             self.rejected,
             self.ttft.summary(),
             self.e2e.summary()
+        )
+    }
+
+    /// The per-class TTFT lines (only meaningful when the trace carries
+    /// both priority classes; empty histograms render with n=0).
+    pub fn report_by_class(&self) -> String {
+        format!(
+            "TTFT (interactive): {}\nTTFT (batch):       {}",
+            self.ttft_interactive.summary(),
+            self.ttft_batch.summary()
         )
     }
 }
@@ -218,13 +246,29 @@ mod tests {
         let mut m = EngineMetrics::default();
         m.tier_steps.insert(32, 5);
         m.tier_steps.insert(256, 1);
+        m.prefill_chunks = 7;
+        m.chunk_stall_steps = 2;
         assert!(m.report().contains("decode throughput"));
         assert!(m.report().contains("copyback"));
         assert!(m.report().contains("n32:5"));
         assert!(m.report().contains("tier switches"));
+        assert!(m.report().contains("7 chunks"));
+        assert!(m.report().contains("2 stalled rounds"));
         let r = ServeReport { n_requests: 3, total_s: 1.5, gen_tokens: 30,
                               ..Default::default() };
         assert!(r.report().contains("3 requests"));
         assert!((r.gen_tokens_per_sec() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_class_ttft_report() {
+        let mut r = ServeReport::default();
+        r.ttft_interactive.record_us(1000.0);
+        r.ttft_batch.record_us(9000.0);
+        let s = r.report_by_class();
+        assert!(s.contains("interactive"));
+        assert!(s.contains("batch"));
+        assert!(r.ttft_interactive.quantile_us(0.99)
+                < r.ttft_batch.quantile_us(0.99));
     }
 }

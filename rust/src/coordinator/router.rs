@@ -8,7 +8,7 @@ use anyhow::Result;
 
 use crate::coordinator::metrics::ServeReport;
 use crate::coordinator::scheduler::Scheduler;
-use crate::coordinator::sequence::{FinishReason, SeqState};
+use crate::coordinator::sequence::{FinishReason, Priority, SeqState};
 use crate::datagen::arrival::RequestSpec;
 use crate::substrate::rng::Rng;
 
@@ -30,7 +30,11 @@ impl<'rt> Router<'rt> {
 
     /// Run a trace to completion. Requests are injected when their arrival
     /// time elapses (relative to the run start); in between, the scheduler
-    /// keeps stepping. Returns the aggregate report.
+    /// keeps stepping. Each sequence's arrival stamp is backdated to the
+    /// TRACE arrival time, so TTFT charges queueing delay incurred while
+    /// the scheduler was mid-round (e.g. blocked on a monolithic prefill)
+    /// — the stall that chunked prefill exists to remove. Returns the
+    /// aggregate report.
     pub fn run_trace(&mut self, trace: &[RequestSpec], seed: u64)
         -> Result<ServeReport> {
         let vocab = self.sched.engine.cfg.vocab;
@@ -45,10 +49,15 @@ impl<'rt> Router<'rt> {
         while next < trace.len() || self.sched.has_work() {
             let now = t0.elapsed().as_secs_f64();
             while next < trace.len() && trace[next].arrive_s <= now {
-                self.sched.submit(
+                let arrived =
+                    t0 + std::time::Duration::from_secs_f64(
+                        trace[next].arrive_s);
+                self.sched.submit_seq(
                     prompts[next].clone(),
                     trace[next].gen_len,
                     None,
+                    trace[next].priority,
+                    Some(arrived),
                 );
                 report.prompt_tokens += trace[next].prompt_len as u64;
                 next += 1;
@@ -80,7 +89,7 @@ impl<'rt> Router<'rt> {
         for r in trace {
             let prompt = synth_prompt(r.prompt_len, vocab, &mut rng);
             report.prompt_tokens += prompt.len() as u64;
-            self.sched.submit(prompt, r.gen_len, None);
+            self.sched.submit_seq(prompt, r.gen_len, None, r.priority, None);
         }
         self.sched.run_to_completion()?;
         report.total_s = t0.elapsed().as_secs_f64();
@@ -104,6 +113,12 @@ impl<'rt> Router<'rt> {
             report.gen_tokens += seq.generated.len() as u64;
             if let Some(t) = seq.ttft_s() {
                 report.ttft.record_us(t * 1e6);
+                match seq.priority {
+                    Priority::Interactive => {
+                        report.ttft_interactive.record_us(t * 1e6)
+                    }
+                    Priority::Batch => report.ttft_batch.record_us(t * 1e6),
+                }
             }
             if let Some(t) = seq.e2e_s() {
                 report.e2e.record_us(t * 1e6);

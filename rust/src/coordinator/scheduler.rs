@@ -1,55 +1,161 @@
-//! Continuous-batching scheduler: admission against the KV budget, one
-//! prefill per scheduling round interleaved with decode steps, preemption
-//! on cache pressure.
+//! Continuous-batching scheduler: token-budget rounds, priority-aware
+//! admission, chunked prefill interleaved with decode, preemption on
+//! cache pressure.
+//!
+//! A scheduling round spends a configurable token budget
+//! ([`SchedConfig::round_budget`]) split between the decode lanes (one
+//! token per running sequence) and **at most one in-flight chunked
+//! prefill** ([`SchedConfig::chunk_tokens`]): instead of ingesting a whole
+//! prompt in one monolithic call — which stalls every decoding chat user
+//! for the duration of a 4K-token document — prefill advances one C-token
+//! chunk per round through the resumable `prefill_{cfg}_c{C}` artifacts
+//! ([`crate::coordinator::engine::Engine::prefill_chunk`]).
+//!
+//! Priority classes ([`Priority`]): Interactive traffic is admitted and
+//! granted chunks ahead of Batch traffic, so a chat request arriving
+//! mid-document preempts the ingestion *at the chunk boundary* rather
+//! than mid-prompt or (worse) after the full prompt. A weighted
+//! anti-starvation counter ([`SchedConfig::interactive_weight`]) grants a
+//! Batch chunk after that many consecutive Interactive grants, so
+//! document ingestion keeps making progress under sustained chat load.
 //!
 //! Admission reserves the *full* context (prompt + max_new) per sequence —
 //! the same per-user reservation the paper's Table 10 capacity math uses,
-//! which is exactly where thin keys admit more concurrent users.
+//! which is exactly where thin keys admit more concurrent users. A
+//! partially prefilled sequence holds its reservation across rounds (its
+//! chunks are already in the arena); cancelling it (failure, drain)
+//! releases blocks and arena rows on the same event.
 //!
 //! The scheduler is also the keeper of the unified accounting contract:
-//! after every prefill/decode it mirrors the engine's physically written
-//! rows into `KvCacheManager::commit_rows`, and a sequence's logical
-//! blocks and physical arena rows are always freed together on the same
-//! event ([`Scheduler::free_seq`]).
+//! after every prefill chunk and decode step it mirrors the engine's
+//! physically written rows into `KvCacheManager::commit_rows`, and a
+//! sequence's logical blocks and physical arena rows are always freed
+//! together on the same event ([`Scheduler::free_seq`]). The invariants
+//! are property-tested under randomized traffic in
+//! rust/tests/scheduler_props.rs.
 
 use std::collections::{BTreeMap, VecDeque};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::coordinator::engine::Engine;
 use crate::coordinator::kvcache::{KvCacheManager, SeqId};
-use crate::coordinator::sequence::{FinishReason, Sequence};
+use crate::coordinator::sequence::{FinishReason, Priority, Sequence};
+
+/// Round-scheduler knobs. `Default` reproduces the pre-chunking scheduler
+/// (monolithic prefill, one per round).
+#[derive(Clone, Copy, Debug)]
+pub struct SchedConfig {
+    /// Max concurrent sequences holding KV reservations (running +
+    /// in-flight prefills).
+    pub max_batch: usize,
+    /// Tokens one scheduling round may spend: each running sequence's
+    /// decode step costs 1, a prefill chunk costs `chunk_tokens`. Only
+    /// enforced in chunked mode; size it so a chunk fits next to the
+    /// expected decode load (see EXPERIMENTS.md §Chunked).
+    pub round_budget: usize,
+    /// `Some(c)` = chunked prefill with C-token chunks (must be an
+    /// exported chunk size, `manifest.prefill_chunks`); `None` =
+    /// monolithic prefill (legacy behaviour).
+    pub chunk_tokens: Option<usize>,
+    /// After this many consecutive chunk grants to Interactive prefills
+    /// while Batch work is pending, grant one Batch chunk (anti-
+    /// starvation; 0 disables the boost and Batch waits indefinitely).
+    pub interactive_weight: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> SchedConfig {
+        SchedConfig {
+            max_batch: 16,
+            round_budget: 128,
+            chunk_tokens: None,
+            interactive_weight: 4,
+        }
+    }
+}
+
+/// How many budget-stalled rounds an in-flight prefill tolerates before
+/// it advances anyway — the liveness escape for workloads whose decode
+/// lanes permanently exceed `round_budget`.
+const STALL_OVERRIDE_ROUNDS: usize = 4;
 
 pub struct Scheduler<'rt> {
     pub engine: Engine<'rt>,
     pub kv: KvCacheManager,
-    pub max_batch: usize,
+    pub cfg: SchedConfig,
     next_id: SeqId,
     waiting: VecDeque<Sequence>,
+    /// Admitted sequences whose prompt is partially ingested (chunked
+    /// mode only). They hold full KV reservations; at most one advances
+    /// per round, chosen by priority.
+    prefilling: BTreeMap<SeqId, Sequence>,
     running: BTreeMap<SeqId, Sequence>,
     pub finished: Vec<Sequence>,
+    /// Consecutive chunk grants to Interactive prefills while Batch work
+    /// was pending (anti-starvation counter).
+    interactive_grants: usize,
+    /// Consecutive rounds the pending prefill was budget-stalled.
+    stalled_rounds: usize,
+    /// Did the last `step()` make prefill/admission progress? Consulted
+    /// by `run_to_completion` so an advancing chunked prefill is never
+    /// mistaken for a stall (see `flush_unservable`).
+    progressed: bool,
+    /// `cfg.chunk_tokens` has been validated against the manifest's
+    /// exported chunk sizes (checked once, on the first chunked round).
+    chunk_checked: bool,
 }
 
 impl<'rt> Scheduler<'rt> {
+    /// Monolithic-prefill scheduler (pre-chunking behaviour) with the
+    /// given batch cap.
     pub fn new(engine: Engine<'rt>, kv: KvCacheManager, max_batch: usize)
         -> Scheduler<'rt> {
+        Self::with_config(
+            engine,
+            kv,
+            SchedConfig { max_batch, ..SchedConfig::default() },
+        )
+    }
+
+    pub fn with_config(engine: Engine<'rt>, kv: KvCacheManager,
+                       cfg: SchedConfig) -> Scheduler<'rt> {
         Scheduler {
             engine,
             kv,
-            max_batch,
+            cfg,
             next_id: 1,
             waiting: VecDeque::new(),
+            prefilling: BTreeMap::new(),
             running: BTreeMap::new(),
             finished: Vec::new(),
+            interactive_grants: 0,
+            stalled_rounds: 0,
+            progressed: false,
+            chunk_checked: false,
         }
     }
 
-    /// Enqueue a request. Returns its sequence id.
+    /// Enqueue an Interactive request. Returns its sequence id.
     pub fn submit(&mut self, prompt: Vec<i32>, max_new: usize, eos: Option<i32>)
         -> SeqId {
+        self.submit_seq(prompt, max_new, eos, Priority::Interactive, None)
+    }
+
+    /// Enqueue a request with an explicit priority class and optional
+    /// backdated arrival stamp (the trace arrival time, so TTFT charges
+    /// queueing delay incurred while the scheduler was mid-round).
+    pub fn submit_seq(&mut self, prompt: Vec<i32>, max_new: usize,
+                      eos: Option<i32>, priority: Priority,
+                      arrived: Option<std::time::Instant>) -> SeqId {
         let id = self.next_id;
         self.next_id += 1;
-        self.waiting.push_back(Sequence::new(id, prompt, max_new, eos));
+        let mut seq =
+            Sequence::new(id, prompt, max_new, eos).with_priority(priority);
+        if let Some(t) = arrived {
+            seq = seq.with_arrival(t);
+        }
+        self.waiting.push_back(seq);
         id
     }
 
@@ -61,8 +167,15 @@ impl<'rt> Scheduler<'rt> {
         self.running.len()
     }
 
+    /// In-flight chunked prefills (admitted, prompt partially ingested).
+    pub fn n_prefilling(&self) -> usize {
+        self.prefilling.len()
+    }
+
     pub fn has_work(&self) -> bool {
-        !self.waiting.is_empty() || !self.running.is_empty()
+        !self.waiting.is_empty()
+            || !self.running.is_empty()
+            || !self.prefilling.is_empty()
     }
 
     fn reservation(seq: &Sequence) -> usize {
@@ -71,26 +184,28 @@ impl<'rt> Scheduler<'rt> {
 
     /// Free a sequence's logical KV blocks and physical cache rows on the
     /// same event — the two accountings never disagree about liveness.
+    /// Also cancels any in-flight chunked prefill state.
     fn free_seq(&mut self, id: SeqId) {
         self.kv.release(id);
         self.engine.drop_seq(id);
     }
 
-    /// Admit from the waiting queue while budget and batch slots allow.
-    /// At most `max_prefills` prefills per round (prefill is expensive and
-    /// would starve decode otherwise).
+    /// Admit from the waiting queue while budget and batch slots allow
+    /// (monolithic mode). At most `max_prefills` prefills per round
+    /// (prefill is expensive and would starve decode otherwise).
+    /// Admission is priority-aware: the front of the Interactive class is
+    /// considered before any Batch request, and a blocked Interactive
+    /// head blocks Batch admission too (see [`Scheduler::next_admissible`]).
     fn admit(&mut self, max_prefills: usize) -> Result<usize> {
         let mut admitted = 0;
         while admitted < max_prefills
-            && self.running.len() < self.max_batch
+            && self.running.len() + self.prefilling.len() < self.cfg.max_batch
             && !self.waiting.is_empty()
         {
-            let need = Self::reservation(self.waiting.front().unwrap());
-            if !self.kv.can_admit(need) {
-                break; // head-of-line blocking by design (FIFO fairness)
-            }
-            let mut seq = self.waiting.pop_front().unwrap();
-            self.kv.allocate(seq.id, need)?;
+            let Some(idx) = self.next_admissible() else { break };
+            let mut seq = self.waiting.remove(idx).unwrap();
+            self.kv.allocate(seq.id, Self::reservation(&seq))?;
+            self.progressed = true;
             if self.engine.prefill(&mut seq).is_err() {
                 // roll the reservation back and fail the request visibly
                 // instead of leaking the blocks and dropping the sequence
@@ -112,10 +227,163 @@ impl<'rt> Scheduler<'rt> {
         Ok(admitted)
     }
 
-    /// One scheduling round: admit then one decode step over all running.
-    /// Returns the number of tokens generated this round.
+    /// Index of the next admissible waiting request: the front of the
+    /// highest-priority class present, if its reservation fits. A blocked
+    /// Interactive head gates ALL admission — Batch must not backfill the
+    /// freed capacity, or retirements would never accumulate enough free
+    /// blocks for a large Interactive request (head-of-line blocking by
+    /// design, now class-aware; an Interactive head that can never fit is
+    /// still evicted by `flush_unservable`, so this cannot wedge).
+    fn next_admissible(&self) -> Option<usize> {
+        for class in [Priority::Interactive, Priority::Batch] {
+            if let Some((idx, seq)) = self
+                .waiting
+                .iter()
+                .enumerate()
+                .find(|(_, s)| s.priority == class)
+            {
+                if self.kv.can_admit(Self::reservation(seq)) {
+                    return Some(idx);
+                }
+                return None;
+            }
+        }
+        None
+    }
+
+    /// One prefill-side round in chunked mode: pick the highest-priority
+    /// prefill (in-flight before waiting within a class, Interactive
+    /// before Batch, with the anti-starvation boost), admit it if still
+    /// waiting, and advance it by one chunk. Returns the prompt tokens
+    /// consumed (0 when there was nothing to do or admission failed).
+    fn prefill_round(&mut self, chunk: usize) -> Result<usize> {
+        // who wants to prefill?
+        let inflight_classes: Vec<Priority> =
+            self.prefilling.values().map(|s| s.priority).collect();
+        let has_slot =
+            self.running.len() + self.prefilling.len() < self.cfg.max_batch;
+        let waiting_admissible =
+            if has_slot { self.next_admissible() } else { None };
+        if inflight_classes.is_empty() && waiting_admissible.is_none() {
+            return Ok(0);
+        }
+        // budget: this round's decode spends one token per running lane
+        let decode_spend = self.running.len();
+        if decode_spend + chunk > self.cfg.round_budget
+            && !self.running.is_empty()
+        {
+            self.engine.metrics.chunk_stall_steps += 1;
+            self.stalled_rounds += 1;
+            if self.stalled_rounds <= STALL_OVERRIDE_ROUNDS {
+                return Ok(0);
+            }
+            // liveness escape: the decode load alone permanently exceeds
+            // the budget — advance the prefill anyway
+        }
+        self.stalled_rounds = 0;
+
+        // class choice: Interactive first, unless the anti-starvation
+        // boost fires for pending Batch work
+        let batch_pending = inflight_classes.contains(&Priority::Batch)
+            || self
+                .waiting
+                .iter()
+                .any(|s| s.priority == Priority::Batch);
+        let interactive_available =
+            inflight_classes.contains(&Priority::Interactive)
+                || waiting_admissible
+                    .map(|i| self.waiting[i].priority == Priority::Interactive)
+                    .unwrap_or(false);
+        let boost_batch = batch_pending
+            && self.cfg.interactive_weight > 0
+            && self.interactive_grants >= self.cfg.interactive_weight;
+        let class_order = if boost_batch || !interactive_available {
+            [Priority::Batch, Priority::Interactive]
+        } else {
+            [Priority::Interactive, Priority::Batch]
+        };
+
+        // pick: in-flight before waiting within the chosen class (finish
+        // what was started — bounds the number of half-ingested arenas)
+        let mut chosen: Option<Sequence> = None;
+        'pick: for class in class_order {
+            if let Some(&id) = self
+                .prefilling
+                .iter()
+                .find(|(_, s)| s.priority == class)
+                .map(|(id, _)| id)
+            {
+                chosen = Some(self.prefilling.remove(&id).unwrap());
+                break 'pick;
+            }
+            if let Some(idx) = waiting_admissible {
+                if self.waiting[idx].priority == class {
+                    let seq = self.waiting.remove(idx).unwrap();
+                    self.kv.allocate(seq.id, Self::reservation(&seq))?;
+                    chosen = Some(seq);
+                    break 'pick;
+                }
+            }
+        }
+        let Some(mut seq) = chosen else { return Ok(0) };
+        self.progressed = true;
+
+        // weighted-admission bookkeeping
+        if seq.priority == Priority::Interactive && batch_pending {
+            self.interactive_grants += 1;
+        } else {
+            self.interactive_grants = 0;
+        }
+
+        let before = self.engine.rows(seq.id);
+        match self.engine.prefill_chunk(&mut seq, chunk) {
+            Err(_) => {
+                // roll back reservation + any partial arena, fail visibly
+                self.free_seq(seq.id);
+                seq.finish(FinishReason::PrefillFailed);
+                self.finished.push(seq);
+                Ok(0)
+            }
+            Ok(done) => {
+                let now = self.engine.rows(seq.id);
+                self.kv.commit_rows(seq.id, now)?;
+                if !done {
+                    self.prefilling.insert(seq.id, seq);
+                } else if seq.is_finished() {
+                    self.free_seq(seq.id);
+                    self.finished.push(seq);
+                } else {
+                    self.running.insert(seq.id, seq);
+                }
+                Ok(now - before)
+            }
+        }
+    }
+
+    /// One scheduling round: prefill work (one monolithic admission, or
+    /// one budgeted chunk), then one decode step over all running.
+    /// Returns the number of decode tokens generated this round.
     pub fn step(&mut self) -> Result<usize> {
-        self.admit(1)?;
+        self.progressed = false;
+        match self.cfg.chunk_tokens {
+            None => {
+                self.admit(1)?;
+            }
+            Some(chunk) => {
+                if !self.chunk_checked {
+                    let sizes = self.engine.chunk_sizes();
+                    if !sizes.contains(&chunk) {
+                        bail!(
+                            "chunk_tokens {chunk} not exported for {} \
+                             (available: {sizes:?})",
+                            self.engine.cfg.name
+                        );
+                    }
+                    self.chunk_checked = true;
+                }
+                self.prefill_round(chunk)?;
+            }
+        }
         if self.running.is_empty() {
             return Ok(0);
         }
@@ -153,13 +421,19 @@ impl<'rt> Scheduler<'rt> {
         Some(id)
     }
 
-    /// Drain everything (closed-loop execution).
+    /// Drain everything (closed-loop execution). An advancing chunked
+    /// prefill counts as progress: a round that ingests a chunk but
+    /// finishes nothing must never trip the stall flush (the fix for the
+    /// eviction-during-prefill bug — see `flush_unservable`).
     pub fn run_to_completion(&mut self) -> Result<()> {
         let mut stall = 0usize;
         while self.has_work() {
             let before = self.finished.len();
             self.step()?;
-            if self.finished.len() == before && self.n_running() == 0 {
+            if self.finished.len() == before
+                && self.n_running() == 0
+                && !self.progressed
+            {
                 stall += 1;
                 if stall > 2 {
                     self.flush_unservable(stall);
@@ -174,8 +448,13 @@ impl<'rt> Scheduler<'rt> {
     /// Stall handling: reject only requests whose full reservation exceeds
     /// the *total* cache capacity — those can never be admitted, even into
     /// an empty cache. Requests that would fit once capacity frees stay
-    /// queued and keep retrying. A deep stall (should be unreachable with
-    /// exact accounting) rejects the head of line to guarantee progress.
+    /// queued and keep retrying; in particular, a request that does not
+    /// fit *now* because an in-flight chunked prefill still holds its
+    /// reservation is re-checked after that prefill completes and
+    /// retires, not evicted. A deep stall (should be unreachable with
+    /// exact accounting) rejects the head of line to guarantee progress —
+    /// but never while a chunked prefill is in flight, since its
+    /// completion will free budget at the next chunk boundary.
     fn flush_unservable(&mut self, stall: usize) {
         let cap = self.kv.total_token_capacity();
         let before = self.finished.len();
@@ -189,7 +468,10 @@ impl<'rt> Scheduler<'rt> {
             }
         }
         self.waiting = keep;
-        if self.finished.len() == before && stall > 5 {
+        if self.finished.len() == before
+            && stall > 5
+            && self.prefilling.is_empty()
+        {
             if let Some(mut seq) = self.waiting.pop_front() {
                 seq.finish(FinishReason::CacheOverflow);
                 self.finished.push(seq);

@@ -1,7 +1,9 @@
 //! Poisson request-arrival traces for the serving benchmarks (Table 11 and
 //! the capacity experiment): arrival times with exponential gaps, prompt
-//! and generation lengths from bounded log-normal-ish distributions.
+//! and generation lengths from bounded log-normal-ish distributions, and
+//! the mixed chat+doc trace exercising the chunked-prefill scheduler.
 
+use crate::coordinator::sequence::Priority;
 use crate::substrate::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -9,6 +11,9 @@ pub struct RequestSpec {
     pub arrive_s: f64,
     pub prompt_len: usize,
     pub gen_len: usize,
+    /// Scheduling class the router submits this request under
+    /// (Interactive by default; Batch marks document-ingestion traffic).
+    pub priority: Priority,
 }
 
 #[derive(Clone, Debug)]
@@ -50,6 +55,7 @@ pub fn poisson_trace(cfg: &TraceConfig, seed: u64) -> Vec<RequestSpec> {
             arrive_s: t,
             prompt_len: bounded_len(&mut rng, cfg.prompt_mean, cfg.prompt_max),
             gen_len: bounded_len(&mut rng, cfg.gen_mean, cfg.gen_max),
+            priority: Priority::Interactive,
         });
     }
     out
@@ -60,8 +66,44 @@ pub fn poisson_trace(cfg: &TraceConfig, seed: u64) -> Vec<RequestSpec> {
 pub fn closed_loop(n: usize, prompt_len: usize, gen_len: usize)
     -> Vec<RequestSpec> {
     (0..n)
-        .map(|_| RequestSpec { arrive_s: 0.0, prompt_len, gen_len })
+        .map(|_| RequestSpec {
+            arrive_s: 0.0,
+            prompt_len,
+            gen_len,
+            priority: Priority::Interactive,
+        })
         .collect()
+}
+
+/// The mixed chat+doc trace (ISSUE 3): `n_docs` Batch-class document
+/// ingestions (long prompt, short generation) arriving first, with
+/// `n_chats` Interactive chats (short prompt) arriving `chat_gap_s` apart
+/// starting at `chat_start_s` — i.e. WHILE the documents are being
+/// prefilled. This is the workload where chunked prefill bounds
+/// interactive TTFT: monolithically, every chat arriving mid-document
+/// waits out the whole document prompt; chunked, it waits at most one
+/// chunk boundary.
+pub fn mixed_chat_doc_trace(n_chats: usize, n_docs: usize,
+                            chat_start_s: f64, chat_gap_s: f64)
+    -> Vec<RequestSpec> {
+    let mut out = Vec::with_capacity(n_chats + n_docs);
+    for _ in 0..n_docs {
+        out.push(RequestSpec {
+            arrive_s: 0.0,
+            prompt_len: 120,
+            gen_len: 8,
+            priority: Priority::Batch,
+        });
+    }
+    for i in 0..n_chats {
+        out.push(RequestSpec {
+            arrive_s: chat_start_s + i as f64 * chat_gap_s,
+            prompt_len: 8,
+            gen_len: 8,
+            priority: Priority::Interactive,
+        });
+    }
+    out
 }
 
 #[cfg(test)]
@@ -96,6 +138,20 @@ mod tests {
         assert_eq!(tr.len(), 8);
         assert!(tr.iter().all(|r| r.arrive_s == 0.0 && r.prompt_len == 32
                               && r.gen_len == 16));
+    }
+
+    #[test]
+    fn mixed_trace_classes_and_ordering() {
+        let tr = mixed_chat_doc_trace(6, 2, 0.001, 0.0005);
+        assert_eq!(tr.len(), 8);
+        assert!(tr[..2].iter().all(|r| r.priority == Priority::Batch
+                                   && r.arrive_s == 0.0
+                                   && r.prompt_len > 64));
+        assert!(tr[2..].iter().all(|r| r.priority == Priority::Interactive
+                                   && r.arrive_s > 0.0
+                                   && r.prompt_len <= 16));
+        // chats arrive strictly after the docs, spaced apart
+        assert!(tr[2..].windows(2).all(|w| w[1].arrive_s > w[0].arrive_s));
     }
 
     #[test]

@@ -16,8 +16,9 @@ use thinkeys::coordinator::engine::Engine;
 use thinkeys::coordinator::kvcache::{KvCacheConfig, KvCacheManager};
 use thinkeys::coordinator::router::Router;
 use thinkeys::coordinator::sampling::Sampler;
-use thinkeys::coordinator::scheduler::Scheduler;
-use thinkeys::datagen::arrival::{poisson_trace, TraceConfig};
+use thinkeys::coordinator::scheduler::{SchedConfig, Scheduler};
+use thinkeys::datagen::arrival::{mixed_chat_doc_trace, poisson_trace,
+                                 TraceConfig};
 use thinkeys::experiments::{self, Opts};
 use thinkeys::runtime::{ParamStore, Runtime};
 use thinkeys::substrate::args::Args;
@@ -78,6 +79,19 @@ fn serve(argv: &[String]) -> Result<()> {
         .flag_f64("rate", Some(4.0), "arrival rate (req/s)")
         .flag_f64("budget-mb", Some(8.0), "KV cache budget (MB)")
         .flag_usize("max-batch", Some(16), "max concurrent sequences")
+        .flag_usize("chunk-tokens", Some(0),
+                    "chunked prefill: advance one C-token prompt chunk per \
+                     round, interleaved with decode (0 = monolithic \
+                     prefill; exported sizes: manifest prefill_chunks)")
+        .flag_usize("round-budget", Some(128),
+                    "tokens one scheduling round may spend across decode \
+                     lanes (1 each) and a prefill chunk (chunked mode)")
+        .flag_usize("interactive-weight", Some(4),
+                    "chunk grants to interactive prefills before a pending \
+                     batch prefill gets one (anti-starvation)")
+        .flag_bool("mixed",
+                   "serve the mixed chat+doc trace (batch-class documents \
+                    + interactive chats) instead of the poisson trace")
         .flag_bool("pallas", "use the Pallas-kernel decode artifacts")
         .parse(argv)?;
     let cfg_name = p.str("config")?;
@@ -95,18 +109,50 @@ fn serve(argv: &[String]) -> Result<()> {
         bytes_per_el_v: 2.0,
         budget_bytes: p.f64("budget-mb")? * 1e6,
     });
-    let sched = Scheduler::new(eng, kv, p.usize("max-batch")?);
+    let chunk = match p.usize("chunk-tokens")? {
+        0 => None,
+        c => {
+            if p.bool("pallas") {
+                bail!(
+                    "--chunk-tokens requires the ref prefill path (the \
+                     chunk artifacts have no pallas column); drop --pallas \
+                     or use --chunk-tokens 0"
+                );
+            }
+            let sizes = rt.manifest().chunks_for(&cfg_name);
+            if !sizes.contains(&c) {
+                bail!(
+                    "--chunk-tokens {c} not exported for {cfg_name} \
+                     (available: {sizes:?}; 0 = monolithic)"
+                );
+            }
+            Some(c)
+        }
+    };
+    let sched = Scheduler::with_config(eng, kv, SchedConfig {
+        max_batch: p.usize("max-batch")?,
+        round_budget: p.usize("round-budget")?,
+        chunk_tokens: chunk,
+        interactive_weight: p.usize("interactive-weight")?,
+    });
     let mut router = Router::new(sched);
-    let trace = poisson_trace(
-        &TraceConfig {
-            rate_per_s: p.f64("rate")?,
-            n_requests: p.usize("requests")?,
-            ..Default::default()
-        },
-        0,
-    );
+    let n = p.usize("requests")?;
+    let trace = if p.bool("mixed") {
+        // 1 doc per 4 requests, chats arriving while docs prefill
+        mixed_chat_doc_trace(n - n / 4, n / 4, 0.002, 0.0005)
+    } else {
+        poisson_trace(
+            &TraceConfig {
+                rate_per_s: p.f64("rate")?,
+                n_requests: n,
+                ..Default::default()
+            },
+            0,
+        )
+    };
     let report = router.run_trace(&trace, 0)?;
     println!("{}", report.report());
+    println!("{}", report.report_by_class());
     println!("\nengine:\n{}", router.sched.engine.metrics.report());
     let stats = router.sched.kv.stats();
     println!(

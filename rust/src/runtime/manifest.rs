@@ -105,6 +105,12 @@ pub struct Manifest {
     /// can size its arenas to the live context instead of max context.
     /// Empty for manifests exported before tiering (single max_seq tier).
     pub decode_tiers: BTreeMap<String, Vec<usize>>,
+    /// Chunked-prefill axis: serving config → exported chunk lengths C
+    /// (ascending). Each `prefill_{cfg}_c{C}` artifact processes C prompt
+    /// positions against the `prefill_seq`-length arena, resumably — the
+    /// scheduler interleaves one chunk per round with decode steps. Empty
+    /// for manifests exported before chunking (monolithic prefill only).
+    pub prefill_chunks: BTreeMap<String, Vec<usize>>,
     pub prefill_seq: usize,
     pub configs: BTreeMap<String, ConfigEntry>,
     pub artifacts: BTreeMap<String, ArtifactEntry>,
@@ -146,6 +152,17 @@ impl Manifest {
                     .map(|x| x.as_usize())
                     .collect::<Result<Vec<_>>>()?;
                 decode_tiers.insert(name.clone(), tiers);
+            }
+        }
+        let mut prefill_chunks = BTreeMap::new();
+        if let Some(pc) = v.opt("prefill_chunks") {
+            for (name, cv) in pc.as_obj()? {
+                let chunks = cv
+                    .as_arr()?
+                    .iter()
+                    .map(|x| x.as_usize())
+                    .collect::<Result<Vec<_>>>()?;
+                prefill_chunks.insert(name.clone(), chunks);
             }
         }
         let prefill_seq = v.get("prefill_seq")?.as_usize()?;
@@ -247,6 +264,7 @@ impl Manifest {
             adam,
             decode_batches,
             decode_tiers,
+            prefill_chunks,
             prefill_seq,
             configs,
             artifacts,
@@ -289,6 +307,19 @@ impl Manifest {
     pub fn prefill_name(&self, cfg: &str, pallas: bool) -> String {
         let suffix = if pallas { "_pallas" } else { "" };
         format!("prefill_{cfg}_s{}{suffix}", self.prefill_seq)
+    }
+
+    /// Chunk lengths exported for `cfg`'s resumable prefill artifacts,
+    /// ascending. Empty on manifests exported before chunking — the
+    /// engine then only offers the monolithic prefill path.
+    pub fn chunks_for(&self, cfg: &str) -> Vec<usize> {
+        self.prefill_chunks.get(cfg).cloned().unwrap_or_default()
+    }
+
+    /// `prefill_{cfg}_c{chunk}` — the resumable chunked-prefill artifact
+    /// (ref impl only; there is no `_pallas` chunk column, see aot.py).
+    pub fn prefill_chunk_name(&self, cfg: &str, chunk: usize) -> String {
+        format!("prefill_{cfg}_c{chunk}")
     }
 
     /// Arena-length tiers exported for `cfg`'s decode artifacts, ascending.
@@ -414,6 +445,57 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Chunk roundtrip: the manifest records the chunked-prefill axis,
+    /// every chunk name resolves to a real artifact whose recorded input
+    /// shapes carry the prefill_seq arena + (1, C) token window + the
+    /// start/length scalars, and whose outputs end in the per-chunk delta
+    /// rows the engine mirrors host-side.
+    #[test]
+    fn prefill_chunk_axis_resolves_for_every_chunk() {
+        let Some(m) = manifest() else { return };
+        for cfg_name in ["servefull", "servethin"] {
+            let cfg = m.config(cfg_name).unwrap();
+            let chunks = m.chunks_for(cfg_name);
+            assert!(!chunks.is_empty(), "no chunk axis for {cfg_name}");
+            assert!(chunks.windows(2).all(|w| w[0] < w[1]), "{chunks:?}");
+            for &c in &chunks {
+                let name = m.prefill_chunk_name(cfg_name, c);
+                let a = m
+                    .artifact(&name)
+                    .unwrap_or_else(|_| panic!("missing {name}"));
+                let by = |n: &str| {
+                    a.inputs.iter().find(|i| i.name == n).unwrap()
+                };
+                assert_eq!(
+                    by("k_cache").shape,
+                    vec![cfg.n_layers, m.prefill_seq, cfg.k_cache_dims]
+                );
+                assert_eq!(
+                    by("v_cache").shape,
+                    vec![cfg.n_layers, m.prefill_seq, cfg.v_cache_dims]
+                );
+                assert_eq!(by("tokens").shape, vec![1, c]);
+                assert!(by("start").shape.is_empty());
+                assert!(by("length").shape.is_empty());
+                assert_eq!(
+                    &a.outputs[a.outputs.len() - 2..],
+                    ["k_rows".to_string(), "v_rows".to_string()]
+                );
+            }
+        }
+    }
+
+    /// Pre-chunking manifests (no `prefill_chunks` key) resolve to an
+    /// empty chunk list — the scheduler then refuses chunked mode instead
+    /// of inventing artifact names.
+    #[test]
+    fn legacy_manifest_chunk_fallback() {
+        let Some(mut m) = manifest() else { return };
+        m.prefill_chunks.clear();
+        assert_eq!(m.chunks_for("servethin"), Vec::<usize>::new());
+        assert_eq!(m.chunks_for("no_such_config"), Vec::<usize>::new());
     }
 
     /// Pre-tier manifests (no `decode_tiers` key) keep resolving: a single

@@ -1,0 +1,385 @@
+//! Scheduler/engine invariants under randomized traffic (ISSUE 3).
+//!
+//! Three layers, all seeded through `thinkeys::proptest::property` so a
+//! failure reproduces from its printed seed:
+//!
+//! 1. Pure `LaneMap` fuzz (no artifacts): random interleavings of
+//!    join / retire / bucket-resize, asserting lane stability for
+//!    survivors and assignment consistency after every plan/apply.
+//! 2. Scheduler accounting invariants: randomized
+//!    submit/step/preempt/finish traffic (both monolithic and chunked
+//!    prefill modes), asserting after every event that
+//!    `KvCacheManager` mirrors `Engine::rows`, that admission/prefill
+//!    failures leak no KV reservation, and that freed blocks and arena
+//!    rows always go together.
+//! 3. Engine churn fuzz: random join/retire/tier-switch interleavings
+//!    against the live engine, asserting lane stability for survivors
+//!    and `sync_download_bytes == 0` throughout (extends the PR 2
+//!    steady-churn tripwire).
+
+use std::collections::BTreeMap;
+
+use thinkeys::coordinator::engine::Engine;
+use thinkeys::coordinator::kvcache::{KvCacheConfig, KvCacheManager};
+use thinkeys::coordinator::lanes::LaneMap;
+use thinkeys::coordinator::router::synth_prompt;
+use thinkeys::coordinator::sampling::Sampler;
+use thinkeys::coordinator::scheduler::{SchedConfig, Scheduler};
+use thinkeys::coordinator::sequence::{Priority, SeqId, Sequence};
+use thinkeys::proptest::property;
+use thinkeys::runtime::{ParamStore, Runtime};
+use thinkeys::substrate::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// 1. Pure LaneMap fuzz — no artifacts needed
+// ---------------------------------------------------------------------------
+
+/// Random interleavings of join / retire / resize against `LaneMap`:
+/// survivors keep their lanes across any non-resize change, assignments
+/// stay bijective, and joins only ever fill holes.
+#[test]
+fn lane_map_fuzz_random_interleavings() {
+    let buckets = [1usize, 2, 4, 8, 16, 32];
+    property("lane_map_fuzz", 200, |rng| {
+        let mut lm = LaneMap::new();
+        let mut live: Vec<SeqId> = Vec::new();
+        let mut next_id: SeqId = 1;
+        for _ in 0..40 {
+            match rng.below(3) {
+                // join 1..4 new sequences
+                0 => {
+                    let n = 1 + rng.below(4);
+                    for _ in 0..n {
+                        if live.len() >= 32 {
+                            break;
+                        }
+                        live.push(next_id);
+                        next_id += 1;
+                    }
+                }
+                // retire a random live sequence (zero-copy hole)
+                1 if !live.is_empty() => {
+                    let idx = rng.below(live.len());
+                    let id = live.swap_remove(idx);
+                    if lm.lane_of(id).is_some() && !lm.remove(id) {
+                        return Err(format!("remove({id}) lost a lane"));
+                    }
+                }
+                _ => {}
+            }
+            let bucket = buckets
+                .iter()
+                .copied()
+                .find(|&b| b >= live.len())
+                .unwrap();
+            // sometimes keep a larger bucket (hysteresis-style), so plans
+            // exercise both resize and in-place paths
+            let bucket = if rng.below(2) == 0 {
+                bucket.max(lm.bucket().min(32))
+            } else {
+                bucket
+            };
+            let before: BTreeMap<SeqId, usize> = live
+                .iter()
+                .filter_map(|&id| lm.lane_of(id).map(|l| (id, l)))
+                .collect();
+            let plan = lm.plan(&live, bucket);
+            let resized = plan.resize;
+            lm.apply(&plan);
+            // bijectivity: every live id has exactly one lane < bucket
+            let mut seen = vec![false; bucket];
+            for &id in &live {
+                let Some(lane) = lm.lane_of(id) else {
+                    return Err(format!("live {id} lost its lane"));
+                };
+                if lane >= bucket {
+                    return Err(format!("lane {lane} >= bucket {bucket}"));
+                }
+                if seen[lane] {
+                    return Err(format!("lane {lane} double-assigned"));
+                }
+                seen[lane] = true;
+            }
+            if lm.live() != live.len() {
+                return Err(format!(
+                    "live {} != expected {}", lm.live(), live.len()));
+            }
+            // lane stability: without a resize, survivors never move
+            if !resized {
+                for (&id, &lane) in &before {
+                    if lm.lane_of(id) != Some(lane) {
+                        return Err(format!(
+                            "survivor {id} moved {lane} -> {:?} \
+                             without a resize", lm.lane_of(id)));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Shared harness for the artifact-backed layers
+// ---------------------------------------------------------------------------
+
+fn runtime() -> Runtime {
+    Runtime::new().expect("run `make artifacts` first")
+}
+
+fn engine<'a>(rt: &'a Runtime, cfg: &str, seed: u64) -> Engine<'a> {
+    let params = ParamStore::init(rt.manifest().config(cfg).unwrap(), 42);
+    Engine::new(rt, cfg, params, false, Sampler::Greedy, seed).unwrap()
+}
+
+fn kv_for(rt: &Runtime, cfg: &str, budget_mb: f64) -> KvCacheManager {
+    let c = rt.manifest().config(cfg).unwrap();
+    KvCacheManager::new(KvCacheConfig {
+        n_layers: c.n_layers,
+        k_dims: c.k_cache_dims,
+        v_dims: c.v_cache_dims,
+        block_tokens: 16,
+        bytes_per_el_k: 2.0,
+        bytes_per_el_v: 2.0,
+        budget_bytes: budget_mb * 1e6,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// 2. Scheduler accounting invariants under randomized traffic
+// ---------------------------------------------------------------------------
+
+/// The unified-accounting contract, checked after EVERY event:
+/// - every admitted sequence (running or mid-chunked-prefill) has a block
+///   table whose `rows_written` mirrors `Engine::rows` exactly;
+/// - the block tables cover exactly the admitted sequences — a failed
+///   admission or prefill leaves no reservation behind;
+/// - after draining, every block and every arena row is free again
+///   (freed blocks and arena rows always go together).
+fn check_accounting(sched: &Scheduler) -> Result<(), String> {
+    let stats = sched.kv.stats();
+    let admitted = sched.n_running() + sched.n_prefilling();
+    if stats.seqs != admitted {
+        return Err(format!(
+            "kv tracks {} seqs, scheduler has {admitted} admitted",
+            stats.seqs
+        ));
+    }
+    let mut written = 0usize;
+    for id in 1..=64u64 {
+        match sched.kv.rows_written(id) {
+            Some(rows) => {
+                if rows != sched.engine.rows(id) {
+                    return Err(format!(
+                        "seq {id}: kv mirror {rows} != engine rows {}",
+                        sched.engine.rows(id)
+                    ));
+                }
+                written += rows;
+            }
+            None => {
+                if sched.engine.rows(id) != 0 {
+                    return Err(format!(
+                        "seq {id}: engine holds {} rows with no kv table",
+                        sched.engine.rows(id)
+                    ));
+                }
+            }
+        }
+    }
+    if stats.tokens_written != written {
+        return Err(format!(
+            "tokens_written {} != summed mirror {written}",
+            stats.tokens_written
+        ));
+    }
+    Ok(())
+}
+
+fn random_traffic(chunked: bool) {
+    let rt = runtime();
+    let chunk = *rt.manifest().chunks_for("servethin").first().unwrap();
+    property(
+        if chunked { "scheduler_invariants_chunked" }
+        else { "scheduler_invariants_monolithic" },
+        4,
+        |rng| {
+            let eng = engine(&rt, "servethin", rng.next_u64());
+            // small budget so admission blocking + stall flush both fire
+            let kv = kv_for(&rt, "servethin", 0.12);
+            let mut sched = Scheduler::with_config(eng, kv, SchedConfig {
+                max_batch: 6,
+                round_budget: 48,
+                chunk_tokens: if chunked { Some(chunk) } else { None },
+                interactive_weight: 2,
+            });
+            let vocab = sched.engine.cfg.vocab;
+            let mut submitted = 0usize;
+            for _ in 0..30 {
+                match rng.below(4) {
+                    0 => {
+                        // submit: mostly servable, sometimes a prompt that
+                        // exceeds the prefill bucket (PrefillFailed) or a
+                        // reservation that can never fit (CacheOverflow)
+                        let plen = match rng.below(8) {
+                            // exceeds the prefill bucket: PrefillFailed
+                            // after admission (reservation rolled back)
+                            0 => sched.engine.max_prompt() + 1,
+                            // exceeds TOTAL capacity: can never be
+                            // admitted, evicted by the stall flush
+                            1 => 250,
+                            _ => 1 + rng.below(60),
+                        };
+                        let prio = if rng.below(3) == 0 {
+                            Priority::Batch
+                        } else {
+                            Priority::Interactive
+                        };
+                        let prompt = synth_prompt(plen, vocab, rng);
+                        sched.submit_seq(
+                            prompt, 1 + rng.below(6), None, prio, None);
+                        submitted += 1;
+                    }
+                    1 if sched.n_running() > 0 => {
+                        let preempted = sched.preempt_one();
+                        if preempted.is_none() {
+                            return Err("preempt with running seqs".into());
+                        }
+                    }
+                    _ => {
+                        sched.step().map_err(|e| e.to_string())?;
+                    }
+                }
+                check_accounting(&sched)?;
+            }
+            sched.run_to_completion().map_err(|e| e.to_string())?;
+            check_accounting(&sched)?;
+            // drained: every reservation released, arena rows gone with it
+            if sched.kv.stats().seqs != 0 {
+                return Err("leaked block tables after drain".into());
+            }
+            if sched.kv.free_token_capacity()
+                != sched.kv.total_token_capacity()
+            {
+                return Err("leaked KV blocks after drain".into());
+            }
+            if sched.engine.parked_bytes() != 0 {
+                return Err("leaked parked arena rows after drain".into());
+            }
+            if sched.finished.len() != submitted {
+                return Err(format!(
+                    "{} submitted but {} finished",
+                    submitted,
+                    sched.finished.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn scheduler_invariants_random_traffic_monolithic() {
+    random_traffic(false);
+}
+
+#[test]
+fn scheduler_invariants_random_traffic_chunked() {
+    random_traffic(true);
+}
+
+// ---------------------------------------------------------------------------
+// 3. Engine churn fuzz — lane stability + the download tripwire
+// ---------------------------------------------------------------------------
+
+/// Random interleavings of join / retire / decode against the live
+/// engine, with prompt lengths straddling tier boundaries so tier
+/// switches and bucket resizes both fire: survivors' lanes never move
+/// except across a resize/tier change the plan reports, and the
+/// delta-synced mirror never downloads a full arena
+/// (`sync_download_bytes == 0`, the PR 2 steady-churn tripwire).
+#[test]
+fn engine_churn_fuzz_lane_stable_and_download_free() {
+    let rt = runtime();
+    property("engine_churn_fuzz", 3, |rng| {
+        let mut eng = engine(&rt, "servethin", rng.next_u64());
+        let vocab = eng.cfg.vocab;
+        let mut live: Vec<Sequence> = Vec::new();
+        let mut next_id: SeqId = 1;
+        for _ in 0..25 {
+            match rng.below(3) {
+                0 if live.len() < 8 => {
+                    // join: prompt length drawn across tier boundaries
+                    let plen = 1 + rng.below(100);
+                    let mut seq = Sequence::new(
+                        next_id,
+                        synth_prompt(plen, vocab, rng),
+                        2 + rng.below(20),
+                        None,
+                    );
+                    next_id += 1;
+                    eng.prefill(&mut seq).map_err(|e| e.to_string())?;
+                    live.push(seq);
+                }
+                1 if !live.is_empty() => {
+                    // retire a random live sequence mid-flight
+                    let idx = rng.below(live.len());
+                    let seq = live.swap_remove(idx);
+                    eng.drop_seq(seq.id);
+                }
+                _ => {}
+            }
+            if live.is_empty() {
+                continue;
+            }
+            let lanes_before: BTreeMap<SeqId, usize> = live
+                .iter()
+                .filter_map(|s| eng.lane_of(s.id).map(|l| (s.id, l)))
+                .collect();
+            let (bucket_before, tier_before) =
+                (eng.current_bucket(), eng.current_tier());
+            let mut refs: Vec<&mut Sequence> =
+                live.iter_mut().filter(|s| !s.is_finished()).collect();
+            if refs.is_empty() {
+                continue;
+            }
+            eng.decode_step(&mut refs).map_err(|e| e.to_string())?;
+            drop(refs);
+            if eng.metrics.sync_download_bytes != 0 {
+                return Err(format!(
+                    "full-arena download after churn: {} bytes",
+                    eng.metrics.sync_download_bytes
+                ));
+            }
+            // lane stability: unless the arena itself was rebuilt (bucket
+            // resize or tier switch), survivors never move lanes
+            if eng.current_tier() == tier_before
+                && eng.current_bucket() == bucket_before
+            {
+                for s in live.iter().filter(|s| !s.is_finished()) {
+                    if let Some(&was) = lanes_before.get(&s.id) {
+                        if eng.lane_of(s.id) != Some(was) {
+                            return Err(format!(
+                                "survivor {} moved lane {was} -> {:?} \
+                                 without a resize or tier switch",
+                                s.id,
+                                eng.lane_of(s.id)
+                            ));
+                        }
+                    }
+                }
+            }
+            // retire finished sequences the way the scheduler does
+            let done: Vec<SeqId> = live
+                .iter()
+                .filter(|s| s.is_finished())
+                .map(|s| s.id)
+                .collect();
+            for id in done {
+                eng.drop_seq(id);
+                live.retain(|s| s.id != id);
+            }
+        }
+        Ok(())
+    });
+}

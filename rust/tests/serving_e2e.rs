@@ -6,8 +6,9 @@ use thinkeys::coordinator::engine::Engine;
 use thinkeys::coordinator::kvcache::{KvCacheConfig, KvCacheManager};
 use thinkeys::coordinator::router::{synth_prompt, Router};
 use thinkeys::coordinator::sampling::Sampler;
-use thinkeys::coordinator::scheduler::Scheduler;
-use thinkeys::coordinator::sequence::{FinishReason, SeqState, Sequence};
+use thinkeys::coordinator::scheduler::{SchedConfig, Scheduler};
+use thinkeys::coordinator::sequence::{FinishReason, Priority, SeqState,
+                                      Sequence};
 use thinkeys::datagen::arrival::closed_loop;
 use thinkeys::datagen::Batch;
 use thinkeys::model::surgery;
@@ -469,6 +470,162 @@ fn tier_shrinks_after_long_sequence_retires() {
     assert_eq!(eng.metrics.sync_download_bytes, 0);
     assert_eq!(chat.generated, alone,
                "tier shrink corrupted the survivor's cache");
+}
+
+/// THE chunked-prefill parity acceptance (ISSUE 3): for EVERY chunk size
+/// in the manifest — including a prompt not divisible by the chunk and
+/// one shorter than it — chunked prefill must produce BIT-IDENTICAL
+/// last-logits and parked mirror rows to the single-shot prefill, and the
+/// decode generation that follows must be identical token for token.
+#[test]
+fn chunked_prefill_matches_single_shot_bit_exact() {
+    let rt = runtime();
+    for cfg_name in ["servefull", "servethin"] {
+        let cfg = rt.manifest().config(cfg_name).unwrap().clone();
+        let chunks = rt.manifest().chunks_for(cfg_name);
+        assert!(!chunks.is_empty(), "no chunk artifacts for {cfg_name}");
+        for plen in [8usize, 37, 128] {
+            let mut rng = Rng::new(plen as u64);
+            let prompt = synth_prompt(plen, cfg.vocab, &mut rng);
+
+            // single-shot reference
+            let mut eng_a = engine(&rt, cfg_name, 0);
+            let mut sa = Sequence::new(1, prompt.clone(), 6, None);
+            eng_a.prefill(&mut sa).unwrap();
+            let logits_a = eng_a.last_prefill_logits().unwrap().data.clone();
+            let (len_a, k_a, v_a) = {
+                let (l, k, v) = eng_a.parked_snapshot(1).unwrap();
+                (l, k.to_vec(), v.to_vec())
+            };
+            while !sa.is_finished() {
+                let mut seqs = vec![&mut sa];
+                eng_a.decode_step(&mut seqs).unwrap();
+            }
+
+            for &c in &chunks {
+                let mut eng_b = engine(&rt, cfg_name, 0);
+                let mut sb = Sequence::new(1, prompt.clone(), 6, None);
+                let mut calls = 0usize;
+                loop {
+                    let done = eng_b.prefill_chunk(&mut sb, c).unwrap();
+                    calls += 1;
+                    if done {
+                        break;
+                    }
+                    // mid-prefill, the unified accounting sees the
+                    // chunked progress, not 0 and not the full prompt
+                    assert_eq!(eng_b.prefill_progress(1), Some(calls * c));
+                    assert_eq!(eng_b.rows(1), calls * c);
+                }
+                assert_eq!(calls, plen.div_ceil(c), "{cfg_name} c={c}");
+                assert_eq!(eng_b.prefill_progress(1), None);
+                assert_eq!(eng_b.rows(1), plen);
+                assert_eq!(
+                    eng_b.last_prefill_logits().unwrap().data, logits_a,
+                    "{cfg_name} plen={plen} c={c}: logits diverged"
+                );
+                let (len_b, k_b, v_b) = eng_b.parked_snapshot(1).unwrap();
+                assert_eq!(len_b, len_a);
+                assert!(k_b == k_a.as_slice() && v_b == v_a.as_slice(),
+                        "{cfg_name} plen={plen} c={c}: mirror rows diverged");
+                // same first token, same decode generation afterwards
+                while !sb.is_finished() {
+                    let mut seqs = vec![&mut sb];
+                    eng_b.decode_step(&mut seqs).unwrap();
+                }
+                assert_eq!(sb.generated, sa.generated,
+                           "{cfg_name} plen={plen} c={c}: generation \
+                            diverged after chunked prefill");
+            }
+        }
+    }
+}
+
+/// Priority preemption at the chunk boundary: a chat arriving while a
+/// document is mid-ingestion gets the next chunk grant (and its first
+/// token) while the document prefill stays parked — the document resumes
+/// afterwards and completes untouched.
+#[test]
+fn interactive_preempts_batch_at_chunk_boundary() {
+    let rt = runtime();
+    let eng = engine(&rt, "servethin", 0);
+    let kv = kv_for(&rt, "servethin", 4.0);
+    let chunk = *rt.manifest().chunks_for("servethin").first().unwrap();
+    let mut sched = Scheduler::with_config(eng, kv, SchedConfig {
+        max_batch: 8,
+        round_budget: 64,
+        chunk_tokens: Some(chunk),
+        interactive_weight: 4,
+    });
+    let vocab = sched.engine.cfg.vocab;
+    let mut rng = Rng::new(31);
+    let doc_prompt = synth_prompt(chunk * 4, vocab, &mut rng);
+    let doc = sched.submit_seq(doc_prompt, 4, None, Priority::Batch, None);
+    sched.step().unwrap(); // doc ingests chunk 1 of 4
+    assert_eq!(sched.n_prefilling(), 1);
+    assert_eq!(sched.engine.prefill_progress(doc), Some(chunk));
+
+    let chat_prompt = synth_prompt(chunk / 2, vocab, &mut rng);
+    let chat = sched
+        .submit_seq(chat_prompt, 4, None, Priority::Interactive, None);
+    sched.step().unwrap();
+    // the chunk grant went to the chat (admission + single-chunk prefill
+    // + first decode step), NOT to the in-flight document
+    assert_eq!(sched.n_running(), 1, "chat not decoding");
+    assert_eq!(sched.n_prefilling(), 1, "doc prefill was not parked");
+    assert_eq!(sched.engine.prefill_progress(doc), Some(chunk),
+               "doc advanced past the chunk boundary during preemption");
+
+    sched.run_to_completion().unwrap();
+    let by_id = |id| {
+        sched.finished.iter().find(|s| s.id == id).unwrap().clone()
+    };
+    let (doc_seq, chat_seq) = (by_id(doc), by_id(chat));
+    assert_eq!(chat_seq.generated.len(), 4);
+    assert_eq!(doc_seq.generated.len(), 4);
+    assert!(chat_seq.first_token_at.unwrap() < doc_seq.first_token_at.unwrap(),
+            "interactive chat did not get its first token before the doc");
+    assert!(sched.engine.metrics.prefill_chunks >= 5);
+    assert_eq!(sched.kv.stats().seqs, 0);
+}
+
+/// The stall-flush fix (ISSUE 3 satellite): a waiting request that does
+/// not fit only because an in-flight chunked prefill still holds its
+/// reservation must NOT be evicted as "never fitting" — it is re-checked
+/// once the prefill completes and retires, and then serves normally.
+#[test]
+fn waiting_request_survives_inflight_prefill_pressure() {
+    let rt = runtime();
+    let eng = engine(&rt, "servethin", 0);
+    // capacity 192 tokens: doc reserves 128, chat needs 80 — the chat
+    // fits the cache alone but NOT next to the doc
+    let kv = kv_for(&rt, "servethin", 0.0922);
+    assert_eq!(kv.total_token_capacity(), 192);
+    let mut sched = Scheduler::with_config(eng, kv, SchedConfig {
+        max_batch: 8,
+        round_budget: 64,
+        chunk_tokens: Some(16),
+        interactive_weight: 4,
+    });
+    let vocab = sched.engine.cfg.vocab;
+    let mut rng = Rng::new(5);
+    let doc = sched.submit_seq(
+        synth_prompt(120, vocab, &mut rng), 8, None, Priority::Batch, None);
+    sched.step().unwrap(); // doc admitted, chunk 1 in flight
+    assert_eq!(sched.n_prefilling(), 1);
+    let chat = sched.submit_seq(
+        synth_prompt(72, vocab, &mut rng), 8, None,
+        Priority::Interactive, None);
+    sched.run_to_completion().unwrap();
+    for id in [doc, chat] {
+        let seq = sched.finished.iter().find(|s| s.id == id).unwrap();
+        assert_eq!(seq.generated.len(), 8,
+                   "request {id} was evicted instead of served: {:?}",
+                   seq.state);
+    }
+    assert_eq!(sched.kv.stats().seqs, 0);
+    assert_eq!(sched.kv.free_token_capacity(),
+               sched.kv.total_token_capacity());
 }
 
 /// A failed prefill must roll back its KV reservation (no leak) and fail
