@@ -2,7 +2,9 @@ PYTHON ?= python3
 
 # Export every entry point to HLO text + manifest.json (incremental: only
 # re-lowers artifacts whose content hash changed). This is the only python
-# that ever runs; the rust binary is self-contained afterwards.
+# that ever runs; the rust binary is self-contained afterwards. The grid
+# includes the q8 decode/prefill-chunk columns (manifest kv_quant) that
+# `thinkeys serve --kv-quant q8` and the quantized benches require.
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
 

@@ -22,13 +22,14 @@ import jax
 import jax.numpy as jnp
 from jax._src.lib import xla_client as xc
 
-from .configs import (REGISTRY, DECODE_BATCHES, PREFILL_CHUNKS, PREFILL_SEQ,
-                      config_dict, decode_tiers, train_geometry)
+from .configs import (KV_QUANTS, REGISTRY, DECODE_BATCHES, PREFILL_CHUNKS,
+                      PREFILL_SEQ, config_dict, decode_tiers, train_geometry)
 from . import model as M
 from .kernels.asym_attention import vmem_report
 
 F32 = jnp.float32
 I32 = jnp.int32
+I8 = jnp.int8
 
 
 def to_hlo_text(lowered) -> str:
@@ -62,9 +63,12 @@ def artifact_plan():
 
     def add(kind, cfg, **geom):
         tag = "_".join(f"{k}{v}" for k, v in sorted(geom.items())
-                       if k not in ("impl",))
+                       if k not in ("impl", "quant"))
         impl = geom.get("impl", "ref")
+        quant = geom.get("quant", "fp32")
         suffix = f"_{tag}" if tag else ""
+        if quant != "fp32":
+            suffix += f"_{quant}"
         if impl != "ref":
             suffix += f"_{impl}"
         plan.append((f"{kind}_{cfg.name}{suffix}", kind, cfg, geom))
@@ -119,15 +123,25 @@ def artifact_plan():
         # Resumable chunked-prefill artifacts (ref impl only; the chunk
         # attention is a C x S window the Pallas prefill kernel does not
         # cover): prefill_{cfg}_c{C}, recorded as manifest prefill_chunks.
+        # The q8 column quantizes rows on write so the engine can chunk a
+        # document straight into an int8 arena (manifest kv_quant).
         for c in PREFILL_CHUNKS:
             add("prefill", cfg, c=c)
+            add("prefill", cfg, c=c, quant="q8")
+        # Decode grid: (batch bucket x context tier x kv quant). The
+        # monolithic prefill stays fp32-only: prefill is compute-bound
+        # (§12), so quantization there buys nothing — the engine
+        # quantizes parked rows host-side when serving in q8 mode.
         for b in DECODE_BATCHES:
             for n in decode_tiers(cfg.max_seq):
-                add("decode", cfg, b=b, n=n)
-        # Pallas-kernel path (Layer 1 lowered into the same HLO).
+                for q in KV_QUANTS:
+                    add("decode", cfg, b=b, n=n, quant=q)
+        # Pallas-kernel path (Layer 1 lowered into the same HLO), both
+        # quant columns at the b=8 bucket.
         add("prefill", cfg, s=PREFILL_SEQ, impl="pallas")
         for n in decode_tiers(cfg.max_seq):
-            add("decode", cfg, b=8, n=n, impl="pallas")
+            for q in KV_QUANTS:
+                add("decode", cfg, b=8, n=n, quant=q, impl="pallas")
     return plan
 
 
@@ -165,6 +179,17 @@ def build_entry(kind, cfg, geom):
         c, s = geom["c"], PREFILL_SEQ
         kd = cfg.k_cache_dims()
         vd = cfg.v_cache_dims()
+        if geom.get("quant", "fp32") == "q8":
+            fn = M.make_prefill_chunk_q8(cfg, c, s, impl=impl)
+            specs = _param_arg_specs(cfg) + [
+                _spec((cfg.n_layers, s, kd), I8), _spec((cfg.n_layers, s)),
+                _spec((cfg.n_layers, s, vd), I8), _spec((cfg.n_layers, s)),
+                _spec((1, c), I32), _spec((), I32), _spec((), I32)]
+            return fn, specs, \
+                pnames + ["k_cache", "k_scale", "v_cache", "v_scale",
+                          "tokens", "start", "length"], \
+                ["last_logits", "k_cache", "k_scale", "v_cache", "v_scale",
+                 "k_rows", "k_row_scale", "v_rows", "v_row_scale"]
         fn = M.make_prefill_chunk(cfg, c, s, impl=impl)
         specs = _param_arg_specs(cfg) + [
             _spec((cfg.n_layers, s, kd)), _spec((cfg.n_layers, s, vd)),
@@ -183,6 +208,19 @@ def build_entry(kind, cfg, geom):
         kd = cfg.k_cache_dims()
         vd = cfg.v_cache_dims()
         n = geom.get("n", cfg.max_seq)
+        if geom.get("quant", "fp32") == "q8":
+            fn = M.make_decode_q8(cfg, b, n=n, impl=impl)
+            specs = _param_arg_specs(cfg) + [
+                _spec((cfg.n_layers, b, n, kd), I8),
+                _spec((cfg.n_layers, b, n)),
+                _spec((cfg.n_layers, b, n, vd), I8),
+                _spec((cfg.n_layers, b, n)),
+                _spec((b,), I32), _spec((b,), I32)]
+            return fn, specs, \
+                pnames + ["k_cache", "k_scale", "v_cache", "v_scale",
+                          "tokens", "pos"], \
+                ["logits", "k_cache", "k_scale", "v_cache", "v_scale",
+                 "k_rows", "k_row_scale", "v_rows", "v_row_scale"]
         fn = M.make_decode(cfg, b, n=n, impl=impl)
         specs = _param_arg_specs(cfg) + [
             _spec((cfg.n_layers, b, n, kd)), _spec((cfg.n_layers, b, n, vd)),
@@ -271,6 +309,15 @@ def main():
             for name in sorted({a["config"] for a in artifacts
                                 if a["kind"] == "prefill"
                                 and "c" in a["geom"]})},
+        # KV-cache quantization axis: serving config -> exported quant
+        # modes. Manifests without this key are pre-quantization — the
+        # rust Manifest::kv_quants_for falls back to ["fp32"] and the
+        # engine refuses --kv-quant q8 rather than inventing names.
+        "kv_quant": {
+            name: list(KV_QUANTS)
+            for name in sorted({a["config"] for a in artifacts
+                                if a["kind"] == "decode"
+                                and a["geom"].get("quant") == "q8"})},
         "configs": configs_out,
         "artifacts": artifacts,
     }

@@ -174,6 +174,16 @@ PREFILL_SEQ = 128  # prompt bucket for serving prefill (B=1)
 # against decode stall (C large -> longer pause at each chunk boundary).
 PREFILL_CHUNKS = (16, 32, 64)
 
+# KV-cache quantization axis (ISSUE 4): besides the fp32 grid, serving
+# configs export `_q8` variants of every decode artifact and every
+# prefill-chunk artifact. q8 arenas are int8 with one fp32 scale per
+# (layer, lane, position) cache row; rows are quantized on write inside
+# the artifact and attention is dequant-fused (never materializes an fp32
+# arena). Decode is bandwidth-bound (Eq. 10), so the 4x payload shrink
+# composes multiplicatively with the r/d thin-key factor — the paper's
+# "up to 16x combined key cache compression" claim made executable.
+KV_QUANTS = ("fp32", "q8")
+
 # Smallest decode cache-arena tier. Decode artifacts are specialized on a
 # second axis besides the batch bucket: the arena length N, in powers of
 # two from here up to the config's max_seq. The engine picks the smallest

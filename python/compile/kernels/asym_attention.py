@@ -228,6 +228,100 @@ def pallas_attention_decode(q, k_cache, v_cache, pos, block_k=64,
     return out
 
 
+def _decode_kernel_q8(q_ref, k_ref, ks_ref, v_ref, vs_ref, bias_ref, o_ref,
+                      m_ref, l_ref, *, scale, n_k_blocks):
+    """q8 decode tile: K/V arrive as raw int8 tiles plus (block_k,) per-row
+    fp32 scales. The dequant is fused into the online-softmax loop — the
+    K scale lands on the scalar score (q·k_q)·s and the V scale folds into
+    the softmax weights before the PV dot — so the fp32 arena never
+    materializes in VMEM (nor HBM): only the int8 tiles stream."""
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[0, 0]                              # (dqk,) f32
+    k = k_ref[0, 0].astype(q.dtype)              # (block_k, dqk) <- int8
+    ks = ks_ref[0]                               # (block_k,) f32
+    v = v_ref[0, 0].astype(q.dtype)              # (block_k, dv)  <- int8
+    vs = vs_ref[0]                               # (block_k,) f32
+    s = jnp.dot(k, q) * ks * scale + bias_ref[0]  # (block_k,)
+
+    m_prev = m_ref[0, 0]
+    l_prev = l_ref[0, 0]
+    o_prev = o_ref[0, 0]
+    m_new = jnp.maximum(m_prev, s.max())
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + p.sum()
+    o_new = o_prev * alpha + jnp.dot(p * vs, v)
+    m_ref[0, 0] = m_new
+    l_ref[0, 0] = l_new
+
+    @pl.when(ik == n_k_blocks - 1)
+    def _final():
+        o_ref[0, 0] = o_new / l_new
+
+    @pl.when(ik != n_k_blocks - 1)
+    def _mid():
+        o_ref[0, 0] = o_new
+
+
+def pallas_attention_decode_q8(q, k_cache_q, k_scale, v_cache_q, v_scale,
+                               pos, block_k=64, interpret=True):
+    """One-token decode attention streaming INT8 key/value tiles.
+
+    q: (B, H, dqk) f32; k_cache_q: (B, Hkv, N, dqk) int8; k_scale: (B, N)
+    f32 (one scale per cache row, shared across kv heads); v likewise.
+    pos: (B,) int32 current position (inclusive). -> (B, H, dv) f32.
+
+    The K tile is dqk/dv·4x smaller than a full-dim fp32 tile — the
+    thin-keys bandwidth win and the int8 win compose in the same
+    BlockSpec (paper §6: "compose with GQA and quantization").
+    """
+    b, h, dqk = q.shape
+    hkv, n = k_cache_q.shape[1], k_cache_q.shape[2]
+    dv = v_cache_q.shape[3]
+    group = h // hkv
+    block_k = min(block_k, n)
+    assert n % block_k == 0, (n, block_k)
+    nk = n // block_k
+    scale = 1.0 / float(dqk) ** 0.5
+    bias = jnp.where(jnp.arange(n)[None, :] <= pos[:, None],
+                     0.0, NEG_INF).astype(q.dtype)
+
+    kernel = functools.partial(_decode_kernel_q8, scale=scale, n_k_blocks=nk)
+    out, _, _ = pl.pallas_call(
+        kernel,
+        grid=(b, h, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, dqk), lambda ib, ih, ik: (ib, ih, 0)),
+            pl.BlockSpec((1, 1, block_k, dqk),
+                         lambda ib, ih, ik: (ib, ih // group, ik, 0)),
+            pl.BlockSpec((1, block_k), lambda ib, ih, ik: (ib, ik)),
+            pl.BlockSpec((1, 1, block_k, dv),
+                         lambda ib, ih, ik: (ib, ih // group, ik, 0)),
+            pl.BlockSpec((1, block_k), lambda ib, ih, ik: (ib, ik)),
+            pl.BlockSpec((1, block_k), lambda ib, ih, ik: (ib, ik)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, dv), lambda ib, ih, ik: (ib, ih, 0)),
+            pl.BlockSpec((1, 1), lambda ib, ih, ik: (ib, ih)),
+            pl.BlockSpec((1, 1), lambda ib, ih, ik: (ib, ih)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, dv), q.dtype),
+            jax.ShapeDtypeStruct((b, h), q.dtype),
+            jax.ShapeDtypeStruct((b, h), q.dtype),
+        ],
+        interpret=interpret,
+    )(q, k_cache_q, k_scale, v_cache_q, v_scale, bias)
+    return out
+
+
 def vmem_report(cfg_name, b, h, hkv, s, dqk, dv, block_q=32, block_k=32,
                 bytes_per_el=2):
     """Estimate per-core VMEM residency and MXU utilization for the prefill

@@ -10,6 +10,30 @@ import jax.numpy as jnp
 
 NEG_INF = -1e30
 
+# Symmetric per-row int8 quantization (ISSUE 4). A cache "row" is the full
+# flat trailing dim of one (layer, lane, position) entry — KD or VD
+# elements sharing ONE fp32 scale. Zero rows get the epsilon scale (and
+# quantize to exactly 0); the floor also keeps x/scale finite. The rust
+# twin (substrate::tensor::quantize_rows_q8) mirrors these exact ops —
+# same eps, same round-half-to-even — so host-quantized rows (monolithic
+# prefill park) and device-quantized rows (decode/chunk artifacts) agree.
+Q8_SCALE_EPS = 1e-12
+
+
+def quantize_rows(x):
+    """x (..., D) f32 -> (q (..., D) int8, scale (...,) f32) with
+    symmetric per-row scale max|row|/127; worst-case |x - q*scale| <=
+    scale/2 elementwise (see python/tests/test_kernel.py)."""
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scale = jnp.maximum(amax / 127.0, Q8_SCALE_EPS).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_rows(q, scale):
+    """(q (..., D) int8, scale (...,) f32) -> (..., D) f32."""
+    return q.astype(jnp.float32) * scale[..., None]
+
 
 def repeat_kv(x, group):
     """(B, Hkv, S, D) -> (B, Hkv*group, S, D) by repeating each kv head."""
@@ -72,6 +96,57 @@ def attention_prefill_chunk(q, k_cache, v_cache, qpos):
     w = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
     w = w / w.sum(axis=-1, keepdims=True)
     return jnp.einsum("bhqk,bhkd->bhqd", w, v)
+
+
+def attention_prefill_chunk_q8(q, k_cache_q, k_scale, v_cache_q, v_scale,
+                               qpos):
+    """Dequant-fused chunked-prefill attention over int8 arenas.
+
+    q: (B, H, C, dqk) f32; k_cache_q: (B, Hkv, N, dqk) int8;
+    k_scale: (B, N) f32 — ONE scale per cache row, shared across kv heads
+    (the row is the flat KD entry); v_cache_q/v_scale likewise.
+    Returns (B, H, C, dv) f32.
+
+    The dequant never touches the arenas as fp32 *values*: scores are
+    computed on the raw int8 codes and the per-row scale is applied to the
+    scalar score (q·k_q_j)·s_j, and the V scales fold into the softmax
+    weights before the PV contraction — algebraically identical to
+    attending over dequantized rows (the oracle equality pinned by
+    test_kernel.py::test_fused_q8_equals_dequant_then_attend).
+    """
+    b, h, c, dqk = q.shape
+    n = k_cache_q.shape[2]
+    group = h // k_cache_q.shape[1]
+    k = repeat_kv(k_cache_q.astype(q.dtype), group)
+    v = repeat_kv(v_cache_q.astype(q.dtype), group)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) \
+        * k_scale[:, None, None, :] / jnp.sqrt(jnp.asarray(dqk, q.dtype))
+    ki = jnp.arange(n)[None, None, None, :]
+    scores = jnp.where(ki <= qpos[:, None, :, None], scores, NEG_INF)
+    w = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", w * v_scale[:, None, None, :], v)
+
+
+def attention_decode_q8(q, k_cache_q, k_scale, v_cache_q, v_scale, pos):
+    """Dequant-fused single-token decode attention over int8 arenas.
+
+    q: (B, H, dqk) f32; k_cache_q: (B, Hkv, N, dqk) int8; k_scale: (B, N)
+    f32 per-row scales (shared across kv heads); v likewise.
+    Returns (B, H, dv) f32. See attention_prefill_chunk_q8 on the fusion.
+    """
+    b, h, dqk = q.shape
+    n = k_cache_q.shape[2]
+    group = h // k_cache_q.shape[1]
+    k = repeat_kv(k_cache_q.astype(q.dtype), group)
+    v = repeat_kv(v_cache_q.astype(q.dtype), group)
+    scores = jnp.einsum("bhd,bhkd->bhk", q, k) \
+        * k_scale[:, None, :] / jnp.sqrt(jnp.asarray(dqk, q.dtype))
+    ki = jnp.arange(n)[None, None, :]
+    scores = jnp.where(ki <= pos[:, None, None], scores, NEG_INF)
+    w = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhk,bhkd->bhd", w * v_scale[:, None, :], v)
 
 
 def attention_decode(q, k_cache, v_cache, pos):

@@ -28,7 +28,8 @@ import jax.numpy as jnp
 from .configs import ModelConfig
 from .kernels import ref
 from .kernels.asym_attention import (pallas_attention_prefill,
-                                     pallas_attention_decode)
+                                     pallas_attention_decode,
+                                     pallas_attention_decode_q8)
 
 # AdamW constants (baked into the train-step artifacts; lr/step are args).
 ADAM_B1 = 0.9
@@ -439,6 +440,80 @@ def make_prefill_chunk(cfg: ModelConfig, chunk, seq, impl="ref"):
     return fn
 
 
+def make_prefill_chunk_q8(cfg: ModelConfig, chunk, seq, impl="ref"):
+    """Resumable chunked prefill over QUANTIZED arenas (ISSUE 4): the
+    int8 twin of :func:`make_prefill_chunk`. New rows are computed in
+    fp32, quantized on write (per-row symmetric int8, one fp32 scale per
+    (layer, position) cache row), and the chunk's attention reads the
+    quantized arena through the dequant-fused kernel — so the chunk sees
+    exactly the same values a later decode step will see.
+
+    args: *params, k_cache (L, seq, KD) i8, k_scale (L, seq) f32,
+          v_cache (L, seq, VD) i8, v_scale (L, seq) f32,
+          tokens (1, chunk) i32, start () i32, length () i32
+    returns: (last_logits (1, vocab), k_cache', k_scale', v_cache',
+              v_scale', k_rows (L, chunk, KD) i8, k_row_scale (L, chunk),
+              v_rows (L, chunk, VD) i8, v_row_scale (L, chunk))
+
+    Masking/positions follow make_prefill_chunk exactly; rows >= length
+    are zero (scale = eps, codes = 0), so the parked arena is identical
+    whatever chunk schedule produced it.
+    """
+    assert impl == "ref", "q8 chunked prefill is exported ref-only"
+    n = len(param_specs(cfg))
+    _cache_dims(cfg)  # assert non-MLA
+
+    def fn(*args):
+        p = unflatten(cfg, list(args[:n]))
+        (k_cache, k_scale, v_cache, v_scale, tokens, start,
+         length) = args[n:]
+        b, c = tokens.shape                          # (1, chunk)
+        qpos = start + jnp.arange(c, dtype=jnp.int32)[None]   # (1, c)
+        x = p["emb.tok"][tokens]
+        if cfg.arch == "vanilla":
+            x = x + jnp.take(p["emb.pos"], qpos[0], axis=0)[None]
+        valid = (qpos[0] < length)[None, :, None].astype(jnp.float32)
+        new_k, new_ks, new_v, new_vs = [], [], [], []
+        row_k, row_ks, row_v, row_vs = [], [], [], []
+        hkv, dqk, dvh = cfg.n_kv_heads, cfg.d_qk_head, cfg.d_v_head
+        for i in range(cfg.n_layers):
+            L = f"l{i}"
+            xn = _norm(cfg, p, f"{L}.ln1", x)
+            q, k, v = _attn_qkv(cfg, p, L, xn, qpos)  # (1,H,c,dqk) etc.
+            krows = (_unheads(k) * valid)[0]          # (c, KD) f32
+            vrows = (_unheads(v) * valid)[0]          # (c, VD) f32
+            kq, ks = ref.quantize_rows(krows)         # (c, KD) i8, (c,)
+            vq, vs = ref.quantize_rows(vrows)
+            kc = jax.lax.dynamic_update_slice(k_cache[i], kq, (start, 0))
+            ksc = jax.lax.dynamic_update_slice(k_scale[i], ks, (start,))
+            vc = jax.lax.dynamic_update_slice(v_cache[i], vq, (start, 0))
+            vsc = jax.lax.dynamic_update_slice(v_scale[i], vs, (start,))
+            new_k.append(kc)
+            new_ks.append(ksc)
+            new_v.append(vc)
+            new_vs.append(vsc)
+            row_k.append(kq)
+            row_ks.append(ks)
+            row_v.append(vq)
+            row_vs.append(vs)
+            kh = kc.reshape(seq, hkv, dqk).transpose(1, 0, 2)[None]
+            vh = vc.reshape(seq, hkv, dvh).transpose(1, 0, 2)[None]
+            o = ref.attention_prefill_chunk_q8(
+                q, kh, ksc[None], vh, vsc[None], qpos)
+            x = x + _unheads(o) @ p[f"{L}.attn.wo"]
+            xn = _norm(cfg, p, f"{L}.ln2", x)
+            x = x + _mlp(cfg, p, L, xn)
+        x = _norm(cfg, p, "ln_f", x)
+        last = x[0, jnp.clip(length - 1 - start, 0, c - 1)][None]  # (1, d)
+        logits = last @ p["emb.tok"].T
+        return (logits, jnp.stack(new_k), jnp.stack(new_ks),
+                jnp.stack(new_v), jnp.stack(new_vs),
+                jnp.stack(row_k), jnp.stack(row_ks),
+                jnp.stack(row_v), jnp.stack(row_vs))
+
+    return fn
+
+
 def make_decode(cfg: ModelConfig, batch, n=None, impl="ref"):
     """Batched single-token decode against dense cache arenas.
 
@@ -500,5 +575,91 @@ def make_decode(cfg: ModelConfig, batch, n=None, impl="ref"):
         logits = x[:, 0] @ p["emb.tok"].T
         return (logits, jnp.stack(new_k), jnp.stack(new_v),
                 jnp.stack(row_k), jnp.stack(row_v))
+
+    return fn
+
+
+def make_decode_q8(cfg: ModelConfig, batch, n=None, impl="ref"):
+    """Batched single-token decode over QUANTIZED cache arenas (ISSUE 4).
+
+    The arena is int8 with one fp32 scale per (layer, lane, position)
+    cache row; this step's K/V rows are computed in fp32, quantized on
+    write, and attention streams the int8 arena through the dequant-fused
+    kernel (ref or the Pallas q8 kernel) — the fp32 arena never exists.
+
+    args: *params, k_cache (L,B,N,KD) i8, k_scale (L,B,N) f32,
+          v_cache (L,B,N,VD) i8, v_scale (L,B,N) f32,
+          tokens (B,) i32, pos (B,) i32
+    returns: (logits (B, vocab), k_cache', k_scale', v_cache', v_scale',
+              k_rows (L,B,KD) i8, k_row_scale (L,B) f32,
+              v_rows (L,B,VD) i8, v_row_scale (L,B) f32)
+
+    k_rows/k_row_scale etc. are the delta the host mirrors — int8 codes
+    plus scales, so per-step host traffic also shrinks ~4x vs fp32.
+    """
+    nparams = len(param_specs(cfg))
+    hkv, dqk, dvh = cfg.n_kv_heads, cfg.d_qk_head, cfg.d_v_head
+    N = cfg.max_seq if n is None else n
+    assert N <= cfg.max_seq, (N, cfg.max_seq)
+
+    def write_row(cache_layer, row, pos):
+        """cache_layer (B,N,D), row (B,D), pos (B,) -> updated (B,N,D)."""
+        return jax.vmap(
+            lambda c, r, q: jax.lax.dynamic_update_slice(c, r[None], (q, 0))
+        )(cache_layer, row, pos)
+
+    def write_scale(scale_layer, s, pos):
+        """scale_layer (B,N), s (B,), pos (B,) -> updated (B,N)."""
+        return jax.vmap(
+            lambda c, r, q: jax.lax.dynamic_update_slice(c, r[None], (q,))
+        )(scale_layer, s, pos)
+
+    def fn(*args):
+        p = unflatten(cfg, list(args[:nparams]))
+        k_cache, k_scale, v_cache, v_scale, tokens, pos = args[nparams:]
+        b = tokens.shape[0]
+        x = p["emb.tok"][tokens][:, None]            # (B,1,d)
+        positions = pos[:, None]                     # (B,1)
+        if cfg.arch == "vanilla":
+            x = x + jnp.take(p["emb.pos"], pos, axis=0)[:, None]
+        new_k, new_ks, new_v, new_vs = [], [], [], []
+        row_k, row_ks, row_v, row_vs = [], [], [], []
+        for i in range(cfg.n_layers):
+            L = f"l{i}"
+            xn = _norm(cfg, p, f"{L}.ln1", x)
+            q, k, v = _attn_qkv(cfg, p, L, xn, positions)  # (B,H,1,dqk) etc.
+            krow = _unheads(k)[:, 0]                       # (B, KD) f32
+            vrow = _unheads(v)[:, 0]                       # (B, VD) f32
+            kq, ks = ref.quantize_rows(krow)               # (B, KD) i8, (B,)
+            vq, vs = ref.quantize_rows(vrow)
+            kc = write_row(k_cache[i], kq, pos)
+            ksc = write_scale(k_scale[i], ks, pos)
+            vc = write_row(v_cache[i], vq, pos)
+            vsc = write_scale(v_scale[i], vs, pos)
+            new_k.append(kc)
+            new_ks.append(ksc)
+            new_v.append(vc)
+            new_vs.append(vsc)
+            row_k.append(kq)
+            row_ks.append(ks)
+            row_v.append(vq)
+            row_vs.append(vs)
+            kh = kc.reshape(b, N, hkv, dqk).transpose(0, 2, 1, 3)
+            vh = vc.reshape(b, N, hkv, dvh).transpose(0, 2, 1, 3)
+            if impl == "pallas":
+                o = pallas_attention_decode_q8(q[:, :, 0], kh, ksc, vh,
+                                               vsc, pos)
+            else:
+                o = ref.attention_decode_q8(q[:, :, 0], kh, ksc, vh, vsc,
+                                            pos)
+            x = x + (o.reshape(b, 1, -1) @ p[f"{L}.attn.wo"])
+            xn = _norm(cfg, p, f"{L}.ln2", x)
+            x = x + _mlp(cfg, p, L, xn)
+        x = _norm(cfg, p, "ln_f", x)
+        logits = x[:, 0] @ p["emb.tok"].T
+        return (logits, jnp.stack(new_k), jnp.stack(new_ks),
+                jnp.stack(new_v), jnp.stack(new_vs),
+                jnp.stack(row_k), jnp.stack(row_ks),
+                jnp.stack(row_v), jnp.stack(row_vs))
 
     return fn

@@ -9,9 +9,9 @@ import numpy as np
 import pytest
 
 from compile.aot import artifact_plan, build_entry
-from compile.configs import (DECODE_BATCHES, PREFILL_CHUNKS, PREFILL_SEQ,
-                             REGISTRY, config_dict, decode_tiers,
-                             train_geometry)
+from compile.configs import (DECODE_BATCHES, KV_QUANTS, PREFILL_CHUNKS,
+                             PREFILL_SEQ, REGISTRY, config_dict,
+                             decode_tiers, train_geometry)
 from compile import model as M
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
@@ -62,6 +62,75 @@ def test_plan_covers_full_bucket_tier_grid():
                 assert f"decode_{cfg_name}_b{b}_n{n}" in names
         for n in decode_tiers(cfg.max_seq):
             assert f"decode_{cfg_name}_b8_n{n}_pallas" in names
+
+
+def test_plan_covers_q8_grid():
+    """Every serving config exports `_q8` variants of the full decode
+    (bucket x tier) grid, the b=8 pallas column, and every prefill chunk
+    (ISSUE 4). The monolithic prefill is fp32-only by design."""
+    plan = artifact_plan()
+    names = {n for n, _, _, _ in plan}
+    assert "q8" in KV_QUANTS
+    for cfg_name in ("servefull", "servethin"):
+        cfg = REGISTRY[cfg_name]
+        for b in DECODE_BATCHES:
+            for n in decode_tiers(cfg.max_seq):
+                assert f"decode_{cfg_name}_b{b}_n{n}_q8" in names
+        for n in decode_tiers(cfg.max_seq):
+            assert f"decode_{cfg_name}_b8_n{n}_q8_pallas" in names
+        for c in PREFILL_CHUNKS:
+            assert f"prefill_{cfg_name}_c{c}_q8" in names
+        assert f"prefill_{cfg_name}_s{PREFILL_SEQ}_q8" not in names
+
+
+def test_q8_decode_entry_specs():
+    """q8 decode entries carry int8 arenas + per-row fp32 scale planes and
+    return the quantized delta rows plus their scales."""
+    cfg = REGISTRY["servethin"]
+    fn, specs, in_names, out_names = build_entry(
+        "decode", cfg, {"b": 2, "n": 32, "quant": "q8"})
+    assert out_names == ["logits", "k_cache", "k_scale", "v_cache",
+                         "v_scale", "k_rows", "k_row_scale", "v_rows",
+                         "v_row_scale"]
+    by_name = dict(zip(in_names, specs))
+    assert tuple(by_name["k_cache"].shape) == (
+        cfg.n_layers, 2, 32, cfg.k_cache_dims())
+    assert str(by_name["k_cache"].dtype) == "int8"
+    assert tuple(by_name["k_scale"].shape) == (cfg.n_layers, 2, 32)
+    assert str(by_name["k_scale"].dtype) == "float32"
+    assert str(by_name["v_cache"].dtype) == "int8"
+    assert tuple(by_name["v_scale"].shape) == (cfg.n_layers, 2, 32)
+
+
+def test_q8_prefill_chunk_entry_specs():
+    cfg = REGISTRY["servethin"]
+    fn, specs, in_names, out_names = build_entry(
+        "prefill", cfg, {"c": 32, "quant": "q8"})
+    assert out_names == ["last_logits", "k_cache", "k_scale", "v_cache",
+                         "v_scale", "k_rows", "k_row_scale", "v_rows",
+                         "v_row_scale"]
+    by_name = dict(zip(in_names, specs))
+    assert tuple(by_name["k_cache"].shape) == (
+        cfg.n_layers, PREFILL_SEQ, cfg.k_cache_dims())
+    assert str(by_name["k_cache"].dtype) == "int8"
+    assert tuple(by_name["k_scale"].shape) == (cfg.n_layers, PREFILL_SEQ)
+    assert tuple(by_name["tokens"].shape) == (1, 32)
+
+
+def test_manifest_kv_quant_recorded():
+    path = os.path.join(ART_DIR, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not exported")
+    with open(path) as f:
+        man = json.load(f)
+    assert "kv_quant" in man, \
+        "stale pre-quantization manifest — re-run `make artifacts`"
+    for cfg_name in ("servefull", "servethin"):
+        assert man["kv_quant"][cfg_name] == list(KV_QUANTS)
+        cfg = REGISTRY[cfg_name]
+        for n in decode_tiers(cfg.max_seq):
+            assert any(a["name"] == f"decode_{cfg_name}_b8_n{n}_q8"
+                       for a in man["artifacts"])
 
 
 def test_plan_covers_prefill_chunk_axis():
@@ -156,7 +225,16 @@ def test_manifest_decode_cache_shapes():
             cfg.n_layers, art["geom"]["b"], n, cfg.k_cache_dims()]
         assert by_name["v_cache"][2] == [
             cfg.n_layers, art["geom"]["b"], n, cfg.v_cache_dims()]
-        assert art["outputs"][-2:] == ["k_rows", "v_rows"]
+        if art["geom"].get("quant") == "q8":
+            assert by_name["k_cache"][1] == "int8"
+            assert by_name["k_scale"][2] == [
+                cfg.n_layers, art["geom"]["b"], n]
+            assert by_name["k_scale"][1] == "float32"
+            assert art["outputs"][-4:] == [
+                "k_rows", "k_row_scale", "v_rows", "v_row_scale"]
+        else:
+            assert by_name["k_cache"][1] == "float32"
+            assert art["outputs"][-2:] == ["k_rows", "v_rows"]
 
 
 def test_hlo_text_is_parseable_header():

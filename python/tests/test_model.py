@@ -129,6 +129,117 @@ def test_chunked_prefill_bit_identical_to_single_shot(name, plen):
         assert np.array_equal(vc_a[:, :plen], mirror_v[:, :plen])
 
 
+@pytest.mark.parametrize("name", ["servefull", "servethin"])
+def test_q8_decode_parity_bounded(name):
+    """The q8 acceptance oracle (ISSUE 4): decoding over the quantized
+    arena must track the fp32 engine's logits within a tight bound.
+    Teacher-forced (both paths fed the fp32 argmax tokens) so contexts
+    stay identical; measured worst-case with init params is ~1.5e-3 on a
+    ~1.3 logit range — the 0.05 bound is ~30x headroom while still
+    catching any real dequant/scatter bug."""
+    from compile.kernels import ref
+    cfg, p = setup_cfg(name)
+    plist = M.flatten(cfg, p)
+    L, N, B, S = cfg.n_layers, 64, 2, 16
+    KD, VD = cfg.k_cache_dims(), cfg.v_cache_dims()
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, S + 8), 0, cfg.vocab)
+    _, kc, vc = M.make_prefill(cfg, S)(*plist, toks[:, :S],
+                                       jnp.asarray(S, jnp.int32))
+    ka = jnp.zeros((L, B, N, KD)).at[:, 0, :S].set(kc)
+    va = jnp.zeros((L, B, N, VD)).at[:, 0, :S].set(vc)
+    kq, ks = ref.quantize_rows(ka)   # host-side quantization of the park
+    vq, vs = ref.quantize_rows(va)
+    dec = jax.jit(M.make_decode(cfg, B, n=N))
+    dec8 = jax.jit(M.make_decode_q8(cfg, B, n=N))
+    t = jnp.stack([toks[0, S], toks[0, S]])
+    pos = jnp.array([S, 0], jnp.int32)
+    worst = 0.0
+    for _ in range(6):
+        lg, ka, va, _, _ = dec(*plist, ka, va, t, pos)
+        lg8, kq, ks, vq, vs, kr, krs, vr, vrs = dec8(
+            *plist, kq, ks, vq, vs, t, pos)
+        worst = max(worst, float(jnp.abs(lg - lg8).max()))
+        # the delta outputs are exactly the quantized rows written at pos
+        lanes = jnp.arange(B)
+        assert np.array_equal(np.asarray(kr),
+                              np.asarray(kq[:, lanes, pos])), "k delta rows"
+        assert np.array_equal(np.asarray(krs),
+                              np.asarray(ks[:, lanes, pos])), "k delta scales"
+        assert np.array_equal(np.asarray(vr), np.asarray(vq[:, lanes, pos]))
+        assert np.array_equal(np.asarray(vrs), np.asarray(vs[:, lanes, pos]))
+        t = jnp.argmax(lg, -1).astype(jnp.int32)  # teacher-force fp32 path
+        pos = pos + 1
+    assert 0.0 < worst < 0.05, worst
+
+
+@pytest.mark.parametrize("name", ["servethin"])
+@pytest.mark.parametrize("plen", [8, 37, 128])
+def test_q8_chunked_prefill_contract(name, plen):
+    """q8 chunked prefill (ISSUE 4): the delta-row mirror equals the
+    arena, the dequantized arena tracks the fp32 single-shot arena within
+    the per-row quantization bound (plus the bounded drift from attending
+    quantized earlier rows), padded rows stay exactly zero, and the
+    resulting arena is IDENTICAL whatever chunk schedule produced it (row
+    values depend only on the quantized prefix, not on chunk boundaries)."""
+    from compile.configs import PREFILL_CHUNKS, PREFILL_SEQ
+    from compile.kernels import ref
+    cfg, p = setup_cfg(name)
+    plist = M.flatten(cfg, p)
+    S, L = PREFILL_SEQ, cfg.n_layers
+    KD, VD = cfg.k_cache_dims(), cfg.v_cache_dims()
+    toks = np.zeros((1, S), np.int32)
+    toks[0, :plen] = np.random.RandomState(plen).randint(4, cfg.vocab, plen)
+    log_a, kc_a, vc_a = map(np.asarray, jax.jit(M.make_prefill(cfg, S))(
+        *plist, jnp.asarray(toks), jnp.asarray(plen, jnp.int32)))
+    arenas = []
+    for C in PREFILL_CHUNKS:
+        chunk = jax.jit(M.make_prefill_chunk_q8(cfg, C, S))
+        ka = jnp.zeros((L, S, KD), jnp.int8)
+        kas = jnp.zeros((L, S))
+        va = jnp.zeros((L, S, VD), jnp.int8)
+        vas = jnp.zeros((L, S))
+        mirror_k = np.zeros((L, S, KD), np.int8)
+        mirror_ks = np.zeros((L, S), np.float32)
+        start, log_b = 0, None
+        while start < plen:
+            ctoks = np.zeros((1, C), np.int32)
+            nv = min(C, plen - start)
+            ctoks[0, :nv] = toks[0, start:start + nv]
+            log_b, ka, kas, va, vas, kr, krs, vr, vrs = chunk(
+                *plist, ka, kas, va, vas, jnp.asarray(ctoks),
+                jnp.asarray(start, jnp.int32), jnp.asarray(plen, jnp.int32))
+            mirror_k[:, start:start + C] = np.asarray(kr)
+            mirror_ks[:, start:start + C] = np.asarray(krs)
+            start += C
+        # delta-sync contract: the mirror rebuilt from delta rows alone
+        # equals the arena
+        assert np.array_equal(mirror_k[:, :plen], np.asarray(ka)[:, :plen])
+        assert np.array_equal(mirror_ks[:, :plen], np.asarray(kas)[:, :plen])
+        # padded rows have zero codes (so they dequantize to exactly 0);
+        # rows covered by a chunk but >= length carry the eps scale floor,
+        # rows never touched by any chunk keep their 0.0 init
+        if plen < S:
+            assert np.abs(np.asarray(ka)[:, plen:]).max() == 0
+            assert np.asarray(kas)[:, plen:].max() <= ref.Q8_SCALE_EPS
+        # dequantized arena tracks the fp32 single-shot arena
+        deq_k = np.asarray(ref.dequantize_rows(ka, kas))
+        deq_v = np.asarray(ref.dequantize_rows(va, vas))
+        bound_k = np.asarray(kas)[..., None] * 0.5
+        assert (np.abs(deq_k[:, :plen] - kc_a[:, :plen])
+                <= bound_k[:, :plen] + 0.02).all()
+        assert np.abs(deq_v[:, :plen] - vc_a[:, :plen]).max() < 0.1
+        # last-chunk logits track the fp32 prefill logits
+        assert np.abs(np.asarray(log_b) - log_a).max() < 0.05
+        arenas.append((np.asarray(ka)[:, :plen], np.asarray(kas)[:, :plen],
+                       np.asarray(va)[:, :plen], np.asarray(vas)[:, :plen]))
+    # chunk-schedule independence: every C produced the same live rows
+    # (beyond plen the eps-scale footprint differs by chunk coverage, but
+    # codes there are 0 so the dequantized arena is identical everywhere)
+    for other in arenas[1:]:
+        for a, b in zip(arenas[0], other):
+            assert np.array_equal(a, b), "q8 arena depends on chunking"
+
+
 def test_prefill_zeroes_padded_cache_rows():
     cfg, p = setup_cfg("servefull")
     plist = M.flatten(cfg, p)

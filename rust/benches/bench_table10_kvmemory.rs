@@ -1,7 +1,21 @@
-//! Regenerates paper Table 10 (KV GB/user at 128K and 1M context).
+//! Regenerates paper Table 10 (KV GB/user at 128K and 1M context), plus
+//! the §6 composition column: factored rank x GQA x int8 key-cache
+//! compression (the "up to 16x" claim, with per-row scale overhead
+//! included — ISSUE 4).
 use thinkeys::experiments::analytical;
 
 fn main() {
     analytical::table10().print();
+    let comp = analytical::quantized_composition();
+    comp.print();
     analytical::prefill_roofline().print();
+
+    // the composition acceptance: r=d/4 x q8 => ~16x key-cache bytes vs
+    // the full fp32 baseline; adding GQA (exp8's grouped heads) exceeds it
+    let rows = thinkeys::coordinator::roofline::quantized_composition_rows();
+    let thin_q8 = rows.iter().find(|r| r.0.contains("r=d/4, q8")).unwrap();
+    assert!((thin_q8.2 - 16.0).abs() < 0.1,
+            "thin x q8 composition off: {}x", thin_q8.2);
+    let gqa_q8 = rows.iter().find(|r| r.0.contains("GQA-8 + thin")).unwrap();
+    assert!(gqa_q8.2 > 60.0, "GQA composition off: {}x", gqa_q8.2);
 }

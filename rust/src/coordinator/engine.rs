@@ -51,27 +51,44 @@
 //! The *thin* K arena is the paper's saving made concrete: `KD =
 //! n_kv_heads · d_qk_head` is 4x smaller for `servethin` than `servefull`
 //! while `VD` is identical.
+//!
+//! KV quantization (ISSUE 4): at `KvQuant::Q8` every cache surface —
+//! device arenas, cross-chunk carried literals, the delta-synced host
+//! mirror, and parked rows — holds int8 codes plus one fp32 scale per
+//! (layer, lane, position) row. Rows are quantized on write *inside* the
+//! `_q8` artifacts (decode, prefill chunks) and host-side only when the
+//! fp32 monolithic-prefill output parks
+//! ([`crate::substrate::tensor::quantize_rows_q8`], same rounding as the
+//! artifacts). Attention dequant is fused into the artifacts'
+//! online-softmax loop, so the fp32 arena never exists anywhere. All the
+//! repack/unpark/tier-switch machinery moves int8 bytes through
+//! [`RowArena`] row copies, and every byte counter sizes by
+//! [`ArenaSizing`] — 4x less arena payload, 4x less per-step row sync,
+//! bounded logit error (asserted in rust/tests/serving_e2e.rs).
 
 use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
 use crate::coordinator::lanes::{self, LaneMap};
-use crate::coordinator::metrics::EngineMetrics;
+use crate::coordinator::metrics::{ArenaSizing, EngineMetrics};
 use crate::coordinator::sampling::Sampler;
 use crate::coordinator::sequence::{SeqId, Sequence};
-use crate::runtime::client::{literal_to_tensor, Arg, Runtime};
-use crate::runtime::manifest::ConfigEntry;
+use crate::runtime::client::{f32_slice_to_literal, i8_slice_to_literal,
+                             literal_to_tensor, literal_to_vec_f32,
+                             literal_to_vec_i8, Arg, Runtime};
+use crate::runtime::manifest::{ConfigEntry, KvQuant};
 use crate::runtime::params::ParamStore;
 use crate::substrate::rng::Rng;
-use crate::substrate::tensor::{Tensor, TensorI32};
+use crate::substrate::tensor::{RowArena, Tensor, TensorI32};
 
-/// Per-sequence parked cache rows: `(L, len, D)` row-major.
+/// Per-sequence parked cache rows, `(L, len, D)` row-major — stored at
+/// the engine's KV quant (fp32 values, or int8 codes + per-row scales).
 #[derive(Clone, Debug)]
 struct Parked {
     len: usize,
-    k: Vec<f32>,
-    v: Vec<f32>,
+    k: RowArena,
+    v: RowArena,
 }
 
 /// In-flight chunked prefill (ISSUE 3): the sequence's prompt has been
@@ -80,15 +97,20 @@ struct Parked {
 /// via `Arg::L`, never round-tripped through host tensors), and the host
 /// mirror accumulates only the per-chunk delta rows `k_rows`/`v_rows` —
 /// the prefill twin of the decode delta-sync contract, so chunked prefill
-/// never downloads a full arena between chunks either.
+/// never downloads a full arena between chunks either. In q8 mode the
+/// payload literals are int8 and each arena carries a second `(L, S)`
+/// fp32 scale-plane literal (ISSUE 4).
 struct ChunkProgress {
     done: usize,
     k_lit: xla::Literal,
     v_lit: xla::Literal,
-    /// Host mirror of the prefill arenas, `(L, S, KD)` / `(L, S, VD)`,
+    /// Scale-plane literals (q8 mode only).
+    k_scale_lit: Option<xla::Literal>,
+    v_scale_lit: Option<xla::Literal>,
+    /// Host mirror of the prefill arenas, `L·S` rows of KD / VD,
     /// current up to row `done`; compacted into [`Parked`] on completion.
-    k: Vec<f32>,
-    v: Vec<f32>,
+    k: RowArena,
+    v: RowArena,
 }
 
 pub struct Engine<'rt> {
@@ -99,6 +121,12 @@ pub struct Engine<'rt> {
     /// §Perf).
     pub params: ParamStore,
     pub pallas: bool,
+    /// KV-cache element format (ISSUE 4): `Q8` serves from int8 arenas
+    /// with per-row fp32 scales through the `_q8` artifact grid; `Fp32`
+    /// is the legacy full-precision path. Fixed at construction — the
+    /// arenas, parked rows, host mirrors, and device literals all carry
+    /// this dtype.
+    pub quant: KvQuant,
     pub sampler: Sampler,
     /// Force a fixed arena tier instead of auto-selecting the smallest
     /// covering one. `Some(cfg.max_seq)` reproduces the pre-tiering
@@ -113,17 +141,21 @@ pub struct Engine<'rt> {
     /// Steady-state cache literals (L3-opt-2: while lane assignment and
     /// tier cover the active set, the previous step's output caches are
     /// fed straight back without literal<->tensor round trips — including
-    /// across zero-copy retirements).
+    /// across zero-copy retirements). In q8 mode the payload literals are
+    /// int8 and each arena carries a scale-plane literal alongside.
     k_lit: Option<xla::Literal>,
     v_lit: Option<xla::Literal>,
+    k_scale_lit: Option<xla::Literal>,
+    v_scale_lit: Option<xla::Literal>,
     // group state
     lanes: LaneMap,
     /// Current arena length N (context tier); 0 before the first group.
     tier: usize,
-    /// Always-current host mirrors of the decode arenas, delta-synced
-    /// from the per-step `k_rows`/`v_rows` outputs.
-    k_group: Tensor,
-    v_group: Tensor,
+    /// Always-current host mirrors of the decode arenas (`L·B·N` rows of
+    /// KD / VD at the engine's quant), delta-synced from the per-step
+    /// `k_rows`/`v_rows` (+ scale) outputs.
+    k_group: RowArena,
+    v_group: RowArena,
     parked: HashMap<SeqId, Parked>,
     /// In-flight chunked prefills (prompt partially ingested).
     chunking: HashMap<SeqId, ChunkProgress>,
@@ -134,38 +166,67 @@ pub struct Engine<'rt> {
     /// Logits of the most recent completed prefill (monolithic or final
     /// chunk) — exposed for the chunked-vs-monolithic parity tests.
     last_prefill_logits: Option<Tensor>,
+    /// Logits of the most recent decode step, `(B, vocab)` in LANE order
+    /// — the quantized-vs-fp32 parity surface (serving_e2e, the
+    /// quantized_decode_table error column). Stored by move, no extra
+    /// copy.
+    last_decode_logits: Option<Tensor>,
     pub metrics: EngineMetrics,
 }
 
 impl<'rt> Engine<'rt> {
     pub fn new(rt: &'rt Runtime, cfg_name: &str, params: ParamStore,
                pallas: bool, sampler: Sampler, seed: u64) -> Result<Engine<'rt>> {
+        Self::with_kv_quant(rt, cfg_name, params, pallas, sampler, seed,
+                            KvQuant::Fp32)
+    }
+
+    /// Build an engine serving at the given KV quant mode. `Q8` requires
+    /// the manifest's `kv_quant` axis to include it for this config (set
+    /// by aot.py; legacy manifests are fp32-only and fail fast here).
+    pub fn with_kv_quant(rt: &'rt Runtime, cfg_name: &str, params: ParamStore,
+                         pallas: bool, sampler: Sampler, seed: u64,
+                         quant: KvQuant) -> Result<Engine<'rt>> {
         let cfg = rt.manifest().config(cfg_name)?.clone();
         params.check_matches(&cfg)?;
+        let exported = rt.manifest().kv_quants_for(cfg_name);
+        if !exported.contains(&quant) {
+            bail!(
+                "kv quant {:?} not exported for {cfg_name} (available: \
+                 {:?}) — re-run `make artifacts`",
+                quant.name(),
+                exported.iter().map(|q| q.name()).collect::<Vec<_>>()
+            );
+        }
         let param_lits = params
             .tensors
             .iter()
             .map(crate::runtime::client::tensor_to_literal)
             .collect::<Result<Vec<_>>>()?;
+        let (kd, vd) = (cfg.k_cache_dims, cfg.v_cache_dims);
         Ok(Engine {
             rt,
             cfg,
             params,
             pallas,
+            quant,
             sampler,
             pin_tier: None,
             rng: Rng::new(seed),
             param_lits,
             k_lit: None,
             v_lit: None,
+            k_scale_lit: None,
+            v_scale_lit: None,
             lanes: LaneMap::new(),
             tier: 0,
-            k_group: Tensor::zeros(&[0]),
-            v_group: Tensor::zeros(&[0]),
+            k_group: RowArena::zeros(quant, kd, 0),
+            v_group: RowArena::zeros(quant, vd, 0),
             parked: HashMap::new(),
             chunking: HashMap::new(),
             rows: HashMap::new(),
             last_prefill_logits: None,
+            last_decode_logits: None,
             metrics: EngineMetrics::default(),
         })
     }
@@ -217,24 +278,62 @@ impl<'rt> Engine<'rt> {
         self.last_prefill_logits.as_ref()
     }
 
+    /// Logits of the most recent decode step, `(B, vocab)` in lane order
+    /// — the q8-vs-fp32 parity oracle (teacher-forced comparisons read
+    /// this instead of re-deriving logits from sampled tokens).
+    pub fn last_decode_logits(&self) -> Option<&Tensor> {
+        self.last_decode_logits.as_ref()
+    }
+
     /// The parked cache rows of a sequence that finished prefill but has
-    /// not joined a decode lane yet: `(len, k, v)` with k `(L, len, KD)`
-    /// and v `(L, len, VD)` row-major. Parity-test surface: chunked and
-    /// monolithic prefill must park bit-identical rows.
+    /// not joined a decode lane yet, as fp32 VALUES: `(len, k, v)` with k
+    /// `(L, len, KD)` and v `(L, len, VD)` row-major (dequantized in q8
+    /// mode). Parity-test surface: chunked and monolithic prefill must
+    /// park bit-identical rows in fp32 mode.
     pub fn parked_snapshot(&self, id: SeqId)
-        -> Option<(usize, &[f32], &[f32])> {
+        -> Option<(usize, Vec<f32>, Vec<f32>)> {
         self.parked
             .get(&id)
-            .map(|p| (p.len, p.k.as_slice(), p.v.as_slice()))
+            .map(|p| (p.len, p.k.to_f32(), p.v.to_f32()))
     }
 
     fn param_args(&self) -> Vec<Arg<'_>> {
         self.param_lits.iter().map(Arg::L).collect()
     }
 
-    /// Bytes of one cache row (K + V) across all layers.
+    /// Dtype-aware byte sizing for every cache counter this engine
+    /// reports (ISSUE 4 satellite: no hardcoded 4 bytes/element).
+    fn sizing(&self) -> ArenaSizing {
+        ArenaSizing {
+            n_layers: self.cfg.n_layers,
+            k_dims: self.cfg.k_cache_dims,
+            v_dims: self.cfg.v_cache_dims,
+            quant: self.quant,
+        }
+    }
+
+    /// Host bytes that move when one cache row (K + V, all layers) moves
+    /// — payload plus, in q8 mode, the per-row scales.
     fn row_bytes(&self) -> usize {
-        self.cfg.n_layers * (self.cfg.k_cache_dims + self.cfg.v_cache_dims) * 4
+        self.sizing().row_bytes()
+    }
+
+    /// Upload a host arena as device literal(s): the payload literal and,
+    /// in q8 mode, the fp32 scale-plane literal. `shape` is the payload's
+    /// logical shape (its product must equal rows·d); the scale plane has
+    /// the same shape minus the trailing dim.
+    fn arena_literals(buf: &RowArena, shape: &[usize])
+        -> Result<(xla::Literal, Option<xla::Literal>)> {
+        debug_assert_eq!(shape.iter().product::<usize>(), buf.rows * buf.d);
+        match buf.quant {
+            KvQuant::Fp32 => Ok((f32_slice_to_literal(&buf.f, shape)?, None)),
+            KvQuant::Q8 => {
+                let payload = i8_slice_to_literal(&buf.q, shape)?;
+                let scales = f32_slice_to_literal(
+                    &buf.s, &shape[..shape.len() - 1])?;
+                Ok((payload, Some(scales)))
+            }
+        }
     }
 
     /// THE designated path for downloading a full cache arena literal to
@@ -293,25 +392,37 @@ impl<'rt> Engine<'rt> {
         Ok(())
     }
 
-    /// Shared prefill epilogue — THE single definition of how a finished
-    /// prefill parks its rows and samples the first token, so the
-    /// monolithic and chunked paths cannot drift apart (their bit-parity
-    /// is a tested contract): compact the `(L, S, D)` buffers' first `p`
-    /// rows in place, truncate, park, record the physical rows, sample
-    /// from `logits`, and transition the sequence to Decoding.
-    fn park_prefilled(&mut self, seq: &mut Sequence, mut k: Vec<f32>,
-                      mut v: Vec<f32>, logits: Tensor) {
+    /// Shared prefill epilogue for the MONOLITHIC (fp32-artifact) path:
+    /// compact the `(L, S, D)` fp32 buffers' first `p` rows into parked
+    /// row arenas — quantizing on write in q8 mode (the host-side twin of
+    /// the q8 artifacts' quantize-on-write; same rounding, see
+    /// `substrate::tensor::quantize_rows_q8`) — then finish through
+    /// [`Engine::park_arenas`].
+    fn park_prefilled(&mut self, seq: &mut Sequence, k: Vec<f32>,
+                      v: Vec<f32>, logits: Tensor) {
         let s = self.max_prompt();
         let p = seq.prompt.len();
         let (l, kd, vd) = (self.cfg.n_layers, self.cfg.k_cache_dims,
                            self.cfg.v_cache_dims);
+        let mut pk = RowArena::zeros(self.quant, kd, l * p);
+        let mut pv = RowArena::zeros(self.quant, vd, l * p);
         for li in 0..l {
-            k.copy_within(li * s * kd..(li * s + p) * kd, li * p * kd);
-            v.copy_within(li * s * vd..(li * s + p) * vd, li * p * vd);
+            pk.write_f32_rows(li * p, &k[li * s * kd..(li * s + p) * kd], p);
+            pv.write_f32_rows(li * p, &v[li * s * vd..(li * s + p) * vd], p);
         }
-        k.truncate(l * p * kd);
-        v.truncate(l * p * vd);
-        self.parked.insert(seq.id, Parked { len: p, k, v });
+        self.park_arenas(seq, pk, pv, logits);
+    }
+
+    /// THE single definition of how a finished prefill parks its rows and
+    /// samples the first token, so the monolithic and chunked paths
+    /// cannot drift apart (their bit-parity in fp32 mode is a tested
+    /// contract): park the `L·p`-row arenas, record the physical rows,
+    /// sample from `logits`, and transition the sequence to Decoding.
+    fn park_arenas(&mut self, seq: &mut Sequence, pk: RowArena,
+                   pv: RowArena, logits: Tensor) {
+        let p = seq.prompt.len();
+        debug_assert_eq!(pk.rows, self.cfg.n_layers * p);
+        self.parked.insert(seq.id, Parked { len: p, k: pk, v: pv });
         self.rows.insert(seq.id, p);
         let tok = self.sampler.sample(&logits.data, &mut self.rng);
         self.last_prefill_logits = Some(logits);
@@ -361,17 +472,16 @@ impl<'rt> Engine<'rt> {
         if !self.chunking.contains_key(&seq.id) {
             // first chunk: fresh zero arenas, uploaded once as literals —
             // counted against the sync contract like any arena upload
-            let prog = ChunkProgress {
-                done: 0,
-                k_lit: crate::runtime::client::tensor_to_literal(
-                    &Tensor::zeros(&[l, s, kd]))?,
-                v_lit: crate::runtime::client::tensor_to_literal(
-                    &Tensor::zeros(&[l, s, vd]))?,
-                k: vec![0.0; l * s * kd],
-                v: vec![0.0; l * s * vd],
-            };
+            let k = RowArena::zeros(self.quant, kd, l * s);
+            let v = RowArena::zeros(self.quant, vd, l * s);
+            let (k_lit, k_scale_lit) = Self::arena_literals(&k, &[l, s, kd])?;
+            let (v_lit, v_scale_lit) = Self::arena_literals(&v, &[l, s, vd])?;
             self.metrics.sync_upload_bytes +=
-                (l * s * (kd + vd) * 4) as u64;
+                (k.payload_bytes() + k.scale_bytes() + v.payload_bytes()
+                 + v.scale_bytes()) as u64;
+            let prog = ChunkProgress {
+                done: 0, k_lit, v_lit, k_scale_lit, v_scale_lit, k, v,
+            };
             self.chunking.insert(seq.id, prog);
             self.rows.insert(seq.id, 0);
         }
@@ -381,14 +491,20 @@ impl<'rt> Engine<'rt> {
         let mut toks = vec![0i32; chunk];
         toks[..n_valid].copy_from_slice(&seq.prompt[start..start + n_valid]);
         let tokens = TensorI32::new(&[1, chunk], toks);
-        let artifact =
-            self.rt.manifest().prefill_chunk_name(&self.cfg.name, chunk);
+        let artifact = self.rt.manifest().prefill_chunk_name(
+            &self.cfg.name, chunk, self.quant);
         let t0 = std::time::Instant::now();
         let outs = {
             let prog = &self.chunking[&seq.id];
             let mut args = self.param_args();
             args.push(Arg::L(&prog.k_lit));
+            if let Some(ksl) = &prog.k_scale_lit {
+                args.push(Arg::L(ksl));
+            }
             args.push(Arg::L(&prog.v_lit));
+            if let Some(vsl) = &prog.v_scale_lit {
+                args.push(Arg::L(vsl));
+            }
             args.push(Arg::I(&tokens));
             args.push(Arg::ScalarI(start as i32));
             args.push(Arg::ScalarI(p as i32));
@@ -398,39 +514,85 @@ impl<'rt> Engine<'rt> {
         self.metrics.prefill_chunks += 1;
         self.metrics.prefill_tokens += n_valid as u64;
         let logits = literal_to_tensor(&outs[0])?; // (1, V)
-        let k_rows = outs[3]
-            .to_vec::<f32>()
-            .map_err(|e| anyhow::anyhow!("download k_rows: {e}"))?;
-        let v_rows = outs[4]
-            .to_vec::<f32>()
-            .map_err(|e| anyhow::anyhow!("download v_rows: {e}"))?;
+        // download this chunk's delta rows, scatter them into the host
+        // mirror at [start, start+n_valid), and keep the updated arena
+        // literals for the next chunk. Output layouts:
+        //   fp32: [logits, k_cache, v_cache, k_rows, v_rows]
+        //   q8:   [logits, k_cache, k_scale, v_cache, v_scale,
+        //          k_rows, k_row_scale, v_rows, v_row_scale]
         let mut outs = outs;
-        let v_lit = outs.remove(2);
-        let k_lit = outs.remove(1);
-        let prog = self.chunking.get_mut(&seq.id).expect("chunk progress");
-        prog.k_lit = k_lit;
-        prog.v_lit = v_lit;
-        // delta-sync: scatter this chunk's written rows (L, chunk, KD/VD)
-        // into the host mirror at [start, start+n_valid)
-        for li in 0..l {
-            let src = li * chunk * kd;
-            let dst = (li * s + start) * kd;
-            prog.k[dst..dst + n_valid * kd]
-                .copy_from_slice(&k_rows[src..src + n_valid * kd]);
-            let src = li * chunk * vd;
-            let dst = (li * s + start) * vd;
-            prog.v[dst..dst + n_valid * vd]
-                .copy_from_slice(&v_rows[src..src + n_valid * vd]);
+        match self.quant {
+            KvQuant::Fp32 => {
+                let k_rows = literal_to_vec_f32(&outs[3])?;
+                let v_rows = literal_to_vec_f32(&outs[4])?;
+                self.metrics.row_sync_bytes +=
+                    ((k_rows.len() + v_rows.len()) * 4) as u64;
+                let v_lit = outs.remove(2);
+                let k_lit = outs.remove(1);
+                let prog =
+                    self.chunking.get_mut(&seq.id).expect("chunk progress");
+                prog.k_lit = k_lit;
+                prog.v_lit = v_lit;
+                for li in 0..l {
+                    prog.k.write_f32_rows(
+                        li * s + start,
+                        &k_rows[li * chunk * kd..(li * chunk + n_valid) * kd],
+                        n_valid);
+                    prog.v.write_f32_rows(
+                        li * s + start,
+                        &v_rows[li * chunk * vd..(li * chunk + n_valid) * vd],
+                        n_valid);
+                }
+            }
+            KvQuant::Q8 => {
+                let k_rows = literal_to_vec_i8(&outs[5])?;
+                let k_row_s = literal_to_vec_f32(&outs[6])?;
+                let v_rows = literal_to_vec_i8(&outs[7])?;
+                let v_row_s = literal_to_vec_f32(&outs[8])?;
+                self.metrics.row_sync_bytes += (k_rows.len() + v_rows.len()
+                    + (k_row_s.len() + v_row_s.len()) * 4)
+                    as u64;
+                let v_scale_lit = outs.remove(4);
+                let v_lit = outs.remove(3);
+                let k_scale_lit = outs.remove(2);
+                let k_lit = outs.remove(1);
+                let prog =
+                    self.chunking.get_mut(&seq.id).expect("chunk progress");
+                prog.k_lit = k_lit;
+                prog.k_scale_lit = Some(k_scale_lit);
+                prog.v_lit = v_lit;
+                prog.v_scale_lit = Some(v_scale_lit);
+                for li in 0..l {
+                    prog.k.write_q8_rows(
+                        li * s + start,
+                        &k_rows[li * chunk * kd..(li * chunk + n_valid) * kd],
+                        &k_row_s[li * chunk..li * chunk + n_valid],
+                        n_valid);
+                    prog.v.write_q8_rows(
+                        li * s + start,
+                        &v_rows[li * chunk * vd..(li * chunk + n_valid) * vd],
+                        &v_row_s[li * chunk..li * chunk + n_valid],
+                        n_valid);
+                }
+            }
         }
+        let prog = self.chunking.get_mut(&seq.id).expect("chunk progress");
         prog.done = start + n_valid;
         self.rows.insert(seq.id, prog.done);
         if prog.done < p {
             return Ok(false);
         }
-        // final chunk: the host mirror holds every prompt row — park it
-        // through the same epilogue the monolithic prefill uses
+        // final chunk: the host mirror holds every prompt row — compact
+        // its first p rows per layer and park through the same epilogue
+        // the monolithic prefill uses
         let prog = self.chunking.remove(&seq.id).expect("chunk progress");
-        self.park_prefilled(seq, prog.k, prog.v, logits);
+        let mut pk = RowArena::zeros(self.quant, kd, l * p);
+        let mut pv = RowArena::zeros(self.quant, vd, l * p);
+        for li in 0..l {
+            pk.copy_rows(li * p, &prog.k, li * s, p);
+            pv.copy_rows(li * p, &prog.v, li * s, p);
+        }
+        self.park_arenas(seq, pk, pv, logits);
         Ok(true)
     }
 
@@ -467,19 +629,17 @@ impl<'rt> Engine<'rt> {
     }
 
     /// Write a parked sequence's rows into group lane `lane` (one
-    /// contiguous copy per layer per arena).
+    /// contiguous row-range copy per layer per arena; dtype-preserving —
+    /// q8 codes and scales move together).
     fn unpark_into(&mut self, id: SeqId, lane: usize) {
         let (l, n) = (self.cfg.n_layers, self.tier);
-        let (kd, vd) = (self.cfg.k_cache_dims, self.cfg.v_cache_dims);
         let b = self.lanes.bucket();
         let p = self.parked.get(&id).expect("unpark of unknown seq");
         for li in 0..l {
-            let gk = (li * b + lane) * n * kd;
-            self.k_group.data[gk..gk + p.len * kd]
-                .copy_from_slice(&p.k[li * p.len * kd..(li + 1) * p.len * kd]);
-            let gv = (li * b + lane) * n * vd;
-            self.v_group.data[gv..gv + p.len * vd]
-                .copy_from_slice(&p.v[li * p.len * vd..(li + 1) * p.len * vd]);
+            self.k_group.copy_rows((li * b + lane) * n, &p.k, li * p.len,
+                                   p.len);
+            self.v_group.copy_rows((li * b + lane) * n, &p.v, li * p.len,
+                                   p.len);
         }
     }
 
@@ -491,16 +651,14 @@ impl<'rt> Engine<'rt> {
         let b = self.lanes.bucket();
         let mut parked = Parked {
             len,
-            k: vec![0.0; l * len * kd],
-            v: vec![0.0; l * len * vd],
+            k: RowArena::zeros(self.quant, kd, l * len),
+            v: RowArena::zeros(self.quant, vd, l * len),
         };
         for li in 0..l {
-            let gk = (li * b + lane) * n * kd;
-            parked.k[li * len * kd..(li + 1) * len * kd]
-                .copy_from_slice(&self.k_group.data[gk..gk + len * kd]);
-            let gv = (li * b + lane) * n * vd;
-            parked.v[li * len * vd..(li + 1) * len * vd]
-                .copy_from_slice(&self.v_group.data[gv..gv + len * vd]);
+            parked.k.copy_rows(li * len, &self.k_group,
+                               (li * b + lane) * n, len);
+            parked.v.copy_rows(li * len, &self.v_group,
+                               (li * b + lane) * n, len);
         }
         self.parked.insert(id, parked);
     }
@@ -545,29 +703,38 @@ impl<'rt> Engine<'rt> {
             let (kd, vd) = (self.cfg.k_cache_dims, self.cfg.v_cache_dims);
             let (old_b, old_n) = (self.lanes.bucket(), self.tier);
             let old_k = std::mem::replace(
-                &mut self.k_group, Tensor::zeros(&[l, bucket, tier, kd]));
+                &mut self.k_group,
+                RowArena::zeros(self.quant, kd, l * bucket * tier));
             let old_v = std::mem::replace(
-                &mut self.v_group, Tensor::zeros(&[l, bucket, tier, vd]));
+                &mut self.v_group,
+                RowArena::zeros(self.quant, vd, l * bucket * tier));
             for &(id, from, to) in &plan.keep {
                 let len = self.rows.get(&id).copied().unwrap_or(0);
                 for li in 0..l {
-                    let src = (li * old_b + from) * old_n * kd;
-                    let dst = (li * bucket + to) * tier * kd;
-                    self.k_group.data[dst..dst + len * kd]
-                        .copy_from_slice(&old_k.data[src..src + len * kd]);
-                    let src = (li * old_b + from) * old_n * vd;
-                    let dst = (li * bucket + to) * tier * vd;
-                    self.v_group.data[dst..dst + len * vd]
-                        .copy_from_slice(&old_v.data[src..src + len * vd]);
+                    self.k_group.copy_rows((li * bucket + to) * tier,
+                                           &old_k,
+                                           (li * old_b + from) * old_n,
+                                           len);
+                    self.v_group.copy_rows((li * bucket + to) * tier,
+                                           &old_v,
+                                           (li * old_b + from) * old_n,
+                                           len);
                 }
             }
             if tier != self.tier {
                 self.metrics.tier_switches += 1;
             }
             self.tier = tier;
+            let sizing = self.sizing();
             self.metrics.arena_bytes =
-                ((self.k_group.data.len() + self.v_group.data.len()) * 4)
-                    as u64;
+                sizing.arena_payload_bytes(bucket, tier) as u64;
+            self.metrics.arena_scale_bytes =
+                sizing.arena_scale_bytes(bucket, tier) as u64;
+            debug_assert_eq!(
+                self.metrics.arena_bytes as usize,
+                self.k_group.payload_bytes() + self.v_group.payload_bytes(),
+                "ArenaSizing and RowArena disagree on arena payload"
+            );
         }
         self.lanes.apply(&plan);
         for &(id, lane) in &plan.join {
@@ -608,14 +775,22 @@ impl<'rt> Engine<'rt> {
             // the host mirror is always current (delta-synced every
             // step), so a membership change or tier switch repacks it
             // directly — there is no full-arena download here, only the
-            // upload of the repacked arenas
+            // upload of the repacked arenas (payload + q8 scale planes)
             self.regroup(&active, tier)?;
-            self.k_lit = Some(crate::runtime::client::tensor_to_literal(
-                &self.k_group)?);
-            self.v_lit = Some(crate::runtime::client::tensor_to_literal(
-                &self.v_group)?);
+            let l = self.cfg.n_layers;
+            let (kd, vd) = (self.cfg.k_cache_dims, self.cfg.v_cache_dims);
+            let (b, n) = (self.lanes.bucket(), self.tier);
+            let (k_lit, k_scale_lit) =
+                Self::arena_literals(&self.k_group, &[l, b, n, kd])?;
+            let (v_lit, v_scale_lit) =
+                Self::arena_literals(&self.v_group, &[l, b, n, vd])?;
+            self.k_lit = Some(k_lit);
+            self.k_scale_lit = k_scale_lit;
+            self.v_lit = Some(v_lit);
+            self.v_scale_lit = v_scale_lit;
             self.metrics.sync_upload_bytes +=
-                ((self.k_group.data.len() + self.v_group.data.len()) * 4)
+                (self.k_group.payload_bytes() + self.k_group.scale_bytes()
+                 + self.v_group.payload_bytes() + self.v_group.scale_bytes())
                     as u64;
         }
         let b = self.lanes.bucket();
@@ -632,13 +807,19 @@ impl<'rt> Engine<'rt> {
         }
         let tokens = TensorI32::new(&[b], toks);
         let positions = TensorI32::new(&[b], pos);
-        let artifact =
-            self.rt.manifest().decode_name(&self.cfg.name, b, n, self.pallas);
+        let artifact = self.rt.manifest().decode_name(
+            &self.cfg.name, b, n, self.pallas, self.quant);
         let t0 = std::time::Instant::now();
         let outs = {
             let mut args = self.param_args();
             args.push(Arg::L(self.k_lit.as_ref().unwrap()));
+            if let Some(ksl) = &self.k_scale_lit {
+                args.push(Arg::L(ksl));
+            }
             args.push(Arg::L(self.v_lit.as_ref().unwrap()));
+            if let Some(vsl) = &self.v_scale_lit {
+                args.push(Arg::L(vsl));
+            }
             args.push(Arg::I(&tokens));
             args.push(Arg::I(&positions));
             self.rt.execute(&artifact, &args)?
@@ -650,30 +831,66 @@ impl<'rt> Engine<'rt> {
         *self.metrics.tier_steps.entry(n).or_insert(0) += 1;
 
         let logits = literal_to_tensor(&outs[0])?; // (B, V)
-        let k_rows = literal_to_tensor(&outs[3])?; // (L, B, KD)
-        let v_rows = literal_to_tensor(&outs[4])?; // (L, B, VD)
-        let mut outs = outs;
-        self.v_lit = Some(outs.remove(2));
-        self.k_lit = Some(outs.remove(1));
         let l = self.cfg.n_layers;
         let (kd, vd) = (self.cfg.k_cache_dims, self.cfg.v_cache_dims);
-        self.metrics.row_sync_bytes +=
-            ((k_rows.data.len() + v_rows.data.len()) * 4) as u64;
-        // delta-sync: scatter this step's written rows into the host
-        // mirror — O(L·B·(KD+VD)) per step, independent of max_seq — so
-        // the next membership change repacks without any arena download
-        for s in seqs.iter() {
-            let lane = self.lanes.lane_of(s.id).expect("active seq has a lane");
-            let row = s.len() - 1;
-            for li in 0..l {
-                let src = (li * b + lane) * kd;
-                let dst = ((li * b + lane) * n + row) * kd;
-                self.k_group.data[dst..dst + kd]
-                    .copy_from_slice(&k_rows.data[src..src + kd]);
-                let src = (li * b + lane) * vd;
-                let dst = ((li * b + lane) * n + row) * vd;
-                self.v_group.data[dst..dst + vd]
-                    .copy_from_slice(&v_rows.data[src..src + vd]);
+        // download this step's delta rows, keep the updated arena
+        // literals for the next step, scatter into the host mirror.
+        // Output layouts:
+        //   fp32: [logits, k_cache, v_cache, k_rows, v_rows]
+        //   q8:   [logits, k_cache, k_scale, v_cache, v_scale,
+        //          k_rows, k_row_scale, v_rows, v_row_scale]
+        let mut outs = outs;
+        match self.quant {
+            KvQuant::Fp32 => {
+                let k_rows = literal_to_vec_f32(&outs[3])?; // (L, B, KD)
+                let v_rows = literal_to_vec_f32(&outs[4])?; // (L, B, VD)
+                self.v_lit = Some(outs.remove(2));
+                self.k_lit = Some(outs.remove(1));
+                self.metrics.row_sync_bytes +=
+                    ((k_rows.len() + v_rows.len()) * 4) as u64;
+                for s in seqs.iter() {
+                    let lane =
+                        self.lanes.lane_of(s.id).expect("active seq lane");
+                    let row = s.len() - 1;
+                    for li in 0..l {
+                        let src = li * b + lane;
+                        self.k_group.write_f32_rows(
+                            (li * b + lane) * n + row,
+                            &k_rows[src * kd..(src + 1) * kd], 1);
+                        self.v_group.write_f32_rows(
+                            (li * b + lane) * n + row,
+                            &v_rows[src * vd..(src + 1) * vd], 1);
+                    }
+                }
+            }
+            KvQuant::Q8 => {
+                let k_rows = literal_to_vec_i8(&outs[5])?; // (L, B, KD)
+                let k_row_s = literal_to_vec_f32(&outs[6])?; // (L, B)
+                let v_rows = literal_to_vec_i8(&outs[7])?; // (L, B, VD)
+                let v_row_s = literal_to_vec_f32(&outs[8])?; // (L, B)
+                self.v_scale_lit = Some(outs.remove(4));
+                self.v_lit = Some(outs.remove(3));
+                self.k_scale_lit = Some(outs.remove(2));
+                self.k_lit = Some(outs.remove(1));
+                self.metrics.row_sync_bytes += (k_rows.len() + v_rows.len()
+                    + (k_row_s.len() + v_row_s.len()) * 4)
+                    as u64;
+                for s in seqs.iter() {
+                    let lane =
+                        self.lanes.lane_of(s.id).expect("active seq lane");
+                    let row = s.len() - 1;
+                    for li in 0..l {
+                        let src = li * b + lane;
+                        self.k_group.write_q8_rows(
+                            (li * b + lane) * n + row,
+                            &k_rows[src * kd..(src + 1) * kd],
+                            &k_row_s[src..src + 1], 1);
+                        self.v_group.write_q8_rows(
+                            (li * b + lane) * n + row,
+                            &v_rows[src * vd..(src + 1) * vd],
+                            &v_row_s[src..src + 1], 1);
+                    }
+                }
             }
         }
         let v = self.cfg.vocab;
@@ -685,6 +902,7 @@ impl<'rt> Engine<'rt> {
             let tok = self.sampler.sample(row, &mut self.rng);
             s.push_token(tok);
         }
+        self.last_decode_logits = Some(logits);
         // finished sequences vacate their lanes via drop_seq (zero-copy)
         Ok(())
     }
@@ -711,18 +929,17 @@ impl<'rt> Engine<'rt> {
     }
 
     /// Bytes of host cache storage currently parked (diagnostics) —
-    /// completed-prefill rows plus in-flight chunked-prefill mirrors.
+    /// completed-prefill rows plus in-flight chunked-prefill mirrors,
+    /// payload + scale planes at the engine's quant.
     pub fn parked_bytes(&self) -> usize {
-        let parked: usize = self
-            .parked
-            .values()
-            .map(|p| (p.k.len() + p.v.len()) * 4)
-            .sum();
-        let chunking: usize = self
-            .chunking
-            .values()
-            .map(|p| (p.k.len() + p.v.len()) * 4)
-            .sum();
+        let arena = |k: &RowArena, v: &RowArena| {
+            k.payload_bytes() + k.scale_bytes() + v.payload_bytes()
+                + v.scale_bytes()
+        };
+        let parked: usize =
+            self.parked.values().map(|p| arena(&p.k, &p.v)).sum();
+        let chunking: usize =
+            self.chunking.values().map(|p| arena(&p.k, &p.v)).sum();
         parked + chunking
     }
 }

@@ -4,6 +4,51 @@
 use std::collections::BTreeMap;
 
 use crate::substrate::histogram::Histogram;
+use crate::substrate::tensor::KvQuant;
+
+/// Dtype-aware cache byte sizing (ISSUE 4): every byte counter the engine
+/// reports goes through here instead of a hardcoded 4 bytes/element, so
+/// `arena_bytes`/`row_sync_bytes`/`sync_upload_bytes` report true traffic
+/// for both fp32 and int8 arenas. Payload (codes/values) and the q8
+/// per-row fp32 scale planes are sized separately: `arena_bytes` is the
+/// payload gauge (the 4x headline), `arena_scale_bytes` the scale-plane
+/// gauge, and the traffic counters include both.
+#[derive(Clone, Copy, Debug)]
+pub struct ArenaSizing {
+    pub n_layers: usize,
+    pub k_dims: usize,
+    pub v_dims: usize,
+    pub quant: KvQuant,
+}
+
+impl ArenaSizing {
+    /// Payload bytes of one K+V cache row across all layers.
+    pub fn row_payload_bytes(&self) -> usize {
+        self.n_layers * (self.k_dims + self.v_dims) * self.quant.elem_bytes()
+    }
+
+    /// Scale bytes of one K+V cache row across all layers (one fp32 per
+    /// arena per row in q8 mode; 0 in fp32 mode).
+    pub fn row_scale_bytes(&self) -> usize {
+        self.n_layers * 2 * self.quant.scale_bytes_per_row()
+    }
+
+    /// Total host bytes that move when one full cache row moves.
+    pub fn row_bytes(&self) -> usize {
+        self.row_payload_bytes() + self.row_scale_bytes()
+    }
+
+    /// K+V payload bytes of a (bucket × tier) decode arena pair.
+    pub fn arena_payload_bytes(&self, bucket: usize, tier: usize) -> usize {
+        self.n_layers * bucket * tier * (self.k_dims + self.v_dims)
+            * self.quant.elem_bytes()
+    }
+
+    /// K+V scale-plane bytes of a (bucket × tier) decode arena pair.
+    pub fn arena_scale_bytes(&self, bucket: usize, tier: usize) -> usize {
+        self.n_layers * bucket * tier * 2 * self.quant.scale_bytes_per_row()
+    }
+}
 
 #[derive(Clone, Debug, Default)]
 pub struct EngineMetrics {
@@ -43,12 +88,21 @@ pub struct EngineMetrics {
     /// tripwire — it must stay 0 (asserted by the steady-churn e2e test
     /// and reported by bench_serving).
     pub sync_download_bytes: u64,
-    /// Per-step delta-row download bytes (`k_rows`/`v_rows`), the O(L·B)
-    /// host traffic that replaced the O(L·B·max_seq) arena round trips.
+    /// Delta-row download bytes (`k_rows`/`v_rows` + q8 scales): the
+    /// O(L·B) per decode step that replaced the O(L·B·max_seq) arena
+    /// round trips, plus each prefill chunk's O(L·C) delta — so chunked
+    /// mode's download traffic is charged here symmetrically with its
+    /// `sync_upload_bytes` charge. Dtype-aware: ~4x smaller at q8.
     pub row_sync_bytes: u64,
-    /// Current decode arena allocation (K+V, bytes) — a gauge, sized by
-    /// the active tier and bucket rather than max context.
+    /// Current decode arena PAYLOAD allocation (K+V codes/values, bytes)
+    /// — a gauge, sized by the active tier and bucket rather than max
+    /// context, and by the KV quant mode's element width (4x smaller at
+    /// q8). The paper's composition claim reads off this gauge.
     pub arena_bytes: u64,
+    /// Current q8 scale-plane allocation (one fp32 per cache row per
+    /// arena; 0 in fp32 mode) — reported next to `arena_bytes` so the
+    /// quantized totals stay honest about the scale overhead.
+    pub arena_scale_bytes: u64,
     /// Context-tier switches (arena grow or shrink).
     pub tier_switches: u64,
     /// Decode steps executed per context tier — per-tier occupancy of the
@@ -114,7 +168,7 @@ impl EngineMetrics {
              lanes:   {} joins, {} leaves, copyback {} B vs {} B \
              full-repack baseline ({savings})\n\
              sync:    up {} B, down {} B (full-arena), delta {:.0} B/step, \
-             arena {} B, {} tier switches [{}]\n\
+             arena {} B (+{} B scales), {} tier switches [{}]\n\
              decode throughput: {:.1} tok/s",
             self.prefill.summary(),
             self.prefill_tokens,
@@ -133,6 +187,7 @@ impl EngineMetrics {
             self.sync_download_bytes,
             self.row_sync_bytes_per_step(),
             self.arena_bytes,
+            self.arena_scale_bytes,
             self.tier_switches,
             tiers.join(" "),
             self.decode_tokens_per_sec()
@@ -258,6 +313,50 @@ mod tests {
                               ..Default::default() };
         assert!(r.report().contains("3 requests"));
         assert!((r.gen_tokens_per_sec() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn arena_sizing_fp32_matches_legacy_4_bytes() {
+        // the pre-ISSUE-4 hardcoded sizing: 4 bytes per element, no scales
+        let s = ArenaSizing {
+            n_layers: 3,
+            k_dims: 16,
+            v_dims: 64,
+            quant: KvQuant::Fp32,
+        };
+        assert_eq!(s.row_payload_bytes(), 3 * (16 + 64) * 4);
+        assert_eq!(s.row_scale_bytes(), 0);
+        assert_eq!(s.row_bytes(), 3 * (16 + 64) * 4);
+        assert_eq!(s.arena_payload_bytes(8, 32), 3 * 8 * 32 * 80 * 4);
+        assert_eq!(s.arena_scale_bytes(8, 32), 0);
+    }
+
+    #[test]
+    fn arena_sizing_q8_is_4x_payload_plus_scales() {
+        let q = ArenaSizing {
+            n_layers: 3,
+            k_dims: 16,
+            v_dims: 64,
+            quant: KvQuant::Q8,
+        };
+        let f = ArenaSizing { quant: KvQuant::Fp32, ..q };
+        // payload shrinks exactly 4x
+        assert_eq!(f.arena_payload_bytes(8, 32),
+                   4 * q.arena_payload_bytes(8, 32));
+        // one fp32 scale per row per arena (K and V)
+        assert_eq!(q.row_scale_bytes(), 3 * 2 * 4);
+        assert_eq!(q.arena_scale_bytes(8, 32), 3 * 8 * 32 * 2 * 4);
+        // a moved row carries payload + scales
+        assert_eq!(q.row_bytes(), 3 * 80 + 24);
+        assert!(q.row_bytes() < f.row_bytes());
+    }
+
+    #[test]
+    fn report_renders_scale_gauge() {
+        let mut m = EngineMetrics::default();
+        m.arena_bytes = 1000;
+        m.arena_scale_bytes = 96;
+        assert!(m.report().contains("1000 B (+96 B scales)"));
     }
 
     #[test]

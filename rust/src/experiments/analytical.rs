@@ -40,6 +40,22 @@ pub fn table10() -> Table {
     t
 }
 
+pub fn quantized_composition() -> Table {
+    let mut t = Table::new(
+        "§6 composition — key-cache bytes/token @ 7B geometry (d 4096, \
+         32 layers): rank x GQA x int8 (per-row fp32 scales included)",
+        &["stack", "K bytes/token", "vs fp32 MHA"],
+    );
+    for (label, bytes, x) in roofline::quantized_composition_rows() {
+        t.row(&[
+            label.to_string(),
+            format!("{bytes:.0}"),
+            format!("{x:.2}x"),
+        ]);
+    }
+    t
+}
+
 pub fn prefill_roofline() -> Table {
     let mut t = Table::new(
         "§12 — prefill arithmetic intensity (FLOP/byte of KV), H100 ridge ~295",
@@ -60,5 +76,5 @@ pub fn prefill_roofline() -> Table {
 }
 
 pub fn run() -> Vec<Table> {
-    vec![table6(), table10(), prefill_roofline()]
+    vec![table6(), table10(), quantized_composition(), prefill_roofline()]
 }

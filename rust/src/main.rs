@@ -20,7 +20,7 @@ use thinkeys::coordinator::scheduler::{SchedConfig, Scheduler};
 use thinkeys::datagen::arrival::{mixed_chat_doc_trace, poisson_trace,
                                  TraceConfig};
 use thinkeys::experiments::{self, Opts};
-use thinkeys::runtime::{ParamStore, Runtime};
+use thinkeys::runtime::{KvQuant, ParamStore, Runtime};
 use thinkeys::substrate::args::Args;
 
 fn main() {
@@ -92,21 +92,40 @@ fn serve(argv: &[String]) -> Result<()> {
         .flag_bool("mixed",
                    "serve the mixed chat+doc trace (batch-class documents \
                     + interactive chats) instead of the poisson trace")
+        .flag_str("kv-quant", Some("fp32"),
+                  "KV-cache element format: fp32, or q8 (int8 arenas with \
+                   per-row fp32 scales, dequant-fused attention — 4x less \
+                   arena payload and per-step sync; needs the _q8 \
+                   artifact grid from `make artifacts`)")
         .flag_bool("pallas", "use the Pallas-kernel decode artifacts")
         .parse(argv)?;
     let cfg_name = p.str("config")?;
+    let quant_name = p.str("kv-quant")?;
+    let quant = KvQuant::parse(&quant_name).ok_or_else(|| {
+        anyhow::anyhow!("--kv-quant {quant_name}: expected fp32 or q8")
+    })?;
     let rt = Runtime::new()?;
     let cfg = rt.manifest().config(&cfg_name)?.clone();
     let params = ParamStore::init(&cfg, 42);
-    let eng = Engine::new(&rt, &cfg_name, params, p.bool("pallas"),
-                          Sampler::Greedy, 0)?;
+    let eng = Engine::with_kv_quant(&rt, &cfg_name, params, p.bool("pallas"),
+                                    Sampler::Greedy, 0, quant)?;
+    // admission accounting at the serving element widths: the q8 rows
+    // amortize their per-row fp32 scale over the row's elements (the
+    // fp32 path keeps the historical bf16-deployment model)
+    let (bk, bv) = match quant {
+        KvQuant::Fp32 => (2.0, 2.0),
+        KvQuant::Q8 => (
+            1.0 + 4.0 / cfg.k_cache_dims as f64,
+            1.0 + 4.0 / cfg.v_cache_dims as f64,
+        ),
+    };
     let kv = KvCacheManager::new(KvCacheConfig {
         n_layers: cfg.n_layers,
         k_dims: cfg.k_cache_dims,
         v_dims: cfg.v_cache_dims,
         block_tokens: 16,
-        bytes_per_el_k: 2.0,
-        bytes_per_el_v: 2.0,
+        bytes_per_el_k: bk,
+        bytes_per_el_v: bv,
         budget_bytes: p.f64("budget-mb")? * 1e6,
     });
     let chunk = match p.usize("chunk-tokens")? {

@@ -15,17 +15,29 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::manifest::{ArtifactEntry, Manifest};
-use crate::substrate::tensor::{Tensor, TensorI32};
+use crate::substrate::tensor::{Tensor, TensorI32, TensorI8};
 
-/// A runtime argument: f32 tensor, i32 tensor, scalars, or a pre-built
-/// literal (the hot-path fast lane — skips the host-side conversion; see
-/// EXPERIMENTS.md §Perf).
+/// A runtime argument: f32 tensor, i32 tensor, i8 tensor (quantized
+/// KV-cache payloads), scalars, or a pre-built literal (the hot-path
+/// fast lane — skips the host-side conversion; see EXPERIMENTS.md §Perf).
 pub enum Arg<'a> {
     F(&'a Tensor),
     I(&'a TensorI32),
+    I8(&'a TensorI8),
     ScalarF(f32),
     ScalarI(i32),
     L(&'a xla::Literal),
+}
+
+/// The XLA element type a manifest input-spec dtype string names. The
+/// manifest records numpy dtype names (aot.py `str(s.dtype)`).
+fn spec_element_type(dtype: &str) -> Result<xla::ElementType> {
+    match dtype {
+        "float32" => Ok(xla::ElementType::F32),
+        "int32" => Ok(xla::ElementType::S32),
+        "int8" => Ok(xla::ElementType::S8),
+        other => bail!("unsupported manifest dtype {other:?}"),
+    }
 }
 
 pub struct Runtime {
@@ -104,35 +116,56 @@ impl Runtime {
             );
         }
         // Build owned literals for tensor/scalar args; Arg::L passes a
-        // caller-cached literal through without conversion.
+        // caller-cached literal through without conversion. Every tensor
+        // and cached-literal arg is validated against the manifest spec —
+        // shape AND dtype — so a stale literal (kept across a bucket/tier
+        // resize, or an fp32 arena fed to a q8 artifact) fails fast here
+        // instead of reaching XLA as an opaque executable error or a
+        // silent byte reinterpretation.
+        fn check_shape(name: &str, spec: &crate::runtime::manifest::InputSpec,
+                       shape: &[usize], what: &str) -> Result<()> {
+            if shape != spec.shape {
+                bail!(
+                    "{name}: {what} input {:?} shape {:?} != expected {:?} \
+                     (stale literal after a bucket/tier resize?)",
+                    spec.name, shape, spec.shape
+                );
+            }
+            Ok(())
+        }
+        fn check_dtype(name: &str, spec: &crate::runtime::manifest::InputSpec,
+                       dtype: &str) -> Result<()> {
+            if spec.dtype != dtype {
+                bail!(
+                    "{name}: input {:?} dtype {dtype} != expected {:?} \
+                     (fp32 cache literal fed to a quantized artifact, or \
+                     vice versa?)",
+                    spec.name, spec.dtype
+                );
+            }
+            Ok(())
+        }
         let mut owned: Vec<Option<xla::Literal>> = Vec::with_capacity(args.len());
         for (a, spec) in args.iter().zip(&entry.inputs) {
             let lit = match a {
                 Arg::F(t) => {
-                    if t.shape != spec.shape {
-                        bail!(
-                            "{name}: input {:?} shape {:?} != expected {:?}",
-                            spec.name, t.shape, spec.shape
-                        );
-                    }
+                    check_shape(name, spec, &t.shape, "tensor")?;
+                    check_dtype(name, spec, "float32")?;
                     Some(tensor_to_literal(t)?)
                 }
                 Arg::I(t) => {
-                    if t.shape != spec.shape {
-                        bail!(
-                            "{name}: input {:?} shape {:?} != expected {:?}",
-                            spec.name, t.shape, spec.shape
-                        );
-                    }
+                    check_shape(name, spec, &t.shape, "tensor")?;
+                    check_dtype(name, spec, "int32")?;
                     Some(tensor_i32_to_literal(t)?)
+                }
+                Arg::I8(t) => {
+                    check_shape(name, spec, &t.shape, "tensor")?;
+                    check_dtype(name, spec, "int8")?;
+                    Some(tensor_i8_to_literal(t)?)
                 }
                 Arg::ScalarF(v) => Some(xla::Literal::scalar(*v)),
                 Arg::ScalarI(v) => Some(xla::Literal::scalar(*v)),
                 Arg::L(l) => {
-                    // Cached literals skip conversion but NOT validation: a
-                    // stale cache literal (e.g. kept across a bucket/tier
-                    // resize) would otherwise reach XLA and fail with an
-                    // opaque executable error.
                     let shape = l.array_shape().map_err(|e| {
                         anyhow::anyhow!(
                             "{name}: cached literal input {:?} has no array \
@@ -142,12 +175,14 @@ impl Runtime {
                     })?;
                     let dims: Vec<usize> =
                         shape.dims().iter().map(|&d| d as usize).collect();
-                    if dims != spec.shape {
+                    check_shape(name, spec, &dims, "cached literal")?;
+                    let want = spec_element_type(&spec.dtype)?;
+                    if shape.ty() != want {
                         bail!(
-                            "{name}: cached literal input {:?} shape {:?} != \
-                             expected {:?} (stale literal after a bucket/tier \
-                             resize?)",
-                            spec.name, dims, spec.shape
+                            "{name}: cached literal input {:?} element type \
+                             {:?} != expected {:?} ({}) — stale fp32 arena \
+                             fed to a q8 artifact?",
+                            spec.name, shape.ty(), want, spec.dtype
                         );
                     }
                     None
@@ -208,6 +243,38 @@ pub fn tensor_i32_to_literal(t: &TensorI32) -> Result<xla::Literal> {
     }
     let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
     lit.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape: {e}"))
+}
+
+pub fn tensor_i8_to_literal(t: &TensorI8) -> Result<xla::Literal> {
+    i8_slice_to_literal(&t.data, &t.shape)
+}
+
+/// Build an s8 literal straight from a byte slice + logical shape — the
+/// upload path for quantized arenas (no intermediate Tensor).
+pub fn i8_slice_to_literal(data: &[i8], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape i8: {e}"))
+}
+
+/// Build an f32 literal straight from a value slice + logical shape —
+/// the arena/scale-plane upload path (no intermediate Tensor).
+pub fn f32_slice_to_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape f32: {e}"))
+}
+
+/// Download an s8 literal's payload (quantized delta rows).
+pub fn literal_to_vec_i8(lit: &xla::Literal) -> Result<Vec<i8>> {
+    lit.to_vec::<i8>()
+        .map_err(|e| anyhow::anyhow!("to_vec<i8>: {e}"))
+}
+
+/// Download an f32 literal's payload (delta-row scales).
+pub fn literal_to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("to_vec<f32>: {e}"))
 }
 
 pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {

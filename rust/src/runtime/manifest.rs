@@ -9,6 +9,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use crate::substrate::json::Value;
+pub use crate::substrate::tensor::KvQuant;
 
 #[derive(Clone, Debug)]
 pub struct ParamSpecEntry {
@@ -111,6 +112,12 @@ pub struct Manifest {
     /// scheduler interleaves one chunk per round with decode steps. Empty
     /// for manifests exported before chunking (monolithic prefill only).
     pub prefill_chunks: BTreeMap<String, Vec<usize>>,
+    /// KV-cache quantization axis (ISSUE 4): serving config → exported
+    /// quant-mode names ("fp32", "q8"). q8 decode/chunk artifacts carry
+    /// int8 arenas with per-row fp32 scale planes and are named with a
+    /// `_q8` suffix. Empty for manifests exported before quantization —
+    /// the engine then only offers the fp32 path.
+    pub kv_quant: BTreeMap<String, Vec<String>>,
     pub prefill_seq: usize,
     pub configs: BTreeMap<String, ConfigEntry>,
     pub artifacts: BTreeMap<String, ArtifactEntry>,
@@ -163,6 +170,17 @@ impl Manifest {
                     .map(|x| x.as_usize())
                     .collect::<Result<Vec<_>>>()?;
                 prefill_chunks.insert(name.clone(), chunks);
+            }
+        }
+        let mut kv_quant = BTreeMap::new();
+        if let Some(kq) = v.opt("kv_quant") {
+            for (name, qv) in kq.as_obj()? {
+                let quants = qv
+                    .as_arr()?
+                    .iter()
+                    .map(|x| Ok(x.as_str()?.to_string()))
+                    .collect::<Result<Vec<_>>>()?;
+                kv_quant.insert(name.clone(), quants);
             }
         }
         let prefill_seq = v.get("prefill_seq")?.as_usize()?;
@@ -265,6 +283,7 @@ impl Manifest {
             decode_batches,
             decode_tiers,
             prefill_chunks,
+            kv_quant,
             prefill_seq,
             configs,
             artifacts,
@@ -316,10 +335,24 @@ impl Manifest {
         self.prefill_chunks.get(cfg).cloned().unwrap_or_default()
     }
 
-    /// `prefill_{cfg}_c{chunk}` — the resumable chunked-prefill artifact
-    /// (ref impl only; there is no `_pallas` chunk column, see aot.py).
-    pub fn prefill_chunk_name(&self, cfg: &str, chunk: usize) -> String {
-        format!("prefill_{cfg}_c{chunk}")
+    /// `prefill_{cfg}_c{chunk}` / `prefill_{cfg}_c{chunk}_q8` — the
+    /// resumable chunked-prefill artifact (ref impl only; there is no
+    /// `_pallas` chunk column, see aot.py).
+    pub fn prefill_chunk_name(&self, cfg: &str, chunk: usize,
+                              quant: KvQuant) -> String {
+        format!("prefill_{cfg}_c{chunk}{}", quant.suffix())
+    }
+
+    /// KV quant modes exported for `cfg`'s serving artifacts. Falls back
+    /// to fp32-only for manifests exported before quantization, so the
+    /// engine refuses q8 on them instead of inventing artifact names.
+    pub fn kv_quants_for(&self, cfg: &str) -> Vec<KvQuant> {
+        match self.kv_quant.get(cfg) {
+            Some(names) if !names.is_empty() => {
+                names.iter().filter_map(|n| KvQuant::parse(n)).collect()
+            }
+            _ => vec![KvQuant::Fp32],
+        }
     }
 
     /// Arena-length tiers exported for `cfg`'s decode artifacts, ascending.
@@ -337,16 +370,17 @@ impl Manifest {
             .unwrap_or_default()
     }
 
-    /// `decode_{cfg}_b{batch}_n{tier}` on tiered manifests; pre-tier
-    /// manifests keep the legacy un-suffixed name (tier is then always
-    /// max_seq).
+    /// `decode_{cfg}_b{batch}_n{tier}[_q8][_pallas]` on tiered manifests;
+    /// pre-tier manifests keep the legacy un-suffixed name (tier is then
+    /// always max_seq, and only fp32 exists).
     pub fn decode_name(&self, cfg: &str, batch: usize, tier: usize,
-                       pallas: bool) -> String {
+                       pallas: bool, quant: KvQuant) -> String {
+        let q = quant.suffix();
         let suffix = if pallas { "_pallas" } else { "" };
         if self.decode_tiers.contains_key(cfg) {
-            format!("decode_{cfg}_b{batch}_n{tier}{suffix}")
+            format!("decode_{cfg}_b{batch}_n{tier}{q}{suffix}")
         } else {
-            format!("decode_{cfg}_b{batch}{suffix}")
+            format!("decode_{cfg}_b{batch}{q}{suffix}")
         }
     }
 }
@@ -401,8 +435,11 @@ mod tests {
             m.evalloss_name("tinylm_ds32"),
             m.logits_name("copyback_ds4"),
             m.prefill_name("servethin", false),
-            m.decode_name("servethin", 8, tier, false),
-            m.decode_name("servethin", 8, tier, true),
+            m.decode_name("servethin", 8, tier, false, KvQuant::Fp32),
+            m.decode_name("servethin", 8, tier, true, KvQuant::Fp32),
+            m.decode_name("servethin", 8, tier, false, KvQuant::Q8),
+            m.decode_name("servethin", 8, tier, true, KvQuant::Q8),
+            m.prefill_chunk_name("servethin", 32, KvQuant::Q8),
         ] {
             assert!(m.artifacts.contains_key(&n), "missing artifact {n}");
             assert!(m.dir.join(&m.artifacts[&n].file).exists());
@@ -423,7 +460,8 @@ mod tests {
             assert!(tiers.windows(2).all(|w| w[0] < w[1]), "{tiers:?}");
             for &b in &m.decode_batches {
                 for &n in &tiers {
-                    let name = m.decode_name(cfg_name, b, n, false);
+                    let name = m.decode_name(cfg_name, b, n, false,
+                                             KvQuant::Fp32);
                     let a = m
                         .artifact(&name)
                         .unwrap_or_else(|_| panic!("missing {name}"));
@@ -447,6 +485,71 @@ mod tests {
         }
     }
 
+    /// q8 roundtrip: the manifest records the quant axis, every
+    /// (bucket × tier) q8 decode name resolves, the recorded input specs
+    /// carry int8 arenas + per-row fp32 scale planes, and the outputs end
+    /// in the quantized delta rows + scales the engine mirrors.
+    #[test]
+    fn q8_decode_grid_resolves_with_int8_specs() {
+        let Some(m) = manifest() else { return };
+        for cfg_name in ["servefull", "servethin"] {
+            let cfg = m.config(cfg_name).unwrap();
+            assert_eq!(m.kv_quants_for(cfg_name),
+                       vec![KvQuant::Fp32, KvQuant::Q8]);
+            for &b in &m.decode_batches {
+                for &n in &m.tiers_for(cfg_name) {
+                    let name = m.decode_name(cfg_name, b, n, false,
+                                             KvQuant::Q8);
+                    let a = m
+                        .artifact(&name)
+                        .unwrap_or_else(|_| panic!("missing {name}"));
+                    let by = |nm: &str| {
+                        a.inputs.iter().find(|i| i.name == nm).unwrap()
+                    };
+                    assert_eq!(by("k_cache").dtype, "int8");
+                    assert_eq!(
+                        by("k_cache").shape,
+                        vec![cfg.n_layers, b, n, cfg.k_cache_dims]
+                    );
+                    assert_eq!(by("k_scale").dtype, "float32");
+                    assert_eq!(by("k_scale").shape,
+                               vec![cfg.n_layers, b, n]);
+                    assert_eq!(by("v_cache").dtype, "int8");
+                    assert_eq!(by("v_scale").shape,
+                               vec![cfg.n_layers, b, n]);
+                    assert_eq!(
+                        &a.outputs[a.outputs.len() - 4..],
+                        ["k_rows", "k_row_scale", "v_rows", "v_row_scale"]
+                            .map(String::from)
+                    );
+                }
+            }
+            // q8 chunk column: int8 arenas against the prefill_seq bucket
+            for &c in &m.chunks_for(cfg_name) {
+                let name = m.prefill_chunk_name(cfg_name, c, KvQuant::Q8);
+                let a = m
+                    .artifact(&name)
+                    .unwrap_or_else(|_| panic!("missing {name}"));
+                let kc = a.inputs.iter().find(|i| i.name == "k_cache")
+                    .unwrap();
+                assert_eq!(kc.dtype, "int8");
+                assert_eq!(kc.shape,
+                           vec![cfg.n_layers, m.prefill_seq,
+                                cfg.k_cache_dims]);
+            }
+        }
+    }
+
+    /// Pre-quantization manifests (no `kv_quant` key) resolve to
+    /// fp32-only — the engine then refuses q8 instead of inventing names.
+    #[test]
+    fn legacy_manifest_kv_quant_fallback() {
+        let Some(mut m) = manifest() else { return };
+        m.kv_quant.clear();
+        assert_eq!(m.kv_quants_for("servethin"), vec![KvQuant::Fp32]);
+        assert_eq!(m.kv_quants_for("no_such_config"), vec![KvQuant::Fp32]);
+    }
+
     /// Chunk roundtrip: the manifest records the chunked-prefill axis,
     /// every chunk name resolves to a real artifact whose recorded input
     /// shapes carry the prefill_seq arena + (1, C) token window + the
@@ -461,7 +564,7 @@ mod tests {
             assert!(!chunks.is_empty(), "no chunk axis for {cfg_name}");
             assert!(chunks.windows(2).all(|w| w[0] < w[1]), "{chunks:?}");
             for &c in &chunks {
-                let name = m.prefill_chunk_name(cfg_name, c);
+                let name = m.prefill_chunk_name(cfg_name, c, KvQuant::Fp32);
                 let a = m
                     .artifact(&name)
                     .unwrap_or_else(|_| panic!("missing {name}"));
@@ -507,7 +610,7 @@ mod tests {
         let max = m.config("servethin").unwrap().max_seq;
         assert_eq!(m.tiers_for("servethin"), vec![max]);
         assert_eq!(
-            m.decode_name("servethin", 8, max, false),
+            m.decode_name("servethin", 8, max, false, KvQuant::Fp32),
             "decode_servethin_b8"
         );
         assert_eq!(m.tiers_for("no_such_config"), Vec::<usize>::new());

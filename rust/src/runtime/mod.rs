@@ -10,5 +10,6 @@ pub mod client;
 pub mod params;
 
 pub use client::Runtime;
-pub use manifest::{ArtifactEntry, ConfigEntry, Manifest, ParamSpecEntry};
+pub use manifest::{ArtifactEntry, ConfigEntry, KvQuant, Manifest,
+                   ParamSpecEntry};
 pub use params::ParamStore;

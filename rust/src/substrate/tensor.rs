@@ -203,6 +203,242 @@ impl TensorI32 {
     }
 }
 
+/// An i8 tensor — quantized KV-cache payloads (ISSUE 4).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI8 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i8>,
+}
+
+impl TensorI8 {
+    pub fn new(shape: &[usize], data: Vec<i8>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        TensorI8 { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        TensorI8 { shape: shape.to_vec(), data: vec![0; shape.iter().product()] }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// KV-cache quantization (ISSUE 4)
+// ---------------------------------------------------------------------------
+
+/// KV-cache element format served by the engine. `Q8` stores arenas as
+/// int8 codes with ONE fp32 scale per cache row (the flat KD/VD entry of
+/// one layer/lane/position); `Fp32` is the legacy full-precision path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KvQuant {
+    #[default]
+    Fp32,
+    Q8,
+}
+
+impl KvQuant {
+    /// Bytes per arena payload element (the scale planes are accounted
+    /// separately — see `coordinator::metrics::ArenaSizing`).
+    pub fn elem_bytes(&self) -> usize {
+        match self {
+            KvQuant::Fp32 => 4,
+            KvQuant::Q8 => 1,
+        }
+    }
+
+    /// fp32 scale bytes per cache row per arena (K or V).
+    pub fn scale_bytes_per_row(&self) -> usize {
+        match self {
+            KvQuant::Fp32 => 0,
+            KvQuant::Q8 => 4,
+        }
+    }
+
+    /// Artifact-name suffix (mirrors aot.py `add()`).
+    pub fn suffix(&self) -> &'static str {
+        match self {
+            KvQuant::Fp32 => "",
+            KvQuant::Q8 => "_q8",
+        }
+    }
+
+    /// Manifest / CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            KvQuant::Fp32 => "fp32",
+            KvQuant::Q8 => "q8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<KvQuant> {
+        match s {
+            "fp32" => Some(KvQuant::Fp32),
+            "q8" => Some(KvQuant::Q8),
+            _ => None,
+        }
+    }
+}
+
+/// Scale floor for all-zero rows (python twin: `ref.Q8_SCALE_EPS`).
+pub const Q8_SCALE_EPS: f32 = 1e-12;
+
+/// Round half to even — the semantics of `jnp.round`, so host-quantized
+/// rows (monolithic-prefill park) and device-quantized rows (decode /
+/// chunk artifacts) agree bit for bit on ties.
+pub fn rint_ties_even(x: f32) -> f32 {
+    let r = x.round(); // half away from zero
+    if (r - x).abs() == 0.5 {
+        if (r as i64) % 2 == 0 {
+            r
+        } else {
+            r - x.signum()
+        }
+    } else {
+        r
+    }
+}
+
+/// Symmetric per-row int8 quantization over `rows = data.len() / d` rows
+/// of `d` elements: scale = max|row|/127 (floored at [`Q8_SCALE_EPS`]),
+/// codes = clip(rint(x/scale), -127, 127). Worst-case reconstruction
+/// error is scale/2 per element (property-tested in tests/properties.rs;
+/// python twin: `compile.kernels.ref.quantize_rows`).
+pub fn quantize_rows_q8(data: &[f32], d: usize) -> (Vec<i8>, Vec<f32>) {
+    assert!(d > 0 && data.len() % d == 0, "{} % {d}", data.len());
+    let rows = data.len() / d;
+    let mut q = vec![0i8; data.len()];
+    let mut scales = vec![0f32; rows];
+    for r in 0..rows {
+        let row = &data[r * d..(r + 1) * d];
+        let amax = row.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        let scale = (amax / 127.0).max(Q8_SCALE_EPS);
+        scales[r] = scale;
+        for (o, &x) in q[r * d..(r + 1) * d].iter_mut().zip(row) {
+            *o = rint_ties_even(x / scale).clamp(-127.0, 127.0) as i8;
+        }
+    }
+    (q, scales)
+}
+
+/// Dequantize per-row int8 codes back to fp32.
+pub fn dequantize_rows_q8(q: &[i8], scales: &[f32], d: usize) -> Vec<f32> {
+    assert_eq!(q.len(), scales.len() * d);
+    q.iter()
+        .enumerate()
+        .map(|(i, &c)| c as f32 * scales[i / d])
+        .collect()
+}
+
+/// Dtype-aware row storage for cache arenas and parked rows: `rows`
+/// entries of `d` elements each, stored fp32 or (int8 codes + one fp32
+/// scale per row). All engine cache movement (park/unpark/repack/delta
+/// scatter) is row-range copies through this type, so the fp32 and q8
+/// paths share the exact same index arithmetic.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RowArena {
+    pub quant: KvQuant,
+    pub d: usize,
+    pub rows: usize,
+    /// fp32 payload (empty in q8 mode).
+    pub f: Vec<f32>,
+    /// int8 payload (empty in fp32 mode).
+    pub q: Vec<i8>,
+    /// per-row fp32 scales (empty in fp32 mode).
+    pub s: Vec<f32>,
+}
+
+impl RowArena {
+    pub fn zeros(quant: KvQuant, d: usize, rows: usize) -> RowArena {
+        match quant {
+            KvQuant::Fp32 => RowArena {
+                quant,
+                d,
+                rows,
+                f: vec![0.0; d * rows],
+                q: Vec::new(),
+                s: Vec::new(),
+            },
+            KvQuant::Q8 => RowArena {
+                quant,
+                d,
+                rows,
+                f: Vec::new(),
+                q: vec![0; d * rows],
+                s: vec![0.0; rows],
+            },
+        }
+    }
+
+    /// Payload bytes (int8 codes or fp32 values; excludes scales).
+    pub fn payload_bytes(&self) -> usize {
+        self.d * self.rows * self.quant.elem_bytes()
+    }
+
+    /// Scale-plane bytes (0 in fp32 mode).
+    pub fn scale_bytes(&self) -> usize {
+        self.rows * self.quant.scale_bytes_per_row()
+    }
+
+    /// Copy `n` rows from `src` starting at `src_row` into `self` at
+    /// `dst_row`. Same dtype and row width required.
+    pub fn copy_rows(&mut self, dst_row: usize, src: &RowArena,
+                     src_row: usize, n: usize) {
+        assert_eq!(self.quant, src.quant);
+        assert_eq!(self.d, src.d);
+        let d = self.d;
+        match self.quant {
+            KvQuant::Fp32 => {
+                self.f[dst_row * d..(dst_row + n) * d]
+                    .copy_from_slice(&src.f[src_row * d..(src_row + n) * d]);
+            }
+            KvQuant::Q8 => {
+                self.q[dst_row * d..(dst_row + n) * d]
+                    .copy_from_slice(&src.q[src_row * d..(src_row + n) * d]);
+                self.s[dst_row..dst_row + n]
+                    .copy_from_slice(&src.s[src_row..src_row + n]);
+            }
+        }
+    }
+
+    /// Write `n` rows of fp32 values at `dst_row` — copied in fp32 mode,
+    /// quantized on write in q8 mode (THE host-side quantization point:
+    /// monolithic prefill parks through here).
+    pub fn write_f32_rows(&mut self, dst_row: usize, data: &[f32], n: usize) {
+        let d = self.d;
+        assert_eq!(data.len(), n * d);
+        match self.quant {
+            KvQuant::Fp32 => {
+                self.f[dst_row * d..(dst_row + n) * d].copy_from_slice(data);
+            }
+            KvQuant::Q8 => {
+                let (q, s) = quantize_rows_q8(data, d);
+                self.q[dst_row * d..(dst_row + n) * d].copy_from_slice(&q);
+                self.s[dst_row..dst_row + n].copy_from_slice(&s);
+            }
+        }
+    }
+
+    /// Write `n` already-quantized rows (codes + scales) at `dst_row` —
+    /// the delta-sync scatter path for q8 artifact outputs.
+    pub fn write_q8_rows(&mut self, dst_row: usize, q: &[i8], s: &[f32],
+                         n: usize) {
+        assert_eq!(self.quant, KvQuant::Q8, "q8 write into fp32 arena");
+        let d = self.d;
+        assert_eq!(q.len(), n * d);
+        assert_eq!(s.len(), n);
+        self.q[dst_row * d..(dst_row + n) * d].copy_from_slice(q);
+        self.s[dst_row..dst_row + n].copy_from_slice(s);
+    }
+
+    /// The arena's values as fp32 (identity in fp32 mode, dequantized in
+    /// q8 mode) — the parity-test surface.
+    pub fn to_f32(&self) -> Vec<f32> {
+        match self.quant {
+            KvQuant::Fp32 => self.f.clone(),
+            KvQuant::Q8 => dequantize_rows_q8(&self.q, &self.s, self.d),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -265,5 +501,105 @@ mod tests {
         assert_eq!(t.nbytes(4.0), 400.0); // f32
         assert_eq!(t.nbytes(2.0), 200.0); // bf16
         assert_eq!(t.nbytes(0.5), 50.0); // int4
+    }
+
+    #[test]
+    fn rint_ties_even_matches_numpy_round() {
+        assert_eq!(rint_ties_even(2.5), 2.0);
+        assert_eq!(rint_ties_even(3.5), 4.0);
+        assert_eq!(rint_ties_even(-2.5), -2.0);
+        assert_eq!(rint_ties_even(-1.5), -2.0);
+        assert_eq!(rint_ties_even(0.5), 0.0);
+        assert_eq!(rint_ties_even(-0.5), 0.0);
+        assert_eq!(rint_ties_even(2.49), 2.0);
+        assert_eq!(rint_ties_even(-2.51), -3.0);
+        assert_eq!(rint_ties_even(126.6), 127.0);
+    }
+
+    #[test]
+    fn quantize_rows_scale_and_error_bound() {
+        let mut rng = Rng::new(7);
+        let t = Tensor::randn(&[6, 16], 1.0, &mut rng);
+        let (q, s) = quantize_rows_q8(&t.data, 16);
+        for r in 0..6 {
+            let row = &t.data[r * 16..(r + 1) * 16];
+            let amax = row.iter().fold(0f32, |m, &x| m.max(x.abs()));
+            assert!((s[r] - amax / 127.0).abs() <= f32::EPSILON * amax);
+        }
+        let back = dequantize_rows_q8(&q, &s, 16);
+        for (i, (&x, &y)) in t.data.iter().zip(&back).enumerate() {
+            assert!((x - y).abs() <= s[i / 16] * 0.5 + 1e-7,
+                    "row {} err {}", i / 16, (x - y).abs());
+        }
+    }
+
+    #[test]
+    fn quantize_zero_row_is_exact_zero() {
+        let (q, s) = quantize_rows_q8(&[0.0; 8], 8);
+        assert!(q.iter().all(|&c| c == 0));
+        assert_eq!(s, vec![Q8_SCALE_EPS]);
+        assert!(dequantize_rows_q8(&q, &s, 8).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn quantize_outlier_row_bounded() {
+        let mut row = vec![0.01f32; 8];
+        row[3] = 1e4;
+        let (q, s) = quantize_rows_q8(&row, 8);
+        assert_eq!(q[3], 127);
+        assert!(q[0].abs() <= 1);
+        let back = dequantize_rows_q8(&q, &s, 8);
+        for (x, y) in row.iter().zip(&back) {
+            assert!((x - y).abs() <= s[0] * 0.5 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn row_arena_copy_and_write_roundtrip() {
+        for quant in [KvQuant::Fp32, KvQuant::Q8] {
+            let mut a = RowArena::zeros(quant, 4, 6);
+            let vals: Vec<f32> = (0..8).map(|i| i as f32 * 0.25 - 1.0).collect();
+            a.write_f32_rows(2, &vals, 2);
+            let mut b = RowArena::zeros(quant, 4, 3);
+            b.copy_rows(0, &a, 2, 2);
+            let fa = a.to_f32();
+            let fb = b.to_f32();
+            assert_eq!(&fa[8..16], &fb[0..8], "{quant:?}");
+            // untouched rows stay exactly zero
+            assert!(fa[..8].iter().all(|&x| x == 0.0));
+            assert!(fa[16..].iter().all(|&x| x == 0.0));
+            // fp32 mode is lossless; q8 is within scale/2
+            if quant == KvQuant::Fp32 {
+                assert_eq!(&fa[8..16], &vals[..]);
+            } else {
+                for (r, chunk) in vals.chunks(4).enumerate() {
+                    for (x, y) in chunk.iter().zip(&fa[(2 + r) * 4..]) {
+                        assert!((x - y).abs() <= a.s[2 + r] * 0.5 + 1e-7);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_arena_byte_accounting() {
+        let f = RowArena::zeros(KvQuant::Fp32, 10, 8);
+        assert_eq!(f.payload_bytes(), 10 * 8 * 4);
+        assert_eq!(f.scale_bytes(), 0);
+        let q = RowArena::zeros(KvQuant::Q8, 10, 8);
+        assert_eq!(q.payload_bytes(), 10 * 8);
+        assert_eq!(q.scale_bytes(), 8 * 4);
+    }
+
+    #[test]
+    fn kv_quant_parse_and_names() {
+        assert_eq!(KvQuant::parse("fp32"), Some(KvQuant::Fp32));
+        assert_eq!(KvQuant::parse("q8"), Some(KvQuant::Q8));
+        assert_eq!(KvQuant::parse("int4"), None);
+        assert_eq!(KvQuant::Q8.suffix(), "_q8");
+        assert_eq!(KvQuant::Fp32.suffix(), "");
+        assert_eq!(KvQuant::Q8.name(), "q8");
+        assert_eq!(KvQuant::Q8.elem_bytes(), 1);
+        assert_eq!(KvQuant::Fp32.elem_bytes(), 4);
     }
 }

@@ -7,7 +7,8 @@ use thinkeys::proptest::{check_close, property, small_size};
 use thinkeys::substrate::linalg::{low_rank_approx, svd_any};
 use thinkeys::substrate::mathutil::{logsumexp, softmax};
 use thinkeys::substrate::rng::Rng;
-use thinkeys::substrate::tensor::Tensor;
+use thinkeys::substrate::tensor::{dequantize_rows_q8, quantize_rows_q8,
+                                  KvQuant, RowArena, Tensor, Q8_SCALE_EPS};
 use thinkeys::substrate::json::Value;
 
 #[test]
@@ -137,6 +138,104 @@ fn prop_kvcache_accounting_balances() {
         } else {
             Err(format!("leak: {} vs {}", m.free_token_capacity(), cap0))
         }
+    });
+}
+
+#[test]
+fn prop_quantize_roundtrip_error_bounded() {
+    // ISSUE 4 satellite: per-row scale correctness + worst-case error
+    // <= scale/2 per element, across random row widths/counts/magnitudes
+    property("q8 round-trip error <= scale/2", 60, |rng| {
+        let d = small_size(rng, 96);
+        let rows = small_size(rng, 12);
+        let mag = 10f32.powi(rng.below(7) as i32 - 3); // 1e-3 .. 1e3
+        let t = Tensor::randn(&[rows, d], mag, rng);
+        let (q, s) = quantize_rows_q8(&t.data, d);
+        if s.len() != rows {
+            return Err(format!("{} scales for {rows} rows", s.len()));
+        }
+        for (r, row) in t.data.chunks(d).enumerate() {
+            let amax = row.iter().fold(0f32, |m, &x| m.max(x.abs()));
+            let want = (amax / 127.0).max(Q8_SCALE_EPS);
+            if (s[r] - want).abs() > want * 1e-6 {
+                return Err(format!("row {r} scale {} want {want}", s[r]));
+            }
+        }
+        let back = dequantize_rows_q8(&q, &s, d);
+        for (i, (&x, &y)) in t.data.iter().zip(&back).enumerate() {
+            let bound = s[i / d] * 0.5 + s[i / d] * 1e-5;
+            if (x - y).abs() > bound {
+                return Err(format!(
+                    "elem {i}: |{x} - {y}| > scale/2 ({})", s[i / d]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantize_zero_and_outlier_rows() {
+    property("q8 zero/outlier row edge cases", 40, |rng| {
+        let d = 1 + small_size(rng, 31);
+        let rows = 3usize;
+        let mut data = vec![0f32; rows * d];
+        // row 0: all zero; row 1: one huge outlier among tiny values;
+        // row 2: random
+        for v in data[d..2 * d].iter_mut() {
+            *v = (rng.normal() * 1e-3) as f32;
+        }
+        data[d + rng.below(d)] = 1e4;
+        for v in data[2 * d..].iter_mut() {
+            *v = rng.normal() as f32;
+        }
+        let (q, s) = quantize_rows_q8(&data, d);
+        // zero row: exactly-zero codes, eps scale, exact-zero dequant
+        if q[..d].iter().any(|&c| c != 0) || s[0] != Q8_SCALE_EPS {
+            return Err("zero row not exact".into());
+        }
+        // outlier row: the outlier hits the top code, the rest collapse
+        // toward zero but stay within scale/2
+        if q[d..2 * d].iter().map(|&c| c.abs()).max() != Some(127) {
+            return Err("outlier did not hit code 127".into());
+        }
+        let back = dequantize_rows_q8(&q, &s, d);
+        for (i, (&x, &y)) in data.iter().zip(&back).enumerate() {
+            if (x - y).abs() > s[i / d] * 0.5 + 1e-6 {
+                return Err(format!("elem {i} outside scale/2"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_row_arena_copies_preserve_values() {
+    // the engine's park/unpark/repack primitive: row-range copies through
+    // RowArena must preserve values exactly (codes+scales move together)
+    property("row arena copy preserves rows", 40, |rng| {
+        let quant = if rng.below(2) == 0 { KvQuant::Fp32 } else { KvQuant::Q8 };
+        let d = 1 + small_size(rng, 24);
+        let rows = 2 + small_size(rng, 10);
+        let t = Tensor::randn(&[rows, d], 1.0, rng);
+        let mut a = RowArena::zeros(quant, d, rows);
+        a.write_f32_rows(0, &t.data, rows);
+        // copy a random row range through a second arena and back
+        let start = rng.below(rows);
+        let n = 1 + rng.below(rows - start);
+        let mut b = RowArena::zeros(quant, d, n);
+        b.copy_rows(0, &a, start, n);
+        let mut c = RowArena::zeros(quant, d, rows);
+        c.copy_rows(start, &b, 0, n);
+        let (fa, fc) = (a.to_f32(), c.to_f32());
+        check_close(&fa[start * d..(start + n) * d],
+                    &fc[start * d..(start + n) * d], 0.0, 0.0)?;
+        // payload accounting matches the dtype
+        let expect = rows * d * quant.elem_bytes();
+        if a.payload_bytes() != expect {
+            return Err(format!("payload {} != {expect}", a.payload_bytes()));
+        }
+        Ok(())
     });
 }
 

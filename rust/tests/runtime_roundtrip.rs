@@ -4,8 +4,10 @@
 
 use thinkeys::datagen::{copyback, corpus::{Corpus, CorpusModel}};
 use thinkeys::model::surgery::{self, AblationMode};
-use thinkeys::runtime::{ParamStore, Runtime};
+use thinkeys::runtime::client::{tensor_to_literal, Arg};
+use thinkeys::runtime::{KvQuant, ParamStore, Runtime};
 use thinkeys::substrate::rng::Rng;
+use thinkeys::substrate::tensor::{Tensor, TensorI32, TensorI8};
 use thinkeys::train::{eval, Schedule, Trainer, TrainState};
 
 fn runtime() -> Runtime {
@@ -114,4 +116,67 @@ fn wrong_arg_count_is_rejected() {
     let rt = runtime();
     let name = rt.manifest().logits_name("copyback_ds4");
     assert!(rt.execute(&name, &[]).is_err());
+}
+
+/// The dtype fail-fast satellite (ISSUE 4): a stale fp32 cache literal —
+/// or an fp32 tensor — fed where a q8 artifact expects an int8 arena must
+/// be rejected by `Runtime::execute`'s manifest validation, never
+/// silently reinterpreted by XLA. Both the `Arg::F` and the cached
+/// `Arg::L` lanes are covered; the correctly-typed i8 call assembles past
+/// validation.
+#[test]
+fn q8_artifact_rejects_fp32_cache_args() {
+    let rt = runtime();
+    let m = rt.manifest();
+    let cfg = m.config("servethin").unwrap().clone();
+    let tier = *m.tiers_for("servethin").first().unwrap();
+    let name = m.decode_name("servethin", 1, tier, false, KvQuant::Q8);
+    let entry = m.artifact(&name).unwrap();
+    let (l, kd, vd) = (cfg.n_layers, cfg.k_cache_dims, cfg.v_cache_dims);
+    let params = ParamStore::init(&cfg, 0);
+
+    // correctly-typed args (the last two elements are tokens/pos)
+    let k_q = TensorI8::zeros(&[l, 1, tier, kd]);
+    let k_s = Tensor::zeros(&[l, 1, tier]);
+    let v_q = TensorI8::zeros(&[l, 1, tier, vd]);
+    let v_s = Tensor::zeros(&[l, 1, tier]);
+    let toks = TensorI32::new(&[1], vec![3]);
+    let pos = TensorI32::new(&[1], vec![0]);
+    let k_f32 = Tensor::zeros(&[l, 1, tier, kd]);
+    let stale = tensor_to_literal(&k_f32).unwrap();
+
+    fn q8_args<'a>(params: &'a ParamStore, k_cache: Arg<'a>,
+                   k_s: &'a Tensor, v_q: &'a TensorI8, v_s: &'a Tensor,
+                   toks: &'a TensorI32, pos: &'a TensorI32) -> Vec<Arg<'a>> {
+        let mut args: Vec<Arg<'a>> =
+            params.tensors.iter().map(Arg::F).collect();
+        args.push(k_cache);
+        args.push(Arg::F(k_s));
+        args.push(Arg::I8(v_q));
+        args.push(Arg::F(v_s));
+        args.push(Arg::I(toks));
+        args.push(Arg::I(pos));
+        args
+    }
+
+    // 1) an fp32 TENSOR in the int8 slot: rejected with a dtype message
+    let args = q8_args(&params, Arg::F(&k_f32), &k_s, &v_q, &v_s, &toks, &pos);
+    let err = rt
+        .execute(&name, &args)
+        .expect_err("fp32 tensor accepted by q8 artifact");
+    assert!(format!("{err:#}").contains("dtype"), "{err:#}");
+
+    // 2) a stale fp32 cache LITERAL (right shape, wrong element type):
+    // the Arg::L validation must catch it before XLA sees it
+    let args = q8_args(&params, Arg::L(&stale), &k_s, &v_q, &v_s, &toks, &pos);
+    let err = rt
+        .execute(&name, &args)
+        .expect_err("stale fp32 literal accepted by q8 artifact");
+    assert!(format!("{err:#}").contains("element type"), "{err:#}");
+
+    // 3) the correctly-typed assembly passes validation and executes
+    let args = q8_args(&params, Arg::I8(&k_q), &k_s, &v_q, &v_s, &toks, &pos);
+    let outs = rt.execute(&name, &args).unwrap();
+    assert_eq!(outs.len(), entry.outputs.len());
+    assert_eq!(entry.outputs.len(), 9, "q8 decode output arity");
 }

@@ -12,7 +12,7 @@ use thinkeys::coordinator::sequence::{FinishReason, Priority, SeqState,
 use thinkeys::datagen::arrival::closed_loop;
 use thinkeys::datagen::Batch;
 use thinkeys::model::surgery;
-use thinkeys::runtime::{ParamStore, Runtime};
+use thinkeys::runtime::{KvQuant, ParamStore, Runtime};
 use thinkeys::substrate::mathutil::argmax;
 use thinkeys::substrate::rng::Rng;
 use thinkeys::train::eval::logits_for;
@@ -493,10 +493,7 @@ fn chunked_prefill_matches_single_shot_bit_exact() {
             let mut sa = Sequence::new(1, prompt.clone(), 6, None);
             eng_a.prefill(&mut sa).unwrap();
             let logits_a = eng_a.last_prefill_logits().unwrap().data.clone();
-            let (len_a, k_a, v_a) = {
-                let (l, k, v) = eng_a.parked_snapshot(1).unwrap();
-                (l, k.to_vec(), v.to_vec())
-            };
+            let (len_a, k_a, v_a) = eng_a.parked_snapshot(1).unwrap();
             while !sa.is_finished() {
                 let mut seqs = vec![&mut sa];
                 eng_a.decode_step(&mut seqs).unwrap();
@@ -526,7 +523,7 @@ fn chunked_prefill_matches_single_shot_bit_exact() {
                 );
                 let (len_b, k_b, v_b) = eng_b.parked_snapshot(1).unwrap();
                 assert_eq!(len_b, len_a);
-                assert!(k_b == k_a.as_slice() && v_b == v_a.as_slice(),
+                assert!(k_b == k_a && v_b == v_a,
                         "{cfg_name} plen={plen} c={c}: mirror rows diverged");
                 // same first token, same decode generation afterwards
                 while !sb.is_finished() {
@@ -626,6 +623,206 @@ fn waiting_request_survives_inflight_prefill_pressure() {
     assert_eq!(sched.kv.stats().seqs, 0);
     assert_eq!(sched.kv.free_token_capacity(),
                sched.kv.total_token_capacity());
+}
+
+fn q8_engine<'a>(rt: &'a Runtime, cfg: &str, seed: u64) -> Engine<'a> {
+    let params = ParamStore::init(rt.manifest().config(cfg).unwrap(), 42);
+    Engine::with_kv_quant(rt, cfg, params, false, Sampler::Greedy, seed,
+                          KvQuant::Q8)
+        .unwrap()
+}
+
+/// Max abs difference between the two engines' last decode logits over
+/// the LIVE lanes only (hole lanes decode stale dummy rows — bounded too,
+/// but not part of the contract).
+fn live_logit_err(e32: &Engine, e8: &Engine, live: &[u64], vocab: usize)
+    -> f64 {
+    let l32 = &e32.last_decode_logits().expect("fp32 logits").data;
+    let l8 = &e8.last_decode_logits().expect("q8 logits").data;
+    let mut worst = 0f64;
+    for &id in live {
+        let lane = e32.lane_of(id).expect("live lane");
+        assert_eq!(e8.lane_of(id), Some(lane),
+                   "engines disagree on lane of {id}");
+        for i in lane * vocab..(lane + 1) * vocab {
+            worst = worst.max((l32[i] - l8[i]).abs() as f64);
+        }
+    }
+    worst
+}
+
+/// THE q8 parity acceptance (ISSUE 4): the q8 engine, teacher-forced to
+/// follow the fp32 engine's tokens through a scenario that exercises
+/// monolithic prefill, tier growth, retirement churn, a mid-flight join,
+/// and tier shrink, must keep its decode logits within a tight absolute
+/// bound of the fp32 engine's — while moving exactly 4x fewer arena
+/// payload bytes and never downloading a full arena. Measured worst-case
+/// error with init params is ~2e-3; 0.05 is ~25x headroom and still
+/// catches any real dequant/scale/scatter defect.
+#[test]
+fn q8_decode_parity_bounded_under_churn() {
+    let rt = runtime();
+    for chunked in [false, true] {
+        let cfg = rt.manifest().config("servethin").unwrap().clone();
+        let mut e32 = engine(&rt, "servethin", 0);
+        let mut e8 = q8_engine(&rt, "servethin", 0);
+        let mut rng = Rng::new(29);
+        let p_doc = synth_prompt(90, cfg.vocab, &mut rng);   // forces n=128
+        let p_chat = synth_prompt(10, cfg.vocab, &mut rng);
+        let p_join = synth_prompt(9, cfg.vocab, &mut rng);
+        let mk = |p: &Vec<i32>, id: u64| Sequence::new(id, p.clone(), 64, None);
+        let (mut d32, mut c32, mut j32) =
+            (mk(&p_doc, 1), mk(&p_chat, 2), mk(&p_join, 3));
+        let (mut d8, mut c8, mut j8) =
+            (mk(&p_doc, 1), mk(&p_chat, 2), mk(&p_join, 3));
+        // fp32 engine always prefills monolithically (the reference);
+        // the q8 engine alternates: monolithic (host-side quantization
+        // on park) and chunked (device-side quantize-on-write) — both
+        // must live inside the same bound
+        e32.prefill(&mut d32).unwrap();
+        e32.prefill(&mut c32).unwrap();
+        if chunked {
+            let chunk = *rt.manifest().chunks_for("servethin").first()
+                .unwrap();
+            while !e8.prefill_chunk(&mut d8, chunk).unwrap() {}
+            while !e8.prefill_chunk(&mut c8, chunk).unwrap() {}
+        } else {
+            e8.prefill(&mut d8).unwrap();
+            e8.prefill(&mut c8).unwrap();
+        }
+        fn force(a: &Sequence, b: &mut Sequence) {
+            *b.generated.last_mut().unwrap() = *a.generated.last().unwrap();
+        }
+        /// One lockstep decode: both engines step the same live set, the
+        /// live lanes' logits are compared, and the q8 engine is
+        /// teacher-forced onto the fp32 tokens.
+        fn step_both(e32: &mut Engine, e8: &mut Engine,
+                     s32: &mut [&mut Sequence], s8: &mut [&mut Sequence],
+                     vocab: usize) -> f64 {
+            let live: Vec<u64> = s32.iter().map(|s| s.id).collect();
+            e32.decode_step(s32).unwrap();
+            e8.decode_step(s8).unwrap();
+            let err = live_logit_err(e32, e8, &live, vocab);
+            for (a, b) in s32.iter().zip(s8.iter_mut()) {
+                force(a, b);
+            }
+            err
+        }
+        force(&d32, &mut d8);
+        force(&c32, &mut c8);
+        let mut worst = 0f64;
+        // phase 1: doc + chat decode together at tier 128
+        for _ in 0..4 {
+            let err = step_both(&mut e32, &mut e8,
+                                &mut [&mut d32, &mut c32],
+                                &mut [&mut d8, &mut c8], cfg.vocab);
+            worst = worst.max(err);
+        }
+        assert_eq!(e32.current_tier(), 128);
+        assert_eq!(e8.current_tier(), 128);
+        // phase 2: the doc retires (zero-copy hole) — churn
+        e32.drop_seq(1);
+        e8.drop_seq(1);
+        for _ in 0..6 {
+            let err = step_both(&mut e32, &mut e8,
+                                &mut [&mut c32], &mut [&mut c8], cfg.vocab);
+            worst = worst.max(err);
+        }
+        // the arena shrank after the doc left (both engines, same tier)
+        assert!(e32.current_tier() < 128, "fp32 tier stuck");
+        assert_eq!(e8.current_tier(), e32.current_tier(), "tier diverged");
+        // phase 3: a joiner unparks into the hole — join + repack
+        e32.prefill(&mut j32).unwrap();
+        if chunked {
+            let chunk = *rt.manifest().chunks_for("servethin").first()
+                .unwrap();
+            while !e8.prefill_chunk(&mut j8, chunk).unwrap() {}
+        } else {
+            e8.prefill(&mut j8).unwrap();
+        }
+        force(&j32, &mut j8);
+        for _ in 0..20 {
+            let err = step_both(&mut e32, &mut e8,
+                                &mut [&mut c32, &mut j32],
+                                &mut [&mut c8, &mut j8], cfg.vocab);
+            worst = worst.max(err);
+        }
+        // the chat grew back across a tier boundary mid-run (10 prompt +
+        // 30 generated = 40 rows > 32)
+        assert!(e8.metrics.tier_switches >= 2,
+                "q8 run saw no grow+shrink churn");
+        assert!(worst.is_finite() && worst > 0.0 && worst < 0.05,
+                "q8 logit error out of bounds (chunked={chunked}): {worst}");
+        // sync contract holds in q8: zero full-arena downloads
+        assert_eq!(e8.metrics.sync_download_bytes, 0);
+        // exact 4x payload at matched (bucket, tier); scales visible
+        assert_eq!(e32.metrics.arena_bytes, 4 * e8.metrics.arena_bytes);
+        assert!(e8.metrics.arena_scale_bytes > 0);
+        assert_eq!(e32.metrics.arena_scale_bytes, 0);
+        // per-step delta sync also shrank (codes + scales < fp32 rows);
+        // only comparable when both engines prefilled monolithically —
+        // the chunked q8 run additionally charges its chunk deltas to
+        // row_sync_bytes, which the monolithic fp32 reference never pays
+        if !chunked {
+            assert!(e8.metrics.row_sync_bytes < e32.metrics.row_sync_bytes);
+        }
+    }
+}
+
+/// q8 serving end to end through the scheduler/router stack: the mixed
+/// closed loop completes, accounting balances, and the download tripwire
+/// holds — the quantized engine is a drop-in behind the same coordinator.
+#[test]
+fn q8_router_closed_loop_end_to_end() {
+    let rt = runtime();
+    let eng = q8_engine(&rt, "servethin", 7);
+    let kv = kv_for(&rt, "servethin", 4.0);
+    let sched = Scheduler::new(eng, kv, 8);
+    let mut router = Router::new(sched);
+    let trace = closed_loop(12, 24, 8);
+    let report = router.run_closed_loop(&trace, 0).unwrap();
+    assert_eq!(report.n_requests, 12);
+    assert_eq!(report.rejected, 0);
+    assert_eq!(report.gen_tokens, 12 * 8);
+    let m = &router.sched.engine.metrics;
+    assert_eq!(m.sync_download_bytes, 0,
+               "q8 full-arena download regression");
+    assert!(m.arena_scale_bytes > 0);
+    assert_eq!(router.sched.kv.stats().seqs, 0);
+}
+
+/// q8 chunked prefill parks the same rows whatever chunk size produced
+/// them (row codes depend only on the quantized prefix, not on chunk
+/// boundaries), and generation afterwards is identical per chunk size.
+#[test]
+fn q8_chunked_prefill_schedule_independent() {
+    let rt = runtime();
+    let cfg = rt.manifest().config("servethin").unwrap().clone();
+    let chunks = rt.manifest().chunks_for("servethin");
+    let mut rng = Rng::new(41);
+    let prompt = synth_prompt(37, cfg.vocab, &mut rng);
+    let mut reference: Option<(usize, Vec<f32>, Vec<f32>, Vec<i32>)> = None;
+    for &c in &chunks {
+        let mut eng = q8_engine(&rt, "servethin", 0);
+        let mut seq = Sequence::new(1, prompt.clone(), 6, None);
+        while !eng.prefill_chunk(&mut seq, c).unwrap() {}
+        let snap = eng.parked_snapshot(1).unwrap();
+        while !seq.is_finished() {
+            let mut seqs = vec![&mut seq];
+            eng.decode_step(&mut seqs).unwrap();
+        }
+        match &reference {
+            None => reference = Some((snap.0, snap.1, snap.2,
+                                      seq.generated.clone())),
+            Some((len, k, v, gen)) => {
+                assert_eq!(snap.0, *len, "c={c}");
+                assert!(snap.1 == *k && snap.2 == *v,
+                        "c={c}: q8 parked rows depend on chunk schedule");
+                assert_eq!(&seq.generated, gen,
+                           "c={c}: generation depends on chunk schedule");
+            }
+        }
+    }
 }
 
 /// A failed prefill must roll back its KV reservation (no leak) and fail
