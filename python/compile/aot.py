@@ -23,7 +23,8 @@ import jax.numpy as jnp
 from jax._src.lib import xla_client as xc
 
 from .configs import (KV_QUANTS, REGISTRY, DECODE_BATCHES, PREFILL_CHUNKS,
-                      PREFILL_SEQ, config_dict, decode_tiers, train_geometry)
+                      PREFILL_SEQ, SERVE_CONFIGS, config_dict, decode_tiers,
+                      train_geometry)
 from . import model as M
 from .kernels.asym_attention import vmem_report
 
@@ -108,7 +109,7 @@ def artifact_plan():
                  [f"tinylm_ds{d}" for d in (8, 16, 32, 64)] +
                  [f"tinygqa_ds{d}" for d in (8, 16, 32, 64)] +
                  [f"llama_ds{d}" for d in (8, 16, 32, 64)] +
-                 ["servefull", "servethin"]):
+                 list(SERVE_CONFIGS)):
         cfg = REGISTRY[name]
         b, s = train_geometry(cfg)
         add("logits", cfg, b=b, s=s)
@@ -116,8 +117,11 @@ def artifact_plan():
     # Serving artifacts. Decode is specialized on (batch bucket, context
     # tier): the engine selects the smallest arena tier covering the
     # longest live sequence, so short-context serving never pays
-    # max_seq-sized arenas (ISSUE 2).
-    for name in ("servefull", "servethin"):
+    # max_seq-sized arenas (ISSUE 2). The GQA pair (ISSUE 5) exports the
+    # identical grid at grouped cache widths — the kernels broadcast the
+    # 2 kv heads across the 8 query heads in the index map, so the arenas
+    # (and every byte the engine moves) shrink by the group factor.
+    for name in SERVE_CONFIGS:
         cfg = REGISTRY[name]
         add("prefill", cfg, s=PREFILL_SEQ)
         # Resumable chunked-prefill artifacts (ref impl only; the chunk
@@ -326,7 +330,7 @@ def main():
 
     # L1 kernel report: VMEM/MXU estimates for the serving geometries.
     reports = []
-    for name_ in ("servefull", "servethin"):
+    for name_ in SERVE_CONFIGS:
         cfg = REGISTRY[name_]
         reports.append(vmem_report(
             name_, 1, cfg.n_heads, cfg.n_kv_heads, PREFILL_SEQ,

@@ -138,6 +138,18 @@ def build_registry() -> dict:
     # tinylm so the serve_e2e example serves a genuinely trained model.
     cfgs.append(_v("servefull", 512, 64, 3, 8, 64, 256, 256))
     cfgs.append(_v("servethin", 512, 64, 3, 8, 16, 256, 256))
+    # GQA serving axis (ISSUE 5): the same family at 8 query / 2 kv heads
+    # (the Mistral-style 4x group of tinygqa), full-key and thin-key
+    # variants. Head grouping divides BOTH cache widths by the group;
+    # thin keys then divide only K — the paper's §6 composition axis the
+    # engine serves at runtime instead of quoting from roofline.rs:
+    #   servefull     KD 64  VD 64   (baseline)
+    #   servegqa      KD 16  VD 16   (4x group sharing)
+    #   servegqathin  KD  4  VD 16   (group x rank: K 16x below baseline;
+    #                                 x q8 element width = 64x payload)
+    cfgs.append(_v("servegqa", 512, 64, 3, 8, 64, 256, 256, n_kv_heads=2))
+    cfgs.append(_v("servegqathin", 512, 64, 3, 8, 16, 256, 256,
+                   n_kv_heads=2))
 
     reg = {}
     for c in cfgs:
@@ -164,6 +176,13 @@ def train_geometry(cfg: ModelConfig):
 
 DECODE_BATCHES = (1, 2, 4, 8, 16, 32)
 PREFILL_SEQ = 128  # prompt bucket for serving prefill (B=1)
+
+# The serving artifact families (ISSUE 5): every config here exports the
+# full prefill + chunked-prefill + decode (bucket x tier x kv_quant) grid
+# and is a valid `thinkeys serve --config` value. MHA full/thin plus the
+# GQA (8q/2kv) full/thin pair — the grouped axis that composes with thin
+# keys and q8 for the paper's 16x key-cache claim, measured end to end.
+SERVE_CONFIGS = ("servefull", "servethin", "servegqa", "servegqathin")
 
 # Chunked-prefill axis: besides the monolithic prefill_{cfg}_s{S} artifact,
 # serving configs export resumable chunk artifacts prefill_{cfg}_c{C} that

@@ -10,8 +10,8 @@ import pytest
 
 from compile.aot import artifact_plan, build_entry
 from compile.configs import (DECODE_BATCHES, KV_QUANTS, PREFILL_CHUNKS,
-                             PREFILL_SEQ, REGISTRY, config_dict,
-                             decode_tiers, train_geometry)
+                             PREFILL_SEQ, REGISTRY, SERVE_CONFIGS,
+                             config_dict, decode_tiers, train_geometry)
 from compile import model as M
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
@@ -55,7 +55,7 @@ def test_plan_covers_full_bucket_tier_grid():
     (batch bucket x context tier) grid, plus the b=8 pallas column."""
     plan = artifact_plan()
     names = {n for n, _, _, _ in plan}
-    for cfg_name in ("servefull", "servethin"):
+    for cfg_name in SERVE_CONFIGS:
         cfg = REGISTRY[cfg_name]
         for b in DECODE_BATCHES:
             for n in decode_tiers(cfg.max_seq):
@@ -71,7 +71,7 @@ def test_plan_covers_q8_grid():
     plan = artifact_plan()
     names = {n for n, _, _, _ in plan}
     assert "q8" in KV_QUANTS
-    for cfg_name in ("servefull", "servethin"):
+    for cfg_name in SERVE_CONFIGS:
         cfg = REGISTRY[cfg_name]
         for b in DECODE_BATCHES:
             for n in decode_tiers(cfg.max_seq):
@@ -125,7 +125,7 @@ def test_manifest_kv_quant_recorded():
         man = json.load(f)
     assert "kv_quant" in man, \
         "stale pre-quantization manifest — re-run `make artifacts`"
-    for cfg_name in ("servefull", "servethin"):
+    for cfg_name in SERVE_CONFIGS:
         assert man["kv_quant"][cfg_name] == list(KV_QUANTS)
         cfg = REGISTRY[cfg_name]
         for n in decode_tiers(cfg.max_seq):
@@ -138,7 +138,7 @@ def test_plan_covers_prefill_chunk_axis():
     alongside the monolithic prefill_{cfg}_s{S}."""
     plan = artifact_plan()
     names = {n for n, _, _, _ in plan}
-    for cfg_name in ("servefull", "servethin"):
+    for cfg_name in SERVE_CONFIGS:
         assert f"prefill_{cfg_name}_s{PREFILL_SEQ}" in names
         for c in PREFILL_CHUNKS:
             assert f"prefill_{cfg_name}_c{c}" in names
@@ -167,7 +167,7 @@ def test_manifest_prefill_chunks_recorded():
         pytest.skip("artifacts not exported")
     with open(path) as f:
         man = json.load(f)
-    for cfg_name in ("servefull", "servethin"):
+    for cfg_name in SERVE_CONFIGS:
         assert man["prefill_chunks"][cfg_name] == list(PREFILL_CHUNKS)
         for c in PREFILL_CHUNKS:
             assert any(a["name"] == f"prefill_{cfg_name}_c{c}"
@@ -235,6 +235,42 @@ def test_manifest_decode_cache_shapes():
         else:
             assert by_name["k_cache"][1] == "float32"
             assert art["outputs"][-2:] == ["k_rows", "v_rows"]
+
+
+def test_gqa_serving_configs_grouped_geometry():
+    """The GQA serving pair (ISSUE 5) caches KV-HEAD widths, not
+    query-head widths: k_cache_dims = n_kv_heads * d_qk_head, so the
+    composed grid shrinks K 16x (group 4x × rank 4x) before quantization
+    even applies, while V shrinks by the group alone."""
+    full = REGISTRY["servefull"]
+    gqa = REGISTRY["servegqa"]
+    thin = REGISTRY["servegqathin"]
+    for cfg in (gqa, thin):
+        assert cfg.attn == "gqa"
+        assert cfg.n_heads == 8 and cfg.n_kv_heads == 2
+        assert cfg.group == 4
+        assert cfg.k_cache_dims() == cfg.n_kv_heads * cfg.d_qk_head
+        assert cfg.max_seq == full.max_seq  # same tier table
+    assert gqa.k_cache_dims() * 4 == full.k_cache_dims()
+    assert thin.k_cache_dims() * 16 == full.k_cache_dims()
+    assert thin.v_cache_dims() * 4 == full.v_cache_dims()
+    assert thin.v_cache_dims() == gqa.v_cache_dims()
+
+
+def test_gqa_decode_entry_specs_sized_by_kv_heads():
+    """Exported gqa decode arenas carry the grouped widths end to end —
+    the manifest shape the rust engine sizes its RowArenas by."""
+    cfg = REGISTRY["servegqathin"]
+    _, specs, in_names, _ = build_entry("decode", cfg, {"b": 4, "n": 32})
+    by_name = dict(zip(in_names, specs))
+    assert tuple(by_name["k_cache"].shape) == (cfg.n_layers, 4, 32, 4)
+    assert tuple(by_name["v_cache"].shape) == (cfg.n_layers, 4, 32, 16)
+    _, specs8, in_names8, _ = build_entry(
+        "decode", cfg, {"b": 4, "n": 32, "quant": "q8"})
+    by8 = dict(zip(in_names8, specs8))
+    assert str(by8["k_cache"].dtype) == "int8"
+    assert tuple(by8["k_cache"].shape) == (cfg.n_layers, 4, 32, 4)
+    assert tuple(by8["k_scale"].shape) == (cfg.n_layers, 4, 32)
 
 
 def test_hlo_text_is_parseable_header():

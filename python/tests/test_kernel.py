@@ -294,6 +294,101 @@ def test_pallas_decode_q8_matches_ref_directed():
                                    rtol=2e-5, atol=2e-5)
 
 
+# ---------------------------------------------------------------------------
+# Grouped thin keys (ISSUE 5): GQA with group size g must reproduce an MHA
+# reference whose KV cache duplicates each kv head g times — the group
+# broadcast lives in the BlockSpec index map (kv head = q head // group)
+# and in ref.repeat_kv, both pure indexing, never arithmetic. fp32 paths
+# must match BIT-FOR-BIT; q8 paths must match bit-for-bit too (grouping
+# commutes with the fused dequant) and stay inside the fused-oracle bound
+# already pinned above.
+# ---------------------------------------------------------------------------
+
+GROUPED_GEOMS = [(1, 2, 4, 32, 2, 8),   # servegqathin-shaped: thin dqk
+                 (2, 1, 2, 16, 8, 4),
+                 (2, 2, 2, 64, 4, 16),
+                 (1, 2, 4, 8, 8, 8)]    # servegqa-shaped: full dqk
+
+
+@pytest.mark.parametrize("geom", GROUPED_GEOMS)
+def test_grouped_decode_bit_matches_duplicated_mha(geom):
+    b, hkv, group, n, dqk, dv = geom
+    h = hkv * group
+    q = rand(0, (b, h, dqk))
+    kc = rand(1, (b, hkv, n, dqk))
+    vc = rand(2, (b, hkv, n, dv))
+    pos = jnp.asarray((np.arange(b) * 7 + 3) % n, jnp.int32)
+    grouped = pallas_attention_decode(q, kc, vc, pos, block_k=8)
+    mha = pallas_attention_decode(q, ref.repeat_kv(kc, group),
+                                  ref.repeat_kv(vc, group), pos, block_k=8)
+    assert np.array_equal(np.asarray(grouped), np.asarray(mha)), \
+        "pallas group broadcast diverged from duplicated-kv MHA"
+    ref_grouped = ref.attention_decode(q, kc, vc, pos)
+    ref_mha = ref.attention_decode(q, ref.repeat_kv(kc, group),
+                                   ref.repeat_kv(vc, group), pos)
+    assert np.array_equal(np.asarray(ref_grouped), np.asarray(ref_mha)), \
+        "ref group broadcast diverged from duplicated-kv MHA"
+
+
+@pytest.mark.parametrize("geom", GROUPED_GEOMS)
+def test_grouped_q8_decode_bit_matches_duplicated_mha(geom):
+    """q8 grouped parity: the per-ROW scales are shared across kv heads
+    (the arena layout), so duplicating the int8 kv heads while keeping the
+    same (B, N) scale planes must reproduce the grouped output exactly —
+    in the Pallas kernel and the jnp oracle alike."""
+    b, hkv, group, n, dqk, dv = geom
+    h = hkv * group
+    q = rand(5, (b, h, dqk))
+    kh, ks, vh, vs = _quantized_cache(21, b, hkv, n, dqk, dv)
+    pos = jnp.asarray((np.arange(b) * 5 + 1) % n, jnp.int32)
+    grouped = pallas_attention_decode_q8(q, kh, ks, vh, vs, pos, block_k=8)
+    mha = pallas_attention_decode_q8(
+        q, ref.repeat_kv(kh, group), ks, ref.repeat_kv(vh, group), vs,
+        pos, block_k=8)
+    assert np.array_equal(np.asarray(grouped), np.asarray(mha))
+    ref_grouped = ref.attention_decode_q8(q, kh, ks, vh, vs, pos)
+    ref_mha = ref.attention_decode_q8(
+        q, ref.repeat_kv(kh, group), ks, ref.repeat_kv(vh, group), vs, pos)
+    assert np.array_equal(np.asarray(ref_grouped), np.asarray(ref_mha))
+
+
+def test_grouped_prefill_chunk_bit_matches_duplicated_mha():
+    """The chunk-window kernel's group broadcast (fp32 and q8): a C-query
+    window against a grouped arena == the same window against the
+    duplicated-kv MHA arena, bit for bit."""
+    b, hkv, group, c, n, dqk, dv = 1, 2, 4, 8, 32, 2, 8
+    h = hkv * group
+    q = rand(3, (b, h, c, dqk))
+    kc = rand(4, (b, hkv, n, dqk))
+    vc = rand(5, (b, hkv, n, dv))
+    qpos = jnp.arange(6, 6 + c, dtype=jnp.int32)[None]
+    grouped = ref.attention_prefill_chunk(q, kc, vc, qpos)
+    mha = ref.attention_prefill_chunk(q, ref.repeat_kv(kc, group),
+                                      ref.repeat_kv(vc, group), qpos)
+    assert np.array_equal(np.asarray(grouped), np.asarray(mha))
+    kh, ks, vh, vs = _quantized_cache(9, b, hkv, n, dqk, dv)
+    grouped8 = ref.attention_prefill_chunk_q8(q, kh, ks, vh, vs, qpos)
+    mha8 = ref.attention_prefill_chunk_q8(
+        q, ref.repeat_kv(kh, group), ks, ref.repeat_kv(vh, group), vs, qpos)
+    assert np.array_equal(np.asarray(grouped8), np.asarray(mha8))
+
+
+def test_grouped_prefill_bit_matches_duplicated_mha():
+    """The flash prefill kernel's index-map broadcast, same contract."""
+    b, hkv, group, s, dqk, dv = 2, 2, 4, 32, 2, 8
+    h = hkv * group
+    q = rand(0, (b, h, s, dqk))
+    k = rand(1, (b, hkv, s, dqk))
+    v = rand(2, (b, hkv, s, dv))
+    lengths = jnp.array([s, s // 2], jnp.int32)
+    grouped = pallas_attention_prefill(q, k, v, lengths, block_q=8,
+                                       block_k=8)
+    mha = pallas_attention_prefill(q, ref.repeat_kv(k, group),
+                                   ref.repeat_kv(v, group), lengths,
+                                   block_q=8, block_k=8)
+    assert np.array_equal(np.asarray(grouped), np.asarray(mha))
+
+
 def test_thin_equals_full_when_keys_padded():
     """Zero-padding the qk dim must not change attention output — the
     asymmetric kernel's output depends on q·k only (selection is scalar)."""

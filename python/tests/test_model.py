@@ -12,7 +12,7 @@ from compile.configs import REGISTRY
 from compile import model as M
 
 VARIANTS = ["tinylm_ds32", "tinylm_ds64", "llama_ds32", "llama_gqa2",
-            "llama_mla56", "tinygqa_ds32"]
+            "llama_mla56", "tinygqa_ds32", "servegqathin"]
 
 
 def setup_cfg(name, seed=0):
@@ -34,7 +34,8 @@ def test_forward_shape_and_causality(name):
                                np.asarray(l2[:, :10]), atol=1e-5)
 
 
-@pytest.mark.parametrize("name", ["servefull", "servethin", "llama_ds32"])
+@pytest.mark.parametrize("name", ["servefull", "servethin",
+                                  "servegqathin", "llama_ds32"])
 def test_prefill_decode_parity(name):
     """prefill(prompt) then decode(tok_t) must reproduce forward logits."""
     cfg, p = setup_cfg(name)
@@ -86,7 +87,8 @@ def test_decode_tier_parity(name):
         np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
 
 
-@pytest.mark.parametrize("name", ["servefull", "servethin"])
+@pytest.mark.parametrize("name", ["servefull", "servethin",
+                                  "servegqathin"])
 @pytest.mark.parametrize("plen", [8, 37, 128])
 def test_chunked_prefill_bit_identical_to_single_shot(name, plen):
     """The chunked-prefill contract (ISSUE 3): running ceil(p/C) chunks of
@@ -129,7 +131,8 @@ def test_chunked_prefill_bit_identical_to_single_shot(name, plen):
         assert np.array_equal(vc_a[:, :plen], mirror_v[:, :plen])
 
 
-@pytest.mark.parametrize("name", ["servefull", "servethin"])
+@pytest.mark.parametrize("name", ["servefull", "servethin",
+                                  "servegqathin"])
 def test_q8_decode_parity_bounded(name):
     """The q8 acceptance oracle (ISSUE 4): decoding over the quantized
     arena must track the fp32 engine's logits within a tight bound.

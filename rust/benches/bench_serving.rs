@@ -19,7 +19,7 @@ fn main() {
         &["config", "tok/s", "concurrent capacity (tokens)", "occupancy",
           "copyback B (vs full repack)", "sync up/down B", "delta B/step"],
     );
-    for cfg_name in ["servefull", "servethin"] {
+    for cfg_name in ["servefull", "servethin", "servegqa", "servegqathin"] {
         let cfg = rt.manifest().config(cfg_name).unwrap().clone();
         let params = ParamStore::init(&cfg, 42);
         let eng = Engine::new(&rt, cfg_name, params, false,
@@ -129,6 +129,29 @@ fn main() {
         qc.q8_tok_s >= 0.85 * qc.fp32_tok_s,
         "q8 decode throughput regressed beyond noise: {:.1} vs {:.1} tok/s",
         qc.q8_tok_s, qc.fp32_tok_s
+    );
+
+    // Grouped thin keys (ISSUE 5): the measured composition table — the
+    // four serve configs x kv-quant driven through an identical decode
+    // trajectory, compression read off the engine's arena_k_bytes gauge.
+    // servegqathin-q8 must hold >= 15x less K arena than servefull-fp32
+    // (64x payload, 32x with its scale plane at the toy KD=4 width) with
+    // the grouped q8 decode logits teacher-forced-bounded.
+    let (gqa_table, gc) = serving::gqa_composition_table(&rt).unwrap();
+    gqa_table.print();
+    assert!(
+        gc.composed_key_compression >= 15.0
+            && gc.composed_key_compression_with_scales >= 15.0,
+        "measured composed key compression below 15x: {:.1}x ({:.1}x with \
+         scales)",
+        gc.composed_key_compression,
+        gc.composed_key_compression_with_scales
+    );
+    assert!(
+        gc.gqa_thin_q8_logit_err.is_finite()
+            && gc.gqa_thin_q8_logit_err < 0.05,
+        "grouped q8 logit error out of bounds: {}",
+        gc.gqa_thin_q8_logit_err
     );
 
     // Pallas-kernel decode path (L1 lowered into the serving HLO)

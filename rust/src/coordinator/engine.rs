@@ -50,7 +50,13 @@
 //!
 //! The *thin* K arena is the paper's saving made concrete: `KD =
 //! n_kv_heads · d_qk_head` is 4x smaller for `servethin` than `servefull`
-//! while `VD` is identical.
+//! while `VD` is identical. The engine is head-geometry-aware through
+//! exactly that contract (ISSUE 5): every arena, mirror, parked row,
+//! delta scatter, repack, and byte gauge is sized by the manifest's
+//! `k_cache_dims`/`v_cache_dims` — KV-head widths, never query-head
+//! widths — so the GQA configs (`servegqa*`, 8q/2kv) shrink every cache
+//! surface by the group factor with no engine special-casing, and the
+//! group × rank × q8 composition reads off `arena_k_bytes` measured.
 //!
 //! KV quantization (ISSUE 4): at `KvQuant::Q8` every cache surface —
 //! device arenas, cross-chunk carried literals, the delta-synced host
@@ -730,10 +736,19 @@ impl<'rt> Engine<'rt> {
                 sizing.arena_payload_bytes(bucket, tier) as u64;
             self.metrics.arena_scale_bytes =
                 sizing.arena_scale_bytes(bucket, tier) as u64;
+            self.metrics.arena_k_bytes =
+                sizing.arena_k_payload_bytes(bucket, tier) as u64;
+            self.metrics.arena_k_scale_bytes =
+                sizing.arena_k_scale_bytes(bucket, tier) as u64;
             debug_assert_eq!(
                 self.metrics.arena_bytes as usize,
                 self.k_group.payload_bytes() + self.v_group.payload_bytes(),
                 "ArenaSizing and RowArena disagree on arena payload"
+            );
+            debug_assert_eq!(
+                self.metrics.arena_k_bytes as usize,
+                self.k_group.payload_bytes(),
+                "ArenaSizing and RowArena disagree on K payload"
             );
         }
         self.lanes.apply(&plan);

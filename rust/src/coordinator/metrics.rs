@@ -44,9 +44,25 @@ impl ArenaSizing {
             * self.quant.elem_bytes()
     }
 
+    /// K-arena payload bytes alone of a (bucket × tier) decode arena.
+    /// The paper's composition claims (thin keys × GQA × q8) act on the
+    /// KEY cache specifically — `k_dims` is `n_kv_heads · d_qk_head`, so
+    /// this gauge shrinks with the group factor AND the thin rank AND the
+    /// element width (ISSUE 5: the measured 16x headline reads off it).
+    pub fn arena_k_payload_bytes(&self, bucket: usize, tier: usize) -> usize {
+        self.n_layers * bucket * tier * self.k_dims * self.quant.elem_bytes()
+    }
+
     /// K+V scale-plane bytes of a (bucket × tier) decode arena pair.
     pub fn arena_scale_bytes(&self, bucket: usize, tier: usize) -> usize {
         self.n_layers * bucket * tier * 2 * self.quant.scale_bytes_per_row()
+    }
+
+    /// K-arena scale-plane bytes alone (one fp32 per K row in q8 mode) —
+    /// reported next to `arena_k_payload_bytes` so the composed key-cache
+    /// ratios stay honest about scale overhead at thin grouped widths.
+    pub fn arena_k_scale_bytes(&self, bucket: usize, tier: usize) -> usize {
+        self.n_layers * bucket * tier * self.quant.scale_bytes_per_row()
     }
 }
 
@@ -103,6 +119,15 @@ pub struct EngineMetrics {
     /// arena; 0 in fp32 mode) — reported next to `arena_bytes` so the
     /// quantized totals stay honest about the scale overhead.
     pub arena_scale_bytes: u64,
+    /// K-arena share of `arena_bytes` (payload codes/values only) — the
+    /// gauge the composed key-cache compression table reads (ISSUE 5):
+    /// `k_dims = n_kv_heads · d_qk_head` makes it group-, rank-, and
+    /// dtype-sized, so servegqathin-q8 vs servefull-fp32 is measured off
+    /// the engine rather than recomputed analytically.
+    pub arena_k_bytes: u64,
+    /// K-arena share of `arena_scale_bytes` (q8 per-row scales; 0 at
+    /// fp32) — the honest overhead line next to `arena_k_bytes`.
+    pub arena_k_scale_bytes: u64,
     /// Context-tier switches (arena grow or shrink).
     pub tier_switches: u64,
     /// Decode steps executed per context tier — per-tier occupancy of the
@@ -140,13 +165,19 @@ impl EngineMetrics {
         }
     }
 
-    /// Mean delta-sync bytes per decode step — the per-step host traffic,
-    /// which is O(L·B·(KD+VD)) and independent of max_seq.
+    /// Mean delta-sync bytes per sync event — a decode step (O(L·B·
+    /// (KD+VD)) rows) or a prefill chunk (O(L·C) rows), both independent
+    /// of max_seq. `row_sync_bytes` charges chunk deltas too, so the
+    /// denominator must count chunks or chunked-mode runs would inflate
+    /// the per-decode-step reading by the whole prefill volume; in
+    /// monolithic mode `prefill_chunks` is 0 and this is exactly
+    /// bytes per decode step.
     pub fn row_sync_bytes_per_step(&self) -> f64 {
-        if self.decode_steps == 0 {
+        let events = self.decode_steps + self.prefill_chunks;
+        if events == 0 {
             0.0
         } else {
-            self.row_sync_bytes as f64 / self.decode_steps as f64
+            self.row_sync_bytes as f64 / events as f64
         }
     }
 
@@ -168,7 +199,8 @@ impl EngineMetrics {
              lanes:   {} joins, {} leaves, copyback {} B vs {} B \
              full-repack baseline ({savings})\n\
              sync:    up {} B, down {} B (full-arena), delta {:.0} B/step, \
-             arena {} B (+{} B scales), {} tier switches [{}]\n\
+             arena {} B (+{} B scales) [K {} B +{} B], \
+             {} tier switches [{}]\n\
              decode throughput: {:.1} tok/s",
             self.prefill.summary(),
             self.prefill_tokens,
@@ -188,6 +220,8 @@ impl EngineMetrics {
             self.row_sync_bytes_per_step(),
             self.arena_bytes,
             self.arena_scale_bytes,
+            self.arena_k_bytes,
+            self.arena_k_scale_bytes,
             self.tier_switches,
             tiers.join(" "),
             self.decode_tokens_per_sec()
@@ -294,6 +328,12 @@ mod tests {
         m.decode_steps = 4;
         m.row_sync_bytes = 400;
         assert!((m.row_sync_bytes_per_step() - 100.0).abs() < 1e-12);
+        // chunked mode: prefill chunks are sync events too — their delta
+        // bytes are in the numerator, so they must be in the denominator
+        // (or the per-decode-step reading inflates by the prefill volume)
+        m.prefill_chunks = 4;
+        m.row_sync_bytes = 800;
+        assert!((m.row_sync_bytes_per_step() - 100.0).abs() < 1e-12);
     }
 
     #[test]
@@ -356,7 +396,50 @@ mod tests {
         let mut m = EngineMetrics::default();
         m.arena_bytes = 1000;
         m.arena_scale_bytes = 96;
+        m.arena_k_bytes = 200;
+        m.arena_k_scale_bytes = 48;
         assert!(m.report().contains("1000 B (+96 B scales)"));
+        assert!(m.report().contains("[K 200 B +48 B]"));
+    }
+
+    /// The grouped composition, on the sizing math the engine gauges use
+    /// (ISSUE 5): at the serving geometry (3 layers, d_model 64, 8q
+    /// heads) the K-arena payload of servegqathin-q8 (2 kv heads, thin
+    /// d_qk_head 2 → k_dims 4, int8) is exactly 64x below
+    /// servefull-fp32 (k_dims 64, fp32) at the same (bucket, tier) —
+    /// group 4x × rank 4x × width 4x; K scales reported separately.
+    #[test]
+    fn arena_sizing_grouped_thin_q8_key_composition() {
+        let full = ArenaSizing {
+            n_layers: 3,
+            k_dims: 64, // 8 heads × d_qk_head 8
+            v_dims: 64,
+            quant: KvQuant::Fp32,
+        };
+        let gqa_thin_q8 = ArenaSizing {
+            n_layers: 3,
+            k_dims: 4, // 2 kv heads × thin d_qk_head 2
+            v_dims: 16,
+            quant: KvQuant::Q8,
+        };
+        let (b, n) = (4, 32);
+        assert_eq!(full.arena_k_payload_bytes(b, n),
+                   64 * gqa_thin_q8.arena_k_payload_bytes(b, n));
+        assert_eq!(full.arena_k_scale_bytes(b, n), 0);
+        // one fp32 scale per K row per (layer, lane, position)
+        assert_eq!(gqa_thin_q8.arena_k_scale_bytes(b, n), 3 * b * n * 4);
+        // K + V split is consistent with the combined payload gauge
+        assert_eq!(
+            full.arena_k_payload_bytes(b, n)
+                + full.n_layers * b * n * full.v_dims
+                    * full.quant.elem_bytes(),
+            full.arena_payload_bytes(b, n)
+        );
+        // even payload + scales stays ≥ 15x — the acceptance floor
+        let full_k = full.arena_k_payload_bytes(b, n) as f64;
+        let q8_k = (gqa_thin_q8.arena_k_payload_bytes(b, n)
+            + gqa_thin_q8.arena_k_scale_bytes(b, n)) as f64;
+        assert!(full_k / q8_k >= 15.0, "{}", full_k / q8_k);
     }
 
     #[test]

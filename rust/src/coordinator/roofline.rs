@@ -38,6 +38,21 @@ impl KvGeometry {
         }
     }
 
+    /// General per-head cache geometry (ISSUE 5): `n_kv_heads` KV heads
+    /// with asymmetric per-head widths — `d_qk_head` for keys (thin),
+    /// `d_v_head` for values (full). This is exactly the manifest's
+    /// `k_cache_dims`/`v_cache_dims` contract, so the analytic rows and
+    /// the engine's measured `arena_k_bytes` gauge share one formula:
+    /// `heads(2, 2, 8)` is `servegqathin`, `heads(8, 8, 8)` is
+    /// `servefull`.
+    pub fn heads(n_kv_heads: usize, d_qk_head: usize, d_v_head: usize)
+        -> Self {
+        KvGeometry {
+            k_dims: n_kv_heads * d_qk_head,
+            v_dims: n_kv_heads * d_v_head,
+        }
+    }
+
     /// MLA stores a joint latent + decoupled RoPE key; v_dims = 0.
     pub fn mla(d_c: usize, d_h_r: usize) -> Self {
         KvGeometry { k_dims: d_c + d_h_r, v_dims: 0 }
@@ -343,6 +358,29 @@ mod extra_tests {
         let t = KvGeometry::thin(4096, 4096);
         let m = KvGeometry::mha(4096);
         assert_eq!(t.total_dims(), m.total_dims());
+        // the general per-head constructor subsumes both special cases
+        assert_eq!(KvGeometry::heads(8, 128, 128).k_dims, g.k_dims);
+        assert_eq!(KvGeometry::heads(8, 32, 128).k_dims, gt.k_dims);
+        assert_eq!(KvGeometry::heads(8, 32, 128).v_dims, gt.v_dims);
+    }
+
+    /// The serve-grid key-cache composition (ISSUE 5), analytic side:
+    /// at the toy serving geometry (8q heads, d_qk_head 8, d_v_head 8)
+    /// the grouped thin config (2 kv heads, thin head dim 2) cuts K
+    /// dims 16x; with q8 element width that is 64x payload, and ≥ 15x
+    /// even after the per-row fp32 scale at the toy KD=4 width — the
+    /// same floor bench_table10_kvmemory asserts off the engine gauges.
+    #[test]
+    fn serve_grid_key_composition_hits_16x_floor() {
+        let full = KvGeometry::heads(8, 8, 8); // servefull
+        let gqa_thin = KvGeometry::heads(2, 2, 8); // servegqathin
+        assert_eq!(full.k_dims, 16 * gqa_thin.k_dims);
+        let layers = 3;
+        let full_fp32 = full.k_bytes_fmt(1, layers, FMT_FP32);
+        let thin_q8 = gqa_thin.k_bytes_fmt(1, layers, FMT_Q8);
+        assert!((full_fp32 / (thin_q8 - layers as f64 * 4.0) - 64.0).abs()
+                    < 1e-9);
+        assert!(full_fp32 / thin_q8 >= 15.0, "{}", full_fp32 / thin_q8);
     }
 
     #[test]

@@ -17,7 +17,13 @@
 //! than mid-prompt or (worse) after the full prompt. A weighted
 //! anti-starvation counter ([`SchedConfig::interactive_weight`]) grants a
 //! Batch chunk after that many consecutive Interactive grants, so
-//! document ingestion keeps making progress under sustained chat load.
+//! document ingestion keeps making progress under sustained chat load —
+//! including ADMISSION of a still-waiting Batch document: the boosted
+//! grant probes the Batch class's own head-of-line directly
+//! (`admissible_in_class`) instead of the fixed Interactive-first scan
+//! that used to starve a queued document for as long as admissible chats
+//! kept arriving (the ROADMAP open item, regression-tested in
+//! rust/tests/serving_e2e.rs::batch_doc_survives_sustained_interactive_stream).
 //!
 //! Admission reserves the *full* context (prompt + max_new) per sequence —
 //! the same per-user reservation the paper's Table 10 capacity math uses,
@@ -227,6 +233,25 @@ impl<'rt> Scheduler<'rt> {
         Ok(admitted)
     }
 
+    /// Class-targeted admissibility probe (the ROADMAP starvation fix):
+    /// the waiting-queue index of `class`'s OWN head-of-line request, if
+    /// it exists and its reservation fits — independent of what any other
+    /// class's head is doing. `prefill_round` uses this so a boosted
+    /// Batch grant can actually admit a waiting Batch document instead of
+    /// only ever finding the Interactive head under sustained chat load.
+    fn admissible_in_class(&self, class: Priority) -> Option<usize> {
+        let (idx, seq) = self
+            .waiting
+            .iter()
+            .enumerate()
+            .find(|(_, s)| s.priority == class)?;
+        if self.kv.can_admit(Self::reservation(seq)) {
+            Some(idx)
+        } else {
+            None
+        }
+    }
+
     /// Index of the next admissible waiting request: the front of the
     /// highest-priority class present, if its reservation fits. A blocked
     /// Interactive head gates ALL admission — Batch must not backfill the
@@ -236,16 +261,8 @@ impl<'rt> Scheduler<'rt> {
     /// still evicted by `flush_unservable`, so this cannot wedge).
     fn next_admissible(&self) -> Option<usize> {
         for class in [Priority::Interactive, Priority::Batch] {
-            if let Some((idx, seq)) = self
-                .waiting
-                .iter()
-                .enumerate()
-                .find(|(_, s)| s.priority == class)
-            {
-                if self.kv.can_admit(Self::reservation(seq)) {
-                    return Some(idx);
-                }
-                return None;
+            if self.waiting.iter().any(|s| s.priority == class) {
+                return self.admissible_in_class(class);
             }
         }
         None
@@ -262,9 +279,56 @@ impl<'rt> Scheduler<'rt> {
             self.prefilling.values().map(|s| s.priority).collect();
         let has_slot =
             self.running.len() + self.prefilling.len() < self.cfg.max_batch;
-        let waiting_admissible =
-            if has_slot { self.next_admissible() } else { None };
-        if inflight_classes.is_empty() && waiting_admissible.is_none() {
+        // class-targeted admissibility probes: each class's own waiting
+        // head is checked against the cache independently, so the boosted
+        // Batch arm below can see past an Interactive head (the
+        // `next_admissible` fixed Interactive-first scan starved a
+        // WAITING Batch document under sustained admissible Interactive
+        // load — the anti-starvation weight fired but the pick loop only
+        // ever found the Interactive head; see the
+        // `batch_doc_survives_sustained_interactive_stream` e2e test).
+        let adm_inter = if has_slot {
+            self.admissible_in_class(Priority::Interactive)
+        } else {
+            None
+        };
+        let interactive_waiting = self
+            .waiting
+            .iter()
+            .any(|s| s.priority == Priority::Interactive);
+        let batch_pending = inflight_classes.contains(&Priority::Batch)
+            || self
+                .waiting
+                .iter()
+                .any(|s| s.priority == Priority::Batch);
+        let boost_batch = batch_pending
+            && self.cfg.interactive_weight > 0
+            && self.interactive_grants >= self.cfg.interactive_weight;
+        // Head-of-line discipline: a waiting Batch request is only
+        // admitted past a present Interactive class when the
+        // anti-starvation boost fires AND the Interactive head is itself
+        // admissible — i.e. the boost redistributes grants under
+        // sustained *servable* Interactive load (the starvation bug),
+        // never backfills capacity a BLOCKED Interactive head is
+        // accumulating toward (that no-backfill invariant is why
+        // `next_admissible` gates all admission on the blocked head; a
+        // boosted Batch reservation there would be a priority inversion
+        // lasting the document's whole lifetime). In-flight Batch
+        // prefills may always resume — they hold their reservation
+        // already.
+        let interactive_blocked = interactive_waiting && adm_inter.is_none();
+        let adm_batch = if has_slot
+            && !interactive_blocked
+            && (boost_batch || !interactive_waiting)
+        {
+            self.admissible_in_class(Priority::Batch)
+        } else {
+            None
+        };
+        if inflight_classes.is_empty()
+            && adm_inter.is_none()
+            && adm_batch.is_none()
+        {
             return Ok(0);
         }
         // budget: this round's decode spends one token per running lane
@@ -284,19 +348,9 @@ impl<'rt> Scheduler<'rt> {
 
         // class choice: Interactive first, unless the anti-starvation
         // boost fires for pending Batch work
-        let batch_pending = inflight_classes.contains(&Priority::Batch)
-            || self
-                .waiting
-                .iter()
-                .any(|s| s.priority == Priority::Batch);
         let interactive_available =
             inflight_classes.contains(&Priority::Interactive)
-                || waiting_admissible
-                    .map(|i| self.waiting[i].priority == Priority::Interactive)
-                    .unwrap_or(false);
-        let boost_batch = batch_pending
-            && self.cfg.interactive_weight > 0
-            && self.interactive_grants >= self.cfg.interactive_weight;
+                || adm_inter.is_some();
         let class_order = if boost_batch || !interactive_available {
             [Priority::Batch, Priority::Interactive]
         } else {
@@ -304,7 +358,10 @@ impl<'rt> Scheduler<'rt> {
         };
 
         // pick: in-flight before waiting within the chosen class (finish
-        // what was started — bounds the number of half-ingested arenas)
+        // what was started — bounds the number of half-ingested arenas);
+        // the waiting arm uses the class's OWN admissibility probe, so a
+        // boosted Batch round admits the waiting Batch head even while
+        // Interactive requests keep arriving in front of it
         let mut chosen: Option<Sequence> = None;
         'pick: for class in class_order {
             if let Some(&id) = self
@@ -316,13 +373,15 @@ impl<'rt> Scheduler<'rt> {
                 chosen = Some(self.prefilling.remove(&id).unwrap());
                 break 'pick;
             }
-            if let Some(idx) = waiting_admissible {
-                if self.waiting[idx].priority == class {
-                    let seq = self.waiting.remove(idx).unwrap();
-                    self.kv.allocate(seq.id, Self::reservation(&seq))?;
-                    chosen = Some(seq);
-                    break 'pick;
-                }
+            let admissible = match class {
+                Priority::Interactive => adm_inter,
+                Priority::Batch => adm_batch,
+            };
+            if let Some(idx) = admissible {
+                let seq = self.waiting.remove(idx).unwrap();
+                self.kv.allocate(seq.id, Self::reservation(&seq))?;
+                chosen = Some(seq);
+                break 'pick;
             }
         }
         let Some(mut seq) = chosen else { return Ok(0) };

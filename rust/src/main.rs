@@ -74,7 +74,11 @@ fn info() -> Result<()> {
 
 fn serve(argv: &[String]) -> Result<()> {
     let p = Args::new("serve a synthetic trace on the factored-keys engine")
-        .flag_str("config", Some("servethin"), "serving config")
+        .flag_str("config", Some("servethin"),
+                  "serving config: servefull | servethin (factored keys \
+                   r=d/4) | servegqa (8q/2kv grouped heads) | servegqathin \
+                   (grouped + factored — composes with --kv-quant q8 for \
+                   the measured 64x key-arena cut)")
         .flag_usize("requests", Some(32), "number of requests")
         .flag_f64("rate", Some(4.0), "arrival rate (req/s)")
         .flag_f64("budget-mb", Some(8.0), "KV cache budget (MB)")
@@ -106,6 +110,12 @@ fn serve(argv: &[String]) -> Result<()> {
     })?;
     let rt = Runtime::new()?;
     let cfg = rt.manifest().config(&cfg_name)?.clone();
+    println!(
+        "config {cfg_name}: {} heads {}q/{}kv (group {}), cache row \
+         KD {} + VD {} els/layer at {}",
+        cfg.attn, cfg.n_heads, cfg.n_kv_heads, cfg.group(),
+        cfg.k_cache_dims, cfg.v_cache_dims, quant.name()
+    );
     let params = ParamStore::init(&cfg, 42);
     let eng = Engine::with_kv_quant(&rt, &cfg_name, params, p.bool("pallas"),
                                     Sampler::Greedy, 0, quant)?;

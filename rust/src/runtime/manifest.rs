@@ -452,7 +452,8 @@ mod tests {
     #[test]
     fn decode_tier_grid_resolves_for_every_tier() {
         let Some(m) = manifest() else { return };
-        for cfg_name in ["servefull", "servethin"] {
+        for cfg_name in ["servefull", "servethin", "servegqa",
+                         "servegqathin"] {
             let cfg = m.config(cfg_name).unwrap();
             let tiers = m.tiers_for(cfg_name);
             assert!(!tiers.is_empty());
@@ -492,7 +493,8 @@ mod tests {
     #[test]
     fn q8_decode_grid_resolves_with_int8_specs() {
         let Some(m) = manifest() else { return };
-        for cfg_name in ["servefull", "servethin"] {
+        for cfg_name in ["servefull", "servethin", "servegqa",
+                         "servegqathin"] {
             let cfg = m.config(cfg_name).unwrap();
             assert_eq!(m.kv_quants_for(cfg_name),
                        vec![KvQuant::Fp32, KvQuant::Q8]);
@@ -558,7 +560,8 @@ mod tests {
     #[test]
     fn prefill_chunk_axis_resolves_for_every_chunk() {
         let Some(m) = manifest() else { return };
-        for cfg_name in ["servefull", "servethin"] {
+        for cfg_name in ["servefull", "servethin", "servegqa",
+                         "servegqathin"] {
             let cfg = m.config(cfg_name).unwrap();
             let chunks = m.chunks_for(cfg_name);
             assert!(!chunks.is_empty(), "no chunk axis for {cfg_name}");
@@ -614,6 +617,35 @@ mod tests {
             "decode_servethin_b8"
         );
         assert_eq!(m.tiers_for("no_such_config"), Vec::<usize>::new());
+    }
+
+    /// The GQA serving pair (ISSUE 5): the manifest records the grouped
+    /// head geometry and the cache widths are KV-head-sized — the
+    /// contract every engine arena, mirror, and byte gauge is built on.
+    #[test]
+    fn gqa_serving_configs_record_grouped_geometry() {
+        let Some(m) = manifest() else { return };
+        let full = m.config("servefull").unwrap();
+        assert_eq!(full.group(), 1);
+        for name in ["servegqa", "servegqathin"] {
+            let c = m.config(name).unwrap();
+            assert_eq!(c.attn, "gqa");
+            assert_eq!(c.n_heads, 8);
+            assert_eq!(c.n_kv_heads, 2);
+            assert_eq!(c.group(), 4);
+            assert_eq!(c.k_cache_dims, c.n_kv_heads * c.d_qk_head);
+            assert_eq!(c.v_cache_dims, c.n_kv_heads * c.d_v_head);
+            assert_eq!(c.max_seq, full.max_seq, "tier tables must match");
+            assert_eq!(m.tiers_for(name), m.tiers_for("servefull"));
+            assert_eq!(m.kv_quants_for(name),
+                       vec![KvQuant::Fp32, KvQuant::Q8]);
+        }
+        // the composed widths: group 4x, then rank 4x on K only
+        let gqa = m.config("servegqa").unwrap();
+        let thin = m.config("servegqathin").unwrap();
+        assert_eq!(gqa.k_cache_dims * 4, full.k_cache_dims);
+        assert_eq!(thin.k_cache_dims * 16, full.k_cache_dims);
+        assert_eq!(thin.v_cache_dims, gqa.v_cache_dims);
     }
 
     #[test]

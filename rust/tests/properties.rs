@@ -209,6 +209,156 @@ fn prop_quantize_zero_and_outlier_rows() {
     });
 }
 
+/// Minimal f32 decode attention over a dense cache arena, with KV-head
+/// grouping expressed exactly as the serving kernels express it (the
+/// Pallas index map `kv head = q head / group`, ISSUE 5): query head `qh`
+/// reads kv head `qh / group`. q: (H, dqk) row-major; k: (Hkv, N, dqk);
+/// v: (Hkv, N, dv); positions 0..=pos are live. Returns (H, dv).
+#[allow(clippy::too_many_arguments)]
+fn grouped_attention_decode(q: &[f32], k: &[f32], v: &[f32], h: usize,
+                            hkv: usize, n: usize, dqk: usize, dv: usize,
+                            pos: usize) -> Vec<f32> {
+    let group = h / hkv;
+    let scale = 1.0 / (dqk as f32).sqrt();
+    let mut out = vec![0f32; h * dv];
+    for qh in 0..h {
+        let kh = qh / group;
+        let mut scores = vec![0f32; pos + 1];
+        for (j, s) in scores.iter_mut().enumerate() {
+            let mut acc = 0f32;
+            for t in 0..dqk {
+                acc += q[qh * dqk + t] * k[(kh * n + j) * dqk + t];
+            }
+            *s = acc * scale;
+        }
+        let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut w: Vec<f32> = scores.iter().map(|s| (s - m).exp()).collect();
+        let den: f32 = w.iter().sum();
+        for wj in w.iter_mut() {
+            *wj /= den;
+        }
+        for (j, wj) in w.iter().enumerate() {
+            for t in 0..dv {
+                out[qh * dv + t] += wj * v[(kh * n + j) * dv + t];
+            }
+        }
+    }
+    out
+}
+
+/// Duplicate each kv head `group` times: (Hkv, N, d) -> (Hkv*group, N, d)
+/// — the MHA reference the grouped path must reproduce.
+fn repeat_kv(x: &[f32], hkv: usize, n: usize, d: usize, group: usize)
+    -> Vec<f32> {
+    let mut out = Vec::with_capacity(hkv * group * n * d);
+    for kh in 0..hkv {
+        for _ in 0..group {
+            out.extend_from_slice(&x[kh * n * d..(kh + 1) * n * d]);
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_grouped_decode_bit_matches_duplicated_mha() {
+    // ISSUE 5 satellite: GQA attention with group size g must BIT-match
+    // an MHA reference whose KV cache duplicates each kv head g times —
+    // group broadcast is pure indexing, never arithmetic. Random head
+    // counts, group sizes, tier-like arena lengths, and asymmetric dims.
+    property("grouped decode == duplicated-kv MHA (bitwise)", 40, |rng| {
+        let hkv = 1 + rng.below(3);
+        let group = [1usize, 2, 4][rng.below(3)];
+        let h = hkv * group;
+        let n = [8usize, 16, 32, 64][rng.below(4)]; // tier-like lengths
+        let dqk = 1 + rng.below(8);
+        let dv = 1 + rng.below(16);
+        let pos = rng.below(n);
+        let q = Tensor::randn(&[h, dqk], 1.0, rng);
+        let k = Tensor::randn(&[hkv, n, dqk], 1.0, rng);
+        let v = Tensor::randn(&[hkv, n, dv], 1.0, rng);
+        let grouped = grouped_attention_decode(
+            &q.data, &k.data, &v.data, h, hkv, n, dqk, dv, pos);
+        let kd = repeat_kv(&k.data, hkv, n, dqk, group);
+        let vd = repeat_kv(&v.data, hkv, n, dv, group);
+        let mha = grouped_attention_decode(
+            &q.data, &kd, &vd, h, h, n, dqk, dv, pos);
+        if grouped == mha {
+            Ok(())
+        } else {
+            Err(format!(
+                "grouped != duplicated MHA at h{h}/hkv{hkv} n{n} \
+                 dqk{dqk} dv{dv} pos{pos}"
+            ))
+        }
+    });
+}
+
+#[test]
+fn prop_grouped_q8_decode_bounded_vs_fp32() {
+    // The q8 half of the grouped-parity contract: quantizing the grouped
+    // cache per ROW (one scale across the flat Hkv·d row, the serving
+    // arena layout) and attending over the dequantized rows must stay
+    // boundedly close to the fp32 grouped reference — and remain
+    // BIT-identical to the duplicated-kv MHA run over the same
+    // dequantized rows (grouping commutes with quantization).
+    property("grouped q8 decode bounded + bit-stable", 30, |rng| {
+        let hkv = 1 + rng.below(2);
+        let group = [2usize, 4][rng.below(2)];
+        let h = hkv * group;
+        let n = [8usize, 16, 32][rng.below(3)];
+        let dqk = 1 + rng.below(6);
+        let dv = 1 + rng.below(12);
+        let pos = rng.below(n);
+        let q = Tensor::randn(&[h, dqk], 1.0, rng);
+        // cache rows in arena layout: (N, Hkv*d) with ONE scale per row
+        let k_rows = Tensor::randn(&[n, hkv * dqk], 1.0, rng);
+        let v_rows = Tensor::randn(&[n, hkv * dv], 1.0, rng);
+        let (kq, ks) = quantize_rows_q8(&k_rows.data, hkv * dqk);
+        let (vq, vs) = quantize_rows_q8(&v_rows.data, hkv * dv);
+        let kdq = dequantize_rows_q8(&kq, &ks, hkv * dqk);
+        let vdq = dequantize_rows_q8(&vq, &vs, hkv * dv);
+        // arena layout (N, Hkv*d) -> head-major (Hkv, N, d)
+        let to_heads = |rows: &[f32], d: usize| -> Vec<f32> {
+            let mut out = vec![0f32; hkv * n * d];
+            for j in 0..n {
+                for kh in 0..hkv {
+                    for t in 0..d {
+                        out[(kh * n + j) * d + t] =
+                            rows[j * hkv * d + kh * d + t];
+                    }
+                }
+            }
+            out
+        };
+        let (k32, v32) = (to_heads(&k_rows.data, dqk),
+                          to_heads(&v_rows.data, dv));
+        let (k8, v8) = (to_heads(&kdq, dqk), to_heads(&vdq, dv));
+        let fp32 = grouped_attention_decode(
+            &q.data, &k32, &v32, h, hkv, n, dqk, dv, pos);
+        let deq = grouped_attention_decode(
+            &q.data, &k8, &v8, h, hkv, n, dqk, dv, pos);
+        let err = fp32
+            .iter()
+            .zip(&deq)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        // per-element quantization error is <= scale/2 (~0.016 at unit
+        // magnitudes); the softmax mixing keeps the output perturbation
+        // the same order — 0.15 is a loose but meaningful ceiling
+        if !(err.is_finite() && err < 0.15) {
+            return Err(format!("q8 grouped decode error {err}"));
+        }
+        let kd = repeat_kv(&k8, hkv, n, dqk, group);
+        let vd = repeat_kv(&v8, hkv, n, dv, group);
+        let mha = grouped_attention_decode(
+            &q.data, &kd, &vd, h, h, n, dqk, dv, pos);
+        if deq != mha {
+            return Err("grouping does not commute with dequant".into());
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_row_arena_copies_preserve_values() {
     // the engine's park/unpark/repack primitive: row-range copies through

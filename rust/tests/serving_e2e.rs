@@ -586,6 +586,78 @@ fn interactive_preempts_batch_at_chunk_boundary() {
     assert_eq!(sched.kv.stats().seqs, 0);
 }
 
+/// THE Batch-starvation regression (ROADMAP open item, fixed in ISSUE 5):
+/// a queued Batch document behind a STEADY stream of admissible
+/// Interactive chats must still be admitted and prefilled while the
+/// stream continues. Under the old fixed Interactive-first
+/// `next_admissible` scan this test fails: the anti-starvation boost
+/// fired, but the pick loop's waiting arm only ever saw the Interactive
+/// head, so the document sat at zero prefill progress for as long as
+/// chats kept arriving. The class-targeted `admissible_in_class` probe
+/// lets the boosted Batch grant admit the document's own head-of-line.
+#[test]
+fn batch_doc_survives_sustained_interactive_stream() {
+    let rt = runtime();
+    let eng = engine(&rt, "servethin", 0);
+    let kv = kv_for(&rt, "servethin", 4.0);
+    let chunk = *rt.manifest().chunks_for("servethin").first().unwrap();
+    let mut sched = Scheduler::with_config(eng, kv, SchedConfig {
+        max_batch: 8,
+        round_budget: 64,
+        chunk_tokens: Some(chunk),
+        interactive_weight: 2,
+    });
+    let vocab = sched.engine.cfg.vocab;
+    let mut rng = Rng::new(47);
+    let doc = sched.submit_seq(synth_prompt(chunk * 4, vocab, &mut rng), 2,
+                               None, Priority::Batch, None);
+    // one fresh admissible chat per round, every round — the Interactive
+    // class never drains, so only a class-targeted boosted grant can
+    // reach the waiting document
+    let mut first_progress_round = None;
+    let mut doc_done_round = None;
+    let rounds = 30;
+    for round in 0..rounds {
+        sched.submit_seq(synth_prompt(4, vocab, &mut rng), 1, None,
+                         Priority::Interactive, None);
+        sched.step().unwrap();
+        if first_progress_round.is_none() && sched.engine.rows(doc) > 0 {
+            first_progress_round = Some(round);
+        }
+        if doc_done_round.is_none()
+            && sched.finished.iter().any(|s| s.id == doc)
+        {
+            doc_done_round = Some(round);
+        }
+    }
+    assert!(
+        first_progress_round.is_some(),
+        "Batch doc starved: zero prefill progress across {rounds} rounds \
+         of sustained admissible Interactive load"
+    );
+    // the doc must have prefilled AND generated DURING the stream, not
+    // only after the chats ran out
+    assert!(
+        doc_done_round.is_some(),
+        "doc never completed while the chat stream was live \
+         (first prefill progress at round {first_progress_round:?})"
+    );
+    // and the chats kept flowing — anti-starvation must not invert into
+    // chat starvation: the doc consumes exactly ceil(prompt/chunk)
+    // boosted rounds, every other round serves one full chat (single
+    // chunk + one token), so at most doc_grants + a couple of boundary
+    // rounds of the stream go un-served
+    let doc_grants = (chunk * 4).div_ceil(chunk);
+    assert!(sched.finished.iter()
+                .filter(|s| s.priority == Priority::Interactive)
+                .count() >= rounds - doc_grants - 2,
+            "interactive chats starved by the batch grants");
+    sched.run_to_completion().unwrap();
+    let doc_seq = sched.finished.iter().find(|s| s.id == doc).unwrap();
+    assert_eq!(doc_seq.generated.len(), 2, "doc never generated");
+    assert_eq!(sched.kv.stats().seqs, 0);
+}
+
 /// The stall-flush fix (ISSUE 3 satellite): a waiting request that does
 /// not fit only because an in-flight chunked prefill still holds its
 /// reservation must NOT be evicted as "never fitting" — it is re-checked
@@ -651,21 +723,24 @@ fn live_logit_err(e32: &Engine, e8: &Engine, live: &[u64], vocab: usize)
     worst
 }
 
-/// THE q8 parity acceptance (ISSUE 4): the q8 engine, teacher-forced to
-/// follow the fp32 engine's tokens through a scenario that exercises
-/// monolithic prefill, tier growth, retirement churn, a mid-flight join,
-/// and tier shrink, must keep its decode logits within a tight absolute
-/// bound of the fp32 engine's — while moving exactly 4x fewer arena
-/// payload bytes and never downloading a full arena. Measured worst-case
-/// error with init params is ~2e-3; 0.05 is ~25x headroom and still
-/// catches any real dequant/scale/scatter defect.
-#[test]
-fn q8_decode_parity_bounded_under_churn() {
-    let rt = runtime();
+/// Shared q8 churn-parity scenario (ISSUE 4, reused by the grouped
+/// configs in ISSUE 5): the q8 engine, teacher-forced to follow the fp32
+/// engine's tokens through monolithic AND chunked prefill, tier growth,
+/// retirement churn, a mid-flight join, and tier shrink, must keep its
+/// decode logits within a tight absolute bound of the fp32 engine's —
+/// while moving exactly 4x fewer arena payload bytes and never
+/// downloading a full arena. Returns the final (fp32, q8) metrics and
+/// the final (bucket, tier) of the last (chunked) run so callers can
+/// assert config-specific arena geometry on top.
+fn q8_churn_parity(rt: &Runtime, cfg_name: &str)
+    -> (thinkeys::coordinator::metrics::EngineMetrics,
+        thinkeys::coordinator::metrics::EngineMetrics,
+        usize, usize) {
+    let mut last = None;
     for chunked in [false, true] {
-        let cfg = rt.manifest().config("servethin").unwrap().clone();
-        let mut e32 = engine(&rt, "servethin", 0);
-        let mut e8 = q8_engine(&rt, "servethin", 0);
+        let cfg = rt.manifest().config(cfg_name).unwrap().clone();
+        let mut e32 = engine(rt, cfg_name, 0);
+        let mut e8 = q8_engine(rt, cfg_name, 0);
         let mut rng = Rng::new(29);
         let p_doc = synth_prompt(90, cfg.vocab, &mut rng);   // forces n=128
         let p_chat = synth_prompt(10, cfg.vocab, &mut rng);
@@ -682,7 +757,7 @@ fn q8_decode_parity_bounded_under_churn() {
         e32.prefill(&mut d32).unwrap();
         e32.prefill(&mut c32).unwrap();
         if chunked {
-            let chunk = *rt.manifest().chunks_for("servethin").first()
+            let chunk = *rt.manifest().chunks_for(cfg_name).first()
                 .unwrap();
             while !e8.prefill_chunk(&mut d8, chunk).unwrap() {}
             while !e8.prefill_chunk(&mut c8, chunk).unwrap() {}
@@ -734,7 +809,7 @@ fn q8_decode_parity_bounded_under_churn() {
         // phase 3: a joiner unparks into the hole — join + repack
         e32.prefill(&mut j32).unwrap();
         if chunked {
-            let chunk = *rt.manifest().chunks_for("servethin").first()
+            let chunk = *rt.manifest().chunks_for(cfg_name).first()
                 .unwrap();
             while !e8.prefill_chunk(&mut j8, chunk).unwrap() {}
         } else {
@@ -757,6 +832,7 @@ fn q8_decode_parity_bounded_under_churn() {
         assert_eq!(e8.metrics.sync_download_bytes, 0);
         // exact 4x payload at matched (bucket, tier); scales visible
         assert_eq!(e32.metrics.arena_bytes, 4 * e8.metrics.arena_bytes);
+        assert_eq!(e32.metrics.arena_k_bytes, 4 * e8.metrics.arena_k_bytes);
         assert!(e8.metrics.arena_scale_bytes > 0);
         assert_eq!(e32.metrics.arena_scale_bytes, 0);
         // per-step delta sync also shrank (codes + scales < fp32 rows);
@@ -766,6 +842,56 @@ fn q8_decode_parity_bounded_under_churn() {
         if !chunked {
             assert!(e8.metrics.row_sync_bytes < e32.metrics.row_sync_bytes);
         }
+        last = Some((e32.metrics.clone(), e8.metrics.clone(),
+                     e8.current_bucket(), e8.current_tier()));
+    }
+    last.expect("churn scenario ran")
+}
+
+/// THE q8 parity acceptance (ISSUE 4) on the factored MHA config.
+/// Measured worst-case error with init params is ~2e-3; 0.05 is ~25x
+/// headroom and still catches any real dequant/scale/scatter defect.
+#[test]
+fn q8_decode_parity_bounded_under_churn() {
+    let rt = runtime();
+    q8_churn_parity(&rt, "servethin");
+}
+
+/// THE composed gqa × q8 acceptance (ISSUE 5): the grouped configs run
+/// the same churn scenario (monolithic + chunked prefill × tier
+/// grow/shrink × retirement × join) with the parity bound and the
+/// `sync_download_bytes == 0` tripwire intact, AND the measured arena
+/// gauges must equal the grouped-width arenas exactly — `k_cache_dims =
+/// n_kv_heads · d_qk_head`, never a query-head width — so the exact
+/// composed ratio vs the servefull-fp32 geometry (16x grouped-full, 64x
+/// grouped-thin at q8 element width) holds byte-for-byte.
+#[test]
+fn gqa_q8_decode_parity_bounded_under_churn() {
+    let rt = runtime();
+    let full = rt.manifest().config("servefull").unwrap().clone();
+    for cfg_name in ["servegqa", "servegqathin"] {
+        let cfg = rt.manifest().config(cfg_name).unwrap().clone();
+        assert!(cfg.n_kv_heads < cfg.n_heads, "{cfg_name} not grouped");
+        assert_eq!(cfg.k_cache_dims, cfg.n_kv_heads * cfg.d_qk_head);
+        let (m32, m8, bucket, tier) = q8_churn_parity(&rt, cfg_name);
+        let l = cfg.n_layers;
+        // the q8 K arena is exactly the grouped-width int8 arena ...
+        assert_eq!(m8.arena_k_bytes as usize,
+                   l * bucket * tier * cfg.k_cache_dims,
+                   "{cfg_name}: K arena not sized by KV heads");
+        // ... the fp32 twin exactly 4 bytes/element over the same dims
+        assert_eq!(m32.arena_k_bytes as usize,
+                   l * bucket * tier * cfg.k_cache_dims * 4);
+        // exact composed grouped ratio vs servefull-fp32 at the same
+        // (bucket, tier): fp32 full width over q8 grouped width
+        let ratio = (full.k_cache_dims * 4 / cfg.k_cache_dims) as u64;
+        assert_eq!(ratio,
+                   if cfg_name == "servegqathin" { 64 } else { 16 });
+        assert_eq!((l * bucket * tier * full.k_cache_dims * 4) as u64,
+                   ratio * m8.arena_k_bytes,
+                   "{cfg_name}: composed grouped ratio off");
+        // one fp32 scale per K row — the honest overhead, visible
+        assert_eq!(m8.arena_k_scale_bytes as usize, l * bucket * tier * 4);
     }
 }
 
