@@ -15,4 +15,15 @@ test-python:
 tier1:
 	cd rust && cargo build --release && cargo test -q
 
-.PHONY: artifacts test-python tier1
+# Static grid audit (ISSUE 6): verify the exported artifact grid without
+# executing anything — config algebra, ladders, geometry, quant variants,
+# scheduler reachability.
+check:
+	cd rust && cargo run --release -- check
+
+# Coordinator deny rules (std-only xtask crate; add --clippy once the
+# main crate's manifest is tracked).
+lint:
+	cd rust && cargo xtask lint
+
+.PHONY: artifacts test-python tier1 check lint

@@ -32,6 +32,13 @@ F32 = jnp.float32
 I32 = jnp.int32
 I8 = jnp.int8
 
+# Export-contract revision stamped into manifest.json. Bump whenever the
+# artifact naming scheme or the geometry contract changes; the rust side
+# (`thinkeys check`, analysis::grid) refuses to audit older manifests and
+# this module refuses to *write* one that violates its own contract
+# (validate_manifest below).
+SCHEMA_VERSION = 2
+
 
 def to_hlo_text(lowered) -> str:
     mlir_mod = lowered.compiler_ir("stablehlo")
@@ -234,6 +241,168 @@ def build_entry(kind, cfg, geom):
     raise ValueError(kind)
 
 
+def build_manifest(artifacts):
+    """Assemble the manifest dict from finished artifact entries.
+
+    Split from main() so tests can build (and validate) a real manifest
+    without lowering a single HLO module — build_entry only constructs
+    ShapeDtypeStructs, which is cheap.
+    """
+    configs_out = {}
+    for name_ in sorted({a["config"] for a in artifacts}):
+        cfg = REGISTRY[name_]
+        cd = config_dict(cfg)
+        cd["params"] = [
+            {"name": s.name, "shape": list(s.shape), "init": s.init,
+             "std": s.std, "wd": s.wd, "qk": s.qk}
+            for s in M.param_specs(cfg)]
+        b, s = train_geometry(cfg)
+        cd["train_batch"], cd["train_seq"] = b, s
+        configs_out[name_] = cd
+
+    return {
+        "version": 1,
+        "schema_version": SCHEMA_VERSION,
+        "adam": {"b1": M.ADAM_B1, "b2": M.ADAM_B2, "eps": M.ADAM_EPS,
+                 "weight_decay": M.WEIGHT_DECAY},
+        "decode_batches": list(DECODE_BATCHES),
+        "decode_tiers": {
+            name: decode_tiers(REGISTRY[name].max_seq)
+            for name in sorted({a["config"] for a in artifacts
+                                if a["kind"] == "decode"})},
+        "prefill_seq": PREFILL_SEQ,
+        "prefill_chunks": {
+            name: list(PREFILL_CHUNKS)
+            for name in sorted({a["config"] for a in artifacts
+                                if a["kind"] == "prefill"
+                                and "c" in a["geom"]})},
+        # KV-cache quantization axis: serving config -> exported quant
+        # modes. Manifests without this key are pre-quantization — the
+        # rust Manifest::kv_quants_for falls back to ["fp32"] and the
+        # engine refuses --kv-quant q8 rather than inventing names.
+        "kv_quant": {
+            name: list(KV_QUANTS)
+            for name in sorted({a["config"] for a in artifacts
+                                if a["kind"] == "decode"
+                                and a["geom"].get("quant") == "q8"})},
+        "configs": configs_out,
+        "artifacts": artifacts,
+    }
+
+
+def _input_spec(art, name):
+    for n_, dtype, shape in art["inputs"]:
+        if n_ == name:
+            return dtype, list(shape)
+    return None
+
+
+def validate_manifest(manifest):
+    """Export-time mirror of `thinkeys check` (rust analysis::grid).
+
+    Raises ValueError("{artifact}: {rule}: {detail}") on the first
+    violation, so a broken grid can never be written to disk in the first
+    place — the rust checker then guards the *cached* grid in CI.
+    """
+    def fail(artifact, rule, detail):
+        raise ValueError(f"{artifact}: {rule}: {detail}")
+
+    if manifest.get("schema_version") != SCHEMA_VERSION:
+        fail("manifest", "schema-version",
+             f"expected {SCHEMA_VERSION}, found "
+             f"{manifest.get('schema_version')}")
+
+    arts = {a["name"]: a for a in manifest["artifacts"]}
+    if len(arts) != len(manifest["artifacts"]):
+        fail("manifest", "grid-unique", "duplicate artifact names")
+
+    # Config algebra: every derived dimension must re-derive.
+    for name, c in manifest["configs"].items():
+        if c["n_kv_heads"] == 0 or c["n_heads"] % c["n_kv_heads"]:
+            fail(name, "config-algebra",
+                 "GQA group {}/{} not integral".format(
+                     c["n_heads"], c["n_kv_heads"]))
+        if c["d_select"] % c["n_heads"]:
+            fail(name, "config-algebra",
+                 "d_select {} not divisible by {} heads".format(
+                     c["d_select"], c["n_heads"]))
+        if c["attn"] == "mla":
+            k, v = c["d_c"] + c["d_r"], 0
+        else:
+            k = c["n_kv_heads"] * c["d_qk_head"]
+            v = c["n_kv_heads"] * c["d_v_head"]
+        if c["k_cache_dims"] != k or c["v_cache_dims"] != v:
+            fail(name, "config-algebra",
+                 "cache dims ({}, {}) != derived ({}, {})".format(
+                     c["k_cache_dims"], c["v_cache_dims"], k, v))
+        if c["kv_budget"] != k + v:
+            fail(name, "config-algebra",
+                 "kv_budget {} != {} + {}".format(c["kv_budget"], k, v))
+
+    # Ladders: tiers ascending pow2 (final tier == max_seq), chunks
+    # ascending and dividing prefill_seq.
+    for name, tiers in manifest["decode_tiers"].items():
+        if not tiers:
+            fail(name, "tier-ladder", "empty tier ladder")
+        if sorted(set(tiers)) != tiers:
+            fail(name, "tier-ladder", f"not strictly ascending: {tiers}")
+        for tier in tiers[:-1]:
+            if tier & (tier - 1):
+                fail(name, "tier-ladder",
+                     f"non-final tier {tier} not a power of two")
+        if tiers[-1] != manifest["configs"][name]["max_seq"]:
+            fail(name, "tier-ladder",
+                 "last tier {} != max_seq {}".format(
+                     tiers[-1], manifest["configs"][name]["max_seq"]))
+    for name, chunks in manifest["prefill_chunks"].items():
+        if sorted(set(chunks)) != chunks:
+            fail(name, "chunk-ladder", f"not strictly ascending: {chunks}")
+        for c in chunks:
+            if c == 0 or manifest["prefill_seq"] % c:
+                fail(name, "chunk-ladder",
+                     "chunk {} does not divide prefill_seq {}".format(
+                         c, manifest["prefill_seq"]))
+
+    # Decode grid completeness + per-artifact shape/dtype invariants.
+    for cfg_name, tiers in manifest["decode_tiers"].items():
+        c = manifest["configs"][cfg_name]
+        quants = manifest["kv_quant"].get(cfg_name, ["fp32"])
+        for b in manifest["decode_batches"]:
+            for n in tiers:
+                for q in quants:
+                    suffix = "" if q == "fp32" else f"_{q}"
+                    aname = f"decode_{cfg_name}_b{b}_n{n}{suffix}"
+                    art = arts.get(aname)
+                    if art is None:
+                        fail(aname, "grid-missing",
+                             f"cell (b={b}, n={n}, {q}) has no artifact")
+                    payload = "int8" if q == "q8" else "float32"
+                    for plane, width in (("k_cache", c["k_cache_dims"]),
+                                         ("v_cache", c["v_cache_dims"])):
+                        got = _input_spec(art, plane)
+                        want = (payload, [c["n_layers"], b, n, width])
+                        if got != want:
+                            fail(aname, "artifact-geometry",
+                                 f"{plane}: {got} != {want}")
+                    for scale in ("k_scale", "v_scale"):
+                        got = _input_spec(art, scale)
+                        if q == "q8":
+                            want = ("float32", [c["n_layers"], b, n])
+                            if got != want:
+                                fail(aname, "artifact-geometry",
+                                     f"{scale}: {got} != {want} (q8 arenas "
+                                     "carry one fp32 scale per row)")
+                        elif got is not None:
+                            fail(aname, "artifact-geometry",
+                                 f"fp32 artifact carries a {scale} plane")
+                    for vec in ("tokens", "pos"):
+                        got = _input_spec(art, vec)
+                        if got != ("int32", [b]):
+                            fail(aname, "artifact-geometry",
+                                 "{}: {} != ('int32', [{}])".format(
+                                     vec, got, b))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out-dir", default=os.path.join(
@@ -286,45 +455,8 @@ def main():
             f.write(text)
         n_built += 1
 
-    configs_out = {}
-    for name_ in sorted({a["config"] for a in artifacts}):
-        cfg = REGISTRY[name_]
-        cd = config_dict(cfg)
-        cd["params"] = [
-            {"name": s.name, "shape": list(s.shape), "init": s.init,
-             "std": s.std, "wd": s.wd, "qk": s.qk}
-            for s in M.param_specs(cfg)]
-        b, s = train_geometry(cfg)
-        cd["train_batch"], cd["train_seq"] = b, s
-        configs_out[name_] = cd
-
-    manifest = {
-        "version": 1,
-        "adam": {"b1": M.ADAM_B1, "b2": M.ADAM_B2, "eps": M.ADAM_EPS,
-                 "weight_decay": M.WEIGHT_DECAY},
-        "decode_batches": list(DECODE_BATCHES),
-        "decode_tiers": {
-            name: decode_tiers(REGISTRY[name].max_seq)
-            for name in sorted({a["config"] for a in artifacts
-                                if a["kind"] == "decode"})},
-        "prefill_seq": PREFILL_SEQ,
-        "prefill_chunks": {
-            name: list(PREFILL_CHUNKS)
-            for name in sorted({a["config"] for a in artifacts
-                                if a["kind"] == "prefill"
-                                and "c" in a["geom"]})},
-        # KV-cache quantization axis: serving config -> exported quant
-        # modes. Manifests without this key are pre-quantization — the
-        # rust Manifest::kv_quants_for falls back to ["fp32"] and the
-        # engine refuses --kv-quant q8 rather than inventing names.
-        "kv_quant": {
-            name: list(KV_QUANTS)
-            for name in sorted({a["config"] for a in artifacts
-                                if a["kind"] == "decode"
-                                and a["geom"].get("quant") == "q8"})},
-        "configs": configs_out,
-        "artifacts": artifacts,
-    }
+    manifest = build_manifest(artifacts)
+    validate_manifest(manifest)
     with open(manifest_path, "w") as f:
         json.dump(manifest, f, indent=1)
 

@@ -285,3 +285,95 @@ def test_hlo_text_is_parseable_header():
             assert head.startswith("HloModule"), fn
             count += 1
     assert count > 80
+
+
+# --- export-time manifest validation (ISSUE 6) ---------------------------
+
+import copy
+
+from compile.aot import SCHEMA_VERSION, build_manifest, validate_manifest
+
+
+@pytest.fixture(scope="module")
+def fresh_manifest():
+    """A real manifest built from the full artifact plan — spec construction
+    only, no HLO lowering, so this is fast enough to run per test module."""
+    artifacts = []
+    for name, kind, cfg, geom in artifact_plan():
+        _, specs, in_names, out_names = build_entry(kind, cfg, geom)
+        artifacts.append({
+            "name": name, "file": f"{name}.hlo.txt", "kind": kind,
+            "config": cfg.name, "geom": dict(geom), "hash": "",
+            "inputs": [[n_, str(s.dtype), list(s.shape)]
+                       for n_, s in zip(in_names, specs)],
+            "n_params": len(M.param_specs(cfg)),
+            "outputs": out_names,
+        })
+    return build_manifest(artifacts)
+
+
+def test_fresh_manifest_is_stamped_and_validates(fresh_manifest):
+    assert fresh_manifest["schema_version"] == SCHEMA_VERSION == 2
+    validate_manifest(fresh_manifest)  # must not raise
+
+
+def test_validate_rejects_missing_schema_version(fresh_manifest):
+    man = copy.deepcopy(fresh_manifest)
+    del man["schema_version"]
+    with pytest.raises(ValueError, match="schema-version"):
+        validate_manifest(man)
+
+
+def test_validate_rejects_missing_tier_artifact(fresh_manifest):
+    man = copy.deepcopy(fresh_manifest)
+    victim = "decode_servethin_b2_n64_q8"
+    man["artifacts"] = [a for a in man["artifacts"] if a["name"] != victim]
+    with pytest.raises(ValueError, match="grid-missing"):
+        validate_manifest(man)
+
+
+def test_validate_rejects_mismatched_k_cache_dims(fresh_manifest):
+    man = copy.deepcopy(fresh_manifest)
+    man["configs"]["servethin"]["k_cache_dims"] += 1
+    with pytest.raises(ValueError, match="config-algebra"):
+        validate_manifest(man)
+
+
+def test_validate_rejects_q8_without_scale_plane(fresh_manifest):
+    man = copy.deepcopy(fresh_manifest)
+    for a in man["artifacts"]:
+        if a["name"] == "decode_servethin_b1_n32_q8":
+            a["inputs"] = [i for i in a["inputs"] if i[0] != "k_scale"]
+            break
+    else:
+        pytest.fail("q8 decode artifact missing from the plan")
+    with pytest.raises(ValueError, match="k_scale"):
+        validate_manifest(man)
+
+
+def test_validate_rejects_non_pow2_tier(fresh_manifest):
+    man = copy.deepcopy(fresh_manifest)
+    tiers = man["decode_tiers"]["servethin"]
+    man["decode_tiers"]["servethin"] = [48] + tiers[1:]
+    with pytest.raises(ValueError, match="tier-ladder"):
+        validate_manifest(man)
+
+
+def test_validate_rejects_non_dividing_chunk(fresh_manifest):
+    man = copy.deepcopy(fresh_manifest)
+    man["prefill_chunks"]["servethin"] = [24]
+    with pytest.raises(ValueError, match="chunk-ladder"):
+        validate_manifest(man)
+
+
+def test_exported_manifest_validates():
+    """The manifest on disk (if present and stamped) passes the same
+    validation `thinkeys check` applies — guards the CI artifact cache."""
+    path = os.path.join(ART_DIR, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not exported")
+    with open(path) as f:
+        man = json.load(f)
+    if man.get("schema_version", 1) < SCHEMA_VERSION:
+        pytest.skip("pre-schema-stamp manifest — re-run `make artifacts`")
+    validate_manifest(man)

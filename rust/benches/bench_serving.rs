@@ -11,9 +11,57 @@ use thinkeys::datagen::arrival::closed_loop;
 use thinkeys::experiments::serving;
 use thinkeys::runtime::{ParamStore, Runtime};
 use thinkeys::bench::Table;
+use thinkeys::substrate::json::{arr, num, obj, s, Value};
+
+/// Append this run's per-config serving numbers to `BENCH_serving.json`
+/// at the repo root — the perf trajectory across PRs (ROADMAP open item).
+/// Each run entry records throughput, TTFT p50/p99, and the arena gauges
+/// per serving config; the file accumulates so a regression shows up as a
+/// kink in the series rather than a silent drift.
+fn record_trajectory(rows: Vec<Value>) {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("benches live under rust/")
+        .join("BENCH_serving.json");
+    let mut runs: Vec<Value> = match std::fs::read_to_string(&path) {
+        Ok(text) => match Value::parse(&text) {
+            Ok(v) => v
+                .opt("runs")
+                .and_then(|r| r.as_arr().ok().map(|a| a.to_vec()))
+                .unwrap_or_default(),
+            Err(e) => {
+                eprintln!(
+                    "BENCH_serving.json unreadable ({e}); restarting \
+                     the series");
+                Vec::new()
+            }
+        },
+        Err(_) => Vec::new(),
+    };
+    let unix_time = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    runs.push(obj(vec![
+        ("unix_time", num(unix_time as f64)),
+        ("configs", arr(rows)),
+    ]));
+    let doc = obj(vec![
+        ("bench", s("serving")),
+        ("runs", arr(runs)),
+    ]);
+    let mut text = doc.to_string();
+    text.push('\n');
+    if let Err(e) = std::fs::write(&path, text) {
+        eprintln!("cannot write {path:?}: {e}");
+    } else {
+        println!("\nperf trajectory appended to {}", path.display());
+    }
+}
 
 fn main() {
     let rt = Runtime::new().expect("make artifacts first");
+    let mut trajectory: Vec<Value> = Vec::new();
     let mut t = Table::new(
         "Closed-loop serving under a fixed 2 MB KV budget",
         &["config", "tok/s", "concurrent capacity (tokens)", "occupancy",
@@ -51,8 +99,20 @@ fn main() {
         ]);
         assert_eq!(m.sync_download_bytes, 0,
                    "full-arena download regression in {cfg_name}");
+        trajectory.push(obj(vec![
+            ("config", s(cfg_name)),
+            ("gen_tok_per_s", num(report.gen_tokens_per_sec())),
+            ("ttft_p50_us", num(report.ttft.quantile_us(0.5))),
+            ("ttft_p99_us", num(report.ttft.quantile_us(0.99))),
+            ("arena_bytes", num(m.arena_bytes as f64)),
+            ("arena_k_bytes", num(m.arena_k_bytes as f64)),
+            ("row_sync_bytes_per_step", num(m.row_sync_bytes_per_step())),
+            ("capacity_tokens", num(capacity as f64)),
+            ("occupancy", num(m.mean_occupancy())),
+        ]));
     }
     t.print();
+    record_trajectory(trajectory);
     // before/after the context-tiered artifact grid at short contexts —
     // the Eq. 10 bytes-per-step win made visible
     serving::tiered_decode_table(&rt, &thinkeys::experiments::Opts::quick())

@@ -1,0 +1,853 @@
+//! Static grid auditor (`thinkeys check`, layer 1 of ISSUE 6).
+//!
+//! Proves — without executing a single artifact — that the five-axis
+//! artifact grid (config × batch-bucket × context-tier × prefill-chunk ×
+//! kv_quant) is closed under the scheduler's state machines and that the
+//! shape/dtype algebra holds everywhere. Every bug class the serving
+//! stack has shipped fixes for (PR 1's lane misalignment, PR 2's stale
+//! literal shapes, PR 4's dtype mismatches) was a *consistency* violation
+//! that only surfaced as corrupted logits at runtime; these rules catch
+//! the same classes at manifest-load time.
+//!
+//! Rules (each [`Violation`] names the rule and the offending artifact):
+//!
+//! - `schema-version`   — manifest stamped with the grid schema this
+//!   checker understands ([`GRID_SCHEMA_VERSION`]).
+//! - `config-algebra`   — `k_cache_dims == n_kv_heads·d_qk_head` (MLA:
+//!   `d_c + d_r`), `kv_budget == k + v`, GQA group integral,
+//!   `d_select % n_heads == 0`.
+//! - `tier-ladder`      — tiers strictly ascending, non-final tiers
+//!   power-of-two, last tier == max_seq.
+//! - `chunk-ladder`     — chunks strictly ascending, each divides
+//!   prefill_seq evenly (chunked prefill fills the prefill_seq arena).
+//! - `grid-missing`     — every (bucket, tier, quant) decode cell, the
+//!   b=8 Pallas column, both monolithic prefill impls, and every
+//!   (chunk, quant) cell resolve to an artifact.
+//! - `artifact-geometry`— recorded input shapes/dtypes match the cache
+//!   contract (int8 arenas + one fp32 scale per (layer, lane, position)
+//!   row under q8; scale-free fp32; chunk/prefill token windows).
+//! - `variant-geometry` — q8/fp32 and ref/Pallas variants of the same
+//!   logical artifact agree on payload geometry; the serve family shares
+//!   quant/chunk/tier axes; monolithic prefill stays fp32-only.
+//! - `reachability`     — the closure of the *live* hysteresis state
+//!   machines ([`lanes::target_bucket`], [`lanes::target_tier`]) never
+//!   reaches a (bucket, tier) cell the manifest lacks. The checker calls
+//!   the scheduler's own transition functions, so the model matches the
+//!   engine by construction.
+//! - `file-missing`     — ([`check_files`]) every manifest entry's HLO
+//!   file exists on disk.
+
+use std::collections::BTreeSet;
+use std::fmt;
+
+use crate::coordinator::lanes;
+use crate::runtime::manifest::{
+    ArtifactEntry, ConfigEntry, InputSpec, KvQuant, Manifest,
+};
+
+/// The manifest grid schema this checker understands. aot.py stamps the
+/// same constant (`SCHEMA_VERSION`); manifests exported before ISSUE 6
+/// carry no stamp and load as version 1.
+pub const GRID_SCHEMA_VERSION: usize = 2;
+
+/// One violated rule, anchored to the artifact (or config) it names.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub artifact: String,
+    pub detail: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}: {}", self.rule, self.artifact, self.detail)
+    }
+}
+
+fn fail(out: &mut Vec<Violation>, rule: &'static str, artifact: &str,
+        detail: String) {
+    out.push(Violation { rule, artifact: artifact.to_string(), detail });
+}
+
+/// Serving configs = the configs the decode grid was exported for.
+fn serve_configs(m: &Manifest) -> Vec<&ConfigEntry> {
+    m.decode_tiers
+        .keys()
+        .filter_map(|name| m.configs.get(name))
+        .collect()
+}
+
+fn input<'a>(a: &'a ArtifactEntry, name: &str) -> Option<&'a InputSpec> {
+    a.inputs.iter().find(|i| i.name == name)
+}
+
+fn expect_input(a: &ArtifactEntry, name: &str, dtype: &str, shape: &[usize],
+                out: &mut Vec<Violation>) {
+    match input(a, name) {
+        None => fail(out, "artifact-geometry", &a.name,
+                     format!("missing input {name:?}")),
+        Some(i) => {
+            if i.dtype != dtype {
+                fail(out, "artifact-geometry", &a.name,
+                     format!("input {name:?} dtype {} != {dtype}", i.dtype));
+            }
+            if i.shape != shape {
+                fail(out, "artifact-geometry", &a.name,
+                     format!("input {name:?} shape {:?} != {shape:?}",
+                             i.shape));
+            }
+        }
+    }
+}
+
+fn forbid_input(a: &ArtifactEntry, name: &str, out: &mut Vec<Violation>) {
+    if input(a, name).is_some() {
+        fail(out, "artifact-geometry", &a.name,
+             format!("fp32 artifact carries quant input {name:?}"));
+    }
+}
+
+fn expect_output_tail(a: &ArtifactEntry, tail: &[&str],
+                      out: &mut Vec<Violation>) {
+    let got: Vec<&str> = a.outputs.iter().map(String::as_str).collect();
+    if got.len() < tail.len() || &got[got.len() - tail.len()..] != tail {
+        fail(out, "artifact-geometry", &a.name,
+             format!("outputs {:?} do not end in {tail:?}", a.outputs));
+    }
+}
+
+// --- rule: schema-version ---
+
+fn check_schema(m: &Manifest, out: &mut Vec<Violation>) {
+    if m.schema_version < GRID_SCHEMA_VERSION {
+        fail(out, "schema-version", "manifest.json",
+             format!("schema_version {} < {GRID_SCHEMA_VERSION} — legacy \
+                      manifest, re-run `make artifacts`",
+                     m.schema_version));
+    } else if m.schema_version > GRID_SCHEMA_VERSION {
+        fail(out, "schema-version", "manifest.json",
+             format!("schema_version {} > {GRID_SCHEMA_VERSION} — manifest \
+                      newer than this checker",
+                     m.schema_version));
+    }
+}
+
+// --- rule: config-algebra ---
+
+fn check_config_algebra(c: &ConfigEntry, out: &mut Vec<Violation>) {
+    let name = &c.name;
+    if c.n_kv_heads == 0 || c.n_heads % c.n_kv_heads != 0 {
+        fail(out, "config-algebra", name,
+             format!("GQA group n_heads {} / n_kv_heads {} not integral",
+                     c.n_heads, c.n_kv_heads));
+        return; // the width algebra below would divide by zero / mislead
+    }
+    if c.n_heads == 0 || c.d_select % c.n_heads != 0 {
+        fail(out, "config-algebra", name,
+             format!("d_select {} not divisible by n_heads {}",
+                     c.d_select, c.n_heads));
+    }
+    let (want_k, want_v) = if c.attn == "mla" {
+        (c.d_c + c.d_r, 0)
+    } else {
+        (c.n_kv_heads * c.d_qk_head, c.n_kv_heads * c.d_v_head)
+    };
+    if c.k_cache_dims != want_k {
+        fail(out, "config-algebra", name,
+             format!("k_cache_dims {} != {want_k} \
+                      (attn {:?}, n_kv_heads {}, d_qk_head {})",
+                     c.k_cache_dims, c.attn, c.n_kv_heads, c.d_qk_head));
+    }
+    if c.v_cache_dims != want_v {
+        fail(out, "config-algebra", name,
+             format!("v_cache_dims {} != {want_v}", c.v_cache_dims));
+    }
+    if c.kv_budget != c.k_cache_dims + c.v_cache_dims {
+        fail(out, "config-algebra", name,
+             format!("kv_budget {} != k {} + v {}",
+                     c.kv_budget, c.k_cache_dims, c.v_cache_dims));
+    }
+}
+
+// --- rules: tier-ladder / chunk-ladder ---
+
+fn is_pow2(x: usize) -> bool {
+    x != 0 && x & (x - 1) == 0
+}
+
+fn check_ladders(m: &Manifest, out: &mut Vec<Violation>) {
+    for (name, tiers) in &m.decode_tiers {
+        let label = format!("decode_tiers[{name}]");
+        if tiers.is_empty() {
+            fail(out, "tier-ladder", &label, "empty tier ladder".into());
+            continue;
+        }
+        if !tiers.windows(2).all(|w| w[0] < w[1]) {
+            fail(out, "tier-ladder", &label,
+                 format!("tiers {tiers:?} not strictly ascending"));
+        }
+        for &t in &tiers[..tiers.len() - 1] {
+            if !is_pow2(t) {
+                fail(out, "tier-ladder", &label,
+                     format!("non-final tier {t} is not a power of two"));
+            }
+        }
+        if let Some(c) = m.configs.get(name) {
+            let last = *tiers.last().expect("ladder checked non-empty");
+            if last != c.max_seq {
+                fail(out, "tier-ladder", &label,
+                     format!("last tier {last} != max_seq {}", c.max_seq));
+            }
+        }
+    }
+    for (name, chunks) in &m.prefill_chunks {
+        let label = format!("prefill_chunks[{name}]");
+        if !chunks.windows(2).all(|w| w[0] < w[1]) {
+            fail(out, "chunk-ladder", &label,
+                 format!("chunks {chunks:?} not strictly ascending"));
+        }
+        for &c in chunks {
+            if c == 0 || m.prefill_seq % c != 0 {
+                fail(out, "chunk-ladder", &label,
+                     format!("chunk {c} does not divide prefill_seq {} \
+                              evenly",
+                             m.prefill_seq));
+            }
+        }
+    }
+}
+
+// --- rules: grid-missing + artifact-geometry ---
+
+fn check_decode_geometry(cfg: &ConfigEntry, a: &ArtifactEntry, b: usize,
+                         n: usize, q: KvQuant, out: &mut Vec<Violation>) {
+    let (l, kd, vd) = (cfg.n_layers, cfg.k_cache_dims, cfg.v_cache_dims);
+    let payload = match q {
+        KvQuant::Q8 => "int8",
+        KvQuant::Fp32 => "float32",
+    };
+    expect_input(a, "k_cache", payload, &[l, b, n, kd], out);
+    expect_input(a, "v_cache", payload, &[l, b, n, vd], out);
+    expect_input(a, "tokens", "int32", &[b], out);
+    expect_input(a, "pos", "int32", &[b], out);
+    match q {
+        KvQuant::Q8 => {
+            // one fp32 scale per (layer, lane, position) row
+            expect_input(a, "k_scale", "float32", &[l, b, n], out);
+            expect_input(a, "v_scale", "float32", &[l, b, n], out);
+            expect_output_tail(
+                a, &["k_rows", "k_row_scale", "v_rows", "v_row_scale"], out);
+        }
+        KvQuant::Fp32 => {
+            forbid_input(a, "k_scale", out);
+            forbid_input(a, "v_scale", out);
+            expect_output_tail(a, &["k_rows", "v_rows"], out);
+        }
+    }
+}
+
+fn check_chunk_geometry(m: &Manifest, cfg: &ConfigEntry, a: &ArtifactEntry,
+                        chunk: usize, q: KvQuant, out: &mut Vec<Violation>) {
+    let (l, s) = (cfg.n_layers, m.prefill_seq);
+    let (kd, vd) = (cfg.k_cache_dims, cfg.v_cache_dims);
+    let payload = match q {
+        KvQuant::Q8 => "int8",
+        KvQuant::Fp32 => "float32",
+    };
+    expect_input(a, "k_cache", payload, &[l, s, kd], out);
+    expect_input(a, "v_cache", payload, &[l, s, vd], out);
+    expect_input(a, "tokens", "int32", &[1, chunk], out);
+    expect_input(a, "start", "int32", &[], out);
+    expect_input(a, "length", "int32", &[], out);
+    match q {
+        KvQuant::Q8 => {
+            expect_input(a, "k_scale", "float32", &[l, s], out);
+            expect_input(a, "v_scale", "float32", &[l, s], out);
+            expect_output_tail(
+                a, &["k_rows", "k_row_scale", "v_rows", "v_row_scale"], out);
+        }
+        KvQuant::Fp32 => {
+            forbid_input(a, "k_scale", out);
+            forbid_input(a, "v_scale", out);
+            expect_output_tail(a, &["k_rows", "v_rows"], out);
+        }
+    }
+}
+
+fn check_prefill_geometry(m: &Manifest, a: &ArtifactEntry,
+                          out: &mut Vec<Violation>) {
+    expect_input(a, "tokens", "int32", &[1, m.prefill_seq], out);
+    expect_input(a, "length", "int32", &[], out);
+    expect_output_tail(a, &["last_logits", "k_cache", "v_cache"], out);
+}
+
+fn check_grid(m: &Manifest, out: &mut Vec<Violation>) {
+    for cfg in serve_configs(m) {
+        let name = &cfg.name;
+        let tiers = m.tiers_for(name);
+        let quants = m.kv_quants_for(name);
+        for &b in &m.decode_batches {
+            for &n in &tiers {
+                for &q in &quants {
+                    let ref_name = m.decode_name(name, b, n, false, q);
+                    match m.artifacts.get(&ref_name) {
+                        None => fail(out, "grid-missing", &ref_name,
+                                     format!("decode cell (b={b}, n={n}, \
+                                              {}) has no artifact",
+                                             q.name())),
+                        Some(a) => {
+                            check_decode_geometry(cfg, a, b, n, q, out)
+                        }
+                    }
+                    if b == 8 {
+                        let pl = m.decode_name(name, b, n, true, q);
+                        match m.artifacts.get(&pl) {
+                            None => fail(out, "grid-missing", &pl,
+                                         format!("Pallas decode column \
+                                                  (b=8, n={n}, {}) has no \
+                                                  artifact",
+                                                 q.name())),
+                            Some(a) => {
+                                check_decode_geometry(cfg, a, b, n, q, out)
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for pallas in [false, true] {
+            let pf = m.prefill_name(name, pallas);
+            match m.artifacts.get(&pf) {
+                None => fail(out, "grid-missing", &pf,
+                             "monolithic prefill has no artifact".into()),
+                Some(a) => check_prefill_geometry(m, a, out),
+            }
+        }
+        for &c in &m.chunks_for(name) {
+            for &q in &quants {
+                let cn = m.prefill_chunk_name(name, c, q);
+                match m.artifacts.get(&cn) {
+                    None => fail(out, "grid-missing", &cn,
+                                 format!("chunk cell (c={c}, {}) has no \
+                                          artifact",
+                                         q.name())),
+                    Some(a) => check_chunk_geometry(m, cfg, a, c, q, out),
+                }
+            }
+        }
+    }
+}
+
+// --- rule: variant-geometry ---
+
+fn check_variants(m: &Manifest, out: &mut Vec<Violation>) {
+    let serves = serve_configs(m);
+    // the serve family shares the quant and chunk axes (the exporter
+    // stamps global KV_QUANTS / PREFILL_CHUNKS); a config that drifted
+    // would silently lose grid columns
+    if let Some(first) = serves.first() {
+        let q0 = m.kv_quants_for(&first.name);
+        let c0 = m.chunks_for(&first.name);
+        for cfg in &serves[1..] {
+            if m.kv_quants_for(&cfg.name) != q0 {
+                fail(out, "variant-geometry", &cfg.name,
+                     format!("kv_quant axis differs from {}", first.name));
+            }
+            if m.chunks_for(&cfg.name) != c0 {
+                fail(out, "variant-geometry", &cfg.name,
+                     format!("chunk ladder differs from {}", first.name));
+            }
+        }
+    }
+    // equal-max_seq serve configs must share tier ladders (the router
+    // moves sequences between configs at the same context budget)
+    for a in &serves {
+        for b in &serves {
+            if a.name < b.name && a.max_seq == b.max_seq
+                && m.tiers_for(&a.name) != m.tiers_for(&b.name)
+            {
+                fail(out, "variant-geometry", &b.name,
+                     format!("tier ladder differs from {} at equal \
+                              max_seq {}",
+                             a.name, a.max_seq));
+            }
+        }
+    }
+    for cfg in &serves {
+        let name = &cfg.name;
+        // monolithic prefill is fp32-only by design (compute-bound, §12)
+        let q8_prefill = format!("prefill_{name}_s{}_q8", m.prefill_seq);
+        if m.artifacts.contains_key(&q8_prefill) {
+            fail(out, "variant-geometry", &q8_prefill,
+                 "monolithic prefill must stay fp32-only".into());
+        }
+        for &b in &m.decode_batches {
+            for &n in &m.tiers_for(name) {
+                // q8 and fp32 agree on payload geometry
+                let f = m.artifacts.get(
+                    &m.decode_name(name, b, n, false, KvQuant::Fp32));
+                let q = m.artifacts.get(
+                    &m.decode_name(name, b, n, false, KvQuant::Q8));
+                if let (Some(f), Some(q)) = (f, q) {
+                    for arena in ["k_cache", "v_cache"] {
+                        let (fs, qs) = (input(f, arena), input(q, arena));
+                        if let (Some(fs), Some(qs)) = (fs, qs) {
+                            if fs.shape != qs.shape {
+                                fail(out, "variant-geometry", &q.name,
+                                     format!("{arena} shape {:?} != fp32 \
+                                              twin {:?}",
+                                             qs.shape, fs.shape));
+                            }
+                        }
+                    }
+                }
+                // ref and Pallas lower the identical signature
+                if b == 8 {
+                    for &quant in &m.kv_quants_for(name) {
+                        let r = m.artifacts.get(
+                            &m.decode_name(name, b, n, false, quant));
+                        let p = m.artifacts.get(
+                            &m.decode_name(name, b, n, true, quant));
+                        if let (Some(r), Some(p)) = (r, p) {
+                            for ri in &r.inputs {
+                                match input(p, &ri.name) {
+                                    Some(pi) if pi.shape == ri.shape
+                                        && pi.dtype == ri.dtype => {}
+                                    _ => fail(
+                                        out, "variant-geometry", &p.name,
+                                        format!("input {:?} differs from \
+                                                 ref twin {}",
+                                                ri.name, r.name)),
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+// --- rule: reachability ---
+
+/// Closure of [`lanes::target_bucket`] over every admissible active-set
+/// size from every reachable current bucket. Errors when the state
+/// machine steps outside the exported bucket list.
+pub fn reachable_buckets(buckets: &[usize])
+    -> Result<BTreeSet<usize>, String> {
+    let Some(&max) = buckets.iter().max() else {
+        return Err("empty bucket list".into());
+    };
+    let mut reached = BTreeSet::new();
+    let mut frontier = vec![0usize];
+    let mut visited: BTreeSet<usize> = frontier.iter().copied().collect();
+    while let Some(cur) = frontier.pop() {
+        for n in 1..=max {
+            let Some(b) = lanes::target_bucket(buckets, n, cur) else {
+                return Err(format!(
+                    "target_bucket({buckets:?}, n={n}, current={cur}) \
+                     has no bucket"));
+            };
+            if !buckets.contains(&b) {
+                return Err(format!(
+                    "target_bucket reached {b}, not an exported bucket \
+                     of {buckets:?}"));
+            }
+            reached.insert(b);
+            if visited.insert(b) {
+                frontier.push(b);
+            }
+        }
+    }
+    Ok(reached)
+}
+
+/// Closure of [`lanes::target_tier`] over every context length up to
+/// `max_seq` from every reachable current tier.
+pub fn reachable_tiers(tiers: &[usize], max_seq: usize)
+    -> Result<BTreeSet<usize>, String> {
+    if tiers.is_empty() {
+        return Err("empty tier ladder".into());
+    }
+    let mut reached = BTreeSet::new();
+    let mut frontier = vec![0usize];
+    let mut visited: BTreeSet<usize> = frontier.iter().copied().collect();
+    while let Some(cur) = frontier.pop() {
+        for need in 1..=max_seq {
+            let Some(t) = lanes::target_tier(tiers, need, cur) else {
+                return Err(format!(
+                    "target_tier({tiers:?}, need={need}, current={cur}) \
+                     has no tier — ladder does not cover max_seq \
+                     {max_seq}"));
+            };
+            if !tiers.contains(&t) {
+                return Err(format!(
+                    "target_tier reached {t}, not an exported tier of \
+                     {tiers:?}"));
+            }
+            reached.insert(t);
+            if visited.insert(t) {
+                frontier.push(t);
+            }
+        }
+    }
+    Ok(reached)
+}
+
+fn check_reachability(m: &Manifest, out: &mut Vec<Violation>) {
+    let buckets = match reachable_buckets(&m.decode_batches) {
+        Ok(b) => b,
+        Err(e) => {
+            fail(out, "reachability", "decode_batches", e);
+            return;
+        }
+    };
+    for cfg in serve_configs(m) {
+        let name = &cfg.name;
+        let tiers = match reachable_tiers(&m.tiers_for(name), cfg.max_seq) {
+            Ok(t) => t,
+            Err(e) => {
+                fail(out, "reachability",
+                     &format!("decode_tiers[{name}]"), e);
+                continue;
+            }
+        };
+        for &b in &buckets {
+            for &n in &tiers {
+                for &q in &m.kv_quants_for(name) {
+                    let an = m.decode_name(name, b, n, false, q);
+                    if !m.artifacts.contains_key(&an) {
+                        fail(out, "reachability", &an,
+                             format!("cell (b={b}, n={n}, {}) is reachable \
+                                      by the hysteresis state machines but \
+                                      has no artifact",
+                                     q.name()));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Every rule name this checker can emit, in roughly the order the rules
+/// run. Kept as data so `thinkeys check` can report coverage and docs can
+/// stay honest about what is (and is not) audited.
+pub const RULES: &[&str] = &[
+    "schema-version",
+    "config-algebra",
+    "tier-ladder",
+    "chunk-ladder",
+    "grid-missing",
+    "artifact-geometry",
+    "variant-geometry",
+    "reachability",
+    "file-missing",
+];
+
+/// Run every static rule against a loaded manifest. Empty == grid proven
+/// consistent.
+pub fn check_manifest(m: &Manifest) -> Vec<Violation> {
+    let mut out = Vec::new();
+    check_schema(m, &mut out);
+    for c in m.configs.values() {
+        check_config_algebra(c, &mut out);
+    }
+    check_ladders(m, &mut out);
+    check_grid(m, &mut out);
+    check_variants(m, &mut out);
+    check_reachability(m, &mut out);
+    out
+}
+
+/// Every manifest entry's HLO file exists on disk (separate from
+/// [`check_manifest`] so synthetic manifests can be checked file-free).
+pub fn check_files(m: &Manifest) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for a in m.artifacts.values() {
+        if !m.dir.join(&a.file).exists() {
+            fail(&mut out, "file-missing", &a.name,
+                 format!("{} not found under {:?}", a.file, m.dir));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::AdamConfig;
+    use std::collections::BTreeMap;
+    use std::path::PathBuf;
+
+    const L: usize = 2;
+    const KD: usize = 8;
+    const VD: usize = 16;
+    const MAX_SEQ: usize = 64;
+    const PREFILL: usize = 32;
+
+    fn mini_config() -> ConfigEntry {
+        ConfigEntry {
+            name: "mini".into(),
+            arch: "llama".into(),
+            attn: "gqa".into(),
+            vocab: 32,
+            d_model: 16,
+            n_layers: L,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_select: 16,
+            d_ff: 32,
+            max_seq: MAX_SEQ,
+            d_c: 0,
+            d_r: 0,
+            d_qk_head: 4,
+            d_v_head: 8,
+            k_cache_dims: KD,
+            v_cache_dims: VD,
+            kv_budget: KD + VD,
+            train_batch: 2,
+            train_seq: 16,
+            params: vec![],
+        }
+    }
+
+    fn inp(name: &str, dtype: &str, shape: Vec<usize>) -> InputSpec {
+        InputSpec { name: name.into(), dtype: dtype.into(), shape }
+    }
+
+    fn art(name: &str, kind: &str, inputs: Vec<InputSpec>,
+           outputs: &[&str]) -> ArtifactEntry {
+        ArtifactEntry {
+            name: name.into(),
+            file: format!("{name}.hlo.txt"),
+            kind: kind.into(),
+            config: "mini".into(),
+            geom: BTreeMap::new(),
+            inputs,
+            outputs: outputs.iter().map(|s| s.to_string()).collect(),
+            n_params: 0,
+        }
+    }
+
+    fn decode_art(b: usize, n: usize, q8: bool, pallas: bool)
+        -> ArtifactEntry {
+        let pd = if q8 { "int8" } else { "float32" };
+        let mut inputs = vec![inp("k_cache", pd, vec![L, b, n, KD])];
+        if q8 {
+            inputs.push(inp("k_scale", "float32", vec![L, b, n]));
+        }
+        inputs.push(inp("v_cache", pd, vec![L, b, n, VD]));
+        if q8 {
+            inputs.push(inp("v_scale", "float32", vec![L, b, n]));
+        }
+        inputs.push(inp("tokens", "int32", vec![b]));
+        inputs.push(inp("pos", "int32", vec![b]));
+        let q = if q8 { "_q8" } else { "" };
+        let p = if pallas { "_pallas" } else { "" };
+        let outs: &[&str] = if q8 {
+            &["logits", "k_cache", "k_scale", "v_cache", "v_scale",
+              "k_rows", "k_row_scale", "v_rows", "v_row_scale"]
+        } else {
+            &["logits", "k_cache", "v_cache", "k_rows", "v_rows"]
+        };
+        art(&format!("decode_mini_b{b}_n{n}{q}{p}"), "decode", inputs, outs)
+    }
+
+    fn chunk_art(c: usize, q8: bool) -> ArtifactEntry {
+        let pd = if q8 { "int8" } else { "float32" };
+        let mut inputs = vec![inp("k_cache", pd, vec![L, PREFILL, KD])];
+        if q8 {
+            inputs.push(inp("k_scale", "float32", vec![L, PREFILL]));
+        }
+        inputs.push(inp("v_cache", pd, vec![L, PREFILL, VD]));
+        if q8 {
+            inputs.push(inp("v_scale", "float32", vec![L, PREFILL]));
+        }
+        inputs.push(inp("tokens", "int32", vec![1, c]));
+        inputs.push(inp("start", "int32", vec![]));
+        inputs.push(inp("length", "int32", vec![]));
+        let q = if q8 { "_q8" } else { "" };
+        let outs: &[&str] = if q8 {
+            &["last_logits", "k_cache", "k_scale", "v_cache", "v_scale",
+              "k_rows", "k_row_scale", "v_rows", "v_row_scale"]
+        } else {
+            &["last_logits", "k_cache", "v_cache", "k_rows", "v_rows"]
+        };
+        art(&format!("prefill_mini_c{c}{q}"), "prefill", inputs, outs)
+    }
+
+    fn prefill_art(pallas: bool) -> ArtifactEntry {
+        let p = if pallas { "_pallas" } else { "" };
+        art(&format!("prefill_mini_s{PREFILL}{p}"), "prefill",
+            vec![inp("tokens", "int32", vec![1, PREFILL]),
+                 inp("length", "int32", vec![])],
+            &["last_logits", "k_cache", "v_cache"])
+    }
+
+    fn mini_manifest() -> Manifest {
+        let tiers = vec![32, MAX_SEQ];
+        let chunks = vec![8, 16];
+        let batches = vec![1, 2, 8];
+        let mut artifacts = BTreeMap::new();
+        let mut put = |a: ArtifactEntry| {
+            artifacts.insert(a.name.clone(), a);
+        };
+        for &b in &batches {
+            for &n in &tiers {
+                for q8 in [false, true] {
+                    put(decode_art(b, n, q8, false));
+                    if b == 8 {
+                        put(decode_art(b, n, q8, true));
+                    }
+                }
+            }
+        }
+        for &c in &chunks {
+            for q8 in [false, true] {
+                put(chunk_art(c, q8));
+            }
+        }
+        put(prefill_art(false));
+        put(prefill_art(true));
+        Manifest {
+            dir: PathBuf::from("/nonexistent"),
+            schema_version: GRID_SCHEMA_VERSION,
+            adam: AdamConfig {
+                b1: 0.9, b2: 0.95, eps: 1e-8, weight_decay: 0.0,
+            },
+            decode_batches: batches,
+            decode_tiers: [("mini".to_string(), tiers)].into(),
+            prefill_chunks: [("mini".to_string(), chunks)].into(),
+            kv_quant: [("mini".to_string(),
+                        vec!["fp32".to_string(), "q8".to_string()])].into(),
+            prefill_seq: PREFILL,
+            configs: [("mini".to_string(), mini_config())].into(),
+            artifacts,
+        }
+    }
+
+    fn rules(v: &[Violation]) -> BTreeSet<&'static str> {
+        v.iter().map(|x| x.rule).collect()
+    }
+
+    #[test]
+    fn clean_mini_manifest_passes() {
+        let m = mini_manifest();
+        let v = check_manifest(&m);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    /// Seeded corruption 1: a reachable decode tier cell goes missing.
+    #[test]
+    fn missing_tier_artifact_fails_grid_and_reachability() {
+        let mut m = mini_manifest();
+        m.artifacts.remove("decode_mini_b2_n64_q8");
+        let v = check_manifest(&m);
+        assert!(rules(&v).contains("grid-missing"), "{v:?}");
+        assert!(rules(&v).contains("reachability"), "{v:?}");
+        assert!(v.iter().any(|x| x.artifact == "decode_mini_b2_n64_q8"));
+    }
+
+    /// Seeded corruption 2: k_cache_dims drifts from the head algebra.
+    #[test]
+    fn mismatched_k_cache_dims_fails_config_algebra() {
+        let mut m = mini_manifest();
+        m.configs.get_mut("mini").expect("mini config").k_cache_dims += 1;
+        let v = check_manifest(&m);
+        assert!(rules(&v).contains("config-algebra"), "{v:?}");
+        assert!(v.iter().any(|x| x.artifact == "mini"
+                            && x.detail.contains("k_cache_dims")));
+    }
+
+    /// Seeded corruption 3: a q8 variant loses its scale plane.
+    #[test]
+    fn q8_missing_scale_plane_fails_geometry() {
+        let mut m = mini_manifest();
+        let a = m.artifacts.get_mut("decode_mini_b1_n32_q8")
+            .expect("q8 artifact");
+        a.inputs.retain(|i| i.name != "k_scale");
+        let v = check_manifest(&m);
+        assert!(v.iter().any(|x| x.rule == "artifact-geometry"
+                            && x.artifact == "decode_mini_b1_n32_q8"
+                            && x.detail.contains("k_scale")),
+                "{v:?}");
+    }
+
+    #[test]
+    fn non_pow2_tier_fails_ladder() {
+        let mut m = mini_manifest();
+        m.decode_tiers.insert("mini".into(), vec![48, MAX_SEQ]);
+        let v = check_manifest(&m);
+        assert!(v.iter().any(|x| x.rule == "tier-ladder"
+                            && x.detail.contains("48")),
+                "{v:?}");
+    }
+
+    #[test]
+    fn non_dividing_chunk_fails_ladder() {
+        let mut m = mini_manifest();
+        m.prefill_chunks.insert("mini".into(), vec![24]);
+        let v = check_manifest(&m);
+        assert!(v.iter().any(|x| x.rule == "chunk-ladder"
+                            && x.detail.contains("24")),
+                "{v:?}");
+    }
+
+    #[test]
+    fn legacy_schema_fails_schema_version() {
+        let mut m = mini_manifest();
+        m.schema_version = 1;
+        let v = check_manifest(&m);
+        assert!(v.iter().any(|x| x.rule == "schema-version"
+                            && x.detail.contains("legacy")),
+                "{v:?}");
+    }
+
+    #[test]
+    fn tier_ladder_not_covering_max_seq_fails_reachability() {
+        let mut m = mini_manifest();
+        // drop the max_seq tier: lengths past 32 have no arena
+        m.decode_tiers.insert("mini".into(), vec![32]);
+        let v = check_manifest(&m);
+        assert!(rules(&v).contains("tier-ladder"), "{v:?}");
+        assert!(rules(&v).contains("reachability"), "{v:?}");
+    }
+
+    #[test]
+    fn check_files_flags_absent_hlo() {
+        let m = mini_manifest();
+        let v = check_files(&m);
+        assert!(!v.is_empty());
+        assert!(v.iter().all(|x| x.rule == "file-missing"));
+    }
+
+    #[test]
+    fn reachable_sets_cover_exported_axes() {
+        assert_eq!(
+            reachable_buckets(&[1, 2, 8]).expect("buckets reachable"),
+            BTreeSet::from([1, 2, 8]));
+        assert_eq!(
+            reachable_tiers(&[32, 64], 64).expect("tiers reachable"),
+            BTreeSet::from([32, 64]));
+        assert!(reachable_tiers(&[32], 64).is_err());
+        assert!(reachable_buckets(&[]).is_err());
+    }
+
+    /// The real grid, when present and stamped, is proven consistent —
+    /// the `thinkeys check` happy path.
+    #[test]
+    fn real_manifest_passes_all_rules() {
+        let dir = crate::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).expect("manifest loads");
+        if m.schema_version < GRID_SCHEMA_VERSION {
+            return; // stale pre-ISSUE-6 export on disk
+        }
+        let v = check_manifest(&m);
+        assert!(v.is_empty(), "{v:#?}");
+        let f = check_files(&m);
+        assert!(f.is_empty(), "{f:#?}");
+    }
+}

@@ -1,0 +1,27 @@
+//! Static and runtime analysis for the thin-keys serving stack.
+//!
+//! Two complementary checkers live here, both built on the idea that the
+//! artifact grid and the engine state are *algebraically constrained* — every
+//! shape, byte count, and (bucket, tier, quant) cell is derivable from the
+//! config table and the scheduler's hysteresis rules, so divergence is always
+//! a bug, never a judgment call:
+//!
+//! - [`grid`] — the **static grid auditor** behind `thinkeys check`. It
+//!   verifies a `manifest.json` without executing a single artifact: the
+//!   config algebra (`k_cache_dims == n_kv_heads * d_qk_head`, MLA joint
+//!   dims, integral GQA groups), tier/chunk ladder well-formedness, per-kind
+//!   artifact geometry (including the q8 scale-plane contract), cross-variant
+//!   agreement (q8 vs fp32, ref vs pallas), and — the load-bearing rule —
+//!   that every (bucket, tier, quant) cell *reachable* by the scheduler's
+//!   actual hysteresis state machines has an exported artifact.
+//! - [`auditor`] — the **runtime invariant auditor**. In debug builds (and
+//!   release builds with the `audit` cargo feature) the scheduler ends every
+//!   round by cross-checking the lane map, the row arenas, the engine's
+//!   committed-row mirror, and the block accounting against each other, and
+//!   asserting the steady-state contract `sync_download_bytes == 0`.
+//!
+//! The split mirrors how the checks run: `grid` at build/CI time against the
+//! cached artifact grid, `auditor` continuously inside the e2e churn suites.
+
+pub mod auditor;
+pub mod grid;

@@ -352,8 +352,19 @@ impl<'rt> Engine<'rt> {
     #[allow(dead_code)]
     fn download_arena(&mut self, lit: &xla::Literal) -> Result<Tensor> {
         let t = literal_to_tensor(lit)?;
-        self.metrics.sync_download_bytes += (t.data.len() * 4) as u64;
+        self.metrics.sync_download_bytes +=
+            (t.data.len() * std::mem::size_of::<f32>()) as u64;
         Ok(t)
+    }
+
+    /// Bytes a delta-row download moved host-side: payload elements at
+    /// the engine's quant width plus fp32 scale elements — the
+    /// dtype-aware charge for `row_sync_bytes` (no hardcoded element
+    /// sizes in the hot path; widths come from [`KvQuant`]).
+    fn delta_sync_bytes(&self, payload_elems: usize, scale_elems: usize)
+        -> u64 {
+        (payload_elems * self.quant.elem_bytes()
+         + scale_elems * std::mem::size_of::<f32>()) as u64
     }
 
     /// Prefill a queued sequence: fill its cache rows, sample the first
@@ -532,7 +543,7 @@ impl<'rt> Engine<'rt> {
                 let k_rows = literal_to_vec_f32(&outs[3])?;
                 let v_rows = literal_to_vec_f32(&outs[4])?;
                 self.metrics.row_sync_bytes +=
-                    ((k_rows.len() + v_rows.len()) * 4) as u64;
+                    self.delta_sync_bytes(k_rows.len() + v_rows.len(), 0);
                 let v_lit = outs.remove(2);
                 let k_lit = outs.remove(1);
                 let prog =
@@ -555,9 +566,9 @@ impl<'rt> Engine<'rt> {
                 let k_row_s = literal_to_vec_f32(&outs[6])?;
                 let v_rows = literal_to_vec_i8(&outs[7])?;
                 let v_row_s = literal_to_vec_f32(&outs[8])?;
-                self.metrics.row_sync_bytes += (k_rows.len() + v_rows.len()
-                    + (k_row_s.len() + v_row_s.len()) * 4)
-                    as u64;
+                self.metrics.row_sync_bytes += self.delta_sync_bytes(
+                    k_rows.len() + v_rows.len(),
+                    k_row_s.len() + v_row_s.len());
                 let v_scale_lit = outs.remove(4);
                 let v_lit = outs.remove(3);
                 let k_scale_lit = outs.remove(2);
@@ -780,7 +791,8 @@ impl<'rt> Engine<'rt> {
         let active: Vec<SeqId> = seqs.iter().map(|s| s.id).collect();
         // rows the arena must hold: the longest sequence writes row
         // len-1 this step and attends to rows 0..len
-        let need = seqs.iter().map(|s| s.len()).max().unwrap();
+        let need = seqs.iter().map(|s| s.len()).max()
+            .expect("decode_step requires a non-empty active set");
         let tier = self.target_tier(need)?;
         let in_sync = self.k_lit.is_some()
             && tier == self.tier
@@ -827,11 +839,13 @@ impl<'rt> Engine<'rt> {
         let t0 = std::time::Instant::now();
         let outs = {
             let mut args = self.param_args();
-            args.push(Arg::L(self.k_lit.as_ref().unwrap()));
+            args.push(Arg::L(self.k_lit.as_ref()
+                .expect("decode arena literal uploaded before execution")));
             if let Some(ksl) = &self.k_scale_lit {
                 args.push(Arg::L(ksl));
             }
-            args.push(Arg::L(self.v_lit.as_ref().unwrap()));
+            args.push(Arg::L(self.v_lit.as_ref()
+                .expect("decode arena literal uploaded before execution")));
             if let Some(vsl) = &self.v_scale_lit {
                 args.push(Arg::L(vsl));
             }
@@ -862,7 +876,7 @@ impl<'rt> Engine<'rt> {
                 self.v_lit = Some(outs.remove(2));
                 self.k_lit = Some(outs.remove(1));
                 self.metrics.row_sync_bytes +=
-                    ((k_rows.len() + v_rows.len()) * 4) as u64;
+                    self.delta_sync_bytes(k_rows.len() + v_rows.len(), 0);
                 for s in seqs.iter() {
                     let lane =
                         self.lanes.lane_of(s.id).expect("active seq lane");
@@ -887,9 +901,9 @@ impl<'rt> Engine<'rt> {
                 self.v_lit = Some(outs.remove(3));
                 self.k_scale_lit = Some(outs.remove(2));
                 self.k_lit = Some(outs.remove(1));
-                self.metrics.row_sync_bytes += (k_rows.len() + v_rows.len()
-                    + (k_row_s.len() + v_row_s.len()) * 4)
-                    as u64;
+                self.metrics.row_sync_bytes += self.delta_sync_bytes(
+                    k_rows.len() + v_rows.len(),
+                    k_row_s.len() + v_row_s.len());
                 for s in seqs.iter() {
                     let lane =
                         self.lanes.lane_of(s.id).expect("active seq lane");
@@ -956,6 +970,164 @@ impl<'rt> Engine<'rt> {
         let chunking: usize =
             self.chunking.values().map(|p| arena(&p.k, &p.v)).sum();
         parked + chunking
+    }
+
+    /// Sequences currently holding a decode lane, in lane order.
+    pub fn live_ids(&self) -> Vec<SeqId> {
+        self.lanes.ids().collect()
+    }
+
+    /// Every sequence with physically written cache rows, `(id, rows)`
+    /// in id order — the physical-side half of the accounting contract,
+    /// exposed for the engine auditor's cross-check against
+    /// [`crate::coordinator::kvcache::KvCacheManager`].
+    pub fn tracked_rows(&self) -> Vec<(SeqId, usize)> {
+        let mut v: Vec<(SeqId, usize)> =
+            self.rows.iter().map(|(&id, &r)| (id, r)).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Internal-consistency audit over every private cache surface
+    /// (LaneMap ↔ RowArena ↔ ArenaSizing ↔ metrics gauges). Returns one
+    /// message per violated invariant; empty == consistent. Run by the
+    /// [`crate::analysis::auditor::EngineAuditor`] after every scheduler
+    /// step in debug / `audit`-feature builds.
+    pub fn invariant_violations(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        let mut violate = |msg: String| out.push(msg);
+
+        // lane bijection (the PR 1 bug class)
+        if let Err(e) = self.lanes.check() {
+            violate(format!("LaneMap: {e}"));
+        }
+
+        // group arenas: storage shapes and tier-sized row counts
+        let (l, b, n) = (self.cfg.n_layers, self.lanes.bucket(), self.tier);
+        for (label, arena, d) in [
+            ("k_group", &self.k_group, self.cfg.k_cache_dims),
+            ("v_group", &self.v_group, self.cfg.v_cache_dims),
+        ] {
+            if let Err(e) = arena.check() {
+                violate(format!("{label}: {e}"));
+            }
+            if arena.d != d {
+                violate(format!("{label}: row width {} != manifest {d}",
+                                arena.d));
+            }
+            if arena.rows != l * b * n {
+                violate(format!(
+                    "{label}: {} rows != L·B·N = {l}·{b}·{n}", arena.rows));
+            }
+        }
+
+        // measured arena bytes == ArenaSizing prediction == gauges
+        if b > 0 {
+            let sizing = self.sizing();
+            let payload =
+                self.k_group.payload_bytes() + self.v_group.payload_bytes();
+            let scales =
+                self.k_group.scale_bytes() + self.v_group.scale_bytes();
+            if payload != sizing.arena_payload_bytes(b, n) {
+                violate(format!(
+                    "arena payload {payload} != ArenaSizing prediction {}",
+                    sizing.arena_payload_bytes(b, n)));
+            }
+            if scales != sizing.arena_scale_bytes(b, n) {
+                violate(format!(
+                    "arena scales {scales} != ArenaSizing prediction {}",
+                    sizing.arena_scale_bytes(b, n)));
+            }
+            if self.metrics.arena_bytes as usize != payload {
+                violate(format!(
+                    "arena_bytes gauge {} != measured payload {payload}",
+                    self.metrics.arena_bytes));
+            }
+            if self.metrics.arena_k_bytes as usize
+                != self.k_group.payload_bytes()
+            {
+                violate(format!(
+                    "arena_k_bytes gauge {} != measured K payload {}",
+                    self.metrics.arena_k_bytes,
+                    self.k_group.payload_bytes()));
+            }
+            if !self.rt.manifest().decode_batches.contains(&b) {
+                violate(format!("bucket {b} is not an exported bucket"));
+            }
+        }
+        if n > 0 && self.pin_tier.is_none()
+            && !self.rt.manifest().tiers_for(&self.cfg.name).contains(&n)
+        {
+            violate(format!("tier {n} is not an exported tier"));
+        }
+
+        // every grouped sequence has a row count that fits its lane
+        for id in self.lanes.ids() {
+            match self.rows.get(&id) {
+                None => violate(format!(
+                    "seq {id} holds a lane but has no row accounting")),
+                Some(&r) if r > n => violate(format!(
+                    "seq {id}: {r} rows exceed arena tier {n}")),
+                Some(_) => {}
+            }
+        }
+
+        // parked rows: accounting matches storage, storage is well-formed
+        for (&id, p) in &self.parked {
+            if self.rows.get(&id) != Some(&p.len) {
+                violate(format!(
+                    "parked seq {id}: rows {:?} != parked len {}",
+                    self.rows.get(&id), p.len));
+            }
+            for (label, arena) in [("k", &p.k), ("v", &p.v)] {
+                if let Err(e) = arena.check() {
+                    violate(format!("parked seq {id} {label}: {e}"));
+                }
+                if arena.rows != l * p.len {
+                    violate(format!(
+                        "parked seq {id} {label}: {} rows != L·len = \
+                         {l}·{}",
+                        arena.rows, p.len));
+                }
+            }
+            if self.lanes.lane_of(id).is_some() {
+                violate(format!("seq {id} is parked AND holds a lane"));
+            }
+        }
+
+        // in-flight chunked prefills: mirrors span the prefill arena
+        let s = self.rt.manifest().prefill_seq;
+        for (&id, c) in &self.chunking {
+            if self.rows.get(&id) != Some(&c.done) {
+                violate(format!(
+                    "chunking seq {id}: rows {:?} != done {}",
+                    self.rows.get(&id), c.done));
+            }
+            for (label, arena) in [("k", &c.k), ("v", &c.v)] {
+                if let Err(e) = arena.check() {
+                    violate(format!("chunking seq {id} {label}: {e}"));
+                }
+                if arena.rows != l * s {
+                    violate(format!(
+                        "chunking seq {id} {label}: {} rows != L·S = \
+                         {l}·{s}",
+                        arena.rows));
+                }
+            }
+        }
+
+        // row accounting covers only live sequences (lane, parked, or
+        // chunking) — an orphan entry is a leaked retirement
+        for (&id, _) in &self.rows {
+            if self.lanes.lane_of(id).is_none()
+                && !self.parked.contains_key(&id)
+                && !self.chunking.contains_key(&id)
+            {
+                violate(format!(
+                    "seq {id} has row accounting but no cache storage"));
+            }
+        }
+        out
     }
 }
 

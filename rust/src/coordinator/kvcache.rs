@@ -161,8 +161,12 @@ impl KvCacheManager {
         let need = self.blocks_for(n_tokens);
         let mut t = BlockTable { n_tokens, ..Default::default() };
         for _ in 0..need {
-            t.k_blocks.push(self.k_pool.free.pop().unwrap());
-            t.v_blocks.push(self.v_pool.free.pop().unwrap());
+            t.k_blocks.push(self.k_pool.free.pop()
+                .expect("pool accounting: the free-block check above \
+                         guarantees `need` free k blocks"));
+            t.v_blocks.push(self.v_pool.free.pop()
+                .expect("pool accounting: the free-block check above \
+                         guarantees `need` free v blocks"));
         }
         self.tables.insert(seq, t);
         Ok(())
@@ -183,8 +187,12 @@ impl KvCacheManager {
             bail!("KV cache full on extend of sequence {seq}");
         }
         for _ in 0..extra {
-            t.k_blocks.push(self.k_pool.free.pop().unwrap());
-            t.v_blocks.push(self.v_pool.free.pop().unwrap());
+            t.k_blocks.push(self.k_pool.free.pop()
+                .expect("pool accounting: the free-length check above \
+                         guarantees `extra` free k blocks"));
+            t.v_blocks.push(self.v_pool.free.pop()
+                .expect("pool accounting: the free-length check above \
+                         guarantees `extra` free v blocks"));
         }
         t.n_tokens = new_total;
         Ok(())
@@ -211,6 +219,13 @@ impl KvCacheManager {
     /// Physically written rows for `seq`, if it is allocated.
     pub fn rows_written(&self, seq: SeqId) -> Option<usize> {
         self.tables.get(&seq).map(|t| t.rows_written)
+    }
+
+    /// Sequences currently holding block reservations, in id order —
+    /// the logical-side half of the accounting contract the engine
+    /// auditor cross-checks against the engine's physical row map.
+    pub fn live_seqs(&self) -> Vec<SeqId> {
+        self.tables.keys().copied().collect()
     }
 
     pub fn release(&mut self, seq: SeqId) {

@@ -139,6 +139,36 @@ impl LaneMap {
         RegroupPlan { bucket, resize, keep, join, leave }
     }
 
+    /// Bijection audit, consumed by the engine auditor: `of[id] == lane`
+    /// iff `lanes[lane] == Some(id)`, and the occupied-lane count equals
+    /// the reverse map's size. A violation here is exactly the PR 1
+    /// lane-misalignment bug class.
+    pub fn check(&self) -> Result<(), String> {
+        for (lane, slot) in self.lanes.iter().enumerate() {
+            if let Some(id) = slot {
+                if self.of.get(id) != Some(&lane) {
+                    return Err(format!(
+                        "lane {lane} holds seq {id} but of[{id}] = {:?}",
+                        self.of.get(id)));
+                }
+            }
+        }
+        let occupied = self.lanes.iter().filter(|s| s.is_some()).count();
+        if occupied != self.of.len() {
+            return Err(format!(
+                "{occupied} occupied lanes vs {} mapped sequences",
+                self.of.len()));
+        }
+        for (&id, &lane) in &self.of {
+            if lane >= self.lanes.len() {
+                return Err(format!(
+                    "of[{id}] = {lane} outside bucket {}",
+                    self.lanes.len()));
+            }
+        }
+        Ok(())
+    }
+
     /// Rebuild the assignment from an applied plan.
     pub fn apply(&mut self, plan: &RegroupPlan) {
         self.lanes = vec![None; plan.bucket];
@@ -187,12 +217,15 @@ pub fn target_tier(tiers: &[usize], need: usize, current: usize) -> Option<usize
     if current == 0 || fit > current {
         return Some(fit);
     }
-    // candidate shrink target keeps one tier (~2x) of headroom above need
+    // candidate shrink target keeps one tier (~2x) of headroom above need.
+    // No tier has 2x headroom -> stay put (`current` >= `fit` here, and
+    // the old last-tier fallback could never pass the halving gate below
+    // either, so this is the same fixpoint without the unwrap).
     let roomy = tiers
         .iter()
         .copied()
         .find(|&t| t >= 2 * need)
-        .unwrap_or(*tiers.last().unwrap());
+        .unwrap_or(current);
     if roomy * 2 <= current {
         Some(roomy)
     } else {

@@ -133,6 +133,11 @@ pub struct EngineMetrics {
     /// Decode steps executed per context tier — per-tier occupancy of the
     /// artifact grid (mixed-length workloads exercise several tiers).
     pub tier_steps: BTreeMap<usize, u64>,
+    /// Scheduler steps the [`crate::analysis::auditor::EngineAuditor`]
+    /// cross-checked (debug / `audit`-feature builds; stays 0 in plain
+    /// release builds). The e2e churn suites assert this is > 0 so an
+    /// accidentally compiled-out auditor cannot pass silently.
+    pub audit_checks: u64,
 }
 
 impl EngineMetrics {

@@ -19,7 +19,7 @@ impl Sampler {
                 let mut idx: Vec<usize> = (0..logits.len()).collect();
                 if top_k > 0 && top_k < logits.len() {
                     idx.sort_unstable_by(|&a, &b| {
-                        logits[b].partial_cmp(&logits[a]).unwrap()
+                        logits[b].total_cmp(&logits[a])
                     });
                     idx.truncate(top_k);
                 }

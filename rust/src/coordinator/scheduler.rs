@@ -209,7 +209,8 @@ impl<'rt> Scheduler<'rt> {
             && !self.waiting.is_empty()
         {
             let Some(idx) = self.next_admissible() else { break };
-            let mut seq = self.waiting.remove(idx).unwrap();
+            let mut seq = self.waiting.remove(idx)
+                .expect("next_admissible returns an index into waiting");
             self.kv.allocate(seq.id, Self::reservation(&seq))?;
             self.progressed = true;
             if self.engine.prefill(&mut seq).is_err() {
@@ -370,7 +371,8 @@ impl<'rt> Scheduler<'rt> {
                 .find(|(_, s)| s.priority == class)
                 .map(|(id, _)| id)
             {
-                chosen = Some(self.prefilling.remove(&id).unwrap());
+                chosen = Some(self.prefilling.remove(&id)
+                    .expect("in-flight id taken from the prefilling map"));
                 break 'pick;
             }
             let admissible = match class {
@@ -378,7 +380,8 @@ impl<'rt> Scheduler<'rt> {
                 Priority::Batch => adm_batch,
             };
             if let Some(idx) = admissible {
-                let seq = self.waiting.remove(idx).unwrap();
+                let seq = self.waiting.remove(idx)
+                    .expect("admissibility probe indexes the waiting queue");
                 self.kv.allocate(seq.id, Self::reservation(&seq))?;
                 chosen = Some(seq);
                 break 'pick;
@@ -422,7 +425,19 @@ impl<'rt> Scheduler<'rt> {
     /// One scheduling round: prefill work (one monolithic admission, or
     /// one budgeted chunk), then one decode step over all running.
     /// Returns the number of decode tokens generated this round.
+    ///
+    /// In debug builds (and release builds with the `audit` feature) every
+    /// round ends with an [`crate::analysis::auditor`] pass that cross-checks
+    /// the lane map, the row arenas, and the block accounting against each
+    /// other, turning silent state divergence into an immediate error.
     pub fn step(&mut self) -> Result<usize> {
+        let produced = self.step_inner()?;
+        #[cfg(any(debug_assertions, feature = "audit"))]
+        crate::analysis::auditor::audit_step(&mut self.engine, &self.kv)?;
+        Ok(produced)
+    }
+
+    fn step_inner(&mut self) -> Result<usize> {
         self.progressed = false;
         match self.cfg.chunk_tokens {
             None => {
@@ -459,7 +474,8 @@ impl<'rt> Scheduler<'rt> {
             }
         }
         for id in done {
-            let seq = self.running.remove(&id).unwrap();
+            let seq = self.running.remove(&id)
+                .expect("retired id collected from the running map");
             self.free_seq(id);
             self.finished.push(seq);
         }
@@ -471,7 +487,8 @@ impl<'rt> Scheduler<'rt> {
     /// accounting is enabled; with full reservation this is rare).
     pub fn preempt_one(&mut self) -> Option<SeqId> {
         let id = *self.running.keys().next_back()?;
-        let mut seq = self.running.remove(&id).unwrap();
+        let mut seq = self.running.remove(&id)
+            .expect("preempt id taken from the running keys");
         self.free_seq(id);
         // restart from scratch on re-admission; TTFT restarts too, so
         // latency histograms measure the admission that actually served

@@ -103,7 +103,11 @@ impl Sequence {
         *self
             .generated
             .last()
-            .unwrap_or_else(|| self.prompt.last().unwrap())
+            .unwrap_or_else(|| {
+                self.prompt
+                    .last()
+                    .expect("sequences are constructed with a non-empty prompt")
+            })
     }
 
     pub fn is_finished(&self) -> bool {

@@ -24,6 +24,7 @@ pub mod runtime;
 pub mod model;
 pub mod train;
 pub mod coordinator;
+pub mod analysis;
 pub mod bench;
 pub mod proptest;
 pub mod experiments;

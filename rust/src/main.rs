@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   info                      artifact/config inventory + kernel report
+//!   check                     static grid audit: shapes, ladders, quant
+//!                             variants, scheduler reachability (no exec)
 //!   serve                     run a synthetic serving workload
 //!   train --config NAME       pretrain a config on the synthetic corpus
 //!   compress --rank-div N     factored-keys surgery on a checkpoint
@@ -20,7 +22,8 @@ use thinkeys::coordinator::scheduler::{SchedConfig, Scheduler};
 use thinkeys::datagen::arrival::{mixed_chat_doc_trace, poisson_trace,
                                  TraceConfig};
 use thinkeys::experiments::{self, Opts};
-use thinkeys::runtime::{KvQuant, ParamStore, Runtime};
+use thinkeys::analysis::grid;
+use thinkeys::runtime::{KvQuant, Manifest, ParamStore, Runtime};
 use thinkeys::substrate::args::Args;
 
 fn main() {
@@ -36,6 +39,7 @@ fn run() -> Result<()> {
     let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
     match cmd.as_str() {
         "info" => info(),
+        "check" => check(rest),
         "serve" => serve(rest),
         "train" => train(rest),
         "compress" => compress(rest),
@@ -43,8 +47,8 @@ fn run() -> Result<()> {
         _ => {
             println!(
                 "thinkeys — Thin Keys, Full Values reproduction\n\n\
-                 usage: thinkeys <info|serve|train|compress|experiments> \
-                 [flags]\n\
+                 usage: thinkeys <info|check|serve|train|compress|\
+                 experiments> [flags]\n\
                  run `thinkeys <cmd> --help` for flags"
             );
             Ok(())
@@ -70,6 +74,45 @@ fn info() -> Result<()> {
         );
     }
     Ok(())
+}
+
+fn check(argv: &[String]) -> Result<()> {
+    let p = Args::new(
+        "audit the exported artifact grid without executing anything: \
+         config algebra, tier/chunk ladders, per-artifact geometry, \
+         q8/fp32/pallas variant agreement, and scheduler reachability \
+         (every (bucket, tier, quant) cell the hysteresis state machines \
+         can visit must have an artifact)",
+    )
+    .flag_bool("skip-files",
+               "audit the manifest contract only; do not require the \
+                .hlo.txt files on disk (useful against a bare manifest)")
+    .parse(argv)?;
+    let dir = thinkeys::artifacts_dir();
+    let m = Manifest::load(&dir)?;
+    let mut violations = grid::check_manifest(&m);
+    if !p.bool("skip-files") {
+        violations.extend(grid::check_files(&m));
+    }
+    let n_rules = grid::RULES.len();
+    if violations.is_empty() {
+        println!(
+            "thinkeys check: OK — {} artifacts, {} configs, {n_rules} rules, \
+             0 violations",
+            m.artifacts.len(),
+            m.configs.len()
+        );
+        Ok(())
+    } else {
+        for v in &violations {
+            eprintln!("FAIL {v}");
+        }
+        bail!(
+            "thinkeys check: {} violation(s) across {} artifacts",
+            violations.len(),
+            m.artifacts.len()
+        )
+    }
 }
 
 fn serve(argv: &[String]) -> Result<()> {

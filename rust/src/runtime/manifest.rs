@@ -119,6 +119,12 @@ pub struct Manifest {
     /// the engine then only offers the fp32 path.
     pub kv_quant: BTreeMap<String, Vec<String>>,
     pub prefill_seq: usize,
+    /// Export-contract revision stamped by `python/compile/aot.py`
+    /// (`SCHEMA_VERSION`). Bumped whenever the artifact naming scheme or
+    /// the manifest geometry contract changes; `thinkeys check` refuses to
+    /// audit manifests older than the checker's grammar. Manifests exported
+    /// before the stamp existed default to 1.
+    pub schema_version: usize,
     pub configs: BTreeMap<String, ConfigEntry>,
     pub artifacts: BTreeMap<String, ArtifactEntry>,
 }
@@ -285,6 +291,10 @@ impl Manifest {
             prefill_chunks,
             kv_quant,
             prefill_seq,
+            schema_version: match v.opt("schema_version") {
+                Some(sv) => sv.as_usize()?,
+                None => 1,
+            },
             configs,
             artifacts,
         })

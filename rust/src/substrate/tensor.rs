@@ -378,6 +378,44 @@ impl RowArena {
         self.rows * self.quant.scale_bytes_per_row()
     }
 
+    /// Storage-shape invariant, consumed by the engine auditor: the
+    /// populated payload vector matches `rows·d` for the arena's quant
+    /// mode, the other payload is empty, and in q8 mode the scale plane
+    /// carries exactly one fp32 scale per row.
+    pub fn check(&self) -> Result<(), String> {
+        let want = self.rows * self.d;
+        match self.quant {
+            KvQuant::Fp32 => {
+                if self.f.len() != want {
+                    return Err(format!(
+                        "fp32 payload {} != rows*d {want}", self.f.len()));
+                }
+                if !self.q.is_empty() || !self.s.is_empty() {
+                    return Err(format!(
+                        "fp32 arena carries q8 storage (q {}, s {})",
+                        self.q.len(), self.s.len()));
+                }
+            }
+            KvQuant::Q8 => {
+                if self.q.len() != want {
+                    return Err(format!(
+                        "q8 payload {} != rows*d {want}", self.q.len()));
+                }
+                if self.s.len() != self.rows {
+                    return Err(format!(
+                        "q8 scale plane {} != rows {} (one fp32 scale per \
+                         row)",
+                        self.s.len(), self.rows));
+                }
+                if !self.f.is_empty() {
+                    return Err(format!(
+                        "q8 arena carries fp32 storage ({})", self.f.len()));
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Copy `n` rows from `src` starting at `src_row` into `self` at
     /// `dst_row`. Same dtype and row width required.
     pub fn copy_rows(&mut self, dst_row: usize, src: &RowArena,

@@ -1,0 +1,190 @@
+//! Property: the exported artifact grid covers everything the scheduler's
+//! hysteresis state machines can actually visit (ISSUE 6 satellite).
+//!
+//! Two layers, both seeded via `thinkeys::proptest::property`:
+//!
+//! 1. Synthetic (always runs, no artifacts): random pow2 ladders + random
+//!    grow/shrink churn through the *real* `lanes::target_bucket` /
+//!    `lanes::target_tier` functions; every state visited must be inside
+//!    the closure computed by `grid::reachable_buckets` /
+//!    `grid::reachable_tiers`. This pins the static auditor's reachability
+//!    model to the live state machines — if someone changes the hysteresis
+//!    rule without updating the checker (or vice versa), this fails.
+//! 2. Manifest-backed (needs `make artifacts`): random admission, decode
+//!    growth, bucket regroup, and retirement sequences against each
+//!    exported serving config; every (bucket, tier, kv_quant) cell the
+//!    churn reaches must resolve to an artifact in the manifest.
+
+use std::collections::BTreeSet;
+
+use thinkeys::analysis::grid;
+use thinkeys::coordinator::lanes;
+use thinkeys::proptest::property;
+use thinkeys::runtime::Manifest;
+
+/// Random ascending pow2 ladder, e.g. [32, 64, 256].
+fn random_ladder(rng: &mut thinkeys::substrate::rng::Rng) -> Vec<usize> {
+    let lo = 4 + rng.below(4); // 2^4..2^7 start
+    let len = 1 + rng.below(4);
+    let mut out = Vec::new();
+    let mut exp = lo;
+    for _ in 0..len {
+        out.push(1usize << exp);
+        exp += 1 + rng.below(2);
+    }
+    out
+}
+
+#[test]
+fn hysteresis_never_escapes_reachable_tier_closure() {
+    property("tier_closure", 300, |rng| {
+        let tiers = random_ladder(rng);
+        let max_seq = *tiers.last().expect("ladder non-empty");
+        let reach = grid::reachable_tiers(&tiers, max_seq)
+            .map_err(|e| format!("closure: {e}"))?;
+        let mut current = 0usize;
+        let mut need = 1usize;
+        for _ in 0..60 {
+            match rng.below(3) {
+                0 => need = (need + 1 + rng.below(32)).min(max_seq),
+                1 => need = need.saturating_sub(1 + rng.below(64)).max(1),
+                _ => {}
+            }
+            let next = lanes::target_tier(&tiers, need, current)
+                .ok_or_else(|| format!("no tier for need={need}"))?;
+            if !reach.contains(&next) {
+                return Err(format!(
+                    "tier {next} (need={need}, from {current}, ladder \
+                     {tiers:?}) is outside the reachable closure {reach:?}"
+                ));
+            }
+            current = next;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn regroup_never_escapes_reachable_bucket_closure() {
+    property("bucket_closure", 300, |rng| {
+        let buckets = random_ladder(rng)
+            .iter()
+            .map(|b| b >> 3) // 2..16-ish lane counts
+            .filter(|&b| b >= 1)
+            .collect::<Vec<_>>();
+        if buckets.is_empty() {
+            return Ok(());
+        }
+        let max = *buckets.last().expect("non-empty");
+        let reach = grid::reachable_buckets(&buckets)
+            .map_err(|e| format!("closure: {e}"))?;
+        let mut current = 0usize;
+        let mut n = 1usize;
+        for _ in 0..60 {
+            match rng.below(2) {
+                0 => n = (n + 1 + rng.below(4)).min(max),
+                _ => n = n.saturating_sub(1 + rng.below(4)).max(1),
+            }
+            let next = lanes::target_bucket(&buckets, n, current)
+                .ok_or_else(|| format!("no bucket for n={n}"))?;
+            if !reach.contains(&next) {
+                return Err(format!(
+                    "bucket {next} (n={n}, from {current}, ladder \
+                     {buckets:?}) is outside the closure {reach:?}"
+                ));
+            }
+            current = next;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn churn_only_visits_cells_the_manifest_exports() {
+    let m = match Manifest::load(&thinkeys::artifacts_dir()) {
+        Ok(m) => m,
+        Err(_) => {
+            eprintln!(
+                "grid_reachability: no artifact grid (run `make artifacts`); \
+                 manifest-backed property skipped"
+            );
+            return;
+        }
+    };
+    let configs: Vec<String> = m
+        .decode_tiers
+        .keys()
+        .filter(|c| m.configs.contains_key(*c))
+        .cloned()
+        .collect();
+    assert!(
+        !configs.is_empty(),
+        "manifest exports no tiered serving configs"
+    );
+    property("grid_covers_churn", 150, |rng| {
+        let name = &configs[rng.below(configs.len())];
+        let cfg = m.config(name).map_err(|e| e.to_string())?;
+        let tiers = m.tiers_for(name);
+        let buckets = m.decode_batches.clone();
+        let quants = m.kv_quants_for(name);
+        let max_batch = *buckets.last().expect("decode_batches non-empty");
+
+        // Live-set churn: admissions bump n, retirements drop it; decode
+        // steps grow the longest context, retirement of the longest
+        // sequence can shrink it. Bucket and tier follow the real
+        // hysteresis functions, exactly as Engine::regroup does.
+        let mut bucket = 0usize;
+        let mut tier = 0usize;
+        let mut n = 0usize;
+        let mut need = 0usize;
+        let mut visited: BTreeSet<(usize, usize)> = BTreeSet::new();
+        for _ in 0..80 {
+            match rng.below(4) {
+                // admit a batch of requests with fresh prompts
+                0 => {
+                    let k = 1 + rng.below(4);
+                    n = (n + k).min(max_batch);
+                    need = need.max(1 + rng.below(cfg.max_seq / 2));
+                }
+                // decode rounds: every live sequence grows one row
+                1 | 2 => {
+                    if n > 0 {
+                        need = (need + 1 + rng.below(8)).min(cfg.max_seq);
+                    }
+                }
+                // retire: drop sequences; longest context may shrink
+                _ => {
+                    let k = 1 + rng.below(4);
+                    n = n.saturating_sub(k);
+                    if n == 0 {
+                        need = 0;
+                    } else if rng.below(2) == 0 {
+                        need = 1 + rng.below(need.max(1));
+                    }
+                }
+            }
+            if n == 0 {
+                continue;
+            }
+            bucket = lanes::target_bucket(&buckets, n, bucket)
+                .ok_or_else(|| format!("no bucket fits n={n}"))?;
+            tier = lanes::target_tier(&tiers, need.max(1), tier)
+                .ok_or_else(|| format!("no tier fits need={need}"))?;
+            visited.insert((bucket, tier));
+            for &q in &quants {
+                let artifact = m.decode_name(name, bucket, tier, false, q);
+                if !m.artifacts.contains_key(&artifact) {
+                    return Err(format!(
+                        "{name}: churn reached (b={bucket}, n={tier}, \
+                         {}) but the grid has no {artifact}",
+                        q.name()
+                    ));
+                }
+            }
+        }
+        if visited.is_empty() {
+            return Err("churn never produced a live state".into());
+        }
+        Ok(())
+    });
+}

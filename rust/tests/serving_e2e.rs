@@ -1017,3 +1017,64 @@ fn admission_under_pressure() {
     assert_eq!(report.gen_tokens, 6 * 8);
     assert_eq!(router.sched.kv.stats().seqs, 0);
 }
+
+/// ISSUE 6: the runtime invariant auditor rides along every scheduler
+/// round (debug builds and `--features audit` release builds) through a
+/// full churn workload — chunked prefill, bucket regroups, retirements —
+/// and never fires. A single violation fails `step()`, so completing the
+/// workload IS the assertion; the gated counter check proves the auditor
+/// actually ran rather than being compiled out.
+#[test]
+fn auditor_active_through_churn() {
+    let rt = runtime();
+    let cfg = rt.manifest().config("servethin").unwrap().clone();
+    let chunk = rt.manifest().chunks_for("servethin").first().copied();
+    let eng = engine(&rt, "servethin", 5);
+    let kv = kv_for(&rt, "servethin", 4.0);
+    let mut sched = Scheduler::with_config(eng, kv, SchedConfig {
+        max_batch: 6,
+        round_budget: 64,
+        chunk_tokens: chunk,
+        interactive_weight: 4,
+    });
+    let mut rng = Rng::new(33);
+    // staggered submissions so the live set grows, shrinks, and regroups
+    for i in 0..10 {
+        let len = 6 + rng.below(20);
+        let p = synth_prompt(len, cfg.vocab, &mut rng);
+        sched.submit_seq(p, 4 + (i % 5), None, Priority::Interactive, None);
+        sched.step().unwrap();
+    }
+    sched.run_to_completion().unwrap();
+    assert_eq!(sched.finished.len(), 10);
+    assert_eq!(sched.kv.stats().seqs, 0, "cache not fully released");
+    let m = &sched.engine.metrics;
+    assert_eq!(m.sync_download_bytes, 0,
+               "serving must keep the KV cache device-resident");
+    #[cfg(any(debug_assertions, feature = "audit"))]
+    assert!(m.audit_checks > 0,
+            "auditor was enabled but never cross-checked a round");
+    #[cfg(not(any(debug_assertions, feature = "audit")))]
+    assert_eq!(m.audit_checks, 0,
+               "plain release builds must not pay for the audit");
+}
+
+/// The auditor must actually catch divergence, not just bless healthy
+/// state: a KV table holding committed rows for a sequence the engine
+/// does not track is the classic leak after a mis-paired release, and
+/// `analysis::auditor::audit` must name it.
+#[test]
+fn auditor_catches_leaked_kv_table() {
+    let rt = runtime();
+    let eng = engine(&rt, "servethin", 3);
+    let mut kv = kv_for(&rt, "servethin", 4.0);
+    assert!(thinkeys::analysis::auditor::audit(&eng, &kv).is_empty(),
+            "fresh engine + empty cache must audit clean");
+    // seed the corruption: a table with committed rows, unknown to the
+    // engine
+    kv.allocate(99, 32).unwrap();
+    kv.commit_rows(99, 8).unwrap();
+    let violations = thinkeys::analysis::auditor::audit(&eng, &kv);
+    assert!(violations.iter().any(|v| v.contains("no longer tracks")),
+            "auditor missed the leaked table: {violations:?}");
+}

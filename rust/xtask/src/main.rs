@@ -1,0 +1,421 @@
+//! `cargo xtask` — repo-local task runner. Std-only so it builds on a bare
+//! toolchain (no xla, no workspace) and CI can run it unconditionally.
+//!
+//! Commands:
+//!   lint [--clippy]   custom deny-rules over the serving coordinator
+//!                     (plus `cargo clippy -- -D warnings` when the main
+//!                     crate's manifest is present and --clippy is given)
+//!
+//! The lint pass encodes repo-specific invariants that clippy cannot know:
+//!
+//! - **no-unwrap-in-hot-path** — `coordinator/` is the request-serving hot
+//!   path; a stray `.unwrap()` / `panic!(` turns a recoverable scheduling
+//!   error into a process abort mid-serve. Errors must be typed
+//!   (`anyhow::Result`) or, where the invariant is locally provable,
+//!   `.expect("...")` with a message naming the invariant.
+//! - **no-hardcoded-elem-size** — byte arithmetic like `* 4` bakes in the
+//!   fp32 element size and silently breaks the q8 arena math. All element
+//!   sizing goes through `ArenaSizing` / `KvQuant::elem_bytes` /
+//!   `size_of::<f32>()`; `metrics.rs` (the `ArenaSizing` home) is the one
+//!   blessed location.
+//! - **no-lane-enumeration** — lane indices are owned by `LaneMap`
+//!   (`lanes.rs`); deriving one positionally (enumerating sequences into
+//!   lane slots, or indexing a raw lane vector) bypasses the lane-stability
+//!   contract that keeps regroups zero-copy.
+//!
+//! Rules scan comment-stripped, string-masked source and skip everything
+//! from the first `#[cfg(test)]` to end of file — tests may unwrap freely.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+#[derive(Debug, PartialEq)]
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    detail: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file, self.line, self.rule, self.detail
+        )
+    }
+}
+
+/// Replace `//` comments and string-literal *contents* with spaces, keeping
+/// line structure and byte offsets stable, so rules never trip on prose
+/// (an `.expect("never unwrap here")` message, a doc comment quoting
+/// `* 4`). Handles escapes and simple char literals; block comments are
+/// not used in this codebase (clippy's `needless_doctest_main` era style).
+fn mask_source(text: &str) -> String {
+    let b: Vec<char> = text.chars().collect();
+    let mut out: Vec<char> = Vec::with_capacity(b.len());
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        if c == '/' && i + 1 < b.len() && b[i + 1] == '/' {
+            // line comment: blank to end of line
+            while i < b.len() && b[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+        } else if c == '"' {
+            // string literal: keep the quotes, blank the contents
+            out.push('"');
+            i += 1;
+            while i < b.len() && b[i] != '"' {
+                if b[i] == '\\' && i + 1 < b.len() {
+                    // keep escaped newlines (string continuations) so
+                    // masked line numbers stay aligned with the source
+                    out.push(' ');
+                    out.push(if b[i + 1] == '\n' { '\n' } else { ' ' });
+                    i += 2;
+                    continue;
+                }
+                out.push(if b[i] == '\n' { '\n' } else { ' ' });
+                i += 1;
+            }
+            if i < b.len() {
+                out.push('"');
+                i += 1;
+            }
+        } else if c == '\'' {
+            // char literal ('x', '\n', '"') vs lifetime ('a) — a literal
+            // closes within 4 chars; lifetimes never close.
+            let close = (i + 1..b.len().min(i + 4)).find(|&j| b[j] == '\'');
+            match close {
+                Some(j) => {
+                    out.push('\'');
+                    for _ in i + 1..j {
+                        out.push(' ');
+                    }
+                    out.push('\'');
+                    i = j + 1;
+                }
+                None => {
+                    out.push(c);
+                    i += 1;
+                }
+            }
+        } else {
+            out.push(c);
+            i += 1;
+        }
+    }
+    out.into_iter().collect()
+}
+
+/// Is the `4` at byte-index `pos` of `line` a standalone literal (not part
+/// of `42`, `x4`, `4.0`, `_4`)?
+fn lone_digit(line: &[u8], pos: usize) -> bool {
+    let ok = |c: u8| !(c.is_ascii_alphanumeric() || c == b'_' || c == b'.');
+    (pos == 0 || ok(line[pos - 1]))
+        && (pos + 1 >= line.len() || ok(line[pos + 1]))
+}
+
+/// Lint one coordinator source file. `file_name` is the basename
+/// (e.g. `"engine.rs"`); per-file exemptions key off it.
+fn lint_source(file_name: &str, text: &str) -> Vec<Violation> {
+    let masked = mask_source(text);
+    // Everything from the first `#[cfg(test)]` onward is test scaffolding.
+    let scan_end = masked.find("#[cfg(test)]").unwrap_or(masked.len());
+    let mut out = Vec::new();
+
+    for (ln, line) in masked[..scan_end].lines().enumerate() {
+        let lineno = ln + 1;
+        let mut fail = |rule: &'static str, detail: String| {
+            out.push(Violation {
+                file: file_name.to_string(),
+                line: lineno,
+                rule,
+                detail,
+            });
+        };
+
+        // no-unwrap-in-hot-path
+        if line.contains(".unwrap()") {
+            fail(
+                "no-unwrap-in-hot-path",
+                "`.unwrap()` in the serving hot path — return a typed \
+                 error, or `.expect(\"<invariant>\")` if locally provable"
+                    .into(),
+            );
+        }
+        if line.contains("panic!(") {
+            fail(
+                "no-unwrap-in-hot-path",
+                "`panic!` in the serving hot path — use `anyhow::bail!`"
+                    .into(),
+            );
+        }
+
+        // no-hardcoded-elem-size: `* 4` / `4 *` byte math outside the
+        // blessed ArenaSizing home.
+        if file_name != "metrics.rs" {
+            let bytes = line.as_bytes();
+            for (i, w) in bytes.windows(3).enumerate() {
+                let hit = (w == b"* 4" && lone_digit(bytes, i + 2))
+                    || (w == b"4 *" && lone_digit(bytes, i));
+                if hit {
+                    fail(
+                        "no-hardcoded-elem-size",
+                        "hardcoded element-size arithmetic — route byte \
+                         math through ArenaSizing / KvQuant::elem_bytes / \
+                         size_of"
+                            .into(),
+                    );
+                    break;
+                }
+            }
+        }
+
+        // no-lane-enumeration: lane indices come from LaneMap only.
+        if file_name != "lanes.rs" {
+            let positional =
+                line.contains(".enumerate()") && line.contains("lane");
+            if positional || line.contains(".lanes[") {
+                fail(
+                    "no-lane-enumeration",
+                    "lane index derived positionally — lanes are owned by \
+                     LaneMap (`lane_of`, regroup plans); enumerating \
+                     sequences into lane slots breaks lane stability"
+                        .into(),
+                );
+            }
+        }
+    }
+    out
+}
+
+fn coordinator_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask lives under rust/")
+        .join("src")
+        .join("coordinator")
+}
+
+fn lint_tree() -> Result<Vec<Violation>, String> {
+    let dir = coordinator_dir();
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .map_err(|e| format!("cannot read {dir:?}: {e}"))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "rs"))
+        .collect();
+    entries.sort();
+    let mut out = Vec::new();
+    for path in entries {
+        let name = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .unwrap_or_default()
+            .to_string();
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {path:?}: {e}"))?;
+        out.extend(lint_source(&name, &text));
+    }
+    Ok(out)
+}
+
+fn run_clippy() -> Result<bool, String> {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask lives under rust/")
+        .join("Cargo.toml");
+    if !manifest.exists() {
+        println!(
+            "xtask lint: {} not tracked; clippy step skipped",
+            manifest.display()
+        );
+        return Ok(true);
+    }
+    let status = std::process::Command::new("cargo")
+        .args(["clippy", "--manifest-path"])
+        .arg(&manifest)
+        .args(["--all-targets", "--", "-D", "warnings"])
+        .status()
+        .map_err(|e| format!("cannot spawn cargo clippy: {e}"))?;
+    Ok(status.success())
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match argv.first().map(String::as_str) {
+        Some("lint") => {
+            let violations = match lint_tree() {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("xtask lint: {e}");
+                    return ExitCode::FAILURE;
+                }
+            };
+            for v in &violations {
+                eprintln!("FAIL {v}");
+            }
+            let clippy_ok = if argv.iter().any(|a| a == "--clippy") {
+                match run_clippy() {
+                    Ok(ok) => ok,
+                    Err(e) => {
+                        eprintln!("xtask lint: {e}");
+                        false
+                    }
+                }
+            } else {
+                true
+            };
+            if violations.is_empty() && clippy_ok {
+                println!("xtask lint: OK (coordinator deny rules clean)");
+                ExitCode::SUCCESS
+            } else {
+                eprintln!(
+                    "xtask lint: {} violation(s){}",
+                    violations.len(),
+                    if clippy_ok { "" } else { " + clippy failures" }
+                );
+                ExitCode::FAILURE
+            }
+        }
+        _ => {
+            println!("usage: cargo xtask lint [--clippy]");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(file: &str, src: &str) -> Vec<&'static str> {
+        lint_source(file, src).into_iter().map(|v| v.rule).collect()
+    }
+
+    // -- seeded violations: every deny rule must catch its fixture --
+
+    #[test]
+    fn seeded_unwrap_is_denied() {
+        let src = "fn hot(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        assert_eq!(rules("engine.rs", src), vec!["no-unwrap-in-hot-path"]);
+    }
+
+    #[test]
+    fn seeded_panic_is_denied() {
+        let src = "fn hot() { panic!(\"bad lane\"); }\n";
+        assert_eq!(rules("scheduler.rs", src), vec!["no-unwrap-in-hot-path"]);
+    }
+
+    #[test]
+    fn seeded_elem_size_star4_is_denied() {
+        let src = "fn bytes(rows: usize) -> usize { rows * 4 }\n";
+        assert_eq!(rules("engine.rs", src), vec!["no-hardcoded-elem-size"]);
+    }
+
+    #[test]
+    fn seeded_elem_size_4star_is_denied() {
+        let src = "fn bytes(rows: usize) -> usize { 4 * rows }\n";
+        assert_eq!(rules("kvcache.rs", src), vec!["no-hardcoded-elem-size"]);
+    }
+
+    #[test]
+    fn seeded_lane_enumeration_is_denied() {
+        let src = "fn pack(ids: &[u64]) {\n    \
+                   for (lane, id) in ids.iter().enumerate() { go(lane, id); }\n\
+                   }\n";
+        assert_eq!(rules("engine.rs", src), vec!["no-lane-enumeration"]);
+    }
+
+    #[test]
+    fn seeded_raw_lane_index_is_denied() {
+        let src = "fn peek(&self) { let x = self.lanes[0]; use_(x); }\n";
+        assert_eq!(rules("engine.rs", src), vec!["no-lane-enumeration"]);
+    }
+
+    // -- exemptions --
+
+    #[test]
+    fn metrics_rs_may_do_elem_size_math() {
+        let src = "pub fn payload(rows: usize) -> usize { rows * 4 }\n";
+        assert!(rules("metrics.rs", src).is_empty());
+    }
+
+    #[test]
+    fn lanes_rs_owns_lane_enumeration() {
+        let src = "fn scan(&self) {\n    \
+                   for (lane, s) in self.slots.iter().enumerate() { t(lane, s); }\n\
+                   }\n";
+        assert!(rules("lanes.rs", src).is_empty());
+    }
+
+    // -- false-positive guards --
+
+    #[test]
+    fn comments_and_strings_do_not_trip_rules() {
+        let src = "// a comment may say .unwrap() or * 4 freely\n\
+                   fn ok() -> &'static str { \".unwrap() * 4 panic!(\" }\n";
+        assert!(rules("engine.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unwrap_or_variants_are_allowed() {
+        let src = "fn ok(x: Option<u32>) -> u32 { x.unwrap_or(0) }\n\
+                   fn ok2(x: Option<u32>) -> u32 { x.unwrap_or_else(|| 1) }\n";
+        assert!(rules("engine.rs", src).is_empty());
+    }
+
+    #[test]
+    fn multi_digit_literals_are_not_elem_sizes() {
+        let src = "fn ok(n: usize) -> usize { n * 42 + 14 * n + n * 4096 }\n";
+        assert!(rules("engine.rs", src).is_empty());
+    }
+
+    #[test]
+    fn test_modules_are_skipped() {
+        let src = "fn ok() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n    \
+                   #[test]\n    \
+                   fn t() { Some(3u32).unwrap(); let _ = 2 * 4; }\n\
+                   }\n";
+        assert!(rules("engine.rs", src).is_empty());
+    }
+
+    #[test]
+    fn char_literal_quote_does_not_derail_masking() {
+        let src = "fn ok(c: char) -> bool { c == '\"' }\n\
+                   fn bad(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        assert_eq!(rules("engine.rs", src), vec!["no-unwrap-in-hot-path"]);
+    }
+
+    #[test]
+    fn violation_reports_file_line_and_rule() {
+        let src = "fn a() {}\nfn b(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        let v = lint_source("router.rs", src);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].line, 2);
+        assert_eq!(
+            v[0].to_string().split(": ").next().unwrap(),
+            "router.rs:2"
+        );
+    }
+
+    // -- the real tree must be clean: this IS the lint gate --
+
+    #[test]
+    fn coordinator_tree_is_clean() {
+        let violations = lint_tree().expect("coordinator sources readable");
+        assert!(
+            violations.is_empty(),
+            "coordinator lint violations:\n{}",
+            violations
+                .iter()
+                .map(|v| format!("  {v}"))
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+}
