@@ -76,6 +76,7 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
+use crate::coordinator::errors::EngineError;
 use crate::coordinator::lanes::{self, LaneMap};
 use crate::coordinator::metrics::{ArenaSizing, EngineMetrics};
 use crate::coordinator::sampling::Sampler;
@@ -117,6 +118,22 @@ struct ChunkProgress {
     /// current up to row `done`; compacted into [`Parked`] on completion.
     k: RowArena,
     v: RowArena,
+}
+
+/// Everything a decode step can mutate before its execute call (a
+/// regroup moves lanes, switches tiers, parks/unparks rows, and bumps
+/// gauges). Cloned by `Engine::step_snapshot` only while a fault plan is
+/// installed; `Engine::rollback_step` restores it wholesale, so a failed
+/// step leaves no trace in the host mirror, `LaneMap`, or row accounting
+/// (auditor-verified, see rust/tests/fault_props.rs).
+struct StepSnapshot {
+    lanes: LaneMap,
+    tier: usize,
+    k_group: RowArena,
+    v_group: RowArena,
+    parked: HashMap<SeqId, Parked>,
+    rows: HashMap<SeqId, usize>,
+    metrics: EngineMetrics,
 }
 
 pub struct Engine<'rt> {
@@ -367,21 +384,50 @@ impl<'rt> Engine<'rt> {
          + scale_elems * std::mem::size_of::<f32>()) as u64
     }
 
-    /// Prefill a queued sequence: fill its cache rows, sample the first
-    /// token. The sequence transitions to Decoding (or Finished if the
-    /// first token ends it).
-    pub fn prefill(&mut self, seq: &mut Sequence) -> Result<()> {
+    /// Per-request feasibility validation shared by both prefill paths.
+    /// Failures are SequenceLocal and carry no injected payload, so the
+    /// scheduler never retries them (the request is infeasible forever)
+    /// and reports them as rejected, not quarantined.
+    fn validate_prompt(&self, seq: &Sequence, op: &'static str)
+        -> Result<(), EngineError> {
         let s = self.max_prompt();
         let p = seq.prompt.len();
         if p > s {
-            bail!("prompt {p} exceeds prefill bucket {s}");
+            return Err(EngineError::sequence_local(
+                seq.id, op,
+                anyhow::anyhow!("prompt {p} exceeds prefill bucket {s}")));
         }
         if p + seq.max_new > self.cfg.max_seq {
-            bail!(
-                "prompt {p} + max_new {} exceeds context {}",
-                seq.max_new, self.cfg.max_seq
-            );
+            return Err(EngineError::sequence_local(
+                seq.id, op,
+                anyhow::anyhow!(
+                    "prompt {p} + max_new {} exceeds context {}",
+                    seq.max_new, self.cfg.max_seq)));
         }
+        Ok(())
+    }
+
+    /// Prefill a queued sequence: fill its cache rows, sample the first
+    /// token. The sequence transitions to Decoding (or Finished if the
+    /// first token ends it).
+    ///
+    /// Failure classification: the monolithic path mutates no engine
+    /// state before its execute call (parking and sampling are
+    /// post-execute), so a failed prefill is naturally transactional — no
+    /// rollback needed. Injected faults classify per
+    /// [`EngineError::from_runtime`], with corrupt output attributed to
+    /// this sequence (its rows are the only ones the call writes).
+    pub fn prefill(&mut self, seq: &mut Sequence)
+        -> Result<(), EngineError> {
+        self.validate_prompt(seq, "prefill")?;
+        let id = seq.id;
+        self.prefill_inner(seq)
+            .map_err(|e| EngineError::from_runtime("prefill", e, |_| Some(id)))
+    }
+
+    fn prefill_inner(&mut self, seq: &mut Sequence) -> Result<()> {
+        let s = self.max_prompt();
+        let p = seq.prompt.len();
         let mut toks = vec![0i32; s];
         toks[..p].copy_from_slice(&seq.prompt);
         let tokens = TensorI32::new(&[1, s], toks);
@@ -458,32 +504,57 @@ impl<'rt> Engine<'rt> {
     ///
     /// `rows(id)` tracks the chunked progress, so the scheduler's
     /// `commit_rows` mirror stays exact mid-prefill too.
+    ///
+    /// Transactional contract: the only pre-execute mutations are the
+    /// FIRST chunk's bookkeeping (fresh zero arenas + upload charge); a
+    /// resumed chunk mutates nothing until its execute has succeeded and
+    /// its outputs downloaded. Rollback is therefore exact and cheap —
+    /// drop a freshly inserted progress entry and restore the upload
+    /// counter — and a failed chunk leaves `rows(id)` / the host mirror
+    /// exactly at the previous chunk boundary.
     pub fn prefill_chunk(&mut self, seq: &mut Sequence, chunk: usize)
-        -> Result<bool> {
-        let s = self.max_prompt();
-        let p = seq.prompt.len();
-        if p > s {
-            bail!("prompt {p} exceeds prefill bucket {s}");
-        }
-        if p + seq.max_new > self.cfg.max_seq {
-            bail!(
-                "prompt {p} + max_new {} exceeds context {}",
-                seq.max_new, self.cfg.max_seq
-            );
-        }
+        -> Result<bool, EngineError> {
+        self.validate_prompt(seq, "prefill_chunk")?;
         if self.pallas {
             // the chunk artifacts are ref-only (aot.py exports no _pallas
             // chunk column); mixing ref chunked prefill with pallas decode
-            // would silently break the chunked==monolithic parity contract
-            bail!(
-                "chunked prefill has no pallas artifact path — serve with \
-                 --chunk-tokens 0 or without --pallas"
-            );
+            // would silently break the chunked==monolithic parity
+            // contract. A config error, not the request's fault — every
+            // sequence would fail identically, so this is Fatal.
+            return Err(EngineError::fatal(
+                "prefill_chunk",
+                anyhow::anyhow!(
+                    "chunked prefill has no pallas artifact path — serve \
+                     with --chunk-tokens 0 or without --pallas")));
         }
         let chunks = self.chunk_sizes();
         if !chunks.contains(&chunk) {
-            bail!("chunk {chunk} not exported (available: {chunks:?})");
+            return Err(EngineError::fatal(
+                "prefill_chunk",
+                anyhow::anyhow!(
+                    "chunk {chunk} not exported (available: {chunks:?})")));
         }
+        let id = seq.id;
+        let fresh = !self.chunking.contains_key(&id);
+        let upload_before = self.metrics.sync_upload_bytes;
+        match self.prefill_chunk_inner(seq, chunk) {
+            Ok(done) => Ok(done),
+            Err(e) => {
+                if fresh {
+                    self.chunking.remove(&id);
+                    self.rows.remove(&id);
+                    self.metrics.sync_upload_bytes = upload_before;
+                }
+                Err(EngineError::from_runtime("prefill_chunk", e,
+                                              |_| Some(id)))
+            }
+        }
+    }
+
+    fn prefill_chunk_inner(&mut self, seq: &mut Sequence, chunk: usize)
+        -> Result<bool> {
+        let s = self.max_prompt();
+        let p = seq.prompt.len();
         let (l, kd, vd) = (self.cfg.n_layers, self.cfg.k_cache_dims,
                            self.cfg.v_cache_dims);
         if !self.chunking.contains_key(&seq.id) {
@@ -779,15 +850,59 @@ impl<'rt> Engine<'rt> {
     /// sequences. Samples and records one token per sequence, feeding
     /// each lane from the lane map (never from enumeration order — see
     /// the lane-misalignment regression tests).
-    pub fn decode_step(&mut self, seqs: &mut [&mut Sequence]) -> Result<()> {
+    ///
+    /// Transactional contract: while a fault plan is installed, the
+    /// step-mutable bookkeeping (regroup can move lanes, switch tiers,
+    /// park/unpark rows, and bump counters before the execute call) is
+    /// snapshotted and rolled back wholesale on failure, so a failed step
+    /// never leaves the host mirror, `LaneMap`, or row accounting
+    /// divergent. The sampling RNG is consumed only AFTER a successful
+    /// execute, so a rolled-back step leaves the token stream untouched
+    /// and a retry reproduces the fault-free outputs bit-exactly.
+    ///
+    /// Failure classification ([`EngineError::from_runtime`]): injected
+    /// corrupt output attributes to the sequence whose lane the fault
+    /// hint names (SequenceLocal); injected exec/load faults are
+    /// Transient; real runtime errors are Fatal.
+    pub fn decode_step(&mut self, seqs: &mut [&mut Sequence])
+        -> Result<(), EngineError> {
         if seqs.is_empty() {
             return Ok(());
         }
         for s in seqs.iter() {
             if s.len() >= self.cfg.max_seq {
-                bail!("sequence {} exceeds context arena", s.id);
+                return Err(EngineError::sequence_local(
+                    s.id, "decode_step",
+                    anyhow::anyhow!("sequence {} exceeds context arena",
+                                    s.id)));
             }
         }
+        // Snapshot only while an injector is installed: without one, a
+        // real execute failure escalates Fatal and aborts the trace, so
+        // the per-step arena clone would be pure production overhead.
+        let ids: Vec<SeqId> = seqs.iter().map(|s| s.id).collect();
+        let snapshot = if self.rt.fault_injection_active() {
+            Some(self.step_snapshot())
+        } else {
+            None
+        };
+        match self.decode_step_inner(seqs) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                if let Some(snap) = snapshot {
+                    self.rollback_step(snap);
+                }
+                Err(EngineError::from_runtime("decode_step", e, |hint| {
+                    ids.get(hint as usize % ids.len().max(1)).copied()
+                }))
+            }
+        }
+    }
+
+    /// The fallible body of [`Engine::decode_step`]: plain anyhow
+    /// internals; rollback and classification live in the wrapper.
+    fn decode_step_inner(&mut self, seqs: &mut [&mut Sequence])
+        -> Result<()> {
         let active: Vec<SeqId> = seqs.iter().map(|s| s.id).collect();
         // rows the arena must hold: the longest sequence writes row
         // len-1 this step and attends to rows 0..len
@@ -1128,6 +1243,116 @@ impl<'rt> Engine<'rt> {
             }
         }
         out
+    }
+
+    /// Snapshot the step-mutable bookkeeping (see [`StepSnapshot`]).
+    fn step_snapshot(&self) -> StepSnapshot {
+        StepSnapshot {
+            lanes: self.lanes.clone(),
+            tier: self.tier,
+            k_group: self.k_group.clone(),
+            v_group: self.v_group.clone(),
+            parked: self.parked.clone(),
+            rows: self.rows.clone(),
+            metrics: self.metrics.clone(),
+        }
+    }
+
+    /// Restore a pre-step snapshot after a failed decode step. The
+    /// carried device literals may already reflect the rolled-back
+    /// regroup, so they are dropped: the next step detects the missing
+    /// literal and re-uploads from the restored (always-current) host
+    /// mirror. Nothing downloaded from the device survives a failed step
+    /// — a corrupt output literal can never reach the mirror.
+    fn rollback_step(&mut self, snap: StepSnapshot) {
+        self.lanes = snap.lanes;
+        self.tier = snap.tier;
+        self.k_group = snap.k_group;
+        self.v_group = snap.v_group;
+        self.parked = snap.parked;
+        self.rows = snap.rows;
+        self.metrics = snap.metrics;
+        self.k_lit = None;
+        self.k_scale_lit = None;
+        self.v_lit = None;
+        self.v_scale_lit = None;
+    }
+
+    /// Mirror the runtime's injected-fault counter into the metrics
+    /// block: the runtime owns the injector, the engine owns the report.
+    /// Called by the scheduler after every round.
+    pub fn sync_fault_metrics(&mut self) {
+        self.metrics.faults_injected = self.rt.faults_injected();
+    }
+
+    /// FNV-1a digest over every logical host cache surface — lane
+    /// assignment, tier, group mirrors, parked rows, chunked-prefill
+    /// mirrors, and row accounting. Two engines with equal fingerprints
+    /// hold byte-equal host state; the fault property tests assert a
+    /// failed step leaves the fingerprint exactly where it was.
+    pub fn state_fingerprint(&self) -> u64 {
+        struct Fnv(u64);
+        impl Fnv {
+            fn write(&mut self, bytes: &[u8]) {
+                for &b in bytes {
+                    self.0 ^= u64::from(b);
+                    self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+                }
+            }
+            fn u64(&mut self, x: u64) {
+                self.write(&x.to_le_bytes());
+            }
+            fn arena(&mut self, a: &RowArena) {
+                self.u64(a.rows as u64);
+                self.u64(a.d as u64);
+                self.u64(a.quant.elem_bytes() as u64);
+                for &x in &a.f {
+                    self.write(&x.to_bits().to_le_bytes());
+                }
+                for &x in &a.q {
+                    self.write(&[x as u8]);
+                }
+                for &x in &a.s {
+                    self.write(&x.to_bits().to_le_bytes());
+                }
+            }
+        }
+        let mut h = Fnv(0xcbf2_9ce4_8422_2325);
+        h.u64(self.tier as u64);
+        h.u64(self.lanes.bucket() as u64);
+        let mut lane_ids: Vec<SeqId> = self.lanes.ids().collect();
+        lane_ids.sort_unstable();
+        for id in lane_ids {
+            h.u64(id);
+            h.u64(self.lanes.lane_of(id).map_or(u64::MAX, |l| l as u64));
+        }
+        h.arena(&self.k_group);
+        h.arena(&self.v_group);
+        let mut parked_ids: Vec<SeqId> =
+            self.parked.keys().copied().collect();
+        parked_ids.sort_unstable();
+        for id in parked_ids {
+            let p = &self.parked[&id];
+            h.u64(id);
+            h.u64(p.len as u64);
+            h.arena(&p.k);
+            h.arena(&p.v);
+        }
+        let mut chunk_ids: Vec<SeqId> =
+            self.chunking.keys().copied().collect();
+        chunk_ids.sort_unstable();
+        for id in chunk_ids {
+            let c = &self.chunking[&id];
+            h.u64(id);
+            h.u64(c.done as u64);
+            h.arena(&c.k);
+            h.arena(&c.v);
+        }
+        for (id, r) in self.tracked_rows() {
+            h.u64(id);
+            h.u64(r as u64);
+        }
+        h.0
     }
 }
 

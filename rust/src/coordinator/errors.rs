@@ -1,0 +1,268 @@
+//! Typed engine-error taxonomy at the coordinator boundary.
+//!
+//! `Engine::prefill` / `prefill_chunk` / `decode_step` classify every
+//! failure into one of three recovery classes, so the scheduler's policy
+//! is written against *meaning* instead of string-matching anyhow chains:
+//!
+//! - **Transient** — the step failed but engine state was rolled back and
+//!   no single sequence is implicated (injected exec/artifact-load
+//!   faults). Retry with backoff; the whole batch is re-runnable.
+//! - **SequenceLocal** — one sequence is implicated (a corrupt output row
+//!   attributed to its lane, or a genuine per-request validation failure
+//!   like an over-long prompt). Retry if the fault was injected; if it
+//!   persists, quarantine that sequence (`FinishReason::Failed`) and keep
+//!   serving the rest of the batch.
+//! - **Fatal** — a real (non-injected) runtime failure. State may be
+//!   rolled back but the device is not trustworthy; escalate, never
+//!   retry-loop.
+//!
+//! `EngineError` implements `std::error::Error`, so anyhow's blanket
+//! `From` keeps every legacy `?` call site in experiments/tests/benches
+//! compiling unchanged — only the scheduler opts into typed handling.
+
+use crate::coordinator::sequence::SeqId;
+use crate::runtime::faults::{FaultKind, InjectedFault};
+
+/// A classified engine-step failure. The wrapped `anyhow::Error` retains
+/// the full context chain (including the `InjectedFault` payload when the
+/// failure was injected).
+#[derive(Debug)]
+pub enum EngineError {
+    /// Whole-step failure, state rolled back, nobody's fault: retry.
+    Transient {
+        op: &'static str,
+        source: anyhow::Error,
+    },
+    /// Attributable to one sequence: quarantine it if the fault persists.
+    SequenceLocal {
+        seq: SeqId,
+        op: &'static str,
+        source: anyhow::Error,
+    },
+    /// Real runtime failure: escalate.
+    Fatal {
+        op: &'static str,
+        source: anyhow::Error,
+    },
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::Transient { op, source } => {
+                write!(f, "transient fault in {op}: {source}")
+            }
+            EngineError::SequenceLocal { seq, op, source } => {
+                write!(f, "sequence-local fault in {op} (seq {seq}): {source}")
+            }
+            EngineError::Fatal { op, source } => {
+                write!(f, "fatal engine error in {op}: {source}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EngineError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        // anyhow::Error derefs to `dyn Error + Send + Sync + 'static`,
+        // which coerces down to `dyn Error + 'static`.
+        Some(&**self.source_ref())
+    }
+}
+
+impl EngineError {
+    pub fn transient(op: &'static str, source: anyhow::Error) -> Self {
+        EngineError::Transient { op, source }
+    }
+
+    pub fn sequence_local(
+        seq: SeqId,
+        op: &'static str,
+        source: anyhow::Error,
+    ) -> Self {
+        EngineError::SequenceLocal { seq, op, source }
+    }
+
+    pub fn fatal(op: &'static str, source: anyhow::Error) -> Self {
+        EngineError::Fatal { op, source }
+    }
+
+    /// Classify a `Runtime::execute` failure. Injected corrupt-output
+    /// faults carry a lane hint; `lane_seq` maps it to the implicated
+    /// sequence (None when the batch context offers no attribution, e.g.
+    /// an empty batch — then the fault degrades to Transient). Injected
+    /// exec/load/latency faults are Transient. Anything that does not
+    /// carry an `InjectedFault` is a REAL runtime failure: Fatal.
+    pub fn from_runtime(
+        op: &'static str,
+        source: anyhow::Error,
+        lane_seq: impl FnOnce(u64) -> Option<SeqId>,
+    ) -> Self {
+        let injected: Option<InjectedFault> =
+            source.downcast_ref::<InjectedFault>().copied();
+        match injected {
+            Some(fault) if fault.kind == FaultKind::CorruptOutput => {
+                match lane_seq(fault.lane_hint) {
+                    Some(seq) => EngineError::SequenceLocal { seq, op, source },
+                    None => EngineError::Transient { op, source },
+                }
+            }
+            Some(_) => EngineError::Transient { op, source },
+            None => EngineError::Fatal { op, source },
+        }
+    }
+
+    /// The step that failed (`"prefill"` / `"prefill_chunk"` /
+    /// `"decode_step"` / ...).
+    pub fn op(&self) -> &'static str {
+        match self {
+            EngineError::Transient { op, .. }
+            | EngineError::SequenceLocal { op, .. }
+            | EngineError::Fatal { op, .. } => op,
+        }
+    }
+
+    /// The implicated sequence, for SequenceLocal failures.
+    pub fn seq_id(&self) -> Option<SeqId> {
+        match self {
+            EngineError::SequenceLocal { seq, .. } => Some(*seq),
+            _ => None,
+        }
+    }
+
+    /// The injected fault kind, when this failure came from the
+    /// `FaultInjector` (None for genuine failures).
+    pub fn injected_kind(&self) -> Option<FaultKind> {
+        self.source_ref()
+            .downcast_ref::<InjectedFault>()
+            .map(|f| f.kind)
+    }
+
+    /// Retry policy: Transient always retries; SequenceLocal retries only
+    /// when injected (a genuine validation failure — over-long prompt —
+    /// will fail identically forever); Fatal never retries.
+    pub fn is_retryable(&self) -> bool {
+        match self {
+            EngineError::Transient { .. } => true,
+            EngineError::SequenceLocal { .. } => self.injected_kind().is_some(),
+            EngineError::Fatal { .. } => false,
+        }
+    }
+
+    fn source_ref(&self) -> &anyhow::Error {
+        match self {
+            EngineError::Transient { source, .. }
+            | EngineError::SequenceLocal { source, .. }
+            | EngineError::Fatal { source, .. } => source,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn injected(kind: FaultKind, lane_hint: u64) -> anyhow::Error {
+        anyhow::Error::new(InjectedFault { kind, lane_hint })
+            .context("injected fault in execute(decode_b8)")
+    }
+
+    #[test]
+    fn injected_exec_fault_is_transient_and_retryable() {
+        let e = EngineError::from_runtime(
+            "decode_step",
+            injected(FaultKind::ExecFailure, 3),
+            |_| Some(99),
+        );
+        assert!(matches!(e, EngineError::Transient { .. }));
+        assert!(e.is_retryable());
+        assert_eq!(e.injected_kind(), Some(FaultKind::ExecFailure));
+        assert_eq!(e.seq_id(), None);
+    }
+
+    #[test]
+    fn injected_corrupt_output_attributes_to_lane_seq() {
+        let e = EngineError::from_runtime(
+            "decode_step",
+            injected(FaultKind::CorruptOutput, 7),
+            |hint| Some(hint * 10),
+        );
+        assert_eq!(e.seq_id(), Some(70));
+        assert!(e.is_retryable(), "injected corrupt rows retry first");
+        assert_eq!(e.injected_kind(), Some(FaultKind::CorruptOutput));
+    }
+
+    #[test]
+    fn corrupt_without_attribution_degrades_to_transient() {
+        let e = EngineError::from_runtime(
+            "prefill_chunk",
+            injected(FaultKind::CorruptOutput, 7),
+            |_| None,
+        );
+        assert!(matches!(e, EngineError::Transient { .. }));
+    }
+
+    #[test]
+    fn real_errors_are_fatal_and_never_retry() {
+        let e = EngineError::from_runtime(
+            "decode_step",
+            anyhow::anyhow!("execute decode_b8: device wedged"),
+            |_| Some(1),
+        );
+        assert!(matches!(e, EngineError::Fatal { .. }));
+        assert!(!e.is_retryable());
+        assert_eq!(e.injected_kind(), None);
+    }
+
+    #[test]
+    fn genuine_sequence_local_does_not_retry() {
+        let e = EngineError::sequence_local(
+            5,
+            "prefill_chunk",
+            anyhow::anyhow!("prompt 900 exceeds max prefill 512"),
+        );
+        assert!(!e.is_retryable(), "deterministic failures must not loop");
+        assert_eq!(e.seq_id(), Some(5));
+    }
+
+    #[test]
+    fn anyhow_interop_keeps_legacy_call_sites_compiling() {
+        fn step() -> Result<(), EngineError> {
+            Err(EngineError::fatal("decode_step", anyhow::anyhow!("boom")))
+        }
+        fn legacy() -> anyhow::Result<()> {
+            step()?; // anyhow's blanket From<E: std::error::Error>
+            Ok(())
+        }
+        let err = legacy().expect_err("propagates");
+        assert!(err.to_string().contains("decode_step"));
+    }
+
+    #[test]
+    fn display_names_the_class_and_op() {
+        let e = EngineError::transient("decode_step", anyhow::anyhow!("x"));
+        assert!(e.to_string().starts_with("transient fault in decode_step"));
+        let e = EngineError::sequence_local(3, "prefill", anyhow::anyhow!("y"));
+        assert!(e.to_string().contains("seq 3"));
+    }
+
+    #[test]
+    fn source_chain_reaches_the_injected_payload() {
+        let e = EngineError::from_runtime(
+            "decode_step",
+            injected(FaultKind::ArtifactLoad, 0),
+            |_| None,
+        );
+        let mut cur: Option<&(dyn std::error::Error + 'static)> =
+            std::error::Error::source(&e);
+        let mut found = false;
+        while let Some(err) = cur {
+            if err.downcast_ref::<InjectedFault>().is_some() {
+                found = true;
+                break;
+            }
+            cur = err.source();
+        }
+        assert!(found, "InjectedFault reachable via the source chain");
+    }
+}

@@ -138,6 +138,25 @@ pub struct EngineMetrics {
     /// release builds). The e2e churn suites assert this is > 0 so an
     /// accidentally compiled-out auditor cannot pass silently.
     pub audit_checks: u64,
+    /// Faults the [`crate::runtime::FaultInjector`] injected (mirrored
+    /// from the runtime by `Engine::sync_fault_metrics`; 0 in production
+    /// where no fault plan is installed).
+    pub faults_injected: u64,
+    /// Engine-step retries the scheduler issued after retryable failures
+    /// (each paid one exponential-backoff sleep, see `retry_backoff`).
+    pub step_retries: u64,
+    /// Steps that ultimately succeeded after at least one retry — the
+    /// recovery headline next to `faults_injected`.
+    pub recovered_steps: u64,
+    /// Sequences quarantined (`FinishReason::Failed`) after a persistent
+    /// sequence-local fault exhausted its retry budget.
+    pub quarantined_seqs: u64,
+    /// Steps whose failure escalated past the retry/quarantine policy
+    /// (real runtime errors, or an exhausted whole-batch fault). The
+    /// chaos suite asserts this stays 0 under bounded fault schedules.
+    pub fatal_steps: u64,
+    /// Backoff sleeps, in microseconds, across all step retries.
+    pub retry_backoff: Histogram,
 }
 
 impl EngineMetrics {
@@ -206,6 +225,8 @@ impl EngineMetrics {
              sync:    up {} B, down {} B (full-arena), delta {:.0} B/step, \
              arena {} B (+{} B scales) [K {} B +{} B], \
              {} tier switches [{}]\n\
+             faults:  {} injected, {} retries (backoff {}), \
+             {} recovered, {} quarantined, {} fatal\n\
              decode throughput: {:.1} tok/s",
             self.prefill.summary(),
             self.prefill_tokens,
@@ -229,6 +250,12 @@ impl EngineMetrics {
             self.arena_k_scale_bytes,
             self.tier_switches,
             tiers.join(" "),
+            self.faults_injected,
+            self.step_retries,
+            self.retry_backoff.summary(),
+            self.recovered_steps,
+            self.quarantined_seqs,
+            self.fatal_steps,
             self.decode_tokens_per_sec()
         )
     }
@@ -252,6 +279,12 @@ pub struct ServeReport {
     pub ttft_batch: Histogram,
     pub e2e: Histogram,
     pub rejected: usize,
+    /// Requests quarantined mid-service (`FinishReason::Failed`): partial
+    /// work is discarded and contributes nothing to the rates above.
+    pub failed: usize,
+    /// Requests load-shed from the waiting queue (`FinishReason::Shed`)
+    /// by the router's degradation policy.
+    pub shed_requests: usize,
 }
 
 impl ServeReport {
@@ -273,13 +306,16 @@ impl ServeReport {
 
     pub fn report(&self) -> String {
         format!(
-            "{} requests in {:.2}s ({:.2} req/s, {:.1} gen tok/s, {} rejected)\n\
+            "{} requests in {:.2}s ({:.2} req/s, {:.1} gen tok/s, \
+             {} rejected, {} failed, {} shed)\n\
              TTFT: {}\nE2E:  {}",
             self.n_requests,
             self.total_s,
             self.requests_per_sec(),
             self.gen_tokens_per_sec(),
             self.rejected,
+            self.failed,
+            self.shed_requests,
             self.ttft.summary(),
             self.e2e.summary()
         )
@@ -445,6 +481,29 @@ mod tests {
         let q8_k = (gqa_thin_q8.arena_k_payload_bytes(b, n)
             + gqa_thin_q8.arena_k_scale_bytes(b, n)) as f64;
         assert!(full_k / q8_k >= 15.0, "{}", full_k / q8_k);
+    }
+
+    #[test]
+    fn report_renders_fault_recovery_counters() {
+        let mut m = EngineMetrics::default();
+        m.faults_injected = 6;
+        m.step_retries = 5;
+        m.recovered_steps = 4;
+        m.quarantined_seqs = 1;
+        m.fatal_steps = 0;
+        m.retry_backoff.record_us(200.0);
+        let s = m.report();
+        assert!(s.contains("6 injected"));
+        assert!(s.contains("5 retries"));
+        assert!(s.contains("4 recovered"));
+        assert!(s.contains("1 quarantined"));
+        assert!(s.contains("0 fatal"));
+        let r = ServeReport { n_requests: 2, total_s: 1.0, rejected: 1,
+                              failed: 3, shed_requests: 4,
+                              ..Default::default() };
+        assert!(r.report().contains("1 rejected"));
+        assert!(r.report().contains("3 failed"));
+        assert!(r.report().contains("4 shed"));
     }
 
     #[test]

@@ -8,6 +8,8 @@
 //! keys buy ~60% more concurrent users (paper §1, Table 10).
 //!
 //! Module map:
+//! - [`errors`]    — typed engine-error taxonomy (Transient / SequenceLocal
+//!                   / Fatal) for retry, quarantine, and escalation policy
 //! - [`kvcache`]   — split-pool paged block allocator + accounting
 //! - [`sequence`]  — request/sequence lifecycle state
 //! - [`sampling`]  — greedy / temperature·top-k sampling
@@ -19,6 +21,7 @@
 //! - [`roofline`]  — paper Eq. 10 + Tables 6/10 analytical models
 //! - [`capacity`]  — concurrent-user capacity planning ("60% more users")
 
+pub mod errors;
 pub mod kvcache;
 pub mod sequence;
 pub mod sampling;

@@ -1,6 +1,17 @@
 //! Router: the serving front end. Feeds arrival traces into the scheduler
 //! (open-loop with real wall-clock pacing, or closed-loop for steady-state
 //! throughput) and aggregates per-request metrics.
+//!
+//! Degradation policy ([`RouterPolicy`]): under sustained faults or KV
+//! pressure the router enforces per-class queueing deadlines over the
+//! waiting queue, shedding Batch work first (tighter deadline) so
+//! Interactive chat stays alive. Shedding only touches requests that hold
+//! no KV reservation yet — admitted work is never dropped by the router.
+//!
+//! Report classification is a pure function ([`classify_finished`]):
+//! every [`FinishReason`] maps to exactly one [`ReportBucket`], so
+//! quarantined (`Failed`) and load-shed (`Shed`) requests are counted in
+//! their own buckets instead of silently inflating completions.
 
 use std::time::Instant;
 
@@ -8,7 +19,9 @@ use anyhow::Result;
 
 use crate::coordinator::metrics::ServeReport;
 use crate::coordinator::scheduler::Scheduler;
-use crate::coordinator::sequence::{FinishReason, Priority, SeqState};
+use crate::coordinator::sequence::{
+    FinishReason, Priority, SeqState, Sequence,
+};
 use crate::datagen::arrival::RequestSpec;
 use crate::substrate::rng::Rng;
 
@@ -19,13 +32,126 @@ pub fn synth_prompt(len: usize, vocab: usize, rng: &mut Rng) -> Vec<i32> {
         .collect()
 }
 
+/// Per-class queueing deadlines + when to enforce them. Default: no
+/// deadlines (shedding disabled) — traces run exactly as before.
+#[derive(Clone, Copy, Debug)]
+pub struct RouterPolicy {
+    /// Shed a waiting Batch request once it has queued this long.
+    pub batch_deadline_s: Option<f64>,
+    /// Shed a waiting Interactive request once it has queued this long.
+    /// Sized looser than (or left `None` next to) the Batch deadline:
+    /// degradation sheds document ingestion first, chat last.
+    pub interactive_deadline_s: Option<f64>,
+    /// Enforce deadlines only while degraded (faults observed since the
+    /// last check, or KV free capacity below a quarter of total). When
+    /// false, deadlines apply unconditionally.
+    pub only_when_degraded: bool,
+}
+
+impl Default for RouterPolicy {
+    fn default() -> RouterPolicy {
+        RouterPolicy {
+            batch_deadline_s: None,
+            interactive_deadline_s: None,
+            only_when_degraded: true,
+        }
+    }
+}
+
+impl RouterPolicy {
+    fn active(&self) -> bool {
+        self.batch_deadline_s.is_some()
+            || self.interactive_deadline_s.is_some()
+    }
+}
+
+/// Which report bucket a finished request lands in. Exactly one bucket
+/// per [`FinishReason`] — see [`classify_finished`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReportBucket {
+    /// Served to completion (EOS or max_tokens): counts toward
+    /// throughput and the latency histograms.
+    Completed,
+    /// Never served (cache overflow, rejected prefill): no tokens, no
+    /// latency samples.
+    Rejected,
+    /// Quarantined mid-service after a persistent sequence-local fault:
+    /// partial work is discarded, not reported as throughput.
+    Failed,
+    /// Load-shed from the waiting queue by the degradation policy.
+    Shed,
+}
+
+/// Pure classification of a finish reason into its report bucket. Pinned
+/// by a unit test below so a future `FinishReason` variant cannot
+/// silently inflate completions (the compiler forces a bucket choice).
+pub fn classify_finished(reason: FinishReason) -> ReportBucket {
+    match reason {
+        FinishReason::Eos | FinishReason::MaxTokens => ReportBucket::Completed,
+        FinishReason::CacheOverflow | FinishReason::PrefillFailed => {
+            ReportBucket::Rejected
+        }
+        FinishReason::Failed => ReportBucket::Failed,
+        FinishReason::Shed => ReportBucket::Shed,
+    }
+}
+
+/// Bucket for a sequence in the finished list. A non-finished state here
+/// (e.g. a sequence preempted back to Queued after its quarantine was
+/// decided — a scheduler bug) is counted as Rejected rather than
+/// panicking the report or inflating completions.
+pub fn bucket_of(seq: &Sequence) -> ReportBucket {
+    match seq.state {
+        SeqState::Finished(reason) => classify_finished(reason),
+        SeqState::Queued | SeqState::Decoding => ReportBucket::Rejected,
+    }
+}
+
 pub struct Router<'rt> {
     pub sched: Scheduler<'rt>,
+    pub policy: RouterPolicy,
+    /// Fault count at the last degradation check (detects "faults are
+    /// still being injected" as a degradation signal).
+    last_faults: u64,
 }
 
 impl<'rt> Router<'rt> {
     pub fn new(sched: Scheduler<'rt>) -> Router<'rt> {
-        Router { sched }
+        Router { sched, policy: RouterPolicy::default(), last_faults: 0 }
+    }
+
+    /// Builder: attach a degradation/shedding policy.
+    pub fn with_policy(mut self, policy: RouterPolicy) -> Router<'rt> {
+        self.policy = policy;
+        self
+    }
+
+    /// Degradation signal: faults injected since the last check, or KV
+    /// free capacity below a quarter of total (sustained pressure).
+    fn degraded(&mut self) -> bool {
+        let faults = self.sched.engine.metrics.faults_injected;
+        let faulting = faults > self.last_faults;
+        self.last_faults = faults;
+        let free = self.sched.kv.free_token_capacity();
+        let pressure = free < self.sched.kv.total_token_capacity() / 4;
+        faulting || pressure
+    }
+
+    /// Apply the shedding policy to the waiting queue (open-loop traces,
+    /// between scheduler rounds). Shed sequences land in
+    /// `sched.finished` with [`FinishReason::Shed`] and are bucketed by
+    /// `collect` — no separate accounting path.
+    fn shed_pass(&mut self) {
+        if !self.policy.active() {
+            return;
+        }
+        if self.policy.only_when_degraded && !self.degraded() {
+            return;
+        }
+        self.sched.shed_overdue(
+            self.policy.batch_deadline_s,
+            self.policy.interactive_deadline_s,
+        );
     }
 
     /// Run a trace to completion. Requests are injected when their arrival
@@ -62,6 +188,7 @@ impl<'rt> Router<'rt> {
                 report.prompt_tokens += trace[next].prompt_len as u64;
                 next += 1;
             }
+            self.shed_pass();
             if self.sched.has_work() {
                 self.sched.step()?;
             } else if next < trace.len() {
@@ -80,6 +207,8 @@ impl<'rt> Router<'rt> {
     }
 
     /// Closed-loop: all requests at t=0 (steady-state throughput).
+    /// Deadlines are wall-clock queueing policy for open-loop traces;
+    /// closed-loop runs never shed.
     pub fn run_closed_loop(&mut self, trace: &[RequestSpec], seed: u64)
         -> Result<ServeReport> {
         let vocab = self.sched.engine.cfg.vocab;
@@ -99,30 +228,87 @@ impl<'rt> Router<'rt> {
 
     fn collect(&self, report: &mut ServeReport) {
         for seq in &self.sched.finished {
-            // rejected requests produced no service: they must not inflate
-            // requests_per_sec or contribute generated tokens
-            if matches!(
-                seq.state,
-                SeqState::Finished(FinishReason::CacheOverflow)
-                    | SeqState::Finished(FinishReason::PrefillFailed)
-            ) {
-                report.rejected += 1;
-                continue;
-            }
-            report.n_requests += 1;
-            report.gen_tokens += seq.generated.len() as u64;
-            if let Some(t) = seq.ttft_s() {
-                report.ttft.record_us(t * 1e6);
-                match seq.priority {
-                    Priority::Interactive => {
-                        report.ttft_interactive.record_us(t * 1e6)
+            match bucket_of(seq) {
+                // rejected/failed/shed requests produced no service: they
+                // must not inflate requests_per_sec, generated tokens, or
+                // the latency histograms
+                ReportBucket::Rejected => {
+                    report.rejected += 1;
+                }
+                ReportBucket::Failed => {
+                    report.failed += 1;
+                }
+                ReportBucket::Shed => {
+                    report.shed_requests += 1;
+                }
+                ReportBucket::Completed => {
+                    report.n_requests += 1;
+                    report.gen_tokens += seq.generated.len() as u64;
+                    if let Some(t) = seq.ttft_s() {
+                        report.ttft.record_us(t * 1e6);
+                        match seq.priority {
+                            Priority::Interactive => {
+                                report.ttft_interactive.record_us(t * 1e6)
+                            }
+                            Priority::Batch => {
+                                report.ttft_batch.record_us(t * 1e6)
+                            }
+                        }
                     }
-                    Priority::Batch => report.ttft_batch.record_us(t * 1e6),
+                    if let Some(t) = seq.e2e_s() {
+                        report.e2e.record_us(t * 1e6);
+                    }
                 }
             }
-            if let Some(t) = seq.e2e_s() {
-                report.e2e.record_us(t * 1e6);
-            }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_finish_reason_has_a_pinned_bucket() {
+        use FinishReason::*;
+        assert_eq!(classify_finished(Eos), ReportBucket::Completed);
+        assert_eq!(classify_finished(MaxTokens), ReportBucket::Completed);
+        assert_eq!(classify_finished(CacheOverflow), ReportBucket::Rejected);
+        assert_eq!(classify_finished(PrefillFailed), ReportBucket::Rejected);
+        assert_eq!(classify_finished(Failed), ReportBucket::Failed);
+        assert_eq!(classify_finished(Shed), ReportBucket::Shed);
+    }
+
+    #[test]
+    fn quarantined_sequence_buckets_as_failed_not_completed() {
+        let mut s = Sequence::new(1, vec![1, 2, 3], 8, None);
+        s.push_token(5); // partial service before the fault
+        s.finish(FinishReason::Failed);
+        assert_eq!(bucket_of(&s), ReportBucket::Failed);
+    }
+
+    #[test]
+    fn shed_sequence_buckets_as_shed() {
+        let mut s = Sequence::new(2, vec![1], 4, None);
+        s.finish(FinishReason::Shed);
+        assert_eq!(bucket_of(&s), ReportBucket::Shed);
+    }
+
+    #[test]
+    fn preempted_after_quarantine_decision_counts_rejected() {
+        // a sequence that somehow lands in `finished` while back in
+        // Queued (preempt raced the quarantine) must not count as served
+        let mut s = Sequence::new(3, vec![1, 2], 4, None);
+        s.push_token(9);
+        s.reset_for_restart();
+        assert_eq!(s.state, SeqState::Queued);
+        assert_eq!(bucket_of(&s), ReportBucket::Rejected);
+    }
+
+    #[test]
+    fn default_policy_is_inert() {
+        let p = RouterPolicy::default();
+        assert!(!p.active());
+        assert!(p.only_when_degraded);
     }
 }

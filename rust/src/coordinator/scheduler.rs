@@ -45,6 +45,7 @@ use std::collections::{BTreeMap, VecDeque};
 use anyhow::{bail, Result};
 
 use crate::coordinator::engine::Engine;
+use crate::coordinator::errors::EngineError;
 use crate::coordinator::kvcache::{KvCacheManager, SeqId};
 use crate::coordinator::sequence::{FinishReason, Priority, Sequence};
 
@@ -68,6 +69,15 @@ pub struct SchedConfig {
     /// while Batch work is pending, grant one Batch chunk (anti-
     /// starvation; 0 disables the boost and Batch waits indefinitely).
     pub interactive_weight: usize,
+    /// Bounded retry budget for retryable engine-step failures
+    /// (Transient, or injected SequenceLocal): a step is re-attempted up
+    /// to this many times with exponential backoff before the failure is
+    /// terminal (quarantine or escalation). Sized above the injector's
+    /// burst clamp, a transient fault schedule always recovers.
+    pub max_step_retries: usize,
+    /// Base backoff before the first retry, in microseconds; doubles per
+    /// attempt (`base << attempt`).
+    pub retry_backoff_us: u64,
 }
 
 impl Default for SchedConfig {
@@ -77,6 +87,8 @@ impl Default for SchedConfig {
             round_budget: 128,
             chunk_tokens: None,
             interactive_weight: 4,
+            max_step_retries: 4,
+            retry_backoff_us: 200,
         }
     }
 }
@@ -213,11 +225,11 @@ impl<'rt> Scheduler<'rt> {
                 .expect("next_admissible returns an index into waiting");
             self.kv.allocate(seq.id, Self::reservation(&seq))?;
             self.progressed = true;
-            if self.engine.prefill(&mut seq).is_err() {
+            if let Err(e) = self.with_retries(|eng| eng.prefill(&mut seq)) {
                 // roll the reservation back and fail the request visibly
                 // instead of leaking the blocks and dropping the sequence
                 self.free_seq(seq.id);
-                seq.finish(FinishReason::PrefillFailed);
+                seq.finish(self.prefill_failure_reason(&e));
                 self.finished.push(seq);
                 admitted += 1;
                 continue;
@@ -398,11 +410,11 @@ impl<'rt> Scheduler<'rt> {
         }
 
         let before = self.engine.rows(seq.id);
-        match self.engine.prefill_chunk(&mut seq, chunk) {
-            Err(_) => {
+        match self.with_retries(|eng| eng.prefill_chunk(&mut seq, chunk)) {
+            Err(e) => {
                 // roll back reservation + any partial arena, fail visibly
                 self.free_seq(seq.id);
-                seq.finish(FinishReason::PrefillFailed);
+                seq.finish(self.prefill_failure_reason(&e));
                 self.finished.push(seq);
                 Ok(0)
             }
@@ -432,6 +444,7 @@ impl<'rt> Scheduler<'rt> {
     /// other, turning silent state divergence into an immediate error.
     pub fn step(&mut self) -> Result<usize> {
         let produced = self.step_inner()?;
+        self.engine.sync_fault_metrics();
         #[cfg(any(debug_assertions, feature = "audit"))]
         crate::analysis::auditor::audit_step(&mut self.engine, &self.kv)?;
         Ok(produced)
@@ -461,10 +474,7 @@ impl<'rt> Scheduler<'rt> {
         if self.running.is_empty() {
             return Ok(0);
         }
-        let mut seqs: Vec<&mut Sequence> = self.running.values_mut().collect();
-        self.engine.decode_step(&mut seqs)?;
-        let produced = seqs.len();
-        drop(seqs);
+        let produced = self.decode_round()?;
         // mirror physical rows into the block accounting, retire finished
         let mut done: Vec<SeqId> = Vec::new();
         for s in self.running.values() {
@@ -480,6 +490,151 @@ impl<'rt> Scheduler<'rt> {
             self.finished.push(seq);
         }
         Ok(produced)
+    }
+
+    /// Sleep out one exponential-backoff slot and account the retry.
+    fn backoff(&mut self, attempt: usize) {
+        let us = self.cfg.retry_backoff_us << attempt.min(16);
+        std::thread::sleep(std::time::Duration::from_micros(us));
+        self.engine.metrics.step_retries += 1;
+        self.engine.metrics.retry_backoff.record_us(us as f64);
+    }
+
+    /// Run an engine step under the bounded retry policy: retryable
+    /// failures (Transient, or injected SequenceLocal) are re-attempted
+    /// up to `max_step_retries` times with exponential backoff; the final
+    /// error is returned typed so the caller can classify the terminal
+    /// outcome. Engine steps roll their own state back on failure, so a
+    /// retry always starts from the pre-step state.
+    fn with_retries<T>(
+        &mut self,
+        mut op: impl FnMut(&mut Engine<'rt>) -> Result<T, EngineError>,
+    ) -> Result<T, EngineError> {
+        let mut attempt = 0usize;
+        loop {
+            match op(&mut self.engine) {
+                Ok(v) => {
+                    if attempt > 0 {
+                        self.engine.metrics.recovered_steps += 1;
+                    }
+                    return Ok(v);
+                }
+                Err(e)
+                    if e.is_retryable()
+                        && attempt < self.cfg.max_step_retries =>
+                {
+                    self.backoff(attempt);
+                    attempt += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Terminal classification of a prefill failure after retries: an
+    /// exhausted injected fault quarantines the request (`Failed`,
+    /// counted); a genuine infeasibility (e.g. an over-long prompt) is
+    /// reported as rejected (`PrefillFailed`), preserving the legacy
+    /// accounting exactly when no fault plan is installed.
+    fn prefill_failure_reason(&mut self, e: &EngineError) -> FinishReason {
+        if e.injected_kind().is_some() {
+            self.engine.metrics.quarantined_seqs += 1;
+            FinishReason::Failed
+        } else {
+            FinishReason::PrefillFailed
+        }
+    }
+
+    /// One decode step over all running lanes under the fault-recovery
+    /// policy: retryable failures back off and retry (the engine rolled
+    /// its state back, so the re-run is exact); a persistent
+    /// sequence-local failure quarantines ONLY the implicated sequence
+    /// (`FinishReason::Failed`) and the round continues with the
+    /// survivors; an exhausted Transient or a Fatal failure escalates.
+    /// Returns the decode tokens produced.
+    fn decode_round(&mut self) -> Result<usize> {
+        let mut attempt = 0usize;
+        loop {
+            if self.running.is_empty() {
+                return Ok(0);
+            }
+            let mut seqs: Vec<&mut Sequence> =
+                self.running.values_mut().collect();
+            let result = self.engine.decode_step(&mut seqs);
+            let produced = seqs.len();
+            drop(seqs);
+            let e = match result {
+                Ok(()) => {
+                    if attempt > 0 {
+                        self.engine.metrics.recovered_steps += 1;
+                    }
+                    return Ok(produced);
+                }
+                Err(e) => e,
+            };
+            if e.is_retryable() && attempt < self.cfg.max_step_retries {
+                self.backoff(attempt);
+                attempt += 1;
+                continue;
+            }
+            match e.seq_id() {
+                Some(id) if self.running.contains_key(&id) => {
+                    // quarantine: evict the implicated sequence and keep
+                    // the rest of the batch decoding; its blocks and
+                    // arena rows free together as always
+                    let mut seq = self.running.remove(&id)
+                        .expect("quarantine id checked against running");
+                    self.free_seq(id);
+                    seq.finish(FinishReason::Failed);
+                    self.finished.push(seq);
+                    self.engine.metrics.quarantined_seqs += 1;
+                    // fresh retry budget for the new batch composition
+                    attempt = 0;
+                }
+                _ => {
+                    self.engine.metrics.fatal_steps += 1;
+                    return Err(e.into());
+                }
+            }
+        }
+    }
+
+    /// Deadline-based load shedding over the WAITING queue (requests not
+    /// yet holding any KV reservation): finish requests whose queueing
+    /// delay exceeds their class deadline with [`FinishReason::Shed`] and
+    /// return how many were shed. `None` disables a class's deadline. The
+    /// router invokes this only while degraded (sustained faults or KV
+    /// pressure), giving Batch the tighter deadline so document ingestion
+    /// sheds first and Interactive chat stays alive.
+    pub fn shed_overdue(
+        &mut self,
+        batch_deadline_s: Option<f64>,
+        interactive_deadline_s: Option<f64>,
+    ) -> usize {
+        if batch_deadline_s.is_none() && interactive_deadline_s.is_none() {
+            return 0;
+        }
+        let now = std::time::Instant::now();
+        let mut shed = 0usize;
+        let mut keep = VecDeque::with_capacity(self.waiting.len());
+        while let Some(mut seq) = self.waiting.pop_front() {
+            let deadline = match seq.priority {
+                Priority::Batch => batch_deadline_s,
+                Priority::Interactive => interactive_deadline_s,
+            };
+            // duration_since saturates to zero for backdated-future stamps
+            let waited = now.duration_since(seq.arrived).as_secs_f64();
+            match deadline {
+                Some(d) if waited > d => {
+                    seq.finish(FinishReason::Shed);
+                    self.finished.push(seq);
+                    shed += 1;
+                }
+                _ => keep.push_back(seq),
+            }
+        }
+        self.waiting = keep;
+        shed
     }
 
     /// Preempt the most recently admitted running sequence back to the

@@ -34,6 +34,14 @@ pub enum FinishReason {
     /// prompt exceeds the prefill bucket); the KV reservation is rolled
     /// back and the request reported as rejected, never silently dropped.
     PrefillFailed,
+    /// Quarantined: the sequence hit a persistent sequence-local fault
+    /// (e.g. repeated corrupt-output attribution) and was evicted from
+    /// the batch after retries, with the rest of the batch untouched.
+    Failed,
+    /// Load-shed: the router dropped the request from the waiting queue
+    /// (per-class deadline exceeded under sustained faults or KV
+    /// pressure) before it ever reached the engine.
+    Shed,
 }
 
 #[derive(Clone, Debug)]

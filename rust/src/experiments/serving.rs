@@ -175,6 +175,7 @@ fn mixed_run(rt: &Runtime, cfg_name: &str, chunk: Option<usize>,
         round_budget,
         chunk_tokens: chunk,
         interactive_weight: 4,
+        ..SchedConfig::default()
     });
     let mut router = Router::new(sched);
     // warmup: compile the prefill path (monolithic or chunked) and the

@@ -16,14 +16,14 @@ use anyhow::{bail, Result};
 
 use thinkeys::coordinator::engine::Engine;
 use thinkeys::coordinator::kvcache::{KvCacheConfig, KvCacheManager};
-use thinkeys::coordinator::router::Router;
+use thinkeys::coordinator::router::{Router, RouterPolicy};
 use thinkeys::coordinator::sampling::Sampler;
 use thinkeys::coordinator::scheduler::{SchedConfig, Scheduler};
 use thinkeys::datagen::arrival::{mixed_chat_doc_trace, poisson_trace,
                                  TraceConfig};
 use thinkeys::experiments::{self, Opts};
 use thinkeys::analysis::grid;
-use thinkeys::runtime::{KvQuant, Manifest, ParamStore, Runtime};
+use thinkeys::runtime::{FaultPlan, KvQuant, Manifest, ParamStore, Runtime};
 use thinkeys::substrate::args::Args;
 
 fn main() {
@@ -145,6 +145,17 @@ fn serve(argv: &[String]) -> Result<()> {
                    arena payload and per-step sync; needs the _q8 \
                    artifact grid from `make artifacts`)")
         .flag_bool("pallas", "use the Pallas-kernel decode artifacts")
+        .flag_str("fault-plan", Some(""),
+                  "seeded fault injection at the runtime boundary, e.g. \
+                   'seed=7,exec=0.05,load=0.02,corrupt=0.02,latency=0.1,\
+                   latency-us=300,burst=2' (probabilities per execute \
+                   call; empty = no injection, byte-identical serving)")
+        .flag_f64("batch-deadline-ms", Some(0.0),
+                  "shed a WAITING batch request once it queued this long \
+                   while degraded (faults or KV pressure); 0 = never")
+        .flag_f64("interactive-deadline-ms", Some(0.0),
+                  "shed a WAITING interactive request once it queued this \
+                   long while degraded; 0 = never (shed batch first)")
         .parse(argv)?;
     let cfg_name = p.str("config")?;
     let quant_name = p.str("kv-quant")?;
@@ -152,6 +163,12 @@ fn serve(argv: &[String]) -> Result<()> {
         anyhow::anyhow!("--kv-quant {quant_name}: expected fp32 or q8")
     })?;
     let rt = Runtime::new()?;
+    let fault_spec = p.str("fault-plan")?;
+    let fault_plan = FaultPlan::parse(&fault_spec)?;
+    if !fault_plan.is_empty() {
+        println!("fault plan: {fault_plan:?}");
+        rt.install_fault_plan(fault_plan);
+    }
     let cfg = rt.manifest().config(&cfg_name)?.clone();
     println!(
         "config {cfg_name}: {} heads {}q/{}kv (group {}), cache row \
@@ -206,8 +223,15 @@ fn serve(argv: &[String]) -> Result<()> {
         round_budget: p.usize("round-budget")?,
         chunk_tokens: chunk,
         interactive_weight: p.usize("interactive-weight")?,
+        ..SchedConfig::default()
     });
-    let mut router = Router::new(sched);
+    let deadline = |ms: f64| if ms > 0.0 { Some(ms / 1e3) } else { None };
+    let policy = RouterPolicy {
+        batch_deadline_s: deadline(p.f64("batch-deadline-ms")?),
+        interactive_deadline_s: deadline(p.f64("interactive-deadline-ms")?),
+        only_when_degraded: true,
+    };
+    let mut router = Router::new(sched).with_policy(policy);
     let n = p.usize("requests")?;
     let trace = if p.bool("mixed") {
         // 1 doc per 4 requests, chats arriving while docs prefill

@@ -14,6 +14,8 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::runtime::faults::{FaultInjector, FaultKind, FaultPlan,
+                             InjectedFault};
 use crate::runtime::manifest::{ArtifactEntry, Manifest};
 use crate::substrate::tensor::{Tensor, TensorI32, TensorI8};
 
@@ -47,6 +49,10 @@ pub struct Runtime {
     exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
     /// (artifact, compile seconds) log — surfaced by the perf report.
     pub compile_log: RefCell<Vec<(String, f64)>>,
+    /// Seeded fault injector (chaos testing / `serve --fault-plan`).
+    /// `None` in production: the execute path is then byte-identical to
+    /// a build without fault injection.
+    fault: RefCell<Option<FaultInjector>>,
 }
 
 impl Runtime {
@@ -66,7 +72,32 @@ impl Runtime {
             dir,
             exes: RefCell::new(HashMap::new()),
             compile_log: RefCell::new(Vec::new()),
+            fault: RefCell::new(None),
         })
+    }
+
+    /// Install a seeded fault schedule on the execute boundary. An empty
+    /// plan uninstalls the injector entirely, restoring the exact
+    /// production code path.
+    pub fn install_fault_plan(&self, plan: FaultPlan) {
+        *self.fault.borrow_mut() = if plan.is_empty() {
+            None
+        } else {
+            Some(FaultInjector::new(plan))
+        };
+    }
+
+    /// True when a (non-empty) fault plan is installed. The engine uses
+    /// this to gate per-step state snapshots: without an injector a real
+    /// execute error is Fatal anyway, so rollback bookkeeping would be
+    /// pure overhead.
+    pub fn fault_injection_active(&self) -> bool {
+        self.fault.borrow().is_some()
+    }
+
+    /// Total faults injected so far (0 with no injector installed).
+    pub fn faults_injected(&self) -> u64 {
+        self.fault.borrow().as_ref().map_or(0, |f| f.injected())
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -199,6 +230,32 @@ impl Runtime {
                 _ => unreachable!(),
             })
             .collect();
+        // Fault injection point: decided only after argument validation,
+        // so injected faults model device-side failures on otherwise
+        // well-formed calls (real validation bugs still surface as
+        // themselves). The borrow is scoped — the injector must not stay
+        // borrowed across the execute, which may re-enter metrics paths.
+        let decision = self
+            .fault
+            .borrow_mut()
+            .as_mut()
+            .map(|f| f.decide(name));
+        if let Some(d) = decision {
+            if d.latency_us > 0 {
+                std::thread::sleep(
+                    std::time::Duration::from_micros(d.latency_us),
+                );
+            }
+            if let Some(kind) = d.error {
+                let fault = InjectedFault {
+                    kind,
+                    lane_hint: d.lane_hint,
+                };
+                return Err(anyhow::Error::new(fault).context(format!(
+                    "injected {kind} fault before execute({name})"
+                )));
+            }
+        }
         let exe = self.load(name)?;
         let result = exe
             .execute::<&xla::Literal>(&refs)
@@ -215,6 +272,20 @@ impl Runtime {
                 outs.len(),
                 entry.outputs.len()
             );
+        }
+        // Corrupt-output fault: execution "succeeded" but the literal is
+        // to be treated as garbage — drop the real outputs and error, so
+        // a corrupt row can never be scattered into the host mirror.
+        if let Some(d) = decision {
+            if d.corrupt {
+                let fault = InjectedFault {
+                    kind: FaultKind::CorruptOutput,
+                    lane_hint: d.lane_hint,
+                };
+                return Err(anyhow::Error::new(fault).context(format!(
+                    "injected corrupt-output fault in execute({name})"
+                )));
+            }
         }
         Ok(outs)
     }

@@ -1,0 +1,370 @@
+//! Deterministic, seeded fault injection at the `Runtime::execute`
+//! boundary.
+//!
+//! A [`FaultPlan`] gives per-call probabilities for four fault kinds
+//! (transient exec failures, artifact-load failures, corrupted output
+//! literals, latency spikes); a [`FaultInjector`] draws from its own
+//! seeded [`Rng`] stream — never the engine's — so installing a plan
+//! perturbs *when* steps fail but not *what* surviving sequences decode.
+//!
+//! Two properties the chaos tests lean on:
+//!
+//! - **Fixed draw count.** `decide` consumes exactly five RNG draws per
+//!   call regardless of outcome, so the fault schedule for call N depends
+//!   only on the seed and N — not on which earlier faults fired or how
+//!   callers reacted to them.
+//! - **Burst clamp.** At most `max_burst` consecutive *erroring* faults
+//!   are injected; the next call is then forced clean. A retry budget
+//!   larger than `max_burst` therefore always recovers a transient
+//!   fault, which is what lets the chaos e2e assert zero Fatal
+//!   escalations under any seed. Latency spikes don't error and don't
+//!   count toward the burst.
+use crate::substrate::rng::Rng;
+
+/// The four injectable fault kinds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Device execution failed after the artifact was loaded.
+    ExecFailure,
+    /// The artifact (HLO executable) could not be loaded.
+    ArtifactLoad,
+    /// Execution "succeeded" but the output literal is garbage; the
+    /// injector discards the real outputs and errors instead, since a
+    /// corrupt literal must never reach the host mirror.
+    CorruptOutput,
+    /// Execution succeeded but took `latency_us` longer than usual.
+    LatencySpike,
+}
+
+impl std::fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let name = match self {
+            FaultKind::ExecFailure => "exec-failure",
+            FaultKind::ArtifactLoad => "artifact-load",
+            FaultKind::CorruptOutput => "corrupt-output",
+            FaultKind::LatencySpike => "latency-spike",
+        };
+        f.write_str(name)
+    }
+}
+
+/// The typed payload carried by every injected error. The coordinator
+/// downcasts to this (`anyhow::Error::downcast_ref`) to classify the
+/// failure; anything *not* carrying an `InjectedFault` is a real
+/// runtime error and escalates as Fatal.
+#[derive(Clone, Copy, Debug)]
+pub struct InjectedFault {
+    pub kind: FaultKind,
+    /// Which batch lane the fault nominally hit. Only meaningful for
+    /// `CorruptOutput` (a corrupt literal is attributable to one
+    /// sequence's row); callers reduce it modulo the batch size.
+    pub lane_hint: u64,
+}
+
+impl std::fmt::Display for InjectedFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "injected {} fault (lane hint {})", self.kind, self.lane_hint)
+    }
+}
+
+impl std::error::Error for InjectedFault {}
+
+/// A seeded fault schedule. All probabilities are per `execute` call,
+/// evaluated independently; an all-zero plan is "empty" and installs
+/// nothing (the serving path is then byte-identical to a build without
+/// fault injection).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for the injector's private RNG stream.
+    pub seed: u64,
+    /// P(transient exec failure) per call.
+    pub exec: f64,
+    /// P(artifact-load failure) per call.
+    pub load: f64,
+    /// P(corrupted output literal) per call.
+    pub corrupt: f64,
+    /// P(latency spike) per call.
+    pub latency: f64,
+    /// Added latency per spike, in microseconds.
+    pub latency_us: u64,
+    /// Max consecutive erroring faults before a forced-clean call.
+    pub max_burst: u32,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            exec: 0.0,
+            load: 0.0,
+            corrupt: 0.0,
+            latency: 0.0,
+            latency_us: 500,
+            max_burst: 2,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// The no-fault plan (all probabilities zero).
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// True when no fault kind can ever fire.
+    pub fn is_empty(&self) -> bool {
+        self.exec == 0.0
+            && self.load == 0.0
+            && self.corrupt == 0.0
+            && self.latency == 0.0
+    }
+
+    /// Parse the `--fault-plan` spec: comma-separated `key=value` pairs.
+    ///
+    /// Keys: `seed` (u64), `exec` / `load` / `corrupt` / `latency`
+    /// (probabilities in [0,1]), `latency-us` (u64), `burst` (u32 >= 1).
+    /// The empty string parses to the empty plan.
+    ///
+    /// Example: `seed=7,exec=0.05,corrupt=0.02,latency=0.1,latency-us=300`
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        let mut plan = Self::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, value) = part.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("fault-plan entry `{part}` is not key=value")
+            })?;
+            let prob = |v: &str| -> anyhow::Result<f64> {
+                let p: f64 = v.parse().map_err(|_| {
+                    anyhow::anyhow!("fault-plan {key}: `{v}` is not a number")
+                })?;
+                if !(0.0..=1.0).contains(&p) {
+                    anyhow::bail!(
+                        "fault-plan {key}: probability {p} outside [0, 1]"
+                    );
+                }
+                Ok(p)
+            };
+            match key {
+                "seed" => plan.seed = value.parse()?,
+                "exec" => plan.exec = prob(value)?,
+                "load" => plan.load = prob(value)?,
+                "corrupt" => plan.corrupt = prob(value)?,
+                "latency" => plan.latency = prob(value)?,
+                "latency-us" => plan.latency_us = value.parse()?,
+                "burst" => {
+                    plan.max_burst = value.parse()?;
+                    if plan.max_burst == 0 {
+                        anyhow::bail!("fault-plan burst must be >= 1");
+                    }
+                }
+                _ => anyhow::bail!("unknown fault-plan key `{key}`"),
+            }
+        }
+        Ok(plan)
+    }
+}
+
+/// What the injector decided for one `execute` call.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Decision {
+    /// Sleep this long before proceeding (0 = no spike).
+    pub latency_us: u64,
+    /// Fail before execution with this fault kind.
+    pub error: Option<FaultKind>,
+    /// Execute for real, then discard the outputs and report a
+    /// `CorruptOutput` fault instead of returning them.
+    pub corrupt: bool,
+    /// Raw draw for attributing `CorruptOutput` to a batch lane.
+    pub lane_hint: u64,
+}
+
+/// Seeded injector installed on a `Runtime`. One instance per runtime;
+/// `decide` is called once per `execute`.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    rng: Rng,
+    injected: u64,
+    consecutive: u32,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Self {
+        Self {
+            rng: Rng::new(plan.seed),
+            plan,
+            injected: 0,
+            consecutive: 0,
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Total faults injected so far (erroring faults + latency spikes).
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+
+    /// Decide the fate of one `execute` call. Always consumes exactly
+    /// five RNG draws so the schedule is a pure function of (seed, call
+    /// index) — see the module docs.
+    pub fn decide(&mut self, _artifact: &str) -> Decision {
+        let r_latency = self.rng.f64();
+        let r_load = self.rng.f64();
+        let r_exec = self.rng.f64();
+        let r_corrupt = self.rng.f64();
+        let lane_hint = self.rng.next_u64();
+
+        let mut d = Decision {
+            lane_hint,
+            ..Decision::default()
+        };
+        if r_latency < self.plan.latency {
+            d.latency_us = self.plan.latency_us;
+            self.injected += 1;
+        }
+        // Erroring faults are burst-clamped; first matching kind wins.
+        let mut fault = None;
+        if self.consecutive < self.plan.max_burst {
+            if r_load < self.plan.load {
+                fault = Some(FaultKind::ArtifactLoad);
+            } else if r_exec < self.plan.exec {
+                fault = Some(FaultKind::ExecFailure);
+            } else if r_corrupt < self.plan.corrupt {
+                fault = Some(FaultKind::CorruptOutput);
+            }
+        }
+        match fault {
+            Some(FaultKind::CorruptOutput) => d.corrupt = true,
+            Some(kind) => d.error = Some(kind),
+            None => {}
+        }
+        if fault.is_some() {
+            self.consecutive += 1;
+            self.injected += 1;
+        } else {
+            self.consecutive = 0;
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trip() {
+        let plan = FaultPlan::parse(
+            "seed=7,exec=0.05,load=0.02,corrupt=0.03,latency=0.1,\
+             latency-us=250,burst=3",
+        )
+        .unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.exec, 0.05);
+        assert_eq!(plan.load, 0.02);
+        assert_eq!(plan.corrupt, 0.03);
+        assert_eq!(plan.latency, 0.1);
+        assert_eq!(plan.latency_us, 250);
+        assert_eq!(plan.max_burst, 3);
+        assert!(!plan.is_empty());
+    }
+
+    #[test]
+    fn parse_empty_spec_is_empty_plan() {
+        let plan = FaultPlan::parse("").unwrap();
+        assert!(plan.is_empty());
+        assert_eq!(plan, FaultPlan::empty());
+    }
+
+    #[test]
+    fn parse_rejects_bad_input() {
+        assert!(FaultPlan::parse("exec=1.5").is_err());
+        assert!(FaultPlan::parse("exec=-0.1").is_err());
+        assert!(FaultPlan::parse("exec=abc").is_err());
+        assert!(FaultPlan::parse("bogus=1").is_err());
+        assert!(FaultPlan::parse("exec").is_err());
+        assert!(FaultPlan::parse("burst=0").is_err());
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let plan = FaultPlan {
+            seed: 42,
+            exec: 0.3,
+            load: 0.1,
+            corrupt: 0.2,
+            latency: 0.25,
+            ..FaultPlan::default()
+        };
+        let mut a = FaultInjector::new(plan);
+        let mut b = FaultInjector::new(plan);
+        for i in 0..500 {
+            let da = a.decide("decode");
+            let db = b.decide("decode");
+            assert_eq!(da.error, db.error, "call {i}");
+            assert_eq!(da.corrupt, db.corrupt, "call {i}");
+            assert_eq!(da.latency_us, db.latency_us, "call {i}");
+            assert_eq!(da.lane_hint, db.lane_hint, "call {i}");
+        }
+        assert_eq!(a.injected(), b.injected());
+        assert!(a.injected() > 0, "probabilities this high must fire");
+    }
+
+    #[test]
+    fn burst_clamp_bounds_consecutive_errors() {
+        // Certain-failure plan: without the clamp every call would
+        // error; with it, every (max_burst+1)-th call is forced clean.
+        let plan = FaultPlan {
+            seed: 1,
+            exec: 1.0,
+            max_burst: 2,
+            ..FaultPlan::default()
+        };
+        let mut inj = FaultInjector::new(plan);
+        let mut streak = 0u32;
+        for _ in 0..300 {
+            let d = inj.decide("decode");
+            if d.error.is_some() || d.corrupt {
+                streak += 1;
+                assert!(streak <= plan.max_burst, "burst clamp violated");
+            } else {
+                streak = 0;
+            }
+        }
+    }
+
+    #[test]
+    fn empty_plan_never_injects() {
+        let mut inj = FaultInjector::new(FaultPlan::empty());
+        for _ in 0..200 {
+            let d = inj.decide("prefill");
+            assert!(d.error.is_none());
+            assert!(!d.corrupt);
+            assert_eq!(d.latency_us, 0);
+        }
+        assert_eq!(inj.injected(), 0);
+    }
+
+    #[test]
+    fn latency_spikes_do_not_consume_burst() {
+        let plan = FaultPlan {
+            seed: 3,
+            latency: 1.0,
+            latency_us: 7,
+            ..FaultPlan::default()
+        };
+        let mut inj = FaultInjector::new(plan);
+        for _ in 0..50 {
+            let d = inj.decide("decode");
+            assert_eq!(d.latency_us, 7);
+            assert!(d.error.is_none() && !d.corrupt);
+        }
+        assert_eq!(inj.injected(), 50);
+    }
+}

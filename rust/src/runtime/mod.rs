@@ -7,9 +7,11 @@
 
 pub mod manifest;
 pub mod client;
+pub mod faults;
 pub mod params;
 
 pub use client::Runtime;
+pub use faults::{FaultInjector, FaultKind, FaultPlan, InjectedFault};
 pub use manifest::{ArtifactEntry, ConfigEntry, KvQuant, Manifest,
                    ParamSpecEntry};
 pub use params::ParamStore;

@@ -1,0 +1,256 @@
+//! Chaos e2e: the mixed chat+doc churn trace under seeded fault
+//! schedules (ISSUE 7 capstone).
+//!
+//! The contracts under test:
+//! - the serving loop SURVIVES a seeded FaultPlan covering all four fault
+//!   kinds with zero Fatal escalations (burst-clamped injector + retry
+//!   budget > max_burst guarantees recovery),
+//! - sequences untouched by quarantine decode BIT-EXACTLY the tokens of
+//!   the fault-free run (per-lane attention: a lane's greedy outputs
+//!   depend only on its own prompt and cache, and the injector draws from
+//!   its own RNG stream — never the engine's),
+//! - the delta-synced host mirror needs NO full-arena downloads to
+//!   recover (`sync_download_bytes == 0` throughout),
+//! - the runtime auditor stays green across every rollback,
+//! - an EMPTY plan is byte-identical to a run with no injector at all.
+//!
+//! `CHAOS_SEED` selects the fault schedule (CI runs two fixed seeds).
+
+use std::collections::BTreeMap;
+
+use thinkeys::coordinator::engine::Engine;
+use thinkeys::coordinator::kvcache::{KvCacheConfig, KvCacheManager};
+use thinkeys::coordinator::metrics::{EngineMetrics, ServeReport};
+use thinkeys::coordinator::router::{
+    bucket_of, ReportBucket, Router, RouterPolicy,
+};
+use thinkeys::coordinator::sampling::Sampler;
+use thinkeys::coordinator::scheduler::{SchedConfig, Scheduler};
+use thinkeys::coordinator::sequence::{Priority, Sequence};
+use thinkeys::datagen::arrival::{mixed_chat_doc_trace, RequestSpec};
+use thinkeys::runtime::{FaultPlan, ParamStore, Runtime};
+
+fn chaos_seed() -> u64 {
+    std::env::var("CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(7)
+}
+
+/// Everything a chaos run leaves behind once the runtime is gone.
+struct ChaosRun {
+    report: ServeReport,
+    /// id -> generated tokens, COMPLETED sequences only. Submission order
+    /// in `run_trace` is trace order, so ids line up across runs of the
+    /// same trace.
+    tokens: BTreeMap<u64, Vec<i32>>,
+    finished: Vec<Sequence>,
+    metrics: EngineMetrics,
+    violations: Vec<String>,
+}
+
+fn run(
+    plan: Option<FaultPlan>,
+    policy: RouterPolicy,
+    budget_mb: f64,
+    max_step_retries: usize,
+    trace: &[RequestSpec],
+) -> ChaosRun {
+    let rt = Runtime::new().expect("run `make artifacts` first");
+    if let Some(p) = plan {
+        rt.install_fault_plan(p);
+    }
+    let cfg = "servethin";
+    let c = rt.manifest().config(cfg).unwrap().clone();
+    let params = ParamStore::init(&c, 42);
+    let eng = Engine::new(&rt, cfg, params, false, Sampler::Greedy, 0).unwrap();
+    let kv = KvCacheManager::new(KvCacheConfig {
+        n_layers: c.n_layers,
+        k_dims: c.k_cache_dims,
+        v_dims: c.v_cache_dims,
+        block_tokens: 16,
+        bytes_per_el_k: 2.0,
+        bytes_per_el_v: 2.0,
+        budget_bytes: budget_mb * 1e6,
+    });
+    let chunk = rt.manifest().chunks_for(cfg).first().copied();
+    let sched = Scheduler::with_config(eng, kv, SchedConfig {
+        max_batch: 8,
+        round_budget: 64,
+        chunk_tokens: chunk,
+        interactive_weight: 4,
+        max_step_retries,
+        retry_backoff_us: 50,
+    });
+    let mut router = Router::new(sched).with_policy(policy);
+    let report = router
+        .run_trace(trace, 0)
+        .expect("the chaos serving loop must survive (zero Fatal)");
+    let mut tokens = BTreeMap::new();
+    for seq in &router.sched.finished {
+        if bucket_of(seq) == ReportBucket::Completed {
+            tokens.insert(seq.id, seq.generated.clone());
+        }
+    }
+    ChaosRun {
+        report,
+        tokens,
+        finished: router.sched.finished.clone(),
+        metrics: router.sched.engine.metrics.clone(),
+        violations: router.sched.engine.invariant_violations(),
+    }
+}
+
+fn chaos_plan(seed: u64) -> FaultPlan {
+    // all four fault kinds enabled (the acceptance bar is >= 3)
+    FaultPlan {
+        seed,
+        exec: 0.05,
+        load: 0.03,
+        corrupt: 0.03,
+        latency: 0.08,
+        latency_us: 200,
+        max_burst: 2,
+    }
+}
+
+/// The capstone: survival, recovery, bit-exactness, green audits, and a
+/// cold host-mirror download counter, all under one seeded schedule.
+#[test]
+fn chaos_mixed_trace_survives_and_recovers() {
+    let trace = mixed_chat_doc_trace(12, 4, 0.002, 0.0005);
+    let inert = RouterPolicy::default();
+    let baseline = run(None, inert, 4.0, 4, &trace);
+    assert_eq!(baseline.report.n_requests, trace.len(),
+               "fault-free baseline must serve the whole trace");
+    assert_eq!(baseline.metrics.faults_injected, 0);
+
+    let plan = chaos_plan(chaos_seed());
+    let faulted = run(Some(plan), inert, 4.0, 4, &trace);
+
+    // survival: the retry budget (4) exceeds max_burst (2), so every
+    // retryable fault recovers — nothing escalates, nobody is lost
+    assert_eq!(faulted.metrics.fatal_steps, 0, "zero Fatal escalations");
+    assert_eq!(faulted.report.n_requests, trace.len(),
+               "all requests complete under the bounded fault schedule");
+    assert_eq!(faulted.report.failed, 0);
+
+    // the schedule actually fired, and recovery actually happened
+    assert!(faulted.metrics.faults_injected > 0, "plan injected nothing");
+    assert!(faulted.metrics.step_retries > 0, "no step ever retried");
+    assert!(faulted.metrics.recovered_steps > 0, "no step ever recovered");
+    assert!(faulted.metrics.retry_backoff.count() > 0);
+
+    // recovery never resorted to full-arena downloads: the host mirror +
+    // rollback are enough to rebuild device state
+    assert_eq!(faulted.metrics.sync_download_bytes, 0);
+
+    // the runtime auditor cross-checked every round and stayed green
+    assert!(faulted.violations.is_empty(), "{:?}", faulted.violations);
+    if cfg!(any(debug_assertions, feature = "audit")) {
+        assert!(faulted.metrics.audit_checks > 0,
+                "auditor compiled out of the chaos run");
+    }
+
+    // bit-exactness: every completed sequence decodes exactly the
+    // fault-free tokens (rolled-back steps consume no sampler RNG)
+    for (id, toks) in &faulted.tokens {
+        assert_eq!(Some(toks), baseline.tokens.get(id).as_deref(),
+                   "seq {id} diverged from the fault-free run");
+    }
+}
+
+/// An empty plan must be indistinguishable from no injector at all —
+/// same tokens, same counters, nothing injected, nothing retried.
+#[test]
+fn empty_fault_plan_is_byte_identical() {
+    let trace = mixed_chat_doc_trace(8, 2, 0.002, 0.0005);
+    let inert = RouterPolicy::default();
+    let baseline = run(None, inert, 4.0, 4, &trace);
+    let empty = run(Some(FaultPlan::empty()), inert, 4.0, 4, &trace);
+
+    assert_eq!(empty.metrics.faults_injected, 0);
+    assert_eq!(empty.metrics.step_retries, 0);
+    assert_eq!(empty.metrics.recovered_steps, 0);
+    assert_eq!(empty.metrics.quarantined_seqs, 0);
+    assert_eq!(empty.tokens, baseline.tokens,
+               "empty plan changed decoded tokens");
+    assert_eq!(empty.report.n_requests, baseline.report.n_requests);
+    assert_eq!(empty.report.rejected, baseline.report.rejected);
+    assert_eq!(empty.report.failed, 0);
+    assert_eq!(empty.report.shed_requests, 0);
+}
+
+/// Degradation policy: under sustained faults + KV pressure, Batch work
+/// sheds at its deadline while every Interactive request completes —
+/// Batch first, chat alive.
+#[test]
+fn degraded_router_sheds_batch_first_keeps_interactive_alive() {
+    // capacity 192 tokens: one 128-token doc reservation at a time, so
+    // five of the six docs queue behind the first and age past the
+    // deadline while latency spikes keep the run degraded
+    let trace = mixed_chat_doc_trace(12, 6, 0.002, 0.0005);
+    let policy = RouterPolicy {
+        batch_deadline_s: Some(0.001),
+        interactive_deadline_s: None,
+        only_when_degraded: true,
+    };
+    let plan = FaultPlan {
+        seed: chaos_seed(),
+        exec: 0.05,
+        latency: 0.6,
+        latency_us: 1000,
+        ..FaultPlan::empty()
+    };
+    let out = run(Some(plan), policy, 0.0922, 4, &trace);
+
+    assert!(out.metrics.faults_injected > 0);
+    assert_eq!(out.metrics.fatal_steps, 0);
+    assert!(out.report.shed_requests > 0, "no batch doc was ever shed");
+    let interactive_done = out
+        .finished
+        .iter()
+        .filter(|s| s.priority == Priority::Interactive)
+        .filter(|s| bucket_of(s) == ReportBucket::Completed)
+        .count();
+    assert_eq!(interactive_done, 12,
+               "interactive traffic must survive degradation untouched");
+    // with no interactive deadline, nothing interactive is ever shed
+    assert!(out
+        .finished
+        .iter()
+        .filter(|s| s.priority == Priority::Interactive)
+        .all(|s| bucket_of(s) != ReportBucket::Shed));
+}
+
+/// Quarantine: with the retry budget at zero, a corrupt-output fault
+/// evicts ONLY the implicated sequence; the rest of the batch keeps
+/// decoding and still matches the fault-free run bit-exactly.
+#[test]
+fn quarantine_evicts_only_the_implicated_sequence() {
+    let trace = mixed_chat_doc_trace(8, 2, 0.002, 0.0005);
+    let inert = RouterPolicy::default();
+    let baseline = run(None, inert, 4.0, 4, &trace);
+    // corrupt-only plan: every fired fault is sequence-local, so a zero
+    // retry budget quarantines deterministically and can never escalate
+    let plan = FaultPlan {
+        seed: chaos_seed(),
+        corrupt: 0.08,
+        ..FaultPlan::empty()
+    };
+    let out = run(Some(plan), inert, 4.0, 0, &trace);
+
+    assert_eq!(out.metrics.fatal_steps, 0);
+    assert!(out.report.failed > 0, "no sequence was ever quarantined");
+    assert_eq!(out.metrics.quarantined_seqs as usize, out.report.failed);
+    assert_eq!(out.report.n_requests + out.report.failed, trace.len(),
+               "quarantine must not lose or duplicate requests");
+    assert!(out.violations.is_empty(), "{:?}", out.violations);
+    assert_eq!(out.metrics.sync_download_bytes, 0);
+    // survivors are bit-exact: eviction freed the lane, the regroup kept
+    // every other lane's cache rows intact
+    for (id, toks) in &out.tokens {
+        assert_eq!(Some(toks), baseline.tokens.get(id).as_deref(),
+                   "surviving seq {id} diverged after a quarantine");
+    }
+}

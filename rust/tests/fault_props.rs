@@ -1,0 +1,288 @@
+//! Fault-injection properties (ISSUE 7): randomized fault schedules over
+//! randomized submit/step/churn sequences, asserting that transactional
+//! rollback restores engine state EXACTLY after every injected failure —
+//! `Engine::state_fingerprint()` unchanged (lane map, group arenas,
+//! parked/chunking host mirrors, tracked rows), `invariant_violations()`
+//! empty, and the token streams of recovered runs bit-identical to
+//! fault-free runs of the same prompts.
+
+use thinkeys::coordinator::engine::Engine;
+use thinkeys::coordinator::kvcache::{KvCacheConfig, KvCacheManager};
+use thinkeys::coordinator::router::synth_prompt;
+use thinkeys::coordinator::sampling::Sampler;
+use thinkeys::coordinator::scheduler::{SchedConfig, Scheduler};
+use thinkeys::coordinator::sequence::Sequence;
+use thinkeys::proptest::property;
+use thinkeys::runtime::{FaultKind, FaultPlan, ParamStore, Runtime};
+use thinkeys::substrate::rng::Rng;
+
+fn runtime() -> Runtime {
+    Runtime::new().expect("run `make artifacts` first")
+}
+
+fn engine<'a>(rt: &'a Runtime, cfg: &str, seed: u64) -> Engine<'a> {
+    let params = ParamStore::init(rt.manifest().config(cfg).unwrap(), 42);
+    Engine::new(rt, cfg, params, false, Sampler::Greedy, seed).unwrap()
+}
+
+fn kv_for(rt: &Runtime, cfg: &str, budget_mb: f64) -> KvCacheManager {
+    let c = rt.manifest().config(cfg).unwrap();
+    KvCacheManager::new(KvCacheConfig {
+        n_layers: c.n_layers,
+        k_dims: c.k_cache_dims,
+        v_dims: c.v_cache_dims,
+        block_tokens: 16,
+        bytes_per_el_k: 2.0,
+        bytes_per_el_v: 2.0,
+        budget_bytes: budget_mb * 1e6,
+    })
+}
+
+/// A plan that makes the NEXT erroring fault certain (probability 1.0 for
+/// one kind, burst clamp effectively disabled).
+fn forced(kind: FaultKind, seed: u64) -> FaultPlan {
+    let mut p = FaultPlan { seed, max_burst: 1_000_000, ..FaultPlan::empty() };
+    match kind {
+        FaultKind::ExecFailure => p.exec = 1.0,
+        FaultKind::ArtifactLoad => p.load = 1.0,
+        FaultKind::CorruptOutput => p.corrupt = 1.0,
+        FaultKind::LatencySpike => unreachable!("latency never errors"),
+    }
+    p
+}
+
+fn pick_kind(rng: &mut Rng) -> FaultKind {
+    match rng.below(3) {
+        0 => FaultKind::ExecFailure,
+        1 => FaultKind::ArtifactLoad,
+        _ => FaultKind::CorruptOutput,
+    }
+}
+
+/// Forced decode failures roll the engine back exactly, consume no
+/// sampler state, and the recovered run decodes bit-identical tokens to
+/// a fault-free twin engine.
+#[test]
+fn forced_decode_failures_roll_back_exactly() {
+    let rt = runtime();
+    property("decode_rollback_exact", 6, |rng| {
+        let cfg = "servethin";
+        let vocab = rt.manifest().config(cfg).unwrap().vocab;
+        let eng_seed = rng.next_u64();
+        let mut eng = engine(&rt, cfg, eng_seed);
+        let mut twin = engine(&rt, cfg, eng_seed);
+        let n = 1 + rng.below(3);
+        let mut seqs: Vec<Sequence> = (0..n)
+            .map(|i| {
+                let p = synth_prompt(4 + rng.below(16), vocab, rng);
+                Sequence::new(i as u64 + 1, p, 4 + rng.below(4), None)
+            })
+            .collect();
+        let mut twins: Vec<Sequence> = seqs.clone();
+        for s in seqs.iter_mut() {
+            eng.prefill(s).map_err(|e| e.to_string())?;
+        }
+        for s in twins.iter_mut() {
+            twin.prefill(s).map_err(|e| e.to_string())?;
+        }
+
+        let mut injected_failures = 0usize;
+        while seqs.iter().any(|s| !s.is_finished()) {
+            // randomly interpose a forced failure before this step
+            if rng.below(2) == 0 {
+                rt.install_fault_plan(forced(pick_kind(rng), rng.next_u64()));
+                let fp = eng.state_fingerprint();
+                let toks_before: Vec<Vec<i32>> =
+                    seqs.iter().map(|s| s.generated.clone()).collect();
+                {
+                    let mut live: Vec<&mut Sequence> =
+                        seqs.iter_mut().filter(|s| !s.is_finished()).collect();
+                    let r = eng.decode_step(&mut live);
+                    if r.is_ok() {
+                        return Err("forced fault did not fire".into());
+                    }
+                }
+                if eng.state_fingerprint() != fp {
+                    return Err("rollback did not restore engine state".into());
+                }
+                let v = eng.invariant_violations();
+                if !v.is_empty() {
+                    return Err(format!("violations after rollback: {v:?}"));
+                }
+                let toks_after: Vec<Vec<i32>> =
+                    seqs.iter().map(|s| s.generated.clone()).collect();
+                if toks_before != toks_after {
+                    return Err("failed step mutated sequences".into());
+                }
+                injected_failures += 1;
+                rt.install_fault_plan(FaultPlan::empty());
+            }
+            {
+                let mut live: Vec<&mut Sequence> =
+                    seqs.iter_mut().filter(|s| !s.is_finished()).collect();
+                eng.decode_step(&mut live).map_err(|e| e.to_string())?;
+            }
+            let mut live: Vec<&mut Sequence> =
+                twins.iter_mut().filter(|s| !s.is_finished()).collect();
+            twin.decode_step(&mut live).map_err(|e| e.to_string())?;
+        }
+        if injected_failures == 0 {
+            // at least exercise one failure per case for the property to
+            // mean anything (the loop above flips a coin each step)
+            rt.install_fault_plan(forced(pick_kind(rng), rng.next_u64()));
+            let fp = eng.state_fingerprint();
+            let mut one = Sequence::new(99, synth_prompt(6, vocab, rng), 4, None);
+            if eng.prefill(&mut one).is_ok() {
+                return Err("forced prefill fault did not fire".into());
+            }
+            if eng.state_fingerprint() != fp {
+                return Err("prefill failure leaked engine state".into());
+            }
+            rt.install_fault_plan(FaultPlan::empty());
+        }
+        for (a, b) in seqs.iter().zip(&twins) {
+            if a.generated != b.generated {
+                return Err(format!(
+                    "seq {} diverged from the fault-free twin: {:?} vs {:?}",
+                    a.id, a.generated, b.generated));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Chunked-prefill failures — on the FIRST chunk and on resumed chunks —
+/// leave the progress bookkeeping and host mirror exactly at the previous
+/// chunk boundary, and the recovered ingest still matches the fault-free
+/// twin bit-exactly.
+#[test]
+fn forced_chunk_failures_leave_prefill_at_chunk_boundary() {
+    let rt = runtime();
+    let chunk = *rt
+        .manifest()
+        .chunks_for("servethin")
+        .first()
+        .expect("servethin exports chunked prefill");
+    property("chunk_rollback_exact", 6, |rng| {
+        let cfg = "servethin";
+        let vocab = rt.manifest().config(cfg).unwrap().vocab;
+        let eng_seed = rng.next_u64();
+        let mut eng = engine(&rt, cfg, eng_seed);
+        let mut twin = engine(&rt, cfg, eng_seed);
+        let n_chunks = 2 + rng.below(3);
+        let p = synth_prompt(chunk * n_chunks - rng.below(chunk), vocab, rng);
+        let mut seq = Sequence::new(1, p.clone(), 4, None);
+        let mut twin_seq = Sequence::new(1, p, 4, None);
+
+        let mut done = false;
+        while !done {
+            // randomly force this chunk to fail first
+            if rng.below(2) == 0 {
+                rt.install_fault_plan(forced(pick_kind(rng), rng.next_u64()));
+                let fp = eng.state_fingerprint();
+                let rows = eng.rows(seq.id);
+                if eng.prefill_chunk(&mut seq, chunk).is_ok() {
+                    return Err("forced chunk fault did not fire".into());
+                }
+                if eng.state_fingerprint() != fp {
+                    return Err("chunk failure leaked engine state".into());
+                }
+                if eng.rows(seq.id) != rows {
+                    return Err(format!(
+                        "rows moved across a failed chunk: {} -> {}",
+                        rows, eng.rows(seq.id)));
+                }
+                let v = eng.invariant_violations();
+                if !v.is_empty() {
+                    return Err(format!("violations after rollback: {v:?}"));
+                }
+                rt.install_fault_plan(FaultPlan::empty());
+            }
+            done = eng
+                .prefill_chunk(&mut seq, chunk)
+                .map_err(|e| e.to_string())?;
+            let twin_done = twin
+                .prefill_chunk(&mut twin_seq, chunk)
+                .map_err(|e| e.to_string())?;
+            if done != twin_done {
+                return Err("chunk progress diverged from twin".into());
+            }
+        }
+        // the first sampled token is part of the final chunk: recovered
+        // ingest must match the fault-free twin exactly
+        if seq.generated != twin_seq.generated {
+            return Err(format!(
+                "post-prefill tokens diverged: {:?} vs {:?}",
+                seq.generated, twin_seq.generated));
+        }
+        Ok(())
+    });
+}
+
+/// Scheduler-level churn under randomized moderate fault schedules:
+/// submit/step/preempt sequences with a retry budget above the burst
+/// clamp never escalate, never trip the auditor, and never leave the
+/// engine with invariant violations.
+#[test]
+fn randomized_churn_under_random_fault_schedules_stays_consistent() {
+    let rt = runtime();
+    let chunk = rt.manifest().chunks_for("servethin").first().copied();
+    property("churn_under_faults", 5, |rng| {
+        let eng = engine(&rt, "servethin", rng.next_u64());
+        let kv = kv_for(&rt, "servethin", 0.5);
+        let vocab = eng.cfg.vocab;
+        let mut sched = Scheduler::with_config(eng, kv, SchedConfig {
+            max_batch: 6,
+            round_budget: 48,
+            chunk_tokens: if rng.below(2) == 0 { chunk } else { None },
+            interactive_weight: 2,
+            max_step_retries: 4,
+            retry_backoff_us: 20,
+        });
+        let plan = FaultPlan {
+            seed: rng.next_u64(),
+            exec: rng.f64() * 0.15,
+            load: rng.f64() * 0.1,
+            corrupt: rng.f64() * 0.1,
+            latency: rng.f64() * 0.2,
+            latency_us: 100,
+            max_burst: 2,
+        };
+        rt.install_fault_plan(plan);
+        let mut submitted = 0usize;
+        for _ in 0..40 {
+            match rng.below(5) {
+                0 | 1 => {
+                    let len = 2 + rng.below(20);
+                    let max_new = 1 + rng.below(6);
+                    sched.submit(synth_prompt(len, vocab, rng), max_new, None);
+                    submitted += 1;
+                }
+                2 if sched.n_running() > 1 => {
+                    sched.preempt_one();
+                }
+                _ => {}
+            }
+            // a Fatal escalation fails the property (retry budget 4 >
+            // burst clamp 2 means every injected failure must recover)
+            sched.step().map_err(|e| format!("step escalated: {e:#}"))?;
+            let v = sched.engine.invariant_violations();
+            if !v.is_empty() {
+                return Err(format!("violations mid-churn: {v:?}"));
+            }
+        }
+        rt.install_fault_plan(FaultPlan::empty());
+        sched
+            .run_to_completion()
+            .map_err(|e| format!("drain escalated: {e:#}"))?;
+        let finished = sched.finished.len();
+        if finished != submitted {
+            return Err(format!(
+                "{submitted} submitted but {finished} accounted for"));
+        }
+        if sched.engine.metrics.sync_download_bytes != 0 {
+            return Err("recovery resorted to full-arena downloads".into());
+        }
+        Ok(())
+    });
+}

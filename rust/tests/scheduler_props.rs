@@ -212,6 +212,7 @@ fn random_traffic(chunked: bool) {
                 round_budget: 48,
                 chunk_tokens: if chunked { Some(chunk) } else { None },
                 interactive_weight: 2,
+                ..SchedConfig::default()
             });
             let vocab = sched.engine.cfg.vocab;
             let mut submitted = 0usize;

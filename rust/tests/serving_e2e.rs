@@ -553,6 +553,7 @@ fn interactive_preempts_batch_at_chunk_boundary() {
         round_budget: 64,
         chunk_tokens: Some(chunk),
         interactive_weight: 4,
+        ..SchedConfig::default()
     });
     let vocab = sched.engine.cfg.vocab;
     let mut rng = Rng::new(31);
@@ -606,6 +607,7 @@ fn batch_doc_survives_sustained_interactive_stream() {
         round_budget: 64,
         chunk_tokens: Some(chunk),
         interactive_weight: 2,
+        ..SchedConfig::default()
     });
     let vocab = sched.engine.cfg.vocab;
     let mut rng = Rng::new(47);
@@ -675,6 +677,7 @@ fn waiting_request_survives_inflight_prefill_pressure() {
         round_budget: 64,
         chunk_tokens: Some(16),
         interactive_weight: 4,
+        ..SchedConfig::default()
     });
     let vocab = sched.engine.cfg.vocab;
     let mut rng = Rng::new(5);
@@ -1036,6 +1039,7 @@ fn auditor_active_through_churn() {
         round_budget: 64,
         chunk_tokens: chunk,
         interactive_weight: 4,
+        ..SchedConfig::default()
     });
     let mut rng = Rng::new(33);
     // staggered submissions so the live set grows, shrinks, and regroups

@@ -22,6 +22,13 @@
 //!   (`lanes.rs`); deriving one positionally (enumerating sequences into
 //!   lane slots, or indexing a raw lane vector) bypasses the lane-stability
 //!   contract that keeps regroups zero-copy.
+//! - **no-naked-anyhow-propagation** — the engine step boundary
+//!   (`prefill` / `prefill_chunk` / `decode_step`) returns a typed
+//!   `EngineError` so the scheduler can retry, quarantine, or escalate by
+//!   CLASS. A naked `?` on a step call erases that classification back
+//!   into an anyhow chain and silently opts out of the fault-recovery
+//!   policy — step failures must be matched (retry loop) or explicitly
+//!   converted.
 //!
 //! Rules scan comment-stripped, string-masked source and skip everything
 //! from the first `#[cfg(test)]` to end of file — tests may unwrap freely.
@@ -172,6 +179,24 @@ fn lint_source(file_name: &str, text: &str) -> Vec<Violation> {
                     break;
                 }
             }
+        }
+
+        // no-naked-anyhow-propagation: engine step calls return typed
+        // EngineError; a `?` on the same line throws the classification
+        // away (anyhow's blanket From) and bypasses retry/quarantine.
+        // The `_inner`/`_round` helpers don't match — `(` must follow
+        // the step name directly.
+        let step_call = line.contains(".prefill(")
+            || line.contains(".prefill_chunk(")
+            || line.contains(".decode_step(");
+        if step_call && line.contains(")?") {
+            fail(
+                "no-naked-anyhow-propagation",
+                "engine step error `?`-propagated as anyhow — match the \
+                 typed EngineError (retry / quarantine / escalate) \
+                 instead of erasing its class"
+                    .into(),
+            );
         }
 
         // no-lane-enumeration: lane indices come from LaneMap only.
@@ -333,6 +358,38 @@ mod tests {
     fn seeded_raw_lane_index_is_denied() {
         let src = "fn peek(&self) { let x = self.lanes[0]; use_(x); }\n";
         assert_eq!(rules("engine.rs", src), vec!["no-lane-enumeration"]);
+    }
+
+    #[test]
+    fn seeded_naked_step_propagation_is_denied() {
+        let src = "fn go(&mut self) -> Result<()> {\n    \
+                   self.engine.decode_step(&mut seqs)?;\n    Ok(())\n}\n";
+        assert_eq!(rules("scheduler.rs", src),
+                   vec!["no-naked-anyhow-propagation"]);
+    }
+
+    #[test]
+    fn seeded_naked_prefill_propagation_is_denied() {
+        let src = "fn a(&mut self, s: &mut Sequence) -> Result<()> {\n    \
+                   self.engine.prefill(s)?;\n    Ok(())\n}\n\
+                   fn b(&mut self, s: &mut Sequence) -> Result<bool> {\n    \
+                   let done = self.engine.prefill_chunk(s, 16)?;\n    \
+                   Ok(done)\n}\n";
+        assert_eq!(rules("scheduler.rs", src),
+                   vec!["no-naked-anyhow-propagation",
+                        "no-naked-anyhow-propagation"]);
+    }
+
+    #[test]
+    fn matched_step_calls_and_inner_helpers_are_allowed() {
+        // closure-wrapped retry calls carry no `?`; the `_inner` split
+        // keeps its anyhow plumbing (the `(` must follow the step name)
+        let src = "fn ok(&mut self) -> Result<(), EngineError> {\n    \
+                   self.with_retries(|eng| eng.prefill(&mut seq))\n}\n\
+                   fn inner(&mut self) -> Result<()> {\n    \
+                   self.prefill_chunk_inner(seq, chunk)?;\n    \
+                   self.decode_step_inner(seqs)?;\n    Ok(())\n}\n";
+        assert!(rules("scheduler.rs", src).is_empty());
     }
 
     // -- exemptions --
