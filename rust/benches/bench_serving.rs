@@ -2,6 +2,8 @@
 //! full vs factored keys under identical KV budgets, plus the capacity
 //! comparison (the paper's "~60% more concurrent users"). Also exercises
 //! the Pallas-kernel decode path for the L1 perf comparison.
+use thinkeys::analysis::trajectory;
+use thinkeys::bench::Table;
 use thinkeys::coordinator::engine::Engine;
 use thinkeys::coordinator::kvcache::{KvCacheConfig, KvCacheManager};
 use thinkeys::coordinator::router::Router;
@@ -10,52 +12,27 @@ use thinkeys::coordinator::scheduler::Scheduler;
 use thinkeys::datagen::arrival::closed_loop;
 use thinkeys::experiments::serving;
 use thinkeys::runtime::{ParamStore, Runtime};
-use thinkeys::bench::Table;
-use thinkeys::substrate::json::{arr, num, obj, s, Value};
+use thinkeys::substrate::json::{num, obj, s, Value};
 
 /// Append this run's per-config serving numbers to `BENCH_serving.json`
 /// at the repo root — the perf trajectory across PRs (ROADMAP open item).
 /// Each run entry records throughput, TTFT p50/p99, and the arena gauges
 /// per serving config; the file accumulates so a regression shows up as a
-/// kink in the series rather than a silent drift.
+/// kink in the series rather than a silent drift. The read/append/write
+/// cycle lives in `analysis::trajectory` so the empty-report path is
+/// unit-tested in the library.
 fn record_trajectory(rows: Vec<Value>) {
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()
         .expect("benches live under rust/")
         .join("BENCH_serving.json");
-    let mut runs: Vec<Value> = match std::fs::read_to_string(&path) {
-        Ok(text) => match Value::parse(&text) {
-            Ok(v) => v
-                .opt("runs")
-                .and_then(|r| r.as_arr().ok().map(|a| a.to_vec()))
-                .unwrap_or_default(),
-            Err(e) => {
-                eprintln!(
-                    "BENCH_serving.json unreadable ({e}); restarting \
-                     the series");
-                Vec::new()
-            }
-        },
-        Err(_) => Vec::new(),
-    };
     let unix_time = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs())
         .unwrap_or(0);
-    runs.push(obj(vec![
-        ("unix_time", num(unix_time as f64)),
-        ("configs", arr(rows)),
-    ]));
-    let doc = obj(vec![
-        ("bench", s("serving")),
-        ("runs", arr(runs)),
-    ]);
-    let mut text = doc.to_string();
-    text.push('\n');
-    if let Err(e) = std::fs::write(&path, text) {
-        eprintln!("cannot write {path:?}: {e}");
-    } else {
-        println!("\nperf trajectory appended to {}", path.display());
+    match trajectory::append_run(&path, rows, unix_time) {
+        Ok(_) => println!("\nperf trajectory appended to {}", path.display()),
+        Err(e) => eprintln!("cannot write {path:?}: {e}"),
     }
 }
 
@@ -213,6 +190,45 @@ fn main() {
         "grouped q8 logit error out of bounds: {}",
         gc.gqa_thin_q8_logit_err
     );
+
+    // Shared-prefix paged KV (ISSUE 8 acceptance): N chat users over ONE
+    // system prompt on an identical block pool. With sharing, the prefix
+    // prefills exactly once (prefill tokens == unique tokens, prefix_hits
+    // == N-1), the pool holds strictly more concurrent users, interactive
+    // TTFT p50 is strictly lower, and every user's output is bit-exact vs
+    // the sharing-disabled run.
+    let (prefix_table, prefix_cmp) =
+        serving::shared_prefix_table(&rt, "servethin").unwrap();
+    prefix_table.print();
+    for c in &prefix_cmp {
+        let n = c.users;
+        assert!(c.outputs_match(),
+                "outputs diverged between sharing modes at N={n}");
+        assert_eq!(c.shared.prefill_tokens, c.unique_tokens,
+                   "N={n}: shared run computed more than the unique tokens");
+        assert_eq!(c.shared.prefix_hits, (n as u64) - 1,
+                   "N={n}: every user after the first must adopt the prefix");
+        assert_eq!(c.shared.sync_download_bytes, 0);
+        assert_eq!(c.unshared.sync_download_bytes, 0);
+        assert_eq!(c.unshared.prefix_hits, 0,
+                   "sharing disabled but the prefix tree still matched");
+    }
+    let c8 = prefix_cmp.iter().find(|c| c.users == 8).expect("N=8 row");
+    assert!(
+        c8.shared.peak_concurrent > c8.unshared.peak_concurrent,
+        "sharing must hold strictly more concurrent users on the same \
+         pool: {} vs {}",
+        c8.shared.peak_concurrent, c8.unshared.peak_concurrent
+    );
+    assert!(
+        c8.shared.report.ttft.quantile_us(0.5)
+            < c8.unshared.report.ttft.quantile_us(0.5),
+        "sharing must cut interactive TTFT p50: {:.0}us vs {:.0}us",
+        c8.shared.report.ttft.quantile_us(0.5),
+        c8.unshared.report.ttft.quantile_us(0.5)
+    );
+    assert!(c8.shared.peak_dedup_bytes > 0.0
+                && c8.shared.peak_shared_blocks > 0);
 
     // Pallas-kernel decode path (L1 lowered into the serving HLO)
     let tok_ref = serving::decode_throughput(&rt, "servethin", 8, 10, false)

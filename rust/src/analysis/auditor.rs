@@ -26,6 +26,15 @@
 //!   count equals the engine's row mirror, within its reserved capacity;
 //! - every block table with committed rows is engine-tracked (no leaked
 //!   tables after retirement);
+//! - the paged-block accounting is self-consistent (ISSUE 8,
+//!   `KvCacheManager::refcount_violations`): refcounts equal the number
+//!   of tables holding each block, the free list is exactly the ref==0
+//!   blocks, every prefix-tree registration points at a live block, and
+//!   blocks past a table's `shared_rows` are private (CoW safety);
+//! - the engine's shared-prefix view matches the block accounting
+//!   bidirectionally: per sequence, adopted prefix rows equal the
+//!   table's `shared_rows`; every resident store block is still live in
+//!   the pool (a freed-but-resident block is a missed `drop_blocks`);
 //! - `sync_download_bytes == 0`: steady-state serving never round-trips an
 //!   arena through host memory (device-resident KV is the whole point).
 
@@ -74,6 +83,30 @@ pub fn audit(engine: &Engine, kv: &KvCacheManager) -> Vec<String> {
             v.push(format!(
                 "seq {id:?}: block accounting holds committed rows for a \
                  sequence the engine no longer tracks (leaked table?)"
+            ));
+        }
+    }
+
+    // Paged-block self-consistency: refcounts ↔ tables ↔ free list ↔
+    // prefix tree, plus the CoW privacy invariant (ISSUE 8).
+    v.extend(kv.refcount_violations());
+
+    // Engine shared-prefix view ↔ block accounting, both directions.
+    for (id, _) in &tracked {
+        let adopted = engine.prefix_rows(*id);
+        let shared = kv.shared_rows(*id).unwrap_or(0);
+        if adopted != shared {
+            v.push(format!(
+                "seq {id:?}: engine holds {adopted} shared prefix rows but \
+                 the block table says shared_rows = {shared}"
+            ));
+        }
+    }
+    for b in engine.resident_prefix_blocks() {
+        if kv.block_ref(b) == 0 {
+            v.push(format!(
+                "block {b}: resident in the engine's shared store but free \
+                 in the pool (missed drop_blocks after release?)"
             ));
         }
     }

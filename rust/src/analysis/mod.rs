@@ -23,5 +23,10 @@
 //! The split mirrors how the checks run: `grid` at build/CI time against the
 //! cached artifact grid, `auditor` continuously inside the e2e churn suites.
 
+//! A third, smaller member — [`trajectory`] — owns the perf-trajectory
+//! file (`BENCH_serving.json`) append cycle, so the bench binary and the
+//! empty-report regression test share one implementation.
+
 pub mod auditor;
 pub mod grid;
+pub mod trajectory;

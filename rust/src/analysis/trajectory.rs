@@ -1,0 +1,153 @@
+//! Perf-trajectory persistence: the read/parse/append/write cycle behind
+//! `BENCH_serving.json` (ROADMAP open item), pulled out of the bench
+//! binary so the empty-report path is unit-testable end to end (ISSUE 8
+//! satellite). The file accumulates one entry per bench run; a perf
+//! regression shows up as a kink in the series rather than a silent
+//! drift, so CORRUPTING the file (e.g. by serializing a non-finite rate
+//! as the literal `inf`) silently restarts the series and erases the
+//! baseline — exactly the failure this module and `substrate::json`'s
+//! null-degradation guard close off.
+
+use std::path::Path;
+
+use crate::substrate::json::{arr, num, obj, Value};
+use crate::Result;
+
+/// One run entry: wrap `rows` (per-config measurement objects) with the
+/// caller-supplied unix timestamp, append to the `runs` series in the
+/// JSON document at `path`, and write it back. A missing file starts a
+/// new series; an unparseable file restarts it (with a warning on
+/// stderr, so a corrupted baseline is loud). Returns the serialized
+/// document so callers/tests can assert on exactly what was written.
+pub fn append_run(path: &Path, rows: Vec<Value>, unix_time: u64)
+    -> Result<String> {
+    let mut runs: Vec<Value> = match std::fs::read_to_string(path) {
+        Ok(text) => match Value::parse(&text) {
+            Ok(v) => v
+                .opt("runs")
+                .and_then(|r| r.as_arr().ok().map(|a| a.to_vec()))
+                .unwrap_or_default(),
+            Err(e) => {
+                eprintln!(
+                    "{} unreadable ({e}); restarting the series",
+                    path.display());
+                Vec::new()
+            }
+        },
+        Err(_) => Vec::new(),
+    };
+    runs.push(obj(vec![
+        ("unix_time", num(unix_time as f64)),
+        ("configs", arr(rows)),
+    ]));
+    let doc = obj(vec![
+        ("bench", crate::substrate::json::s("serving")),
+        ("runs", arr(runs)),
+    ]);
+    let mut text = doc.to_string();
+    text.push('\n');
+    std::fs::write(path, &text)?;
+    Ok(text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::{EngineMetrics, ServeReport};
+    use crate::substrate::json::s;
+
+    /// Build a trajectory row the way the bench binary does, straight
+    /// off a report + metrics pair — including the ratio accessors that
+    /// can go non-finite.
+    fn row_for(cfg: &str, report: &ServeReport, m: &EngineMetrics)
+        -> Value {
+        obj(vec![
+            ("config", s(cfg)),
+            ("gen_tok_per_s", num(report.gen_tokens_per_sec())),
+            ("req_per_s", num(report.requests_per_sec())),
+            ("ttft_p50_us", num(report.ttft.quantile_us(0.5))),
+            ("ttft_p99_us", num(report.ttft.quantile_us(0.99))),
+            ("occupancy", num(m.mean_occupancy())),
+            ("copyback_savings",
+             num(m.copyback_savings().unwrap_or(f64::NAN))),
+        ])
+    }
+
+    /// The satellite regression: an EMPTY ServeReport (nothing served,
+    /// `total_s == 0`) driven end to end through the append must yield a
+    /// document that parses back — rates 0 (not NaN), the undefined
+    /// copyback ratio degraded to null (not the literal `NaN`/`inf` that
+    /// used to corrupt the file) — and appending again must EXTEND the
+    /// series rather than restart it.
+    #[test]
+    fn empty_report_appends_a_parseable_run_twice() {
+        let dir = std::env::temp_dir().join(format!(
+            "thinkeys_traj_{}_{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_nanos())
+                .unwrap_or(0)
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_serving.json");
+
+        let report = ServeReport::default();
+        // the historical hazard: work saved entirely -> ratio INFINITY
+        let metrics = EngineMetrics {
+            copyback_bytes_full: 512,
+            ..EngineMetrics::default()
+        };
+        assert_eq!(metrics.copyback_savings(), Some(f64::INFINITY));
+
+        let text1 = append_run(
+            &path, vec![row_for("servethin", &report, &metrics)], 1_000)
+            .unwrap();
+        let doc1 = Value::parse(&text1).expect("first append must parse");
+        assert_eq!(doc1.opt("runs").unwrap().as_arr().unwrap().len(), 1);
+
+        // second append: the series EXTENDS — proof the first write was
+        // not silently corrupt (a parse failure would restart at len 1)
+        let text2 = append_run(
+            &path, vec![row_for("servethin", &report, &metrics)], 2_000)
+            .unwrap();
+        let doc2 = Value::parse(&text2).expect("second append must parse");
+        let runs = doc2.opt("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 2, "series restarted instead of extending");
+
+        // the empty report's rates are finite zeros, and the non-finite
+        // ratio degraded to null in the document
+        let cfgs = runs[1].opt("configs").unwrap().as_arr().unwrap();
+        assert_eq!(cfgs[0].opt("gen_tok_per_s"), Some(&Value::Num(0.0)));
+        assert_eq!(cfgs[0].opt("req_per_s"), Some(&Value::Num(0.0)));
+        assert_eq!(cfgs[0].opt("ttft_p50_us"), Some(&Value::Num(0.0)));
+        assert_eq!(cfgs[0].opt("copyback_savings"), Some(&Value::Null));
+        assert!(!text2.contains("inf") && !text2.contains("NaN"),
+                "non-finite literal leaked into the document: {text2}");
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A pre-existing series written by an older bench run survives the
+    /// refactor: its entries are preserved and extended in order.
+    #[test]
+    fn existing_series_is_extended_in_order() {
+        let dir = std::env::temp_dir().join(format!(
+            "thinkeys_traj_ord_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_serving.json");
+        std::fs::write(
+            &path,
+            "{\"bench\": \"serving\", \"runs\": [{\"unix_time\": 7, \
+             \"configs\": []}]}\n",
+        )
+        .unwrap();
+        let text = append_run(&path, vec![], 9).unwrap();
+        let doc = Value::parse(&text).unwrap();
+        let runs = doc.opt("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].opt("unix_time"), Some(&Value::Num(7.0)));
+        assert_eq!(runs[1].opt("unix_time"), Some(&Value::Num(9.0)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

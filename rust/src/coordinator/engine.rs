@@ -77,6 +77,7 @@ use std::collections::HashMap;
 use anyhow::{bail, Result};
 
 use crate::coordinator::errors::EngineError;
+use crate::coordinator::kvcache::{BlockId, ForkGrant};
 use crate::coordinator::lanes::{self, LaneMap};
 use crate::coordinator::metrics::{ArenaSizing, EngineMetrics};
 use crate::coordinator::sampling::Sampler;
@@ -89,13 +90,42 @@ use crate::runtime::params::ParamStore;
 use crate::substrate::rng::Rng;
 use crate::substrate::tensor::{RowArena, Tensor, TensorI32};
 
-/// Per-sequence parked cache rows, `(L, len, D)` row-major — stored at
-/// the engine's KV quant (fp32 values, or int8 codes + per-row scales).
+/// Per-sequence parked cache rows — stored at the engine's KV quant
+/// (fp32 values, or int8 codes + per-row scales). The arenas hold only
+/// the sequence's PRIVATE rows `[shared_rows, len)` as `(L, len -
+/// shared_rows, D)` row-major; rows `[0, shared_rows)` live in the
+/// shared prefix store ([`Engine::prefix_store`], ISSUE 8) and are
+/// addressed through the sequence's [`PrefixRef`]. `shared_rows == 0`
+/// (every sequence outside the sharing path) reduces to the legacy
+/// full-copy park.
 #[derive(Clone, Debug)]
 struct Parked {
     len: usize,
+    /// Rows held by shared prefix blocks, never by these arenas.
+    shared_rows: usize,
     k: RowArena,
     v: RowArena,
+}
+
+/// One shared prefix block resident host-side: `block_tokens` rows per
+/// layer, `(L, block_tokens, D)` row-major, at the engine's quant.
+/// Immutable once published — CoW guarantees no sequence ever writes a
+/// shared row again, so unpark can scatter these bytes into any lane of
+/// any consumer without copies back.
+#[derive(Clone, Debug)]
+struct KvBlock {
+    k: RowArena,
+    v: RowArena,
+}
+
+/// A sequence's view into the shared prefix store: `blocks[f]` holds its
+/// rows `[f·block_tokens, (f+1)·block_tokens)`; `rows` = `blocks.len() ·
+/// block_tokens`. Mirrors the shared region of the sequence's
+/// `KvCacheManager` block table (auditor-cross-checked).
+#[derive(Clone, Debug)]
+struct PrefixRef {
+    blocks: Vec<BlockId>,
+    rows: usize,
 }
 
 /// In-flight chunked prefill (ISSUE 3): the sequence's prompt has been
@@ -180,6 +210,19 @@ pub struct Engine<'rt> {
     k_group: RowArena,
     v_group: RowArena,
     parked: HashMap<SeqId, Parked>,
+    /// Shared prefix blocks resident host-side (ISSUE 8), keyed by the
+    /// `KvCacheManager` block id. Populated by
+    /// [`Engine::publish_prefix`] / [`Engine::fork_seq`] when a block
+    /// becomes shared, drained by [`Engine::drop_blocks`] when the pool
+    /// frees it — the physical twin of the refcounted block table.
+    prefix_store: HashMap<BlockId, KvBlock>,
+    /// Per-sequence shared-prefix view: which store blocks hold the
+    /// sequence's leading rows.
+    prefix_of: HashMap<SeqId, PrefixRef>,
+    /// Rows per shared block — mirrors `KvCacheConfig::block_tokens`,
+    /// installed by the scheduler ([`Engine::set_block_tokens`]); 0 means
+    /// the sharing machinery is unused (standalone-engine paths).
+    block_tokens: usize,
     /// In-flight chunked prefills (prompt partially ingested).
     chunking: HashMap<SeqId, ChunkProgress>,
     /// Cache rows actually written per live sequence (= tokens fed so
@@ -246,6 +289,9 @@ impl<'rt> Engine<'rt> {
             k_group: RowArena::zeros(quant, kd, 0),
             v_group: RowArena::zeros(quant, vd, 0),
             parked: HashMap::new(),
+            prefix_store: HashMap::new(),
+            prefix_of: HashMap::new(),
+            block_tokens: 0,
             chunking: HashMap::new(),
             rows: HashMap::new(),
             last_prefill_logits: None,
@@ -315,9 +361,36 @@ impl<'rt> Engine<'rt> {
     /// park bit-identical rows in fp32 mode.
     pub fn parked_snapshot(&self, id: SeqId)
         -> Option<(usize, Vec<f32>, Vec<f32>)> {
-        self.parked
-            .get(&id)
-            .map(|p| (p.len, p.k.to_f32(), p.v.to_f32()))
+        let p = self.parked.get(&id)?;
+        if p.shared_rows == 0 {
+            return Some((p.len, p.k.to_f32(), p.v.to_f32()));
+        }
+        // shared-prefix sequence: reassemble the full (L, len, D) view
+        // from the store blocks + the private tail, so the parity oracle
+        // is indifferent to where the rows physically live
+        let (l, kd, vd) = (self.cfg.n_layers, self.cfg.k_cache_dims,
+                           self.cfg.v_cache_dims);
+        let bt = self.block_tokens;
+        let priv_len = p.len - p.shared_rows;
+        let mut k = RowArena::zeros(self.quant, kd, l * p.len);
+        let mut v = RowArena::zeros(self.quant, vd, l * p.len);
+        if let Some(pref) = self.prefix_of.get(&id) {
+            for (f, bid) in pref.blocks.iter().enumerate() {
+                let blk = self.prefix_store.get(bid)
+                    .expect("prefix block of a parked sequence is resident");
+                for li in 0..l {
+                    k.copy_rows(li * p.len + f * bt, &blk.k, li * bt, bt);
+                    v.copy_rows(li * p.len + f * bt, &blk.v, li * bt, bt);
+                }
+            }
+        }
+        for li in 0..l {
+            k.copy_rows(li * p.len + p.shared_rows, &p.k, li * priv_len,
+                        priv_len);
+            v.copy_rows(li * p.len + p.shared_rows, &p.v, li * priv_len,
+                        priv_len);
+        }
+        Some((p.len, k.to_f32(), v.to_f32()))
     }
 
     fn param_args(&self) -> Vec<Arg<'_>> {
@@ -421,6 +494,28 @@ impl<'rt> Engine<'rt> {
         -> Result<(), EngineError> {
         self.validate_prompt(seq, "prefill")?;
         let id = seq.id;
+        // A prefix hit (ISSUE 8) makes the adopted rows free: ingest only
+        // the suffix through the resumable chunk artifacts (the chunk
+        // path seeds its arenas from the shared blocks and starts at the
+        // adopted row). The monolithic artifact computes every position
+        // unconditionally, so it would throw the hit away.
+        let adopted =
+            self.prefix_of.get(&id).map(|p| p.rows).unwrap_or(0);
+        if adopted > 0 && !self.pallas {
+            if let Some(chunk) =
+                self.chunk_sizes().iter().copied().max()
+            {
+                loop {
+                    match self.prefill_chunk(seq, chunk) {
+                        Ok(true) => return Ok(()),
+                        Ok(false) => {}
+                        Err(e) => return Err(e),
+                    }
+                }
+            }
+        }
+        // no chunk artifacts exported (or pallas): full monolithic
+        // compute; park_prefilled still stores only the private suffix
         self.prefill_inner(seq)
             .map_err(|e| EngineError::from_runtime("prefill", e, |_| Some(id)))
     }
@@ -467,11 +562,22 @@ impl<'rt> Engine<'rt> {
         let p = seq.prompt.len();
         let (l, kd, vd) = (self.cfg.n_layers, self.cfg.k_cache_dims,
                            self.cfg.v_cache_dims);
-        let mut pk = RowArena::zeros(self.quant, kd, l * p);
-        let mut pv = RowArena::zeros(self.quant, vd, l * p);
+        // adopted prefix rows already live in the shared store — park
+        // only the private suffix (identical bytes either way: the
+        // monolithic compute of a shared prefix is bit-equal to the
+        // donor's, but the shared copy is the addressable one)
+        let shared = self.prefix_of.get(&seq.id).map(|pr| pr.rows)
+            .unwrap_or(0);
+        let priv_len = p - shared;
+        let mut pk = RowArena::zeros(self.quant, kd, l * priv_len);
+        let mut pv = RowArena::zeros(self.quant, vd, l * priv_len);
         for li in 0..l {
-            pk.write_f32_rows(li * p, &k[li * s * kd..(li * s + p) * kd], p);
-            pv.write_f32_rows(li * p, &v[li * s * vd..(li * s + p) * vd], p);
+            pk.write_f32_rows(li * priv_len,
+                              &k[(li * s + shared) * kd..(li * s + p) * kd],
+                              priv_len);
+            pv.write_f32_rows(li * priv_len,
+                              &v[(li * s + shared) * vd..(li * s + p) * vd],
+                              priv_len);
         }
         self.park_arenas(seq, pk, pv, logits);
     }
@@ -484,8 +590,12 @@ impl<'rt> Engine<'rt> {
     fn park_arenas(&mut self, seq: &mut Sequence, pk: RowArena,
                    pv: RowArena, logits: Tensor) {
         let p = seq.prompt.len();
-        debug_assert_eq!(pk.rows, self.cfg.n_layers * p);
-        self.parked.insert(seq.id, Parked { len: p, k: pk, v: pv });
+        let shared = self.prefix_of.get(&seq.id).map(|pr| pr.rows)
+            .unwrap_or(0);
+        debug_assert_eq!(pk.rows, self.cfg.n_layers * (p - shared));
+        self.parked.insert(seq.id,
+                           Parked { len: p, shared_rows: shared, k: pk,
+                                    v: pv });
         self.rows.insert(seq.id, p);
         let tok = self.sampler.sample(&logits.data, &mut self.rng);
         self.last_prefill_logits = Some(logits);
@@ -559,19 +669,41 @@ impl<'rt> Engine<'rt> {
                            self.cfg.v_cache_dims);
         if !self.chunking.contains_key(&seq.id) {
             // first chunk: fresh zero arenas, uploaded once as literals —
-            // counted against the sync contract like any arena upload
-            let k = RowArena::zeros(self.quant, kd, l * s);
-            let v = RowArena::zeros(self.quant, vd, l * s);
+            // counted against the sync contract like any arena upload.
+            // An adopted prefix (ISSUE 8) seeds rows [0, adopted) from
+            // the shared store before the upload, and ingestion resumes
+            // at the adopted row: the hit's rows are never recomputed,
+            // never re-downloaded, and the chunk artifact's causal mask
+            // attends to them like any previously ingested rows.
+            let mut k = RowArena::zeros(self.quant, kd, l * s);
+            let mut v = RowArena::zeros(self.quant, vd, l * s);
+            let mut adopted = 0;
+            if let Some(pref) = self.prefix_of.get(&seq.id) {
+                let bt = self.block_tokens;
+                for (f, bid) in pref.blocks.iter().enumerate() {
+                    let blk = self.prefix_store.get(bid).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "seq {}: adopted prefix block {bid} is not \
+                             resident in the prefix store",
+                            seq.id)
+                    })?;
+                    for li in 0..l {
+                        k.copy_rows(li * s + f * bt, &blk.k, li * bt, bt);
+                        v.copy_rows(li * s + f * bt, &blk.v, li * bt, bt);
+                    }
+                }
+                adopted = pref.rows;
+            }
             let (k_lit, k_scale_lit) = Self::arena_literals(&k, &[l, s, kd])?;
             let (v_lit, v_scale_lit) = Self::arena_literals(&v, &[l, s, vd])?;
             self.metrics.sync_upload_bytes +=
                 (k.payload_bytes() + k.scale_bytes() + v.payload_bytes()
                  + v.scale_bytes()) as u64;
             let prog = ChunkProgress {
-                done: 0, k_lit, v_lit, k_scale_lit, v_scale_lit, k, v,
+                done: adopted, k_lit, v_lit, k_scale_lit, v_scale_lit, k, v,
             };
             self.chunking.insert(seq.id, prog);
-            self.rows.insert(seq.id, 0);
+            self.rows.insert(seq.id, adopted);
         }
         let start = self.chunking[&seq.id].done;
         debug_assert!(start < p, "chunk past end of prompt");
@@ -671,14 +803,18 @@ impl<'rt> Engine<'rt> {
             return Ok(false);
         }
         // final chunk: the host mirror holds every prompt row — compact
-        // its first p rows per layer and park through the same epilogue
-        // the monolithic prefill uses
+        // the private rows per layer and park through the same epilogue
+        // the monolithic prefill uses (adopted prefix rows stay in the
+        // shared store; the parked arenas never duplicate them)
         let prog = self.chunking.remove(&seq.id).expect("chunk progress");
-        let mut pk = RowArena::zeros(self.quant, kd, l * p);
-        let mut pv = RowArena::zeros(self.quant, vd, l * p);
+        let shared = self.prefix_of.get(&seq.id).map(|pr| pr.rows)
+            .unwrap_or(0);
+        let priv_len = p - shared;
+        let mut pk = RowArena::zeros(self.quant, kd, l * priv_len);
+        let mut pv = RowArena::zeros(self.quant, vd, l * priv_len);
         for li in 0..l {
-            pk.copy_rows(li * p, &prog.k, li * s, p);
-            pv.copy_rows(li * p, &prog.v, li * s, p);
+            pk.copy_rows(li * priv_len, &prog.k, li * s + shared, priv_len);
+            pv.copy_rows(li * priv_len, &prog.v, li * s + shared, priv_len);
         }
         self.park_arenas(seq, pk, pv, logits);
         Ok(true)
@@ -722,12 +858,30 @@ impl<'rt> Engine<'rt> {
     fn unpark_into(&mut self, id: SeqId, lane: usize) {
         let (l, n) = (self.cfg.n_layers, self.tier);
         let b = self.lanes.bucket();
+        // shared prefix rows come from the store blocks; the lane mirror
+        // gets a full private copy (decode artifacts address one dense
+        // arena), but the parked/host dedup is preserved — the arena is
+        // transient working state, freed rows move back private-only
+        if let Some(pref) = self.prefix_of.get(&id) {
+            let bt = self.block_tokens;
+            for (f, bid) in pref.blocks.iter().enumerate() {
+                let blk = self.prefix_store.get(bid)
+                    .expect("unpark: adopted prefix block is resident");
+                for li in 0..l {
+                    self.k_group.copy_rows((li * b + lane) * n + f * bt,
+                                           &blk.k, li * bt, bt);
+                    self.v_group.copy_rows((li * b + lane) * n + f * bt,
+                                           &blk.v, li * bt, bt);
+                }
+            }
+        }
         let p = self.parked.get(&id).expect("unpark of unknown seq");
+        let priv_len = p.len - p.shared_rows;
         for li in 0..l {
-            self.k_group.copy_rows((li * b + lane) * n, &p.k, li * p.len,
-                                   p.len);
-            self.v_group.copy_rows((li * b + lane) * n, &p.v, li * p.len,
-                                   p.len);
+            self.k_group.copy_rows((li * b + lane) * n + p.shared_rows,
+                                   &p.k, li * priv_len, priv_len);
+            self.v_group.copy_rows((li * b + lane) * n + p.shared_rows,
+                                   &p.v, li * priv_len, priv_len);
         }
     }
 
@@ -737,16 +891,21 @@ impl<'rt> Engine<'rt> {
         let (l, n) = (self.cfg.n_layers, self.tier);
         let (kd, vd) = (self.cfg.k_cache_dims, self.cfg.v_cache_dims);
         let b = self.lanes.bucket();
+        // shared prefix rows are immutable (CoW) and still live in the
+        // store — only the private tail copies back
+        let shared = self.prefix_of.get(&id).map(|pr| pr.rows).unwrap_or(0);
+        let priv_len = len - shared;
         let mut parked = Parked {
             len,
-            k: RowArena::zeros(self.quant, kd, l * len),
-            v: RowArena::zeros(self.quant, vd, l * len),
+            shared_rows: shared,
+            k: RowArena::zeros(self.quant, kd, l * priv_len),
+            v: RowArena::zeros(self.quant, vd, l * priv_len),
         };
         for li in 0..l {
-            parked.k.copy_rows(li * len, &self.k_group,
-                               (li * b + lane) * n, len);
-            parked.v.copy_rows(li * len, &self.v_group,
-                               (li * b + lane) * n, len);
+            parked.k.copy_rows(li * priv_len, &self.k_group,
+                               (li * b + lane) * n + shared, priv_len);
+            parked.v.copy_rows(li * priv_len, &self.v_group,
+                               (li * b + lane) * n + shared, priv_len);
         }
         self.parked.insert(id, parked);
     }
@@ -1051,12 +1210,257 @@ impl<'rt> Engine<'rt> {
         Ok(())
     }
 
+    /// Install the shared-prefix block geometry (rows per block). Set by
+    /// the scheduler from its `KvCacheConfig` before any sharing call.
+    pub fn set_block_tokens(&mut self, block_tokens: usize) {
+        debug_assert!(self.prefix_store.is_empty(),
+                      "block geometry change with resident prefix blocks");
+        self.block_tokens = block_tokens;
+    }
+
+    /// Tokens per shared prefix block (0 = sharing unused).
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Rows sequence `id` addresses through shared prefix blocks.
+    pub fn prefix_rows(&self, id: SeqId) -> usize {
+        self.prefix_of.get(&id).map(|p| p.rows).unwrap_or(0)
+    }
+
+    /// Shared prefix blocks currently resident host-side, in id order
+    /// (auditor surface: must equal the refcounted pool's shared set).
+    pub fn resident_prefix_blocks(&self) -> Vec<BlockId> {
+        let mut v: Vec<BlockId> = self.prefix_store.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Point a not-yet-prefilled sequence at the shared blocks its
+    /// admission matched (`KvCacheManager::allocate_prompt`): rows `[0,
+    /// rows)` are adopted from the store and skipped by both prefill
+    /// paths. Fails if a matched block is not resident — that would mean
+    /// the logical block table and the physical store diverged.
+    pub fn adopt_prefix(&mut self, id: SeqId, blocks: &[BlockId],
+                        rows: usize) -> Result<()> {
+        if rows == 0 {
+            return Ok(());
+        }
+        if self.block_tokens == 0
+            || blocks.len() * self.block_tokens != rows
+        {
+            bail!(
+                "adopt_prefix: {} blocks x {} tokens != {rows} rows",
+                blocks.len(),
+                self.block_tokens
+            );
+        }
+        for bid in blocks {
+            if !self.prefix_store.contains_key(bid) {
+                bail!("adopt_prefix: block {bid} is not resident");
+            }
+        }
+        self.prefix_of.insert(
+            id,
+            PrefixRef { blocks: blocks.to_vec(), rows });
+        Ok(())
+    }
+
+    /// Publish a freshly sealed prefix (`KvCacheManager::seal_prefix`)
+    /// while the donor is still parked: move the newly registered blocks'
+    /// rows out of the donor's private arenas into the shared store and
+    /// shrink the parked copy to the private tail — from here on those
+    /// rows exist host-side exactly once, however many sequences adopt
+    /// them.
+    pub fn publish_prefix(&mut self, id: SeqId,
+                          newly: &[(usize, BlockId)], blocks: &[BlockId],
+                          shared_rows: usize) -> Result<()> {
+        if shared_rows == 0 {
+            return Ok(());
+        }
+        let (l, kd, vd, bt) = (self.cfg.n_layers, self.cfg.k_cache_dims,
+                               self.cfg.v_cache_dims, self.block_tokens);
+        let p = self.parked.get(&id).ok_or_else(|| {
+            anyhow::anyhow!("publish_prefix: seq {id} is not parked")
+        })?;
+        let r0 = p.shared_rows;
+        if shared_rows < r0 || shared_rows > p.len || bt == 0
+            || shared_rows % bt != 0
+        {
+            bail!(
+                "publish_prefix: shared rows {shared_rows} invalid (had \
+                 {r0}, len {}, block {bt})",
+                p.len
+            );
+        }
+        let priv_old = p.len - r0;
+        for &(f, bid) in newly {
+            if f * bt < r0 || (f + 1) * bt > shared_rows {
+                bail!("publish_prefix: block index {f} outside ({r0}..\
+                       {shared_rows})");
+            }
+            let mut blk = KvBlock {
+                k: RowArena::zeros(self.quant, kd, l * bt),
+                v: RowArena::zeros(self.quant, vd, l * bt),
+            };
+            for li in 0..l {
+                blk.k.copy_rows(li * bt, &p.k,
+                                li * priv_old + (f * bt - r0), bt);
+                blk.v.copy_rows(li * bt, &p.v,
+                                li * priv_old + (f * bt - r0), bt);
+            }
+            self.prefix_store.insert(bid, blk);
+        }
+        // shrink the parked copy: rows [r0, shared_rows) now live in the
+        // store, only [shared_rows, len) stays private
+        if shared_rows > r0 {
+            let p = self.parked.get(&id).expect("parked checked above");
+            let priv_new = p.len - shared_rows;
+            let mut pk = RowArena::zeros(self.quant, kd, l * priv_new);
+            let mut pv = RowArena::zeros(self.quant, vd, l * priv_new);
+            for li in 0..l {
+                pk.copy_rows(li * priv_new, &p.k,
+                             li * priv_old + (shared_rows - r0), priv_new);
+                pv.copy_rows(li * priv_new, &p.v,
+                             li * priv_old + (shared_rows - r0), priv_new);
+            }
+            let len = p.len;
+            self.parked.insert(
+                id, Parked { len, shared_rows, k: pk, v: pv });
+        }
+        self.prefix_of.insert(
+            id,
+            PrefixRef { blocks: blocks.to_vec(), rows: shared_rows });
+        Ok(())
+    }
+
+    /// Materialize a copy-on-write fork (`KvCacheManager::fork`): publish
+    /// the parent's newly shared full blocks, point both sequences at
+    /// them, and copy ONLY the parent's partial tail rows into the
+    /// child's private parked storage (the `cow_split`). The child parks
+    /// with the parent's full written history and decodes independently
+    /// from its next step on.
+    pub fn fork_seq(&mut self, parent: SeqId, child: SeqId,
+                    grant: &ForkGrant) -> Result<()> {
+        let (l, kd, vd, bt) = (self.cfg.n_layers, self.cfg.k_cache_dims,
+                               self.cfg.v_cache_dims, self.block_tokens);
+        let w = self.rows(parent);
+        if bt == 0 || grant.shared_rows > w || grant.shared_rows % bt != 0 {
+            bail!(
+                "fork_seq: grant rows {} invalid for parent rows {w} \
+                 (block {bt})",
+                grant.shared_rows
+            );
+        }
+        let priv_len = w - grant.shared_rows;
+        let mut pk = RowArena::zeros(self.quant, kd, l * priv_len);
+        let mut pv = RowArena::zeros(self.quant, vd, l * priv_len);
+        if let Some(lane) = self.lanes.lane_of(parent) {
+            // parent decodes in a lane: the mirror holds all its rows
+            let (b, n) = (self.lanes.bucket(), self.tier);
+            for &(f, bid) in &grant.published {
+                let mut blk = KvBlock {
+                    k: RowArena::zeros(self.quant, kd, l * bt),
+                    v: RowArena::zeros(self.quant, vd, l * bt),
+                };
+                for li in 0..l {
+                    blk.k.copy_rows(li * bt, &self.k_group,
+                                    (li * b + lane) * n + f * bt, bt);
+                    blk.v.copy_rows(li * bt, &self.v_group,
+                                    (li * b + lane) * n + f * bt, bt);
+                }
+                self.prefix_store.insert(bid, blk);
+            }
+            for li in 0..l {
+                pk.copy_rows(li * priv_len, &self.k_group,
+                             (li * b + lane) * n + grant.shared_rows,
+                             priv_len);
+                pv.copy_rows(li * priv_len, &self.v_group,
+                             (li * b + lane) * n + grant.shared_rows,
+                             priv_len);
+            }
+        } else {
+            // parked parent: its arenas hold rows [r0, w)
+            let pp = self.parked.get(&parent).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "fork_seq: parent {parent} has neither lane nor park")
+            })?;
+            let r0 = pp.shared_rows;
+            let priv_old = pp.len - r0;
+            for &(f, bid) in &grant.published {
+                if f * bt < r0 {
+                    bail!("fork_seq: published block {f} already shared");
+                }
+                let mut blk = KvBlock {
+                    k: RowArena::zeros(self.quant, kd, l * bt),
+                    v: RowArena::zeros(self.quant, vd, l * bt),
+                };
+                for li in 0..l {
+                    blk.k.copy_rows(li * bt, &pp.k,
+                                    li * priv_old + (f * bt - r0), bt);
+                    blk.v.copy_rows(li * bt, &pp.v,
+                                    li * priv_old + (f * bt - r0), bt);
+                }
+                self.prefix_store.insert(bid, blk);
+            }
+            let pp = self.parked.get(&parent).expect("parked checked");
+            for li in 0..l {
+                pk.copy_rows(li * priv_len, &pp.k,
+                             li * priv_old + (grant.shared_rows - r0),
+                             priv_len);
+                pv.copy_rows(li * priv_len, &pp.v,
+                             li * priv_old + (grant.shared_rows - r0),
+                             priv_len);
+            }
+            // the parent's parked copy shrinks to its new private tail
+            if grant.shared_rows > r0 {
+                let len = pp.len;
+                let priv_new = len - grant.shared_rows;
+                let mut nk = RowArena::zeros(self.quant, kd, l * priv_new);
+                let mut nv = RowArena::zeros(self.quant, vd, l * priv_new);
+                for li in 0..l {
+                    nk.copy_rows(li * priv_new, &pp.k,
+                                 li * priv_old + (grant.shared_rows - r0),
+                                 priv_new);
+                    nv.copy_rows(li * priv_new, &pp.v,
+                                 li * priv_old + (grant.shared_rows - r0),
+                                 priv_new);
+                }
+                self.parked.insert(
+                    parent,
+                    Parked { len, shared_rows: grant.shared_rows, k: nk,
+                             v: nv });
+            }
+        }
+        let pref = PrefixRef {
+            blocks: grant.shared_blocks.clone(),
+            rows: grant.shared_rows,
+        };
+        self.prefix_of.insert(parent, pref.clone());
+        self.prefix_of.insert(child, pref);
+        self.parked.insert(
+            child,
+            Parked { len: w, shared_rows: grant.shared_rows, k: pk, v: pv });
+        self.rows.insert(child, w);
+        Ok(())
+    }
+
+    /// Drop freed blocks from the shared prefix store. Fed by the
+    /// scheduler with `KvCacheManager::release`'s freed list, so a block
+    /// leaves the store on exactly the event that frees it in the pool.
+    pub fn drop_blocks(&mut self, blocks: &[BlockId]) {
+        for bid in blocks {
+            self.prefix_store.remove(bid);
+        }
+    }
+
     /// Forget a sequence's cache storage. If it held a lane, the lane
     /// becomes a hole — no bytes move, no regroup is scheduled; survivors
     /// keep decoding from their existing lanes.
     pub fn drop_seq(&mut self, id: SeqId) {
         self.parked.remove(&id);
         self.chunking.remove(&id); // cancel an in-flight chunked prefill
+        self.prefix_of.remove(&id);
         self.rows.remove(&id);
         if self.lanes.remove(id) {
             self.metrics.lane_leaves += 1;
@@ -1073,8 +1477,10 @@ impl<'rt> Engine<'rt> {
     }
 
     /// Bytes of host cache storage currently parked (diagnostics) —
-    /// completed-prefill rows plus in-flight chunked-prefill mirrors,
-    /// payload + scale planes at the engine's quant.
+    /// completed-prefill rows, in-flight chunked-prefill mirrors, and
+    /// shared prefix blocks (each counted ONCE however many sequences
+    /// adopt it — the dedup is visible right here), payload + scale
+    /// planes at the engine's quant.
     pub fn parked_bytes(&self) -> usize {
         let arena = |k: &RowArena, v: &RowArena| {
             k.payload_bytes() + k.scale_bytes() + v.payload_bytes()
@@ -1084,7 +1490,9 @@ impl<'rt> Engine<'rt> {
             self.parked.values().map(|p| arena(&p.k, &p.v)).sum();
         let chunking: usize =
             self.chunking.values().map(|p| arena(&p.k, &p.v)).sum();
-        parked + chunking
+        let shared: usize =
+            self.prefix_store.values().map(|blk| arena(&blk.k, &blk.v)).sum();
+        parked + chunking + shared
     }
 
     /// Sequences currently holding a decode lane, in lane order.
@@ -1188,25 +1596,93 @@ impl<'rt> Engine<'rt> {
         }
 
         // parked rows: accounting matches storage, storage is well-formed
+        // (the arenas hold only the private rows past the shared prefix)
         for (&id, p) in &self.parked {
             if self.rows.get(&id) != Some(&p.len) {
                 violate(format!(
                     "parked seq {id}: rows {:?} != parked len {}",
                     self.rows.get(&id), p.len));
             }
+            if p.shared_rows > p.len {
+                violate(format!(
+                    "parked seq {id}: shared rows {} exceed len {}",
+                    p.shared_rows, p.len));
+            }
+            if p.shared_rows
+                != self.prefix_of.get(&id).map(|pr| pr.rows).unwrap_or(0)
+            {
+                violate(format!(
+                    "parked seq {id}: shared rows {} != prefix view {:?}",
+                    p.shared_rows,
+                    self.prefix_of.get(&id).map(|pr| pr.rows)));
+            }
+            let priv_len = p.len.saturating_sub(p.shared_rows);
             for (label, arena) in [("k", &p.k), ("v", &p.v)] {
                 if let Err(e) = arena.check() {
                     violate(format!("parked seq {id} {label}: {e}"));
                 }
-                if arena.rows != l * p.len {
+                if arena.rows != l * priv_len {
                     violate(format!(
-                        "parked seq {id} {label}: {} rows != L·len = \
-                         {l}·{}",
-                        arena.rows, p.len));
+                        "parked seq {id} {label}: {} rows != L·private = \
+                         {l}·{priv_len}",
+                        arena.rows));
                 }
             }
             if self.lanes.lane_of(id).is_some() {
                 violate(format!("seq {id} is parked AND holds a lane"));
+            }
+        }
+
+        // shared prefix store (ISSUE 8): every adopted view points at
+        // resident, block-shaped storage; every resident block is
+        // adopted by someone (an orphan block is a leaked publish)
+        let bt = self.block_tokens;
+        for (&id, pref) in &self.prefix_of {
+            if bt == 0 || pref.blocks.len() * bt != pref.rows {
+                violate(format!(
+                    "seq {id}: prefix view {} blocks x {bt} != {} rows",
+                    pref.blocks.len(), pref.rows));
+            }
+            if self.lanes.lane_of(id).is_none()
+                && !self.parked.contains_key(&id)
+                && !self.chunking.contains_key(&id)
+            {
+                violate(format!(
+                    "seq {id} has a prefix view but no cache storage"));
+            }
+            for bid in &pref.blocks {
+                match self.prefix_store.get(bid) {
+                    None => violate(format!(
+                        "seq {id}: adopted block {bid} is not resident")),
+                    Some(blk) => {
+                        for (label, arena, d) in [
+                            ("k", &blk.k, self.cfg.k_cache_dims),
+                            ("v", &blk.v, self.cfg.v_cache_dims),
+                        ] {
+                            if let Err(e) = arena.check() {
+                                violate(format!(
+                                    "prefix block {bid} {label}: {e}"));
+                            }
+                            if arena.rows != l * bt || arena.d != d {
+                                violate(format!(
+                                    "prefix block {bid} {label}: \
+                                     {}x{} != L·bt = {l}·{bt} x {d}",
+                                    arena.rows, arena.d));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for &bid in self.prefix_store.keys() {
+            if !self
+                .prefix_of
+                .values()
+                .any(|pref| pref.blocks.contains(&bid))
+            {
+                violate(format!(
+                    "prefix block {bid} is resident but no sequence \
+                     adopts it (leaked publish)"));
             }
         }
 
@@ -1335,8 +1811,29 @@ impl<'rt> Engine<'rt> {
             let p = &self.parked[&id];
             h.u64(id);
             h.u64(p.len as u64);
+            h.u64(p.shared_rows as u64);
             h.arena(&p.k);
             h.arena(&p.v);
+        }
+        let mut block_ids: Vec<BlockId> =
+            self.prefix_store.keys().copied().collect();
+        block_ids.sort_unstable();
+        for bid in block_ids {
+            let blk = &self.prefix_store[&bid];
+            h.u64(bid as u64);
+            h.arena(&blk.k);
+            h.arena(&blk.v);
+        }
+        let mut pref_ids: Vec<SeqId> =
+            self.prefix_of.keys().copied().collect();
+        pref_ids.sort_unstable();
+        for id in pref_ids {
+            let pref = &self.prefix_of[&id];
+            h.u64(id);
+            h.u64(pref.rows as u64);
+            for &bid in &pref.blocks {
+                h.u64(bid as u64);
+            }
         }
         let mut chunk_ids: Vec<SeqId> =
             self.chunking.keys().copied().collect();

@@ -1,18 +1,37 @@
-//! Paged KV cache with **split K/V pools** — the paper's key asymmetry as a
-//! memory manager.
+//! Paged KV cache: a **refcounted block pool** with per-sequence block
+//! tables and copy-on-write shared-prefix sharing (vLLM-style, ISSUE 8).
 //!
-//! Standard paged attention (vLLM) allocates unified KV blocks. Factored
-//! keys make K entries `r/d` the size of V entries, so we keep two block
-//! pools with independent per-token byte costs; capacity accounting is
-//! exact and doubles as the Table 10 calculator. Quantized deployments are
-//! modeled by the per-element byte widths (bf16 = 2, int8 = 1, int4 = 0.5),
-//! which is how the 16x composed compression of §6 is exercised.
+//! Factored keys make K entries `r/d` the size of V entries; the pool
+//! tracks both surfaces per block (a token always needs one K slot *and*
+//! one V slot, so the K/V pools were always symmetric — one `BlockId`
+//! addresses both, with independent per-token byte costs for the
+//! capacity accounting that doubles as the Table 10 calculator).
+//! Quantized deployments are modeled by the per-element byte widths
+//! (bf16 = 2, int8 = 1, int4 = 0.5) — the 16x composed compression of §6.
+//!
+//! Sharing model (ISSUE 8): a radix tree over exact `block_tokens`-sized
+//! prompt chunks maps a prefix path to the blocks that physically hold
+//! it. Admission walks the tree ([`KvCacheManager::allocate_prompt`]) —
+//! every matched block is adopted into the new table with a refcount
+//! bump and its rows are **never prefilled again**; the first divergent
+//! token gets a private fresh block (copy-on-write: shared blocks are
+//! immutable, writes only ever land in ref==1 unregistered blocks).
+//! A completed prefill registers its full-prompt blocks
+//! ([`KvCacheManager::seal_prefix`]); registration is *weak* — the tree
+//! holds no refcount, so when the last table drops a block the block is
+//! freed AND its tree node deregistered, preserving the drain invariant
+//! (`free == total` after release, no persistent cache).
+//! [`KvCacheManager::fork`] shares a running sequence's full written
+//! blocks with a child refcount-only and copies just the partial tail
+//! block (`cow_split`).
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
 pub type SeqId = u64;
+/// Index into the block pool; one id addresses the paired K+V block.
+pub type BlockId = usize;
 
 #[derive(Clone, Debug)]
 pub struct KvCacheConfig {
@@ -45,6 +64,11 @@ impl KvCacheConfig {
     pub fn token_capacity(&self) -> usize {
         (self.budget_bytes / self.bytes_per_token()) as usize
     }
+
+    /// K+V bytes held by one block (both surfaces, all layers).
+    pub fn block_bytes(&self) -> f64 {
+        self.block_tokens as f64 * self.bytes_per_token()
+    }
 }
 
 #[derive(Clone, Debug, Default)]
@@ -54,33 +78,243 @@ struct BlockTable {
     /// mirrored from `Engine::rows` by the scheduler so the logical
     /// reservation and the physical arena stay in agreement.
     rows_written: usize,
-    k_blocks: Vec<usize>,
-    v_blocks: Vec<usize>,
+    blocks: Vec<BlockId>,
+    /// Rows addressed through possibly-shared blocks (always a multiple
+    /// of `block_tokens`). Blocks past `shared_rows / block_tokens` are
+    /// private: refcount 1, never tree-registered — the only blocks this
+    /// sequence may still write (the CoW privacy invariant).
+    shared_rows: usize,
 }
 
-/// One pool of fixed-size blocks (indices only; storage lives in the
-/// engine's arenas / parked buffers).
+/// The refcounted block pool. `refs[b] == 0` ⟺ `b` is on the free list;
+/// sharing a block is a refcount bump, the last release frees it.
 #[derive(Clone, Debug)]
 struct Pool {
     total: usize,
-    free: Vec<usize>,
+    free: Vec<BlockId>,
+    refs: Vec<u32>,
 }
 
 impl Pool {
     fn new(total: usize) -> Pool {
-        Pool { total, free: (0..total).rev().collect() }
+        Pool { total, free: (0..total).rev().collect(), refs: vec![0; total] }
     }
 
     fn used(&self) -> usize {
         self.total - self.free.len()
     }
+
+    fn alloc(&mut self) -> Option<BlockId> {
+        let b = self.free.pop()?;
+        self.refs[b] = 1;
+        Some(b)
+    }
+
+    fn retain(&mut self, b: BlockId) {
+        self.refs[b] += 1;
+    }
+
+    /// Drop one reference; returns true when the block is freed.
+    fn release(&mut self, b: BlockId) -> bool {
+        debug_assert!(self.refs[b] > 0, "release of a free block");
+        self.refs[b] = self.refs[b].saturating_sub(1);
+        if self.refs[b] == 0 {
+            self.free.push(b);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Radix tree over exact `block_tokens`-sized prompt chunks. Each node
+/// owns one block; children are keyed by the next full chunk of prompt
+/// tokens. Registration is weak: the tree never holds a refcount, and a
+/// freed block's node is removed in the same release.
+#[derive(Clone, Debug, Default)]
+struct PrefixNode {
+    chunk: Vec<i32>,
+    block: BlockId,
+    parent: Option<usize>,
+    children: BTreeMap<Vec<i32>, usize>,
+}
+
+#[derive(Clone, Debug, Default)]
+struct PrefixTree {
+    nodes: Vec<Option<PrefixNode>>,
+    free_slots: Vec<usize>,
+    roots: BTreeMap<Vec<i32>, usize>,
+    node_of_block: BTreeMap<BlockId, usize>,
+}
+
+impl PrefixTree {
+    /// Longest registered prefix path along `chunks`, as the blocks that
+    /// hold it.
+    fn lookup(&self, chunks: &[&[i32]]) -> Vec<BlockId> {
+        let mut out = Vec::new();
+        let mut level = &self.roots;
+        for &chunk in chunks {
+            let Some(&slot) = level.get(chunk) else { break };
+            let Some(node) = self.nodes[slot].as_ref() else { break };
+            out.push(node.block);
+            level = &node.children;
+        }
+        out
+    }
+
+    /// Walk/extend the tree along `chunks`, registering `blocks[i]` at
+    /// every depth that has no node yet. Returns `(depth, newly)`: the
+    /// number of leading chunks whose node holds OUR block (pre-existing
+    /// match or fresh registration — a node holding a *different* block
+    /// is a physically divergent twin prefix and stops the walk), and the
+    /// freshly registered `(chunk index, block)` pairs.
+    fn register(&mut self, chunks: &[&[i32]], blocks: &[BlockId])
+        -> (usize, Vec<(usize, BlockId)>) {
+        let mut newly = Vec::new();
+        let mut parent: Option<usize> = None;
+        let mut depth = 0;
+        for (i, &chunk) in chunks.iter().enumerate() {
+            let existing = match parent {
+                None => self.roots.get(chunk).copied(),
+                Some(p) => self.nodes[p]
+                    .as_ref()
+                    .and_then(|n| n.children.get(chunk).copied()),
+            };
+            match existing {
+                Some(slot) => {
+                    let node = self.nodes[slot].as_ref().expect(
+                        "prefix tree: live child points at a freed slot");
+                    if node.block != blocks[i] {
+                        break;
+                    }
+                    parent = Some(slot);
+                }
+                None => {
+                    let node = PrefixNode {
+                        chunk: chunk.to_vec(),
+                        block: blocks[i],
+                        parent,
+                        children: BTreeMap::new(),
+                    };
+                    let slot = match self.free_slots.pop() {
+                        Some(slot) => {
+                            self.nodes[slot] = Some(node);
+                            slot
+                        }
+                        None => {
+                            self.nodes.push(Some(node));
+                            self.nodes.len() - 1
+                        }
+                    };
+                    match parent {
+                        None => {
+                            self.roots.insert(chunk.to_vec(), slot);
+                        }
+                        Some(p) => {
+                            if let Some(pn) = self.nodes[p].as_mut() {
+                                pn.children.insert(chunk.to_vec(), slot);
+                            }
+                        }
+                    }
+                    self.node_of_block.insert(blocks[i], slot);
+                    newly.push((i, blocks[i]));
+                    parent = Some(slot);
+                }
+            }
+            depth = i + 1;
+        }
+        (depth, newly)
+    }
+
+    /// Remove a freed block's node. Safe against same-batch parent frees:
+    /// refcounts are non-increasing root→leaf (every holder of a child
+    /// block holds the whole path), so a parent freed in this release has
+    /// all its children freed in the same release.
+    fn deregister(&mut self, block: BlockId) {
+        let Some(slot) = self.node_of_block.remove(&block) else { return };
+        let Some(node) = self.nodes[slot].take() else { return };
+        self.free_slots.push(slot);
+        match node.parent {
+            None => {
+                self.roots.remove(&node.chunk);
+            }
+            Some(p) => {
+                if let Some(pn) =
+                    self.nodes.get_mut(p).and_then(|n| n.as_mut())
+                {
+                    pn.children.remove(&node.chunk);
+                }
+            }
+        }
+    }
+
+    fn is_registered(&self, block: BlockId) -> bool {
+        self.node_of_block.contains_key(&block)
+    }
+
+    fn registered(&self) -> impl Iterator<Item = BlockId> + '_ {
+        self.node_of_block.keys().copied()
+    }
+
+    fn len(&self) -> usize {
+        self.node_of_block.len()
+    }
+}
+
+/// What a prompt admission matched in the prefix tree: the adopted
+/// (refcount-bumped) blocks and the rows they hold — rows the engine
+/// never prefills again.
+#[derive(Clone, Debug, Default)]
+pub struct PrefixGrant {
+    pub matched_rows: usize,
+    pub matched_blocks: Vec<BlockId>,
+}
+
+/// What sealing a completed prefill registered: the sequence's shared
+/// prefix (all full-prompt blocks on the registered path) plus the
+/// subset the tree had never seen — the engine must publish exactly
+/// those rows into its shared prefix store.
+#[derive(Clone, Debug, Default)]
+pub struct SealOutcome {
+    /// Freshly registered `(block index in table, block)` pairs.
+    pub registered: Vec<(usize, BlockId)>,
+    /// The full shared-prefix block list after sealing.
+    pub blocks: Vec<BlockId>,
+    pub shared_rows: usize,
+}
+
+/// A copy-on-write fork grant: the child shares every full block the
+/// parent has written (refcount only) and privately copies the partial
+/// tail block, if any (`cow_split`).
+#[derive(Clone, Debug, Default)]
+pub struct ForkGrant {
+    pub shared_blocks: Vec<BlockId>,
+    pub shared_rows: usize,
+    /// True when the parent's write frontier split a block: the tail
+    /// rows must be copied into the child's private storage.
+    pub cow_split: bool,
+    /// Parent blocks that BECOME shared by this fork `(block index,
+    /// block)` — previously private, the engine must publish their rows.
+    pub published: Vec<(usize, BlockId)>,
+}
+
+/// Pool-level sharing gauges for [`crate::coordinator::metrics`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SharingStats {
+    /// Blocks referenced by 2+ tables right now.
+    pub shared_blocks: usize,
+    /// Bytes sharing saves vs one private copy per reference.
+    pub dedup_bytes: f64,
+    pub prefix_nodes: usize,
+    pub blocks_used: usize,
+    pub blocks_total: usize,
 }
 
 #[derive(Clone, Debug)]
 pub struct KvCacheManager {
     pub cfg: KvCacheConfig,
-    k_pool: Pool,
-    v_pool: Pool,
+    pool: Pool,
+    tree: PrefixTree,
     tables: BTreeMap<SeqId, BlockTable>,
 }
 
@@ -111,14 +345,15 @@ impl CacheStats {
 }
 
 impl KvCacheManager {
-    /// Split the budget so both pools cover the same token capacity (a
-    /// token always needs one K slot *and* one V slot).
+    /// Size the pool so every block covers one K slot and one V slot per
+    /// token (the budget splits implicitly by the per-surface byte
+    /// costs).
     pub fn new(cfg: KvCacheConfig) -> KvCacheManager {
         let tokens = cfg.token_capacity();
         let blocks = tokens / cfg.block_tokens;
         KvCacheManager {
-            k_pool: Pool::new(blocks),
-            v_pool: Pool::new(blocks),
+            pool: Pool::new(blocks),
+            tree: PrefixTree::default(),
             tables: BTreeMap::new(),
             cfg,
         }
@@ -128,48 +363,193 @@ impl KvCacheManager {
         n_tokens.div_ceil(self.cfg.block_tokens)
     }
 
-    /// Free K+V blocks available for new sequences, in tokens.
+    /// Free blocks available for new sequences, in tokens.
     pub fn free_token_capacity(&self) -> usize {
-        self.k_pool.free.len().min(self.v_pool.free.len())
-            * self.cfg.block_tokens
+        self.pool.free.len() * self.cfg.block_tokens
     }
 
-    /// Total K+V block capacity in tokens — the largest reservation that
+    /// Total block capacity in tokens — the largest reservation that
     /// could ever be admitted, even into an empty cache.
     pub fn total_token_capacity(&self) -> usize {
-        self.k_pool.total.min(self.v_pool.total) * self.cfg.block_tokens
+        self.pool.total * self.cfg.block_tokens
     }
 
     pub fn can_admit(&self, n_tokens: usize) -> bool {
-        let need = self.blocks_for(n_tokens);
-        self.k_pool.free.len() >= need && self.v_pool.free.len() >= need
+        self.pool.free.len() >= self.blocks_for(n_tokens)
     }
 
-    /// Reserve blocks for a new sequence of `n_tokens` (prompt + headroom).
-    pub fn allocate(&mut self, seq: SeqId, n_tokens: usize) -> Result<()> {
+    /// Full prompt chunks eligible for sharing: the partial tail block is
+    /// never shared (the sequence still writes it), and at least one
+    /// prompt token must stay unshared so prefill produces the logits the
+    /// first sampled token needs.
+    fn shareable_chunks(&self, prompt: &[i32]) -> Vec<&[i32]> {
+        let bt = self.cfg.block_tokens;
+        let max_blocks = prompt.len().saturating_sub(1) / bt;
+        prompt.chunks(bt).take(max_blocks).collect()
+    }
+
+    /// Like [`KvCacheManager::can_admit`], but credits the blocks a
+    /// prefix match would adopt instead of allocating — sharing admits
+    /// strictly more concurrent sequences on the same pool.
+    pub fn can_admit_prompt(&self, prompt: &[i32], n_tokens: usize,
+                            sharing: bool) -> bool {
+        let matched = if sharing {
+            self.tree.lookup(&self.shareable_chunks(prompt)).len()
+        } else {
+            0
+        };
+        self.pool.free.len() >= self.blocks_for(n_tokens).saturating_sub(matched)
+    }
+
+    /// Reserve blocks for a new sequence of `n_tokens` (prompt +
+    /// headroom), adopting every block of the longest registered prefix
+    /// of `prompt` (refcount bump, no allocation) when `sharing` is on.
+    /// The returned grant names the adopted rows — the engine seeds its
+    /// prefill from them and never recomputes them.
+    pub fn allocate_prompt(&mut self, seq: SeqId, prompt: &[i32],
+                           n_tokens: usize, sharing: bool)
+        -> Result<PrefixGrant> {
         if self.tables.contains_key(&seq) {
             bail!("sequence {seq} already allocated");
         }
-        if !self.can_admit(n_tokens) {
+        if n_tokens < prompt.len() {
+            bail!("reservation {n_tokens} smaller than prompt {}",
+                  prompt.len());
+        }
+        let matched_blocks = if sharing {
+            self.tree.lookup(&self.shareable_chunks(prompt))
+        } else {
+            Vec::new()
+        };
+        let need = self.blocks_for(n_tokens);
+        let fresh = need - matched_blocks.len();
+        if self.pool.free.len() < fresh {
             bail!(
-                "KV cache full: need {} blocks, free k={} v={}",
-                self.blocks_for(n_tokens),
-                self.k_pool.free.len(),
-                self.v_pool.free.len()
+                "KV cache full: need {fresh} fresh blocks ({} matched), \
+                 free {}",
+                matched_blocks.len(),
+                self.pool.free.len()
             );
         }
-        let need = self.blocks_for(n_tokens);
-        let mut t = BlockTable { n_tokens, ..Default::default() };
-        for _ in 0..need {
-            t.k_blocks.push(self.k_pool.free.pop()
-                .expect("pool accounting: the free-block check above \
-                         guarantees `need` free k blocks"));
-            t.v_blocks.push(self.v_pool.free.pop()
-                .expect("pool accounting: the free-block check above \
-                         guarantees `need` free v blocks"));
+        let mut t = BlockTable {
+            n_tokens,
+            shared_rows: matched_blocks.len() * self.cfg.block_tokens,
+            ..Default::default()
+        };
+        for &b in &matched_blocks {
+            self.pool.retain(b);
+            t.blocks.push(b);
         }
+        for _ in 0..fresh {
+            t.blocks.push(self.pool.alloc().expect(
+                "pool accounting: the free-block check above guarantees \
+                 `fresh` free blocks"));
+        }
+        let matched_rows = t.shared_rows;
         self.tables.insert(seq, t);
-        Ok(())
+        Ok(PrefixGrant { matched_rows, matched_blocks })
+    }
+
+    /// Reserve blocks for a new sequence with sharing disabled (legacy
+    /// path; also the sharing-off baseline).
+    pub fn allocate(&mut self, seq: SeqId, n_tokens: usize) -> Result<()> {
+        if n_tokens == 0 {
+            bail!("empty reservation for sequence {seq}");
+        }
+        self.allocate_prompt(seq, &[], n_tokens, false).map(|_| ())
+    }
+
+    /// Register a completed prefill's full-prompt blocks in the prefix
+    /// tree so later prompts sharing the prefix adopt them. Weak: no
+    /// refcount is taken — the registration dies with the blocks. The
+    /// walk stops at a physically divergent twin (a node already holding
+    /// a different block for the same chunk); everything registered or
+    /// matched becomes this sequence's shared prefix, which it must
+    /// never write again.
+    pub fn seal_prefix(&mut self, seq: SeqId, prompt: &[i32])
+        -> Result<SealOutcome> {
+        let bt = self.cfg.block_tokens;
+        let full = prompt.len() / bt;
+        let t = self
+            .tables
+            .get(&seq)
+            .ok_or_else(|| anyhow::anyhow!("seal_prefix: unknown sequence {seq}"))?;
+        if t.rows_written < full * bt {
+            bail!(
+                "seal_prefix: sequence {seq} wrote {} rows, prompt holds \
+                 {} full blocks",
+                t.rows_written,
+                full
+            );
+        }
+        let chunks: Vec<&[i32]> = prompt.chunks(bt).take(full).collect();
+        let blocks: Vec<BlockId> = t.blocks[..full].to_vec();
+        let (depth, registered) = self.tree.register(&chunks, &blocks);
+        let t = self.tables.get_mut(&seq).expect("table checked above");
+        t.shared_rows = t.shared_rows.max(depth * bt);
+        Ok(SealOutcome {
+            registered,
+            blocks: blocks[..depth].to_vec(),
+            shared_rows: depth * bt,
+        })
+    }
+
+    /// Fork `parent` into `child` copy-on-write: the child's table shares
+    /// every full block the parent has written (refcount bump) and gets
+    /// fresh private blocks for the rest of its `n_tokens` reservation.
+    /// Parent blocks that were private until now are `published` — the
+    /// engine must move their rows into the shared prefix store before
+    /// either side decodes again.
+    pub fn fork(&mut self, parent: SeqId, child: SeqId, n_tokens: usize)
+        -> Result<ForkGrant> {
+        if self.tables.contains_key(&child) {
+            bail!("fork target {child} already allocated");
+        }
+        let bt = self.cfg.block_tokens;
+        let p = self
+            .tables
+            .get(&parent)
+            .ok_or_else(|| anyhow::anyhow!("fork: unknown parent {parent}"))?;
+        let w = p.rows_written;
+        let full = w / bt;
+        if n_tokens < w {
+            bail!("fork reservation {n_tokens} smaller than parent rows {w}");
+        }
+        let need = self.blocks_for(n_tokens);
+        let fresh = need - full;
+        if self.pool.free.len() < fresh {
+            bail!(
+                "KV cache full on fork: need {fresh} fresh blocks, free {}",
+                self.pool.free.len()
+            );
+        }
+        let shared_blocks: Vec<BlockId> = p.blocks[..full].to_vec();
+        let published: Vec<(usize, BlockId)> = (p.shared_rows / bt..full)
+            .map(|i| (i, p.blocks[i]))
+            .collect();
+        let parent_t = self.tables.get_mut(&parent).expect("parent checked");
+        parent_t.shared_rows = parent_t.shared_rows.max(full * bt);
+        let mut t = BlockTable {
+            n_tokens,
+            shared_rows: full * bt,
+            ..Default::default()
+        };
+        for &b in &shared_blocks {
+            self.pool.retain(b);
+            t.blocks.push(b);
+        }
+        for _ in 0..fresh {
+            t.blocks.push(self.pool.alloc().expect(
+                "pool accounting: the free-block check above guarantees \
+                 `fresh` free blocks"));
+        }
+        self.tables.insert(child, t);
+        Ok(ForkGrant {
+            shared_blocks,
+            shared_rows: full * bt,
+            cow_split: w % bt != 0,
+            published,
+        })
     }
 
     /// Grow a sequence by `added` tokens (decode); allocates new blocks at
@@ -182,17 +562,14 @@ impl KvCacheManager {
             .ok_or_else(|| anyhow::anyhow!("unknown sequence {seq}"))?;
         let new_total = t.n_tokens + added;
         let need = new_total.div_ceil(bt);
-        let extra = need.saturating_sub(t.k_blocks.len());
-        if self.k_pool.free.len() < extra || self.v_pool.free.len() < extra {
+        let extra = need.saturating_sub(t.blocks.len());
+        if self.pool.free.len() < extra {
             bail!("KV cache full on extend of sequence {seq}");
         }
         for _ in 0..extra {
-            t.k_blocks.push(self.k_pool.free.pop()
-                .expect("pool accounting: the free-length check above \
-                         guarantees `extra` free k blocks"));
-            t.v_blocks.push(self.v_pool.free.pop()
-                .expect("pool accounting: the free-length check above \
-                         guarantees `extra` free v blocks"));
+            t.blocks.push(self.pool.alloc().expect(
+                "pool accounting: the free-length check above guarantees \
+                 `extra` free blocks"));
         }
         t.n_tokens = new_total;
         Ok(())
@@ -228,15 +605,141 @@ impl KvCacheManager {
         self.tables.keys().copied().collect()
     }
 
-    pub fn release(&mut self, seq: SeqId) {
+    /// Drop one reference from every block in `seq`'s table. Returns the
+    /// blocks that actually freed (refcount hit 0) — the scheduler hands
+    /// them to `Engine::drop_blocks` so the shared prefix store and the
+    /// pool free together. Freed blocks are deregistered from the prefix
+    /// tree in the same call (weak registration: no persistent cache).
+    pub fn release(&mut self, seq: SeqId) -> Vec<BlockId> {
+        let mut freed = Vec::new();
         if let Some(t) = self.tables.remove(&seq) {
-            self.k_pool.free.extend(t.k_blocks);
-            self.v_pool.free.extend(t.v_blocks);
+            for b in t.blocks {
+                if self.pool.release(b) {
+                    self.tree.deregister(b);
+                    freed.push(b);
+                }
+            }
         }
+        freed
     }
 
     pub fn seq_tokens(&self, seq: SeqId) -> Option<usize> {
         self.tables.get(&seq).map(|t| t.n_tokens)
+    }
+
+    /// The block table of a live sequence (auditor surface).
+    pub fn table_blocks(&self, seq: SeqId) -> Option<Vec<BlockId>> {
+        self.tables.get(&seq).map(|t| t.blocks.clone())
+    }
+
+    /// Rows `seq` addresses through possibly-shared blocks.
+    pub fn shared_rows(&self, seq: SeqId) -> Option<usize> {
+        self.tables.get(&seq).map(|t| t.shared_rows)
+    }
+
+    /// Current reference count of a block (0 == free).
+    pub fn block_ref(&self, b: BlockId) -> u32 {
+        self.pool.refs.get(b).copied().unwrap_or(0)
+    }
+
+    pub fn is_block_registered(&self, b: BlockId) -> bool {
+        self.tree.is_registered(b)
+    }
+
+    /// Pool-level sharing gauges: blocks referenced 2+ times and the
+    /// bytes sharing saves vs one private copy per reference.
+    pub fn sharing_stats(&self) -> SharingStats {
+        let shared_blocks =
+            self.pool.refs.iter().filter(|&&r| r >= 2).count();
+        let extra_refs: u64 = self
+            .pool
+            .refs
+            .iter()
+            .map(|&r| u64::from(r.saturating_sub(1)))
+            .sum();
+        SharingStats {
+            shared_blocks,
+            dedup_bytes: extra_refs as f64 * self.cfg.block_bytes(),
+            prefix_nodes: self.tree.len(),
+            blocks_used: self.pool.used(),
+            blocks_total: self.pool.total,
+        }
+    }
+
+    /// Full refcount/table/tree consistency audit. Empty == consistent.
+    /// Checks, bidirectionally: refcounts equal the number of tables
+    /// holding each block; the free list is exactly the ref==0 blocks
+    /// with no duplicates; every tree-registered block is live and held;
+    /// and the CoW privacy invariant — blocks past a table's
+    /// `shared_rows` are refcount-1 and unregistered (no one ever
+    /// aliases a block a sequence may still write).
+    pub fn refcount_violations(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        let bt = self.cfg.block_tokens;
+        let mut expected = vec![0u32; self.pool.total];
+        for (id, t) in &self.tables {
+            if t.shared_rows % bt != 0 {
+                out.push(format!(
+                    "seq {id}: shared_rows {} not block-aligned",
+                    t.shared_rows));
+            }
+            if t.shared_rows > t.blocks.len() * bt {
+                out.push(format!(
+                    "seq {id}: shared_rows {} exceeds table ({} blocks)",
+                    t.shared_rows,
+                    t.blocks.len()));
+            }
+            for (i, &b) in t.blocks.iter().enumerate() {
+                if b >= self.pool.total {
+                    out.push(format!("seq {id}: block {b} out of pool"));
+                    continue;
+                }
+                expected[b] += 1;
+                if i >= t.shared_rows / bt {
+                    if self.pool.refs[b] != 1 {
+                        out.push(format!(
+                            "CoW privacy: seq {id} writable block {b} has \
+                             refcount {}",
+                            self.pool.refs[b]));
+                    }
+                    if self.tree.is_registered(b) {
+                        out.push(format!(
+                            "CoW privacy: seq {id} writable block {b} is \
+                             tree-registered"));
+                    }
+                }
+            }
+        }
+        for (b, (&have, &want)) in
+            self.pool.refs.iter().zip(&expected).enumerate()
+        {
+            if have != want {
+                out.push(format!(
+                    "block {b}: refcount {have} but {want} table refs"));
+            }
+        }
+        let mut on_free = vec![false; self.pool.total];
+        for &b in &self.pool.free {
+            if on_free[b] {
+                out.push(format!("block {b} on the free list twice"));
+            }
+            on_free[b] = true;
+        }
+        for (b, &free) in on_free.iter().enumerate() {
+            if free != (self.pool.refs[b] == 0) {
+                out.push(format!(
+                    "block {b}: free-list {free} vs refcount {}",
+                    self.pool.refs[b]));
+            }
+        }
+        for b in self.tree.registered() {
+            if self.pool.refs.get(b).copied().unwrap_or(0) == 0 {
+                out.push(format!(
+                    "prefix tree holds freed block {b} (leaked \
+                     registration)"));
+            }
+        }
+        out
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -245,15 +748,15 @@ impl KvCacheManager {
             seqs: self.tables.len(),
             tokens: self.tables.values().map(|t| t.n_tokens).sum(),
             tokens_written: self.tables.values().map(|t| t.rows_written).sum(),
-            k_blocks_used: self.k_pool.used(),
-            v_blocks_used: self.v_pool.used(),
-            k_bytes_used: self.k_pool.used() as f64 * bt
+            k_blocks_used: self.pool.used(),
+            v_blocks_used: self.pool.used(),
+            k_bytes_used: self.pool.used() as f64 * bt
                 * self.cfg.k_bytes_per_token(),
-            v_bytes_used: self.v_pool.used() as f64 * bt
+            v_bytes_used: self.pool.used() as f64 * bt
                 * self.cfg.v_bytes_per_token(),
-            k_bytes_capacity: self.k_pool.total as f64 * bt
+            k_bytes_capacity: self.pool.total as f64 * bt
                 * self.cfg.k_bytes_per_token(),
-            v_bytes_capacity: self.v_pool.total as f64 * bt
+            v_bytes_capacity: self.pool.total as f64 * bt
                 * self.cfg.v_bytes_per_token(),
         }
     }
@@ -380,5 +883,160 @@ mod tests {
         let mut m = KvCacheManager::new(cfg(32, 4.0));
         m.allocate(1, 16).unwrap();
         assert!(m.allocate(1, 16).is_err());
+    }
+
+    // --- ISSUE 8: refcounted sharing -----------------------------------
+
+    fn prompt(n: usize, seed: i32) -> Vec<i32> {
+        (0..n as i32).map(|i| i * 7 + seed).collect()
+    }
+
+    #[test]
+    fn seal_then_allocate_prompt_adopts_shared_blocks() {
+        let mut m = KvCacheManager::new(cfg(32, 4.0));
+        let p = prompt(40, 0); // 2 full blocks + 8-token tail
+        m.allocate_prompt(1, &p, 48, true).unwrap();
+        m.commit_rows(1, 40).unwrap();
+        let sealed = m.seal_prefix(1, &p).unwrap();
+        assert_eq!(sealed.shared_rows, 32);
+        assert_eq!(sealed.registered.len(), 2);
+        assert_eq!(sealed.blocks.len(), 2);
+
+        let used0 = m.stats().k_blocks_used;
+        let grant = m.allocate_prompt(2, &p, 48, true).unwrap();
+        assert_eq!(grant.matched_rows, 32);
+        assert_eq!(grant.matched_blocks, sealed.blocks);
+        // only the private tail allocated fresh: 3 needed, 2 matched
+        assert_eq!(m.stats().k_blocks_used, used0 + 1);
+        for &b in &grant.matched_blocks {
+            assert_eq!(m.block_ref(b), 2);
+        }
+        assert!(m.refcount_violations().is_empty(),
+                "{:?}", m.refcount_violations());
+    }
+
+    #[test]
+    fn partial_tail_block_is_never_shared() {
+        let mut m = KvCacheManager::new(cfg(32, 4.0));
+        // prompt an exact multiple of block_tokens: the last full block
+        // still may not be fully matched away — at least one token must
+        // prefill to produce first-token logits
+        let p = prompt(32, 3);
+        m.allocate_prompt(1, &p, 40, true).unwrap();
+        m.commit_rows(1, 32).unwrap();
+        m.seal_prefix(1, &p).unwrap();
+        let grant = m.allocate_prompt(2, &p, 40, true).unwrap();
+        assert_eq!(grant.matched_rows, 16, "matched past (p-1)/bt blocks");
+    }
+
+    #[test]
+    fn divergent_prompt_shares_only_common_prefix() {
+        let mut m = KvCacheManager::new(cfg(32, 4.0));
+        let a = prompt(48, 0);
+        let mut b = a.clone();
+        b[20] += 1; // diverge inside the second block
+        m.allocate_prompt(1, &a, 64, true).unwrap();
+        m.commit_rows(1, 48).unwrap();
+        m.seal_prefix(1, &a).unwrap();
+        let grant = m.allocate_prompt(2, &b, 64, true).unwrap();
+        assert_eq!(grant.matched_rows, 16, "only the first block matches");
+        m.commit_rows(2, 48).unwrap();
+        // sealing the divergent prompt registers its own suffix path
+        let sealed = m.seal_prefix(2, &b).unwrap();
+        assert_eq!(sealed.shared_rows, 48);
+        assert_eq!(sealed.registered.len(), 2);
+        assert!(m.refcount_violations().is_empty(),
+                "{:?}", m.refcount_violations());
+    }
+
+    #[test]
+    fn release_frees_refcounts_and_deregisters_weakly() {
+        let mut m = KvCacheManager::new(cfg(32, 4.0));
+        let cap0 = m.free_token_capacity();
+        let p = prompt(40, 1);
+        m.allocate_prompt(1, &p, 48, true).unwrap();
+        m.commit_rows(1, 40).unwrap();
+        let sealed = m.seal_prefix(1, &p).unwrap();
+        m.allocate_prompt(2, &p, 48, true).unwrap();
+        // donor leaves: shared blocks survive on the consumer's refcount
+        let freed = m.release(1);
+        assert_eq!(freed.len(), 1, "only the donor's private tail freed");
+        for &b in &sealed.blocks {
+            assert_eq!(m.block_ref(b), 1);
+            assert!(m.is_block_registered(b), "registration must survive");
+        }
+        // a third prompt still hits the (consumer-held) prefix
+        let grant = m.allocate_prompt(3, &p, 48, true).unwrap();
+        assert_eq!(grant.matched_rows, 32);
+        // last holders leave: blocks free AND the tree forgets them
+        let mut freed: Vec<BlockId> = m.release(2);
+        freed.extend(m.release(3));
+        for &b in &sealed.blocks {
+            assert!(freed.contains(&b));
+            assert!(!m.is_block_registered(b), "weak registration leaked");
+        }
+        assert_eq!(m.free_token_capacity(), cap0, "blocks leaked");
+        assert_eq!(m.sharing_stats().prefix_nodes, 0);
+        assert!(m.refcount_violations().is_empty(),
+                "{:?}", m.refcount_violations());
+    }
+
+    #[test]
+    fn fork_shares_full_blocks_and_cow_splits_the_tail() {
+        let mut m = KvCacheManager::new(cfg(32, 4.0));
+        let p = prompt(20, 2);
+        m.allocate_prompt(1, &p, 64, true).unwrap();
+        m.commit_rows(1, 42).unwrap(); // 2 full blocks + 10-row tail
+        let used0 = m.stats().k_blocks_used;
+        let grant = m.fork(1, 2, 64).unwrap();
+        assert_eq!(grant.shared_rows, 32);
+        assert_eq!(grant.shared_blocks.len(), 2);
+        assert!(grant.cow_split, "partial tail must copy-on-write");
+        assert_eq!(grant.published.len(), 2,
+                   "previously private full blocks become shared");
+        // child allocated 4 blocks total, 2 shared: only 2 fresh
+        assert_eq!(m.stats().k_blocks_used, used0 + 2);
+        for &b in &grant.shared_blocks {
+            assert_eq!(m.block_ref(b), 2);
+        }
+        assert!(m.refcount_violations().is_empty(),
+                "{:?}", m.refcount_violations());
+        m.release(2);
+        assert!(m.refcount_violations().is_empty());
+        let freed = m.release(1);
+        assert!(freed.len() >= 3);
+        assert_eq!(m.free_token_capacity(), m.total_token_capacity());
+    }
+
+    #[test]
+    fn sharing_admits_more_than_private_allocation() {
+        let mut m = KvCacheManager::new(cfg(128, 0.5));
+        let total = m.total_token_capacity();
+        let p = prompt(total - 32, 4);
+        m.allocate_prompt(1, &p, total - 16, true).unwrap();
+        m.commit_rows(1, p.len()).unwrap();
+        m.seal_prefix(1, &p).unwrap();
+        // a private twin can never fit, but the sharing path can
+        assert!(!m.can_admit(total - 16));
+        assert!(m.can_admit_prompt(&p, total - 16, true));
+        assert!(!m.can_admit_prompt(&p, total - 16, false));
+        m.allocate_prompt(2, &p, total - 16, true).unwrap();
+        let s = m.sharing_stats();
+        assert!(s.shared_blocks > 0);
+        assert!(s.dedup_bytes > 0.0);
+        assert!(m.refcount_violations().is_empty(),
+                "{:?}", m.refcount_violations());
+    }
+
+    #[test]
+    fn refcount_violation_detection_catches_seeded_corruption() {
+        let mut m = KvCacheManager::new(cfg(32, 4.0));
+        let p = prompt(40, 5);
+        m.allocate_prompt(1, &p, 48, true).unwrap();
+        assert!(m.refcount_violations().is_empty());
+        // seed: drop a refcount without touching the table
+        m.pool.refs[m.tables[&1].blocks[0]] += 1;
+        let v = m.refcount_violations();
+        assert!(v.iter().any(|s| s.contains("refcount")), "{v:?}");
     }
 }

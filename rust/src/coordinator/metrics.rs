@@ -155,8 +155,28 @@ pub struct EngineMetrics {
     /// (real runtime errors, or an exhausted whole-batch fault). The
     /// chaos suite asserts this stays 0 under bounded fault schedules.
     pub fatal_steps: u64,
-    /// Backoff sleeps, in microseconds, across all step retries.
+    /// Backoff sleeps, in microseconds, across all step retries. Records
+    /// the CLAMPED slot actually slept (capped by
+    /// `SchedConfig::max_step_backoff_us`), not the raw exponential.
     pub retry_backoff: Histogram,
+    /// Admissions whose prompt matched a registered shared prefix
+    /// (ISSUE 8): the matched blocks were adopted refcount-only and
+    /// their rows skipped prefill entirely.
+    pub prefix_hits: u64,
+    /// Prompt rows adopted from the shared block store instead of
+    /// prefilled — the tokens the prefix-hit fast path never recomputed.
+    pub prefix_hit_tokens: u64,
+    /// Copy-on-write splits: forks whose write frontier split a block
+    /// mid-way, copying the partial tail into private child storage.
+    pub cow_splits: u64,
+    /// Gauge: blocks currently referenced by 2+ sequences.
+    pub shared_blocks: u64,
+    /// Gauge: host bytes sharing saves vs one private copy per
+    /// reference (`extra_refs × block_bytes`).
+    pub dedup_bytes: f64,
+    /// Gauge: block-pool occupancy, used out of `block_pool_total`.
+    pub block_pool_used: u64,
+    pub block_pool_total: u64,
 }
 
 impl EngineMetrics {
@@ -225,6 +245,8 @@ impl EngineMetrics {
              sync:    up {} B, down {} B (full-arena), delta {:.0} B/step, \
              arena {} B (+{} B scales) [K {} B +{} B], \
              {} tier switches [{}]\n\
+             paged:   {} prefix hits ({} rows adopted), {} shared blocks, \
+             dedup {:.0} B, {} CoW splits, pool {}/{} blocks\n\
              faults:  {} injected, {} retries (backoff {}), \
              {} recovered, {} quarantined, {} fatal\n\
              decode throughput: {:.1} tok/s",
@@ -250,6 +272,13 @@ impl EngineMetrics {
             self.arena_k_scale_bytes,
             self.tier_switches,
             tiers.join(" "),
+            self.prefix_hits,
+            self.prefix_hit_tokens,
+            self.shared_blocks,
+            self.dedup_bytes,
+            self.cow_splits,
+            self.block_pool_used,
+            self.block_pool_total,
             self.faults_injected,
             self.step_retries,
             self.retry_backoff.summary(),

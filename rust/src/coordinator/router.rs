@@ -185,7 +185,6 @@ impl<'rt> Router<'rt> {
                     trace[next].priority,
                     Some(arrived),
                 );
-                report.prompt_tokens += trace[next].prompt_len as u64;
                 next += 1;
             }
             self.shed_pass();
@@ -217,7 +216,6 @@ impl<'rt> Router<'rt> {
         let mut report = ServeReport::default();
         for r in trace {
             let prompt = synth_prompt(r.prompt_len, vocab, &mut rng);
-            report.prompt_tokens += prompt.len() as u64;
             self.sched.submit_seq(prompt, r.gen_len, None, r.priority, None);
         }
         self.sched.run_to_completion()?;
@@ -227,37 +225,48 @@ impl<'rt> Router<'rt> {
     }
 
     fn collect(&self, report: &mut ServeReport) {
-        for seq in &self.sched.finished {
-            match bucket_of(seq) {
-                // rejected/failed/shed requests produced no service: they
-                // must not inflate requests_per_sec, generated tokens, or
-                // the latency histograms
-                ReportBucket::Rejected => {
-                    report.rejected += 1;
-                }
-                ReportBucket::Failed => {
-                    report.failed += 1;
-                }
-                ReportBucket::Shed => {
-                    report.shed_requests += 1;
-                }
-                ReportBucket::Completed => {
-                    report.n_requests += 1;
-                    report.gen_tokens += seq.generated.len() as u64;
-                    if let Some(t) = seq.ttft_s() {
-                        report.ttft.record_us(t * 1e6);
-                        match seq.priority {
-                            Priority::Interactive => {
-                                report.ttft_interactive.record_us(t * 1e6)
-                            }
-                            Priority::Batch => {
-                                report.ttft_batch.record_us(t * 1e6)
-                            }
+        collect_into(&self.sched.finished, report);
+    }
+}
+
+/// Aggregate a finished list into the report — pure, so the bucket/token
+/// accounting is unit-testable without an engine. Prompt tokens are
+/// counted HERE, at completion classification, not at submit: PR 1
+/// deliberately excluded rejected/shed requests from throughput, and the
+/// submit-time accounting quietly re-inflated the prompt side of the
+/// report with requests that were never served (the satellite-2 bugfix).
+pub fn collect_into(finished: &[Sequence], report: &mut ServeReport) {
+    for seq in finished {
+        match bucket_of(seq) {
+            // rejected/failed/shed requests produced no service: they
+            // must not inflate requests_per_sec, prompt/generated
+            // tokens, or the latency histograms
+            ReportBucket::Rejected => {
+                report.rejected += 1;
+            }
+            ReportBucket::Failed => {
+                report.failed += 1;
+            }
+            ReportBucket::Shed => {
+                report.shed_requests += 1;
+            }
+            ReportBucket::Completed => {
+                report.n_requests += 1;
+                report.prompt_tokens += seq.prompt.len() as u64;
+                report.gen_tokens += seq.generated.len() as u64;
+                if let Some(t) = seq.ttft_s() {
+                    report.ttft.record_us(t * 1e6);
+                    match seq.priority {
+                        Priority::Interactive => {
+                            report.ttft_interactive.record_us(t * 1e6)
+                        }
+                        Priority::Batch => {
+                            report.ttft_batch.record_us(t * 1e6)
                         }
                     }
-                    if let Some(t) = seq.e2e_s() {
-                        report.e2e.record_us(t * 1e6);
-                    }
+                }
+                if let Some(t) = seq.e2e_s() {
+                    report.e2e.record_us(t * 1e6);
                 }
             }
         }
@@ -310,5 +319,35 @@ mod tests {
         let p = RouterPolicy::default();
         assert!(!p.active());
         assert!(p.only_when_degraded);
+    }
+
+    /// Satellite-2 regression: a trace that rejects and sheds must not
+    /// inflate `prompt_tokens` — pre-fix, the router charged prompt
+    /// tokens at SUBMIT time, so the 7-token rejected prompt and the
+    /// 9-token shed prompt below leaked into the throughput report even
+    /// though PR 1 deliberately excluded them. Completion-time
+    /// accounting counts served prompts only.
+    #[test]
+    fn rejected_and_shed_prompts_stay_out_of_the_report() {
+        let mut served = Sequence::new(1, vec![1, 2, 3, 4, 5], 4, None);
+        served.push_token(9);
+        served.finish(FinishReason::MaxTokens);
+        let mut rejected = Sequence::new(2, vec![1; 7], 4, None);
+        rejected.finish(FinishReason::CacheOverflow);
+        let mut shed = Sequence::new(3, vec![1; 9], 4, None);
+        shed.finish(FinishReason::Shed);
+        let mut failed = Sequence::new(4, vec![1; 11], 4, None);
+        failed.push_token(9); // partial service, then quarantined
+        failed.finish(FinishReason::Failed);
+
+        let mut report = ServeReport::default();
+        collect_into(&[served, rejected, shed, failed], &mut report);
+        assert_eq!(report.n_requests, 1);
+        assert_eq!(report.prompt_tokens, 5,
+                   "only the served request's prompt counts");
+        assert_eq!(report.gen_tokens, 1);
+        assert_eq!(report.rejected, 1);
+        assert_eq!(report.shed_requests, 1);
+        assert_eq!(report.failed, 1);
     }
 }

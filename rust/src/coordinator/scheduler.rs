@@ -76,8 +76,21 @@ pub struct SchedConfig {
     /// burst clamp, a transient fault schedule always recovers.
     pub max_step_retries: usize,
     /// Base backoff before the first retry, in microseconds; doubles per
-    /// attempt (`base << attempt`).
+    /// attempt (`base << attempt`), clamped by `max_step_backoff_us`.
     pub retry_backoff_us: u64,
+    /// Hard cap on the CUMULATIVE backoff sleep one engine step (and
+    /// hence one scheduling round) may spend, in microseconds. The
+    /// uncapped shift used to real-sleep `200µs << 16` ≈ 13s inside a
+    /// round — no shed/deadline pass can run mid-round, so a bursty
+    /// fault plan inflated TTFT of unaffected Interactive sequences far
+    /// past their deadlines. Keep this well below the Interactive
+    /// deadline (regression-tested in this module).
+    pub max_step_backoff_us: u64,
+    /// Copy-on-write shared-prefix sharing (ISSUE 8): admission matches
+    /// prompts against the prefix tree and adopts shared blocks instead
+    /// of re-prefilling them. Off reproduces fully private per-sequence
+    /// storage (the bit-exactness baseline).
+    pub prefix_sharing: bool,
 }
 
 impl Default for SchedConfig {
@@ -89,6 +102,8 @@ impl Default for SchedConfig {
             interactive_weight: 4,
             max_step_retries: 4,
             retry_backoff_us: 200,
+            max_step_backoff_us: 10_000,
+            prefix_sharing: true,
         }
     }
 }
@@ -97,6 +112,20 @@ impl Default for SchedConfig {
 /// it advances anyway — the liveness escape for workloads whose decode
 /// lanes permanently exceed `round_budget`.
 const STALL_OVERRIDE_ROUNDS: usize = 4;
+
+/// One exponential-backoff slot, clamped so the CUMULATIVE sleep already
+/// `spent` within the current engine step never exceeds `cap`. Pure so
+/// the satellite-1 regression tests can pin the arithmetic: the raw
+/// `base << attempt.min(16)` slot reaches `200µs << 16` ≈ 13.1s, which
+/// used to real-sleep inside a serving round with no shed/deadline pass
+/// able to run. Once the budget is spent the slot is zero (retry
+/// immediately rather than oversleep).
+pub fn backoff_slot_us(base: u64, attempt: usize, spent: u64, cap: u64)
+    -> u64 {
+    base.checked_shl(attempt.min(16) as u32)
+        .unwrap_or(u64::MAX)
+        .min(cap.saturating_sub(spent))
+}
 
 pub struct Scheduler<'rt> {
     pub engine: Engine<'rt>,
@@ -136,8 +165,11 @@ impl<'rt> Scheduler<'rt> {
         )
     }
 
-    pub fn with_config(engine: Engine<'rt>, kv: KvCacheManager,
+    pub fn with_config(mut engine: Engine<'rt>, kv: KvCacheManager,
                        cfg: SchedConfig) -> Scheduler<'rt> {
+        // the engine's shared-prefix store speaks the pool's block
+        // geometry from the start
+        engine.set_block_tokens(kv.cfg.block_tokens);
         Scheduler {
             engine,
             kv,
@@ -190,6 +222,12 @@ impl<'rt> Scheduler<'rt> {
         self.prefilling.len()
     }
 
+    /// Ids of the running (decoding) sequences, ascending — the valid
+    /// fork targets for [`Scheduler::fork`].
+    pub fn running_ids(&self) -> Vec<SeqId> {
+        self.running.keys().copied().collect()
+    }
+
     pub fn has_work(&self) -> bool {
         !self.waiting.is_empty()
             || !self.running.is_empty()
@@ -202,10 +240,86 @@ impl<'rt> Scheduler<'rt> {
 
     /// Free a sequence's logical KV blocks and physical cache rows on the
     /// same event — the two accountings never disagree about liveness.
-    /// Also cancels any in-flight chunked prefill state.
+    /// Also cancels any in-flight chunked prefill state. Blocks whose
+    /// refcount hit zero leave the shared prefix store on the same event
+    /// (`release` returns exactly that freed list).
     fn free_seq(&mut self, id: SeqId) {
-        self.kv.release(id);
+        let freed = self.kv.release(id);
         self.engine.drop_seq(id);
+        self.engine.drop_blocks(&freed);
+    }
+
+    /// Reserve blocks for a newly admitted sequence, adopting any
+    /// registered shared prefix of its prompt (ISSUE 8): matched blocks
+    /// refcount-bump instead of allocating, the engine is pointed at
+    /// them, and both prefill paths then skip the adopted rows entirely
+    /// — the prefix-hit fast path.
+    fn admit_blocks(&mut self, seq: &Sequence) -> Result<()> {
+        let grant = self.kv.allocate_prompt(
+            seq.id,
+            &seq.prompt,
+            Self::reservation(seq),
+            self.cfg.prefix_sharing,
+        )?;
+        if grant.matched_rows > 0 {
+            if let Err(e) = self.engine.adopt_prefix(
+                seq.id, &grant.matched_blocks, grant.matched_rows)
+            {
+                // logical tables and physical store diverged — roll the
+                // reservation back before surfacing the inconsistency
+                let freed = self.kv.release(seq.id);
+                self.engine.drop_blocks(&freed);
+                return Err(e);
+            }
+            self.engine.metrics.prefix_hits += 1;
+            self.engine.metrics.prefix_hit_tokens +=
+                grant.matched_rows as u64;
+        }
+        Ok(())
+    }
+
+    /// After a completed prefill (still parked): register the prompt's
+    /// full blocks in the prefix tree and publish the newly registered
+    /// ones into the engine's shared store, so the NEXT sequence with
+    /// this prefix admits straight onto them.
+    fn seal_prefix(&mut self, seq: &Sequence) -> Result<()> {
+        if !self.cfg.prefix_sharing {
+            return Ok(());
+        }
+        let sealed = self.kv.seal_prefix(seq.id, &seq.prompt)?;
+        if sealed.shared_rows > 0 {
+            self.engine.publish_prefix(seq.id, &sealed.registered,
+                                       &sealed.blocks, sealed.shared_rows)?;
+        }
+        Ok(())
+    }
+
+    /// Fork a RUNNING sequence copy-on-write (ISSUE 8): the child shares
+    /// every full block the parent has written (refcount only — zero
+    /// bytes for the shared history), privately copies the partial tail
+    /// block, and decodes independently from the next round on. Returns
+    /// the child's id.
+    pub fn fork(&mut self, parent: SeqId, max_new: usize) -> Result<SeqId> {
+        if self.running.len() + self.prefilling.len() >= self.cfg.max_batch {
+            bail!("fork: batch is full");
+        }
+        let Some(pseq) = self.running.get(&parent) else {
+            bail!("fork: parent {parent} is not running");
+        };
+        let id = self.next_id;
+        self.next_id += 1;
+        let child = pseq.fork_as(id, max_new);
+        let rows = self.engine.rows(parent);
+        let grant = self.kv.fork(parent, id, child.len() + max_new)?;
+        if let Err(e) = self.engine.fork_seq(parent, id, &grant) {
+            let freed = self.kv.release(id);
+            self.engine.drop_blocks(&freed);
+            return Err(e);
+        }
+        self.kv.commit_rows(id, rows)?;
+        self.engine.metrics.cow_splits += u64::from(grant.cow_split);
+        self.running.insert(id, child);
+        Ok(id)
     }
 
     /// Admit from the waiting queue while budget and batch slots allow
@@ -223,7 +337,7 @@ impl<'rt> Scheduler<'rt> {
             let Some(idx) = self.next_admissible() else { break };
             let mut seq = self.waiting.remove(idx)
                 .expect("next_admissible returns an index into waiting");
-            self.kv.allocate(seq.id, Self::reservation(&seq))?;
+            self.admit_blocks(&seq)?;
             self.progressed = true;
             if let Err(e) = self.with_retries(|eng| eng.prefill(&mut seq)) {
                 // roll the reservation back and fail the request visibly
@@ -239,6 +353,7 @@ impl<'rt> Scheduler<'rt> {
                 self.free_seq(seq.id);
                 self.finished.push(seq);
             } else {
+                self.seal_prefix(&seq)?;
                 self.running.insert(seq.id, seq);
             }
             admitted += 1;
@@ -258,7 +373,10 @@ impl<'rt> Scheduler<'rt> {
             .iter()
             .enumerate()
             .find(|(_, s)| s.priority == class)?;
-        if self.kv.can_admit(Self::reservation(seq)) {
+        // the probe credits a prefix hit's adopted blocks, so sharing
+        // admits strictly more concurrent sequences on the same pool
+        if self.kv.can_admit_prompt(&seq.prompt, Self::reservation(seq),
+                                    self.cfg.prefix_sharing) {
             Some(idx)
         } else {
             None
@@ -394,7 +512,7 @@ impl<'rt> Scheduler<'rt> {
             if let Some(idx) = admissible {
                 let seq = self.waiting.remove(idx)
                     .expect("admissibility probe indexes the waiting queue");
-                self.kv.allocate(seq.id, Self::reservation(&seq))?;
+                self.admit_blocks(&seq)?;
                 chosen = Some(seq);
                 break 'pick;
             }
@@ -427,6 +545,7 @@ impl<'rt> Scheduler<'rt> {
                     self.free_seq(seq.id);
                     self.finished.push(seq);
                 } else {
+                    self.seal_prefix(&seq)?;
                     self.running.insert(seq.id, seq);
                 }
                 Ok(now - before)
@@ -445,6 +564,13 @@ impl<'rt> Scheduler<'rt> {
     pub fn step(&mut self) -> Result<usize> {
         let produced = self.step_inner()?;
         self.engine.sync_fault_metrics();
+        // refresh the sharing gauges so per-round snapshots and final
+        // reports both see the post-round pool state
+        let sharing = self.kv.sharing_stats();
+        self.engine.metrics.shared_blocks = sharing.shared_blocks as u64;
+        self.engine.metrics.dedup_bytes = sharing.dedup_bytes;
+        self.engine.metrics.block_pool_used = sharing.blocks_used as u64;
+        self.engine.metrics.block_pool_total = sharing.blocks_total as u64;
         #[cfg(any(debug_assertions, feature = "audit"))]
         crate::analysis::auditor::audit_step(&mut self.engine, &self.kv)?;
         Ok(produced)
@@ -492,10 +618,21 @@ impl<'rt> Scheduler<'rt> {
         Ok(produced)
     }
 
-    /// Sleep out one exponential-backoff slot and account the retry.
-    fn backoff(&mut self, attempt: usize) {
-        let us = self.cfg.retry_backoff_us << attempt.min(16);
-        std::thread::sleep(std::time::Duration::from_micros(us));
+    /// Sleep out one backoff slot — clamped by the per-step cumulative
+    /// cap — and account the retry. The histogram records the value
+    /// actually slept, not the raw exponential, so latency reports stay
+    /// truthful about where round time went.
+    fn backoff(&mut self, attempt: usize, spent_us: &mut u64) {
+        let us = backoff_slot_us(
+            self.cfg.retry_backoff_us,
+            attempt,
+            *spent_us,
+            self.cfg.max_step_backoff_us,
+        );
+        *spent_us = spent_us.saturating_add(us);
+        if us > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(us));
+        }
         self.engine.metrics.step_retries += 1;
         self.engine.metrics.retry_backoff.record_us(us as f64);
     }
@@ -511,6 +648,7 @@ impl<'rt> Scheduler<'rt> {
         mut op: impl FnMut(&mut Engine<'rt>) -> Result<T, EngineError>,
     ) -> Result<T, EngineError> {
         let mut attempt = 0usize;
+        let mut spent_us = 0u64;
         loop {
             match op(&mut self.engine) {
                 Ok(v) => {
@@ -523,7 +661,7 @@ impl<'rt> Scheduler<'rt> {
                     if e.is_retryable()
                         && attempt < self.cfg.max_step_retries =>
                 {
-                    self.backoff(attempt);
+                    self.backoff(attempt, &mut spent_us);
                     attempt += 1;
                 }
                 Err(e) => return Err(e),
@@ -554,6 +692,9 @@ impl<'rt> Scheduler<'rt> {
     /// Returns the decode tokens produced.
     fn decode_round(&mut self) -> Result<usize> {
         let mut attempt = 0usize;
+        // the cumulative cap spans the whole round, surviving quarantine
+        // (a fresh retry budget must not buy a fresh sleep budget)
+        let mut spent_us = 0u64;
         loop {
             if self.running.is_empty() {
                 return Ok(0);
@@ -573,7 +714,7 @@ impl<'rt> Scheduler<'rt> {
                 Err(e) => e,
             };
             if e.is_retryable() && attempt < self.cfg.max_step_retries {
-                self.backoff(attempt);
+                self.backoff(attempt, &mut spent_us);
                 attempt += 1;
                 continue;
             }
@@ -708,5 +849,63 @@ impl<'rt> Scheduler<'rt> {
                 self.finished.push(seq);
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Satellite-1 regression: the pre-fix slot was the raw
+    /// `base << attempt.min(16)` — 200µs doubles into a ~13.1s sleep
+    /// inside one serving round. The fix clamps every slot at the
+    /// per-step cap.
+    #[test]
+    fn backoff_slot_is_clamped_at_the_step_cap() {
+        let cfg = SchedConfig::default();
+        let raw = cfg.retry_backoff_us << 16usize;
+        assert_eq!(raw, 13_107_200, "the pre-fix slot really slept ~13s");
+        let slot = backoff_slot_us(
+            cfg.retry_backoff_us, 16, 0, cfg.max_step_backoff_us);
+        assert_eq!(slot, cfg.max_step_backoff_us);
+        assert!(slot < raw);
+    }
+
+    /// A max-retry burst — arbitrarily many attempts, ever-growing
+    /// exponents — can never stall a round longer than the cumulative
+    /// cap: once the budget is spent, further slots are zero.
+    #[test]
+    fn max_retry_burst_cannot_stall_a_round_past_the_cap() {
+        let cap = SchedConfig::default().max_step_backoff_us;
+        let mut spent = 0u64;
+        for attempt in 0..64 {
+            let slot = backoff_slot_us(200, attempt, spent, cap);
+            spent = spent.saturating_add(slot);
+            assert!(
+                spent <= cap,
+                "attempt {attempt} pushed the round stall past the cap"
+            );
+        }
+        assert_eq!(spent, cap, "budget spends fully, then slots go to zero");
+        assert_eq!(backoff_slot_us(200, 5, spent, cap), 0);
+    }
+
+    /// Small attempts below the cap still sleep the raw exponential —
+    /// the fix must not flatten ordinary transient-fault pacing.
+    #[test]
+    fn uncapped_attempts_keep_the_exponential_schedule() {
+        let cap = SchedConfig::default().max_step_backoff_us;
+        assert_eq!(backoff_slot_us(200, 0, 0, cap), 200);
+        assert_eq!(backoff_slot_us(200, 1, 0, cap), 400);
+        assert_eq!(backoff_slot_us(200, 2, 0, cap), 800);
+        assert_eq!(backoff_slot_us(200, 3, 0, cap), 1_600);
+    }
+
+    /// The shift saturates instead of wrapping — a pathological base
+    /// still clamps to the cap rather than overflowing to a tiny slot.
+    #[test]
+    fn shift_overflow_saturates_then_clamps() {
+        assert_eq!(backoff_slot_us(u64::MAX, 16, 0, 5_000), 5_000);
+        assert_eq!(backoff_slot_us(u64::MAX / 2, 2, 0, 5_000), 5_000);
     }
 }

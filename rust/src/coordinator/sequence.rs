@@ -154,6 +154,26 @@ impl Sequence {
         self.finished_at = Some(Instant::now());
     }
 
+    /// Copy-on-write fork (ISSUE 8): a child with its own id and
+    /// generation budget that inherits the parent's entire served
+    /// history (prompt + tokens generated so far) and decodes
+    /// independently from here on. Timing restarts — the child's TTFT
+    /// measures the fork's first divergent token, not the parent's.
+    pub fn fork_as(&self, id: SeqId, max_new: usize) -> Sequence {
+        Sequence {
+            id,
+            prompt: self.prompt.clone(),
+            generated: self.generated.clone(),
+            max_new: self.generated.len() + max_new,
+            eos: self.eos,
+            priority: self.priority,
+            state: SeqState::Decoding,
+            arrived: Instant::now(),
+            first_token_at: None,
+            finished_at: None,
+        }
+    }
+
     pub fn ttft_s(&self) -> Option<f64> {
         self.first_token_at
             .map(|t| t.duration_since(self.arrived).as_secs_f64())
@@ -245,6 +265,25 @@ mod extra_tests {
         s.push_token(5);
         // TTFT measured from the backdated trace arrival, not the submit
         assert!(s.ttft_s().unwrap() >= 0.002);
+    }
+
+    #[test]
+    fn fork_inherits_history_with_fresh_budget_and_timing() {
+        let mut p = Sequence::new(30, vec![1, 2, 3], 10, Some(99))
+            .with_priority(Priority::Batch);
+        p.push_token(7);
+        p.push_token(8);
+        let c = p.fork_as(31, 4);
+        assert_eq!(c.id, 31);
+        assert_eq!(c.prompt, p.prompt);
+        assert_eq!(c.generated, vec![7, 8]);
+        assert_eq!(c.len(), p.len());
+        assert_eq!(c.state, SeqState::Decoding);
+        assert_eq!(c.priority, Priority::Batch);
+        assert_eq!(c.eos, Some(99));
+        // 4 NEW tokens on top of the inherited 2
+        assert_eq!(c.max_new, 6);
+        assert!(c.first_token_at.is_none() && c.ttft_s().is_none());
     }
 
     #[test]

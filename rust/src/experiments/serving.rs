@@ -8,10 +8,10 @@ use anyhow::Result;
 
 use crate::bench::Table;
 use crate::coordinator::engine::Engine;
-use crate::coordinator::metrics::ServeReport;
 use crate::coordinator::kvcache::{KvCacheConfig, KvCacheManager};
+use crate::coordinator::metrics::ServeReport;
 use crate::coordinator::roofline::{self, eq10_speedup, GB};
-use crate::coordinator::router::{synth_prompt, Router};
+use crate::coordinator::router::{collect_into, synth_prompt, Router};
 use crate::coordinator::sampling::Sampler;
 use crate::coordinator::scheduler::{SchedConfig, Scheduler};
 use crate::coordinator::sequence::{Priority, Sequence};
@@ -652,6 +652,172 @@ pub fn regroup_copyback_table(rt: &Runtime, cfg_name: &str) -> Result<Table> {
     Ok(t)
 }
 
+/// What one shared-prefix cohort run measured (ISSUE 8). Outputs are the
+/// per-user generated token streams in submission order, so the caller
+/// can assert bit-exactness across sharing modes.
+#[derive(Clone, Debug)]
+pub struct PrefixRunStats {
+    pub report: ServeReport,
+    /// Prompt tokens the engine actually computed (prefix hits skip
+    /// their adopted rows — with sharing this approaches the UNIQUE
+    /// token count of the cohort).
+    pub prefill_tokens: u64,
+    pub prefix_hits: u64,
+    pub prefix_hit_tokens: u64,
+    pub cow_splits: u64,
+    /// Peak of the dedup-bytes gauge over the run (the end-state gauge
+    /// is 0 — a drained pool shares nothing).
+    pub peak_dedup_bytes: f64,
+    pub peak_shared_blocks: u64,
+    /// Most sequences concurrently holding reservations (running +
+    /// in-flight prefills) — the capacity headline on a fixed pool.
+    pub peak_concurrent: usize,
+    pub audit_checks: u64,
+    pub sync_download_bytes: u64,
+    pub outputs: Vec<Vec<i32>>,
+}
+
+/// Serve one chat cohort to completion: `users` sequences over ONE
+/// system prompt (`system_tokens` tokens) plus a distinct per-user
+/// suffix, on a pool of exactly `pool_blocks` KV blocks. Drives the
+/// scheduler directly — router traces synthesize content-free prompts,
+/// and prefix sharing is precisely about prompt CONTENT. The same seed
+/// generates identical prompts for both sharing modes.
+pub fn shared_prefix_run(rt: &Runtime, cfg_name: &str, users: usize,
+                         system_tokens: usize, user_tokens: usize,
+                         gen_tokens: usize, pool_blocks: usize,
+                         sharing: bool) -> Result<PrefixRunStats> {
+    let cfg = rt.manifest().config(cfg_name)?.clone();
+    let params = ParamStore::init(&cfg, 42);
+    let eng = Engine::new(rt, cfg_name, params, false, Sampler::Greedy, 0)?;
+    let mut kc = KvCacheConfig {
+        n_layers: cfg.n_layers,
+        k_dims: cfg.k_cache_dims,
+        v_dims: cfg.v_cache_dims,
+        block_tokens: 16,
+        bytes_per_el_k: 2.0,
+        bytes_per_el_v: 2.0,
+        budget_bytes: 0.0,
+    };
+    // size the budget to EXACTLY pool_blocks blocks (plus half a token of
+    // float headroom), so both sharing modes compete on the same pool
+    kc.budget_bytes = kc.bytes_per_token()
+        * (pool_blocks * kc.block_tokens) as f64
+        + 0.5 * kc.bytes_per_token();
+    let kv = KvCacheManager::new(kc);
+    let mut sched = Scheduler::with_config(eng, kv, SchedConfig {
+        max_batch: 16,
+        prefix_sharing: sharing,
+        ..SchedConfig::default()
+    });
+    let vocab = cfg.vocab;
+    let mut rng = Rng::new(23);
+    let system = synth_prompt(system_tokens, vocab, &mut rng);
+    let t0 = std::time::Instant::now();
+    for _ in 0..users {
+        let mut prompt = system.clone();
+        prompt.extend(synth_prompt(user_tokens, vocab, &mut rng));
+        sched.submit(prompt, gen_tokens, None);
+    }
+    let mut peak_concurrent = 0usize;
+    let mut peak_dedup = 0f64;
+    let mut peak_shared = 0u64;
+    while sched.has_work() {
+        sched.step()?;
+        peak_concurrent =
+            peak_concurrent.max(sched.n_running() + sched.n_prefilling());
+        peak_dedup = peak_dedup.max(sched.engine.metrics.dedup_bytes);
+        peak_shared = peak_shared.max(sched.engine.metrics.shared_blocks);
+    }
+    let mut report = ServeReport {
+        total_s: t0.elapsed().as_secs_f64(),
+        ..ServeReport::default()
+    };
+    collect_into(&sched.finished, &mut report);
+    let mut done = sched.finished;
+    done.sort_by_key(|s| s.id);
+    let m = &sched.engine.metrics;
+    Ok(PrefixRunStats {
+        report,
+        prefill_tokens: m.prefill_tokens,
+        prefix_hits: m.prefix_hits,
+        prefix_hit_tokens: m.prefix_hit_tokens,
+        cow_splits: m.cow_splits,
+        peak_dedup_bytes: peak_dedup,
+        peak_shared_blocks: peak_shared,
+        peak_concurrent,
+        audit_checks: m.audit_checks,
+        sync_download_bytes: m.sync_download_bytes,
+        outputs: done.into_iter().map(|s| s.generated).collect(),
+    })
+}
+
+/// A sharing-on vs sharing-off pair at one cohort size, for the
+/// acceptance asserts in bench_serving and the e2e suite.
+#[derive(Clone, Debug)]
+pub struct PrefixCompare {
+    pub users: usize,
+    pub unique_tokens: u64,
+    pub shared: PrefixRunStats,
+    pub unshared: PrefixRunStats,
+}
+
+impl PrefixCompare {
+    pub fn outputs_match(&self) -> bool {
+        self.shared.outputs == self.unshared.outputs
+    }
+}
+
+/// The ISSUE 8 acceptance table: N chat users over one 48-token system
+/// prompt, sharing on vs off, on an identical 20-block pool. With
+/// sharing, the shared prefix prefills exactly once (prefill tokens ==
+/// unique tokens, `prefix_hits == N-1`), the pool holds strictly more
+/// concurrent users, and interactive TTFT p50 drops — with outputs
+/// bit-exact vs the unshared run.
+pub fn shared_prefix_table(rt: &Runtime, cfg_name: &str)
+    -> Result<(Table, Vec<PrefixCompare>)> {
+    let (system, user, gen, blocks) = (48usize, 8usize, 8usize, 20usize);
+    let mut t = Table::new(
+        &format!(
+            "Shared-prefix serving ({cfg_name}): N users on one \
+             {system}-token system prompt, {blocks}-block pool, \
+             sharing on vs off"
+        ),
+        &["users", "mode", "prefill tokens", "prefix hits",
+          "peak concurrent", "peak dedup B", "TTFT p50 (ms)", "bit-exact"],
+    );
+    let mut out = Vec::new();
+    for users in [1usize, 8, 64] {
+        let shared = shared_prefix_run(
+            rt, cfg_name, users, system, user, gen, blocks, true)?;
+        let unshared = shared_prefix_run(
+            rt, cfg_name, users, system, user, gen, blocks, false)?;
+        let cmp = PrefixCompare {
+            users,
+            unique_tokens: (system + users * user) as u64,
+            shared,
+            unshared,
+        };
+        let exact = if cmp.outputs_match() { "yes" } else { "NO" };
+        for (mode, r) in [("shared", &cmp.shared),
+                          ("unshared", &cmp.unshared)] {
+            t.row(&[
+                users.to_string(),
+                mode.to_string(),
+                r.prefill_tokens.to_string(),
+                r.prefix_hits.to_string(),
+                r.peak_concurrent.to_string(),
+                format!("{:.0}", r.peak_dedup_bytes),
+                format!("{:.1}",
+                        r.report.ttft.quantile_us(0.50) / 1e3),
+                exact.to_string(),
+            ]);
+        }
+        out.push(cmp);
+    }
+    Ok((t, out))
+}
+
 /// Headline capacity comparison (paper §1 / Table 10).
 pub fn capacity_table() -> Table {
     let c = crate::coordinator::capacity::headline_comparison(
@@ -672,6 +838,7 @@ pub fn run(rt: &Runtime, opts: &Opts) -> Result<Vec<Table>> {
     let (chunked, _) = chunked_prefill_table(rt, "servethin")?;
     let (quantized, _) = quantized_decode_table(rt, "servethin")?;
     let (gqa, _) = gqa_composition_table(rt)?;
+    let (prefix, _) = shared_prefix_table(rt, "servethin")?;
     Ok(vec![
         table11_predicted(),
         table11_measured(rt, opts)?,
@@ -679,6 +846,7 @@ pub fn run(rt: &Runtime, opts: &Opts) -> Result<Vec<Table>> {
         chunked,
         quantized,
         gqa,
+        prefix,
         capacity_table(),
     ])
 }

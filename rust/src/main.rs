@@ -156,6 +156,19 @@ fn serve(argv: &[String]) -> Result<()> {
         .flag_f64("interactive-deadline-ms", Some(0.0),
                   "shed a WAITING interactive request once it queued this \
                    long while degraded; 0 = never (shed batch first)")
+        .flag_usize("shared-prefix-users", Some(0),
+                    "instead of a trace: serve N chat users over ONE \
+                     48-token system prompt on a fixed block pool, \
+                     reporting prefix hits, dedup bytes, and concurrency \
+                     (0 = off; see --no-prefix-sharing for the baseline)")
+        .flag_usize("prefix-pool-blocks", Some(20),
+                    "KV pool size in 16-token blocks for the \
+                     shared-prefix mode (both sharing modes compete on \
+                     this same pool)")
+        .flag_bool("no-prefix-sharing",
+                   "disable prefix-tree matching and copy-on-write block \
+                    sharing (per-sequence private blocks only — the \
+                    pre-paged baseline)")
         .parse(argv)?;
     let cfg_name = p.str("config")?;
     let quant_name = p.str("kv-quant")?;
@@ -168,6 +181,29 @@ fn serve(argv: &[String]) -> Result<()> {
     if !fault_plan.is_empty() {
         println!("fault plan: {fault_plan:?}");
         rt.install_fault_plan(fault_plan);
+    }
+    let shared_users = p.usize("shared-prefix-users")?;
+    if shared_users > 0 {
+        let sharing = !p.bool("no-prefix-sharing");
+        let r = experiments::serving::shared_prefix_run(
+            &rt, &cfg_name, shared_users, 48, 8, 8,
+            p.usize("prefix-pool-blocks")?, sharing)?;
+        println!(
+            "shared-prefix cohort ({cfg_name}, sharing {}): {} users, \
+             {} prefill tokens computed, {} prefix hits ({} rows \
+             adopted), peak {} concurrent, peak dedup {:.0} B, \
+             TTFT p50 {:.1} ms",
+            if sharing { "on" } else { "off" },
+            shared_users, r.prefill_tokens, r.prefix_hits,
+            r.prefix_hit_tokens, r.peak_concurrent, r.peak_dedup_bytes,
+            r.report.ttft.quantile_us(0.5) / 1e3
+        );
+        println!("{}", r.report.report());
+        if r.sync_download_bytes != 0 {
+            bail!("sync_download_bytes = {} (device-residency regression)",
+                  r.sync_download_bytes);
+        }
+        return Ok(());
     }
     let cfg = rt.manifest().config(&cfg_name)?.clone();
     println!(
@@ -223,6 +259,7 @@ fn serve(argv: &[String]) -> Result<()> {
         round_budget: p.usize("round-budget")?,
         chunk_tokens: chunk,
         interactive_weight: p.usize("interactive-weight")?,
+        prefix_sharing: !p.bool("no-prefix-sharing"),
         ..SchedConfig::default()
     });
     let deadline = |ms: f64| if ms > 0.0 { Some(ms / 1e3) } else { None };

@@ -105,7 +105,12 @@ impl Value {
             Value::Bool(true) => out.push_str("true"),
             Value::Bool(false) => out.push_str("false"),
             Value::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                // JSON has no inf/NaN literal — a non-finite ratio (e.g.
+                // an all-saved copyback or an empty-trace rate) must
+                // degrade to null, not corrupt the whole document
+                if !x.is_finite() {
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{x}");
@@ -409,6 +414,25 @@ mod tests {
         assert!(Value::parse("[1,]").is_err());
         assert!(Value::parse("12 34").is_err());
         assert!(Value::parse("\"unterminated").is_err());
+    }
+
+    /// Satellite-3 regression: pre-fix, `write!` printed `inf`/`NaN`
+    /// verbatim — the appended BENCH_serving.json then failed to parse
+    /// and the whole perf-trajectory series was silently restarted.
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        let v = obj(vec![
+            ("ok", num(1.5)),
+            ("ratio", num(f64::INFINITY)),
+            ("neg", num(f64::NEG_INFINITY)),
+            ("nan", num(f64::NAN)),
+        ]);
+        let text = v.to_string();
+        assert!(!text.contains("inf") && !text.contains("NaN"), "{text}");
+        let back = Value::parse(&text).expect("must stay valid JSON");
+        assert_eq!(back.get("ratio").unwrap(), &Value::Null);
+        assert_eq!(back.get("nan").unwrap(), &Value::Null);
+        assert_eq!(back.get("ok").unwrap(), &Value::Num(1.5));
     }
 
     #[test]

@@ -81,6 +81,7 @@ fn run(
         interactive_weight: 4,
         max_step_retries,
         retry_backoff_us: 50,
+        ..SchedConfig::default()
     });
     let mut router = Router::new(sched).with_policy(policy);
     let report = router

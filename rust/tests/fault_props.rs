@@ -238,6 +238,7 @@ fn randomized_churn_under_random_fault_schedules_stays_consistent() {
             interactive_weight: 2,
             max_step_retries: 4,
             retry_backoff_us: 20,
+            ..SchedConfig::default()
         });
         let plan = FaultPlan {
             seed: rng.next_u64(),

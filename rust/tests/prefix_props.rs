@@ -1,0 +1,322 @@
+//! Paged-KV prefix-sharing properties (ISSUE 8 satellite): randomized
+//! fork/join churn over the radix prefix tree.
+//!
+//! The contracts under test:
+//! - block refcounts never leak or double-free: the per-round auditor
+//!   (always on in debug test builds) stays green through arbitrary
+//!   submit/fork/retire interleavings, and a drained scheduler returns
+//!   every block to the pool (`blocks_used == 0`, zero refcount
+//!   violations);
+//! - copy-on-write never aliases a written block: every finished
+//!   sequence — including forked children, whose history rides shared
+//!   blocks — decodes EXACTLY the tokens a standalone single-lane run of
+//!   its prompt produces (an aliased write would corrupt a neighbour's
+//!   rows and break this oracle);
+//! - sharing is invisible to outputs: the same randomized schedule with
+//!   `prefix_sharing` disabled yields bit-identical per-sequence tokens,
+//!   while the shared run computes strictly fewer prefill tokens —
+//!   exactly `prefix_hit_tokens` fewer.
+
+use std::collections::BTreeMap;
+
+use thinkeys::coordinator::engine::Engine;
+use thinkeys::coordinator::kvcache::{KvCacheConfig, KvCacheManager};
+use thinkeys::coordinator::router::{bucket_of, synth_prompt, ReportBucket};
+use thinkeys::coordinator::sampling::Sampler;
+use thinkeys::coordinator::scheduler::{SchedConfig, Scheduler};
+use thinkeys::coordinator::sequence::{SeqId, Sequence};
+use thinkeys::proptest::property;
+use thinkeys::runtime::{ParamStore, Runtime};
+use thinkeys::substrate::rng::Rng;
+
+fn runtime() -> Runtime {
+    Runtime::new().expect("run `make artifacts` first")
+}
+
+fn engine<'a>(rt: &'a Runtime, cfg: &str) -> Engine<'a> {
+    let params = ParamStore::init(rt.manifest().config(cfg).unwrap(), 42);
+    Engine::new(rt, cfg, params, false, Sampler::Greedy, 0).unwrap()
+}
+
+fn kv_for(rt: &Runtime, cfg: &str, budget_bytes: f64) -> KvCacheManager {
+    let c = rt.manifest().config(cfg).unwrap();
+    KvCacheManager::new(KvCacheConfig {
+        n_layers: c.n_layers,
+        k_dims: c.k_cache_dims,
+        v_dims: c.v_cache_dims,
+        block_tokens: 16,
+        bytes_per_el_k: 2.0,
+        bytes_per_el_v: 2.0,
+        budget_bytes,
+    })
+}
+
+/// One pre-generated churn action. The op stream (including prompt
+/// CONTENT) is fixed before either run, so the sharing-on and
+/// sharing-off schedules replay identically.
+#[derive(Clone, Debug)]
+enum Op {
+    Submit { prompt: Vec<i32>, max_new: usize },
+    /// Fork the `pick % n_running`-th running sequence (skipped when
+    /// nothing is running or the batch is full — identically in both
+    /// modes, since admission never blocks on the ample pool).
+    Fork { pick: usize, max_new: usize },
+    Step,
+}
+
+/// Everything one churn run leaves behind.
+struct ChurnOut {
+    /// id -> (prompt, generated), COMPLETED sequences only. Ids are
+    /// allocated by the scheduler in op order, so they line up across
+    /// replays of the same op stream.
+    done: BTreeMap<SeqId, (Vec<i32>, Vec<i32>)>,
+    finished: usize,
+    forked: usize,
+    prefill_tokens: u64,
+    prefix_hits: u64,
+    prefix_hit_tokens: u64,
+}
+
+fn run_churn(rt: &Runtime, ops: &[Op], sharing: bool)
+    -> Result<ChurnOut, String> {
+    let eng = engine(rt, "servethin");
+    let kv = kv_for(rt, "servethin", 4e6); // ample: admission never blocks
+    let mut sched = Scheduler::with_config(eng, kv, SchedConfig {
+        max_batch: 8,
+        prefix_sharing: sharing,
+        ..SchedConfig::default()
+    });
+    let mut forked = 0usize;
+    let mut submitted = 0usize;
+    for op in ops {
+        match op {
+            Op::Submit { prompt, max_new } => {
+                sched.submit(prompt.clone(), *max_new, None);
+                submitted += 1;
+            }
+            Op::Fork { pick, max_new } => {
+                let ids = sched.running_ids();
+                if !ids.is_empty()
+                    && sched.fork(ids[pick % ids.len()], *max_new).is_ok()
+                {
+                    forked += 1;
+                }
+            }
+            Op::Step => {}
+        }
+        sched.step().map_err(|e| format!("step failed: {e:#}"))?;
+    }
+    sched
+        .run_to_completion()
+        .map_err(|e| format!("drain failed: {e:#}"))?;
+
+    // drained pool: every block back on the free list, accounting clean
+    let stats = sched.kv.sharing_stats();
+    if stats.blocks_used != 0 {
+        return Err(format!(
+            "{} blocks leaked after drain (sharing={sharing})",
+            stats.blocks_used));
+    }
+    let v = sched.kv.refcount_violations();
+    if !v.is_empty() {
+        return Err(format!("refcount violations after drain: {v:?}"));
+    }
+    if sched.engine.metrics.sync_download_bytes != 0 {
+        return Err("full-arena download during churn".into());
+    }
+    if sched.finished.len() != submitted + forked {
+        return Err(format!(
+            "{} submitted + {} forked but {} accounted for",
+            submitted, forked, sched.finished.len()));
+    }
+    let mut done = BTreeMap::new();
+    for s in &sched.finished {
+        if bucket_of(s) == ReportBucket::Completed {
+            done.insert(s.id, (s.prompt.clone(), s.generated.clone()));
+        }
+    }
+    let m = &sched.engine.metrics;
+    Ok(ChurnOut {
+        done,
+        finished: sched.finished.len(),
+        forked,
+        prefill_tokens: m.prefill_tokens,
+        prefix_hits: m.prefix_hits,
+        prefix_hit_tokens: m.prefix_hit_tokens,
+    })
+}
+
+/// Randomized fork/join churn: sharing-on and sharing-off replays of one
+/// op stream are bit-identical per sequence, the shared run saves
+/// exactly the adopted rows, and every output matches a standalone
+/// single-lane oracle (the CoW no-aliasing check).
+#[test]
+fn fork_join_churn_is_bitexact_and_leak_free() {
+    let rt = runtime();
+    property("prefix_fork_join", 3, |rng| {
+        let vocab = rt.manifest().config("servethin").unwrap().vocab;
+        // two prefix families, block-aligned so sealing registers them
+        let families: Vec<Vec<i32>> = [16usize, 32]
+            .iter()
+            .map(|&n| synth_prompt(n, vocab, rng))
+            .collect();
+        let submit = |rng: &mut Rng, family: usize| {
+            let mut p = families[family].clone();
+            p.extend(synth_prompt(3 + rng.below(10), vocab, rng));
+            Op::Submit { prompt: p, max_new: 2 + rng.below(4) }
+        };
+        // the first two ops share family 0, so every case exercises at
+        // least one guaranteed prefix hit in the sharing run
+        let mut ops = vec![submit(rng, 0), submit(rng, 0)];
+        for _ in 0..10 {
+            ops.push(match rng.below(5) {
+                0 | 1 => {
+                    let fam = rng.below(families.len());
+                    submit(rng, fam)
+                }
+                2 => Op::Fork {
+                    pick: rng.below(8),
+                    max_new: 1 + rng.below(3),
+                },
+                _ => Op::Step,
+            });
+        }
+
+        let shared = run_churn(&rt, &ops, true)?;
+        let unshared = run_churn(&rt, &ops, false)?;
+
+        // identical schedules, identical outcomes
+        if shared.finished != unshared.finished
+            || shared.forked != unshared.forked
+        {
+            return Err(format!(
+                "schedules diverged: {}+{} vs {}+{} finished+forked",
+                shared.finished, shared.forked,
+                unshared.finished, unshared.forked));
+        }
+        if shared.done != unshared.done {
+            return Err("sharing changed decoded tokens".into());
+        }
+
+        // the guaranteed family-0 repeat must have hit the tree, and the
+        // shared run must have computed exactly the adopted rows fewer
+        if shared.prefix_hits == 0 {
+            return Err("repeated family-0 prompt never hit the tree".into());
+        }
+        if unshared.prefix_hits != 0 {
+            return Err("sharing disabled but the tree matched".into());
+        }
+        if shared.prefill_tokens + shared.prefix_hit_tokens
+            != unshared.prefill_tokens
+        {
+            return Err(format!(
+                "prefill savings don't balance: {} computed + {} adopted \
+                 != {} baseline",
+                shared.prefill_tokens, shared.prefix_hit_tokens,
+                unshared.prefill_tokens));
+        }
+
+        // CoW no-aliasing oracle: every completed sequence (forked
+        // children included) must reproduce a standalone greedy run of
+        // its prompt — an aliased shared block would have let one lane's
+        // writes corrupt another's history
+        let mut oracle = engine(&rt, "servethin");
+        for (id, (prompt, generated)) in &shared.done {
+            if generated.is_empty() {
+                continue;
+            }
+            let mut s =
+                Sequence::new(*id, prompt.clone(), generated.len(), None);
+            oracle.prefill(&mut s).map_err(|e| e.to_string())?;
+            while !s.is_finished() {
+                let mut live = vec![&mut s];
+                oracle.decode_step(&mut live).map_err(|e| e.to_string())?;
+            }
+            oracle.drop_seq(*id);
+            if &s.generated != generated {
+                return Err(format!(
+                    "seq {id} diverged from the standalone oracle: \
+                     {:?} vs {:?}",
+                    generated, s.generated));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Churn under pool PRESSURE (tight block budget, preemption in the
+/// mix): the auditor stays green every round, nothing leaks, nothing
+/// double-frees, and the drain returns the pool to empty.
+#[test]
+fn churn_under_pool_pressure_never_leaks_blocks() {
+    let rt = runtime();
+    property("prefix_pool_pressure", 3, |rng| {
+        let vocab = rt.manifest().config("servethin").unwrap().vocab;
+        let c = rt.manifest().config("servethin").unwrap();
+        let bytes_per_token =
+            c.n_layers as f64 * (c.k_cache_dims + c.v_cache_dims) as f64 * 2.0;
+        // 24 blocks: a handful of concurrent sequences, so admission
+        // blocks, forks fail on a full pool, and retirement/fork/preempt
+        // constantly recycle blocks through the free list
+        let budget = bytes_per_token * (24.0 * 16.0 + 0.5);
+        let eng = engine(&rt, "servethin");
+        let kv = kv_for(&rt, "servethin", budget);
+        let mut sched = Scheduler::with_config(eng, kv, SchedConfig {
+            max_batch: 4,
+            prefix_sharing: true,
+            ..SchedConfig::default()
+        });
+        let family = synth_prompt(16, vocab, rng);
+        let mut submitted = 0usize;
+        let mut forked = 0usize;
+        for _ in 0..24 {
+            match rng.below(6) {
+                0 | 1 => {
+                    let mut p = family.clone();
+                    p.extend(synth_prompt(2 + rng.below(12), vocab, rng));
+                    sched.submit(p, 2 + rng.below(4), None);
+                    submitted += 1;
+                }
+                2 => {
+                    let ids = sched.running_ids();
+                    if !ids.is_empty()
+                        && sched
+                            .fork(ids[rng.below(ids.len())], 1 + rng.below(3))
+                            .is_ok()
+                    {
+                        forked += 1;
+                    }
+                }
+                3 if sched.n_running() > 1 => {
+                    let _ = sched.preempt_one();
+                }
+                _ => {}
+            }
+            // debug test builds audit every round: a refcount leak, an
+            // aliased CoW block, or a stale prefix registration fails
+            // the step right here
+            sched.step().map_err(|e| format!("step failed: {e:#}"))?;
+        }
+        sched
+            .run_to_completion()
+            .map_err(|e| format!("drain failed: {e:#}"))?;
+        let stats = sched.kv.sharing_stats();
+        if stats.blocks_used != 0 {
+            return Err(format!(
+                "{} blocks leaked after drain", stats.blocks_used));
+        }
+        let v = sched.kv.refcount_violations();
+        if !v.is_empty() {
+            return Err(format!("refcount violations after drain: {v:?}"));
+        }
+        if sched.finished.len() != submitted + forked {
+            return Err(format!(
+                "{submitted} submitted + {forked} forked but {} accounted \
+                 for", sched.finished.len()));
+        }
+        if sched.engine.metrics.sync_download_bytes != 0 {
+            return Err("full-arena download under pressure".into());
+        }
+        Ok(())
+    });
+}

@@ -1082,3 +1082,104 @@ fn auditor_catches_leaked_kv_table() {
     assert!(violations.iter().any(|v| v.contains("no longer tracks")),
             "auditor missed the leaked table: {violations:?}");
 }
+
+/// ISSUE 8 acceptance, end to end: N chat users over ONE system prompt
+/// prefill the shared prefix exactly once (computed prefill tokens ==
+/// unique tokens, `prefix_hits == N-1`), hold strictly more concurrent
+/// sequences AND strictly lower interactive TTFT p50 than the per-lane
+/// baseline on the SAME block budget, decode bit-exactly the
+/// sharing-disabled outputs, and keep the auditor green with zero
+/// full-arena downloads throughout.
+#[test]
+fn shared_prefix_cohort_meets_the_acceptance_bar() {
+    let rt = runtime();
+    let (users, system, user, gen, pool) = (6usize, 48, 8, 6, 12);
+    let shared = thinkeys::experiments::serving::shared_prefix_run(
+        &rt, "servethin", users, system, user, gen, pool, true).unwrap();
+    let unshared = thinkeys::experiments::serving::shared_prefix_run(
+        &rt, "servethin", users, system, user, gen, pool, false).unwrap();
+
+    // everyone is served in both modes — sharing is a capacity win, the
+    // baseline just queues longer
+    assert_eq!(shared.report.n_requests, users);
+    assert_eq!(unshared.report.n_requests, users);
+    assert_eq!(shared.report.rejected, 0);
+    assert_eq!(unshared.report.rejected, 0);
+
+    // the shared prefix is computed exactly once: prefill token count
+    // equals the cohort's UNIQUE tokens, and every user after the first
+    // adopts it
+    assert_eq!(shared.prefill_tokens, (system + users * user) as u64,
+               "shared run recomputed part of the shared prefix");
+    assert_eq!(shared.prefix_hits, users as u64 - 1);
+    assert_eq!(shared.prefix_hit_tokens, ((users - 1) * system) as u64);
+    assert_eq!(unshared.prefill_tokens, (users * (system + user)) as u64);
+    assert_eq!(unshared.prefix_hits, 0);
+
+    // capacity: strictly more users live at once on the identical pool,
+    // with real deduplication while they are
+    assert!(shared.peak_concurrent > unshared.peak_concurrent,
+            "sharing held {} concurrent vs baseline {}",
+            shared.peak_concurrent, unshared.peak_concurrent);
+    assert!(shared.peak_dedup_bytes > 0.0 && shared.peak_shared_blocks > 0);
+    assert_eq!(unshared.peak_dedup_bytes, 0.0);
+
+    // interactive latency: the median user stops paying for the queue
+    let (p50_s, p50_u) = (shared.report.ttft.quantile_us(0.5),
+                          unshared.report.ttft.quantile_us(0.5));
+    assert!(p50_s < p50_u,
+            "TTFT p50 did not improve: {p50_s:.0}us vs {p50_u:.0}us");
+
+    // outputs are bit-exact across sharing modes
+    assert_eq!(shared.outputs, unshared.outputs,
+               "prefix sharing changed decoded tokens");
+    assert_eq!(shared.outputs.len(), users);
+    assert!(shared.outputs.iter().all(|o| o.len() == gen));
+
+    // auditor green, KV device-resident, in both modes
+    assert_eq!(shared.sync_download_bytes, 0);
+    assert_eq!(unshared.sync_download_bytes, 0);
+    #[cfg(any(debug_assertions, feature = "audit"))]
+    {
+        assert!(shared.audit_checks > 0 && unshared.audit_checks > 0,
+                "auditor never cross-checked a round");
+    }
+}
+
+/// Copy-on-write divergence: forking a sequence with a partial tail
+/// block privately copies the tail (one `cow_split`), the child decodes
+/// on from the parent's history, and both finish with histories that
+/// agree up to the fork — greedy continuations of the same prefix.
+#[test]
+fn fork_splits_the_partial_tail_and_diverges_privately() {
+    let rt = runtime();
+    let eng = engine(&rt, "servethin", 0);
+    let kv = kv_for(&rt, "servethin", 4.0);
+    let mut sched = Scheduler::with_config(eng, kv, SchedConfig {
+        max_batch: 4,
+        ..SchedConfig::default()
+    });
+    let cfg = rt.manifest().config("servethin").unwrap().clone();
+    let mut rng = Rng::new(5);
+    // 20-token prompt: one full block plus a partial tail to CoW-split
+    let parent = sched.submit(synth_prompt(20, cfg.vocab, &mut rng), 8, None);
+    sched.step().unwrap();
+    sched.step().unwrap();
+    let child = sched.fork(parent, 4).unwrap();
+    assert_eq!(sched.engine.metrics.cow_splits, 1,
+               "partial tail must be privately copied on fork");
+    sched.run_to_completion().unwrap();
+    assert_eq!(sched.finished.len(), 2);
+    let p = sched.finished.iter().find(|s| s.id == parent).unwrap();
+    let c = sched.finished.iter().find(|s| s.id == child).unwrap();
+    assert!(matches!(p.state, SeqState::Finished(FinishReason::MaxTokens)));
+    assert!(matches!(c.state, SeqState::Finished(FinishReason::MaxTokens)));
+    // same prompt, greedy sampling: the shorter history is a prefix of
+    // the longer — the fork shared blocks without sharing FUTURE writes
+    let n = p.generated.len().min(c.generated.len());
+    assert_eq!(&p.generated[..n], &c.generated[..n],
+               "fork corrupted the shared history");
+    // the drained pool holds nothing: fork's refcounts fully unwound
+    assert_eq!(sched.kv.sharing_stats().blocks_used, 0);
+    assert!(sched.kv.refcount_violations().is_empty());
+}
