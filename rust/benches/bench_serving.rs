@@ -6,12 +6,14 @@ use thinkeys::analysis::trajectory;
 use thinkeys::bench::Table;
 use thinkeys::coordinator::engine::Engine;
 use thinkeys::coordinator::kvcache::{KvCacheConfig, KvCacheManager};
+use thinkeys::coordinator::metrics::ServeReport;
 use thinkeys::coordinator::router::Router;
 use thinkeys::coordinator::sampling::Sampler;
-use thinkeys::coordinator::scheduler::Scheduler;
-use thinkeys::datagen::arrival::closed_loop;
+use thinkeys::coordinator::scheduler::{SchedConfig, Scheduler};
+use thinkeys::coordinator::supervisor::{Supervisor, SupervisorConfig};
+use thinkeys::datagen::arrival::{closed_loop, mixed_chat_doc_trace};
 use thinkeys::experiments::serving;
-use thinkeys::runtime::{ParamStore, Runtime};
+use thinkeys::runtime::{FaultPlan, ParamStore, Runtime};
 use thinkeys::substrate::json::{num, obj, s, Value};
 
 /// Append this run's per-config serving numbers to `BENCH_serving.json`
@@ -34,6 +36,54 @@ fn record_trajectory(rows: Vec<Value>) {
         Ok(_) => println!("\nperf trajectory appended to {}", path.display()),
         Err(e) => eprintln!("cannot write {path:?}: {e}"),
     }
+}
+
+/// One supervised closed-loop run of the mixed chat+doc workload on
+/// servethin (checkpoint every 4 rounds), optionally under a fault plan.
+/// Uses its OWN Runtime so an installed plan never leaks into the other
+/// benchmark scenarios.
+fn supervised_run(plan: Option<FaultPlan>) -> ServeReport {
+    let rt = Runtime::new().expect("make artifacts first");
+    if let Some(p) = plan {
+        rt.install_fault_plan(p);
+    }
+    let cfg_name = "servethin";
+    let cfg = rt.manifest().config(cfg_name).unwrap().clone();
+    let params = ParamStore::init(&cfg, 42);
+    let eng =
+        Engine::new(&rt, cfg_name, params, false, Sampler::Greedy, 0).unwrap();
+    let kv = KvCacheManager::new(KvCacheConfig {
+        n_layers: cfg.n_layers,
+        k_dims: cfg.k_cache_dims,
+        v_dims: cfg.v_cache_dims,
+        block_tokens: 16,
+        bytes_per_el_k: 2.0,
+        bytes_per_el_v: 2.0,
+        budget_bytes: 4e6,
+    });
+    let chunk = rt.manifest().chunks_for(cfg_name).first().copied();
+    let sched = Scheduler::with_config(eng, kv, SchedConfig {
+        max_batch: 8,
+        round_budget: 64,
+        chunk_tokens: chunk,
+        retry_backoff_us: 50,
+        ..SchedConfig::default()
+    });
+    let rt_ref = &rt;
+    let fact_cfg = cfg.clone();
+    let factory = move || {
+        let params = ParamStore::init(&fact_cfg, 42);
+        Engine::new(rt_ref, cfg_name, params, false, Sampler::Greedy, 0)
+    };
+    let scfg = SupervisorConfig {
+        checkpoint_every: 4,
+        ..SupervisorConfig::default()
+    };
+    let mut router =
+        Router::new(sched).with_supervisor(Supervisor::new(scfg, factory));
+    router
+        .run_closed_loop(&mixed_chat_doc_trace(10, 3, 0.002, 0.0005), 0)
+        .expect("supervised run must survive its fault plan")
 }
 
 fn main() {
@@ -89,6 +139,52 @@ fn main() {
         ]));
     }
     t.print();
+
+    // Supervised warm restart (ISSUE 9): the same mixed workload served
+    // fault-free vs under a seeded fatal plan, both supervised. The
+    // recovery cost is the TTFT p99 delta + the replayed-token count;
+    // the recovered run must still complete everything it was sent.
+    let base = supervised_run(None);
+    let faulted = supervised_run(Some(FaultPlan {
+        seed: 7,
+        fatal: 0.02,
+        max_burst: 2,
+        ..FaultPlan::empty()
+    }));
+    let mut rtab = Table::new(
+        "Supervised restart: fault-free vs seeded fatal plan (servethin)",
+        &["scenario", "tok/s", "ttft p99 us", "restarts", "replayed tok",
+          "ckpt B"],
+    );
+    for (name, r) in [("fault-free", &base), ("fatal-plan", &faulted)] {
+        rtab.row(&[
+            name.to_string(),
+            format!("{:.1}", r.gen_tokens_per_sec()),
+            format!("{:.0}", r.ttft.quantile_us(0.99)),
+            r.recovery.engine_restarts.to_string(),
+            r.recovery.replayed_tokens.to_string(),
+            r.recovery.checkpoint_bytes.to_string(),
+        ]);
+    }
+    rtab.print();
+    assert_eq!(base.recovery.engine_restarts, 0);
+    assert!(faulted.recovery.engine_restarts > 0,
+            "the seeded fatal plan never exercised a restart");
+    assert_eq!(faulted.failed, 0,
+               "a supervised run must lose nothing to its fatal plan");
+    assert_eq!(faulted.n_requests, base.n_requests);
+    let p99_delta = faulted.ttft.quantile_us(0.99)
+        - base.ttft.quantile_us(0.99);
+    trajectory.push(obj(vec![
+        ("config", s("servethin-restart")),
+        ("gen_tok_per_s", num(faulted.gen_tokens_per_sec())),
+        ("ttft_p99_us", num(faulted.ttft.quantile_us(0.99))),
+        ("ttft_p99_delta_us", num(p99_delta)),
+        ("engine_restarts", num(faulted.recovery.engine_restarts as f64)),
+        ("replayed_tokens", num(faulted.recovery.replayed_tokens as f64)),
+        ("checkpoint_bytes", num(faulted.recovery.checkpoint_bytes as f64)),
+    ]));
+
     record_trajectory(trajectory);
     // before/after the context-tiered artifact grid at short contexts —
     // the Eq. 10 bytes-per-step win made visible

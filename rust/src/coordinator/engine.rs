@@ -166,6 +166,78 @@ struct StepSnapshot {
     metrics: EngineMetrics,
 }
 
+/// Host-side image of an in-flight chunked prefill inside an
+/// [`EngineCheckpoint`]: the progress counter plus the host mirrors.
+/// The carried DEVICE literals are deliberately absent — the mirror is
+/// current up to `done` (the delta-sync contract), so a restore rebuilds
+/// them with one upload per arena, exactly like the first chunk did.
+#[derive(Clone, Debug)]
+struct ChunkCheckpoint {
+    done: usize,
+    k: RowArena,
+    v: RowArena,
+}
+
+/// Everything needed to rebuild an [`Engine`]'s serving state from
+/// nothing (ISSUE 9): the full-restore generalization of
+/// [`StepSnapshot`]'s one-step rollback. Because the delta-synced host
+/// mirror is always current, the checkpoint is a pure host-memory clone
+/// — no device traffic to take one — and a restore re-uploads device
+/// literals from the mirrors through the same paths a join/tier-switch
+/// already uses. Sampler RNG state rides along, so replaying the rounds
+/// after the checkpoint regenerates bit-exact tokens.
+///
+/// The checkpoint is engine-private state only; the scheduler pairs it
+/// with its own queue/block-table image (`Scheduler::checkpoint`).
+pub struct EngineCheckpoint {
+    tier: usize,
+    lanes: LaneMap,
+    k_group: RowArena,
+    v_group: RowArena,
+    parked: HashMap<SeqId, Parked>,
+    prefix_store: HashMap<BlockId, KvBlock>,
+    prefix_of: HashMap<SeqId, PrefixRef>,
+    block_tokens: usize,
+    chunking: HashMap<SeqId, ChunkCheckpoint>,
+    rows: HashMap<SeqId, usize>,
+    rng: Rng,
+    metrics: EngineMetrics,
+}
+
+impl EngineCheckpoint {
+    /// Host bytes this checkpoint holds across every cache surface
+    /// (group mirrors + parked rows + chunk mirrors + shared prefix
+    /// blocks, payload + scale planes) — the `checkpoint_bytes` gauge.
+    pub fn host_bytes(&self) -> usize {
+        let arena = |k: &RowArena, v: &RowArena| {
+            k.payload_bytes() + k.scale_bytes() + v.payload_bytes()
+                + v.scale_bytes()
+        };
+        arena(&self.k_group, &self.v_group)
+            + self.parked.values().map(|p| arena(&p.k, &p.v)).sum::<usize>()
+            + self.chunking.values().map(|c| arena(&c.k, &c.v)).sum::<usize>()
+            + self
+                .prefix_store
+                .values()
+                .map(|b| arena(&b.k, &b.v))
+                .sum::<usize>()
+    }
+
+    /// Sequences with in-flight chunked prefills at checkpoint time (the
+    /// supervisor requeues these for resumption after a restore).
+    pub fn chunking_ids(&self) -> Vec<SeqId> {
+        let mut v: Vec<SeqId> = self.chunking.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Total generated-token rows accounted at checkpoint time — the
+    /// baseline `replayed_tokens` is measured against.
+    pub fn tracked_row_total(&self) -> usize {
+        self.rows.values().sum()
+    }
+}
+
 pub struct Engine<'rt> {
     rt: &'rt Runtime,
     pub cfg: ConfigEntry,
@@ -1752,6 +1824,101 @@ impl<'rt> Engine<'rt> {
         self.k_scale_lit = None;
         self.v_lit = None;
         self.v_scale_lit = None;
+    }
+
+    /// Capture a full-restore checkpoint of every step-mutable surface
+    /// (see [`EngineCheckpoint`]). Pure host-memory clone: the device
+    /// literals are NOT captured — the host mirrors are always current,
+    /// so they are rebuilt on restore.
+    pub fn checkpoint(&self) -> EngineCheckpoint {
+        EngineCheckpoint {
+            tier: self.tier,
+            lanes: self.lanes.clone(),
+            k_group: self.k_group.clone(),
+            v_group: self.v_group.clone(),
+            parked: self.parked.clone(),
+            prefix_store: self.prefix_store.clone(),
+            prefix_of: self.prefix_of.clone(),
+            block_tokens: self.block_tokens,
+            chunking: self
+                .chunking
+                .iter()
+                .map(|(&id, c)| {
+                    (id, ChunkCheckpoint {
+                        done: c.done,
+                        k: c.k.clone(),
+                        v: c.v.clone(),
+                    })
+                })
+                .collect(),
+            rows: self.rows.clone(),
+            rng: self.rng.clone(),
+            metrics: self.metrics.clone(),
+        }
+    }
+
+    /// Rebuild this engine's serving state from a checkpoint — the warm
+    /// half of a supervisor restart (ISSUE 9). Works on a FRESH engine
+    /// (built from the same manifest/config/params) or on a poisoned one
+    /// being recycled:
+    ///
+    /// - host surfaces (lanes, mirrors, parked/chunking rows, shared
+    ///   prefix store, row accounting, RNG, metrics) are restored by
+    ///   clone;
+    /// - the decode arena literals are dropped, NOT rebuilt here — the
+    ///   next decode step detects the missing literal and re-uploads
+    ///   from the restored mirror (the same path `rollback_step` and
+    ///   every join/tier-switch already uses);
+    /// - in-flight chunked prefills DO rebuild their carried literals
+    ///   eagerly (from mirrors current up to `done`), charged to
+    ///   `sync_upload_bytes` exactly like a first chunk's upload. Rows
+    ///   past `done` hold zeros instead of the dead engine's bytes, but
+    ///   the chunk artifacts' causal/start masking never reads them.
+    ///
+    /// Restoring the RNG alongside the mirrors is what makes post-restore
+    /// replay bit-exact: the sampler RNG is a pure function of (seed,
+    /// consumption), both captured here.
+    pub fn restore(&mut self, ck: &EngineCheckpoint) -> Result<()> {
+        self.tier = ck.tier;
+        self.lanes = ck.lanes.clone();
+        self.k_group = ck.k_group.clone();
+        self.v_group = ck.v_group.clone();
+        self.parked = ck.parked.clone();
+        self.prefix_store = ck.prefix_store.clone();
+        self.prefix_of = ck.prefix_of.clone();
+        self.block_tokens = ck.block_tokens;
+        self.rows = ck.rows.clone();
+        self.rng = ck.rng.clone();
+        self.metrics = ck.metrics.clone();
+        self.k_lit = None;
+        self.k_scale_lit = None;
+        self.v_lit = None;
+        self.v_scale_lit = None;
+        self.last_prefill_logits = None;
+        self.last_decode_logits = None;
+        let s = self.max_prompt();
+        let (l, kd, vd) = (self.cfg.n_layers, self.cfg.k_cache_dims,
+                           self.cfg.v_cache_dims);
+        self.chunking.clear();
+        for (&id, c) in &ck.chunking {
+            let (k_lit, k_scale_lit) =
+                Self::arena_literals(&c.k, &[l, s, kd])?;
+            let (v_lit, v_scale_lit) =
+                Self::arena_literals(&c.v, &[l, s, vd])?;
+            self.metrics.sync_upload_bytes +=
+                (c.k.payload_bytes() + c.k.scale_bytes()
+                 + c.v.payload_bytes() + c.v.scale_bytes()) as u64;
+            self.chunking.insert(id, ChunkProgress {
+                done: c.done,
+                k_lit,
+                v_lit,
+                k_scale_lit,
+                v_scale_lit,
+                k: c.k.clone(),
+                v: c.v.clone(),
+            });
+        }
+        Ok(())
     }
 
     /// Mirror the runtime's injected-fault counter into the metrics

@@ -91,8 +91,12 @@ impl EngineError {
     /// faults carry a lane hint; `lane_seq` maps it to the implicated
     /// sequence (None when the batch context offers no attribution, e.g.
     /// an empty batch — then the fault degrades to Transient). Injected
-    /// exec/load/latency faults are Transient. Anything that does not
-    /// carry an `InjectedFault` is a REAL runtime failure: Fatal.
+    /// exec/load/latency faults are Transient. Injected FATAL faults are
+    /// Fatal — same recovery class as a real runtime failure (the engine
+    /// is poisoned; only a supervisor restart recovers), but still
+    /// carrying the `InjectedFault` payload so chaos tests can tell them
+    /// apart via `injected_kind()`. Anything that does not carry an
+    /// `InjectedFault` is a REAL runtime failure: Fatal.
     pub fn from_runtime(
         op: &'static str,
         source: anyhow::Error,
@@ -106,6 +110,9 @@ impl EngineError {
                     Some(seq) => EngineError::SequenceLocal { seq, op, source },
                     None => EngineError::Transient { op, source },
                 }
+            }
+            Some(fault) if fault.kind == FaultKind::FatalError => {
+                EngineError::Fatal { op, source }
             }
             Some(_) => EngineError::Transient { op, source },
             None => EngineError::Fatal { op, source },
@@ -200,6 +207,19 @@ mod tests {
             |_| None,
         );
         assert!(matches!(e, EngineError::Transient { .. }));
+    }
+
+    #[test]
+    fn injected_fatal_is_fatal_but_keeps_its_injected_kind() {
+        let e = EngineError::from_runtime(
+            "decode_step",
+            injected(FaultKind::FatalError, 2),
+            |_| Some(1),
+        );
+        assert!(matches!(e, EngineError::Fatal { .. }));
+        assert!(!e.is_retryable(), "fatal never retries in place");
+        assert_eq!(e.injected_kind(), Some(FaultKind::FatalError),
+                   "supervisor telemetry needs the injected payload");
     }
 
     #[test]

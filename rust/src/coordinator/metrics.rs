@@ -290,6 +290,56 @@ impl EngineMetrics {
     }
 }
 
+/// Crash-recovery telemetry kept by the supervisor
+/// (`coordinator/supervisor.rs`) and embedded in [`ServeReport`] — it
+/// lives here so the report type need not depend on the supervisor
+/// module. Restart work must be visible in the serving report, not
+/// inferred: a recovered Fatal costs checkpoint bytes, backoff sleeps,
+/// and replayed tokens, and all three are first-class numbers.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryStats {
+    /// Engines dropped and rebuilt after a Fatal or a watchdog trip.
+    pub engine_restarts: u64,
+    /// Restarts triggered by the per-step wall-clock watchdog (a wedged
+    /// execute that never errored) — a subset of `engine_restarts`.
+    pub watchdog_trips: u64,
+    /// Checkpoints taken (every K scheduler rounds).
+    pub checkpoint_rounds: u64,
+    /// Tokens that had been generated since the restored checkpoint and
+    /// were therefore re-generated by deterministic replay.
+    pub replayed_tokens: u64,
+    /// Restart-budget exhaustions escalated to the router (which drains
+    /// and sheds). The restart e2e asserts this stays 0 under bounded
+    /// fault plans.
+    pub escalations: u64,
+    /// Gauge: host bytes pinned by the most recent checkpoint's arena
+    /// mirrors (payload + scale planes).
+    pub checkpoint_bytes: u64,
+    /// High-water mark of `checkpoint_bytes` across the run.
+    pub peak_checkpoint_bytes: u64,
+    /// Pre-restart backoff sleeps, in microseconds (exponential in the
+    /// consecutive-restart count, clamped).
+    pub restart_backoff: Histogram,
+}
+
+impl RecoveryStats {
+    pub fn report(&self) -> String {
+        format!(
+            "recovery: {} restarts ({} watchdog), {} checkpoints \
+             ({} B, peak {} B), {} replayed tokens, {} escalations, \
+             backoff {}",
+            self.engine_restarts,
+            self.watchdog_trips,
+            self.checkpoint_rounds,
+            self.checkpoint_bytes,
+            self.peak_checkpoint_bytes,
+            self.replayed_tokens,
+            self.escalations,
+            self.restart_backoff.summary()
+        )
+    }
+}
+
 /// Per-request latency summary produced by the router. Rejected requests
 /// (cache overflow, prefill failure) are counted only in `rejected` —
 /// they contribute neither tokens nor requests to the throughput rates.
@@ -314,6 +364,16 @@ pub struct ServeReport {
     /// Requests load-shed from the waiting queue (`FinishReason::Shed`)
     /// by the router's degradation policy.
     pub shed_requests: usize,
+    /// Rounds the router observed itself degraded (fresh faults or KV
+    /// pressure) — the satellite-2 observable: shedding decisions are
+    /// explainable from the report instead of inferred.
+    pub degraded_rounds: u64,
+    /// Healthy→degraded transitions across the run.
+    pub degraded_enters: u64,
+    /// Degraded→healthy transitions across the run.
+    pub degraded_exits: u64,
+    /// Crash-recovery counters (all zero when no supervisor is attached).
+    pub recovery: RecoveryStats,
 }
 
 impl ServeReport {
@@ -337,7 +397,8 @@ impl ServeReport {
         format!(
             "{} requests in {:.2}s ({:.2} req/s, {:.1} gen tok/s, \
              {} rejected, {} failed, {} shed)\n\
-             TTFT: {}\nE2E:  {}",
+             TTFT: {}\nE2E:  {}\n\
+             degraded: {} rounds ({} enters, {} exits)\n{}",
             self.n_requests,
             self.total_s,
             self.requests_per_sec(),
@@ -346,7 +407,11 @@ impl ServeReport {
             self.failed,
             self.shed_requests,
             self.ttft.summary(),
-            self.e2e.summary()
+            self.e2e.summary(),
+            self.degraded_rounds,
+            self.degraded_enters,
+            self.degraded_exits,
+            self.recovery.report()
         )
     }
 
@@ -533,6 +598,36 @@ mod tests {
         assert!(r.report().contains("1 rejected"));
         assert!(r.report().contains("3 failed"));
         assert!(r.report().contains("4 shed"));
+    }
+
+    #[test]
+    fn report_renders_recovery_and_degradation_counters() {
+        let mut r = ServeReport::default();
+        r.degraded_rounds = 9;
+        r.degraded_enters = 2;
+        r.degraded_exits = 1;
+        r.recovery.engine_restarts = 3;
+        r.recovery.watchdog_trips = 1;
+        r.recovery.checkpoint_rounds = 12;
+        r.recovery.replayed_tokens = 40;
+        r.recovery.checkpoint_bytes = 2048;
+        r.recovery.peak_checkpoint_bytes = 4096;
+        r.recovery.restart_backoff.record_us(400.0);
+        let s = r.report();
+        assert!(s.contains("degraded: 9 rounds (2 enters, 1 exits)"));
+        assert!(s.contains("3 restarts (1 watchdog)"));
+        assert!(s.contains("12 checkpoints (2048 B, peak 4096 B)"));
+        assert!(s.contains("40 replayed tokens"));
+        assert!(s.contains("0 escalations"));
+    }
+
+    #[test]
+    fn recovery_stats_default_is_all_zero() {
+        let r = RecoveryStats::default();
+        assert_eq!(r.engine_restarts, 0);
+        assert_eq!(r.escalations, 0);
+        assert_eq!(r.restart_backoff.count(), 0);
+        assert!(r.report().contains("0 restarts (0 watchdog)"));
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //! - [`lanes`]     — lane-stable group membership + incremental regroup
 //! - [`engine`]    — execution: prefill/decode artifacts + cache packing
 //! - [`scheduler`] — continuous batching policy over the engine
+//! - [`supervisor`] — checkpoint cadence + warm restart on Fatal/wedge
 //! - [`router`]    — front end: arrival traces → scheduler → metrics
 //! - [`metrics`]   — latency/throughput accounting
 //! - [`roofline`]  — paper Eq. 10 + Tables 6/10 analytical models
@@ -28,6 +29,7 @@ pub mod sampling;
 pub mod lanes;
 pub mod engine;
 pub mod scheduler;
+pub mod supervisor;
 pub mod router;
 pub mod metrics;
 pub mod roofline;

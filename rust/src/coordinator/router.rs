@@ -19,6 +19,7 @@ use anyhow::Result;
 
 use crate::coordinator::metrics::ServeReport;
 use crate::coordinator::scheduler::Scheduler;
+use crate::coordinator::supervisor::{RestartBudgetExhausted, Supervisor};
 use crate::coordinator::sequence::{
     FinishReason, Priority, SeqState, Sequence,
 };
@@ -110,19 +111,50 @@ pub fn bucket_of(seq: &Sequence) -> ReportBucket {
 pub struct Router<'rt> {
     pub sched: Scheduler<'rt>,
     pub policy: RouterPolicy,
+    /// Crash-recovery supervision (checkpoint cadence + warm restart on
+    /// Fatal/wedge). `None` reproduces the unsupervised loop exactly: a
+    /// Fatal propagates out of the run.
+    pub supervisor: Option<Supervisor<'rt>>,
     /// Fault count at the last degradation check (detects "faults are
     /// still being injected" as a degradation signal).
     last_faults: u64,
+    /// Whether the last degradation check said degraded — transition
+    /// edges count into `degraded_enters`/`degraded_exits`.
+    degraded_now: bool,
+    /// Router loop iterations observed degraded (satellite 2: shedding
+    /// decisions explainable from the report, not inferred).
+    pub degraded_rounds: u64,
+    pub degraded_enters: u64,
+    pub degraded_exits: u64,
 }
 
 impl<'rt> Router<'rt> {
     pub fn new(sched: Scheduler<'rt>) -> Router<'rt> {
-        Router { sched, policy: RouterPolicy::default(), last_faults: 0 }
+        Router {
+            sched,
+            policy: RouterPolicy::default(),
+            supervisor: None,
+            last_faults: 0,
+            degraded_now: false,
+            degraded_rounds: 0,
+            degraded_enters: 0,
+            degraded_exits: 0,
+        }
     }
 
     /// Builder: attach a degradation/shedding policy.
     pub fn with_policy(mut self, policy: RouterPolicy) -> Router<'rt> {
         self.policy = policy;
+        self
+    }
+
+    /// Builder: attach a crash-recovery supervisor. Every scheduler
+    /// round then runs through [`Supervisor::step`] (checkpoint cadence,
+    /// warm restart on Fatal/wedge), and restart-budget exhaustion
+    /// triggers the router's drain/shed path instead of ending the run.
+    pub fn with_supervisor(mut self, supervisor: Supervisor<'rt>)
+        -> Router<'rt> {
+        self.supervisor = Some(supervisor);
         self
     }
 
@@ -137,21 +169,60 @@ impl<'rt> Router<'rt> {
         faulting || pressure
     }
 
+    /// One degradation check per router loop iteration, with the
+    /// enter/exit transitions counted — the observable that used to be
+    /// inferred from shed counts. Returns the current signal for the
+    /// shed pass, so one iteration never double-samples the fault delta.
+    fn observe_degraded(&mut self) -> bool {
+        let deg = self.degraded();
+        if deg {
+            self.degraded_rounds += 1;
+            if !self.degraded_now {
+                self.degraded_enters += 1;
+            }
+        } else if self.degraded_now {
+            self.degraded_exits += 1;
+        }
+        self.degraded_now = deg;
+        deg
+    }
+
     /// Apply the shedding policy to the waiting queue (open-loop traces,
     /// between scheduler rounds). Shed sequences land in
     /// `sched.finished` with [`FinishReason::Shed`] and are bucketed by
     /// `collect` — no separate accounting path.
-    fn shed_pass(&mut self) {
+    fn shed_pass(&mut self, degraded: bool) {
         if !self.policy.active() {
             return;
         }
-        if self.policy.only_when_degraded && !self.degraded() {
+        if self.policy.only_when_degraded && !degraded {
             return;
         }
         self.sched.shed_overdue(
             self.policy.batch_deadline_s,
             self.policy.interactive_deadline_s,
         );
+    }
+
+    /// One serving round, supervised when a supervisor is attached. A
+    /// spent restart budget does not crash the loop: the typed
+    /// [`RestartBudgetExhausted`] triggers the drain/shed path (every
+    /// reservation-holding sequence fails visibly, the waiting queue
+    /// sheds) and the run completes with the outcome in the report.
+    fn step_round(&mut self) -> Result<usize> {
+        let result = match self.supervisor.as_mut() {
+            Some(sup) => sup.step(&mut self.sched),
+            None => self.sched.step(),
+        };
+        match result {
+            Ok(n) => Ok(n),
+            Err(e) if e.downcast_ref::<RestartBudgetExhausted>().is_some() =>
+            {
+                self.sched.drain_for_escalation();
+                Ok(0)
+            }
+            Err(e) => Err(e),
+        }
     }
 
     /// Run a trace to completion. Requests are injected when their arrival
@@ -187,9 +258,10 @@ impl<'rt> Router<'rt> {
                 );
                 next += 1;
             }
-            self.shed_pass();
+            let degraded = self.observe_degraded();
+            self.shed_pass(degraded);
             if self.sched.has_work() {
-                self.sched.step()?;
+                self.step_round()?;
             } else if next < trace.len() {
                 // idle until the next arrival
                 let wait = trace[next].arrive_s - t0.elapsed().as_secs_f64();
@@ -218,13 +290,39 @@ impl<'rt> Router<'rt> {
             let prompt = synth_prompt(r.prompt_len, vocab, &mut rng);
             self.sched.submit_seq(prompt, r.gen_len, None, r.priority, None);
         }
-        self.sched.run_to_completion()?;
+        // router-level drain loop mirroring `run_to_completion`'s stall
+        // handling, so each round runs through the supervisor when one
+        // is attached (closed-loop never sheds, but degradation is still
+        // observed for the report)
+        let mut stall = 0usize;
+        while self.sched.has_work() {
+            let before = self.sched.finished.len();
+            self.observe_degraded();
+            self.step_round()?;
+            if self.sched.finished.len() == before
+                && self.sched.n_running() == 0
+                && !self.sched.made_progress()
+            {
+                stall += 1;
+                if stall > 2 {
+                    self.sched.flush_unservable(stall);
+                }
+            } else {
+                stall = 0;
+            }
+        }
         report.total_s = t0.elapsed().as_secs_f64();
         self.collect(&mut report);
         Ok(report)
     }
 
     fn collect(&self, report: &mut ServeReport) {
+        report.degraded_rounds = self.degraded_rounds;
+        report.degraded_enters = self.degraded_enters;
+        report.degraded_exits = self.degraded_exits;
+        if let Some(sup) = &self.supervisor {
+            report.recovery = sup.stats.clone();
+        }
         collect_into(&self.sched.finished, report);
     }
 }

@@ -44,7 +44,7 @@ use std::collections::{BTreeMap, VecDeque};
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::engine::Engine;
+use crate::coordinator::engine::{Engine, EngineCheckpoint};
 use crate::coordinator::errors::EngineError;
 use crate::coordinator::kvcache::{KvCacheManager, SeqId};
 use crate::coordinator::sequence::{FinishReason, Priority, Sequence};
@@ -125,6 +125,48 @@ pub fn backoff_slot_us(base: u64, attempt: usize, spent: u64, cap: u64)
     base.checked_shl(attempt.min(16) as u32)
         .unwrap_or(u64::MAX)
         .min(cap.saturating_sub(spent))
+}
+
+/// A full host-side clone of the scheduler's serving state: the engine's
+/// [`EngineCheckpoint`] (lane map, arena mirrors, parked/chunking rows,
+/// prefix store, sampler RNG, metrics) plus the paged block accounting
+/// ([`KvCacheManager`] — tables, refcounts, prefix tree) and every queue.
+/// Where [`EngineCheckpoint`] rebuilds one engine, `SchedCheckpoint`
+/// rebuilds the whole serving loop: the supervisor takes one every K
+/// rounds and, after a Fatal, restores a FRESH engine from it and replays
+/// the rounds since (see `coordinator/supervisor.rs`).
+pub struct SchedCheckpoint {
+    engine: EngineCheckpoint,
+    kv: KvCacheManager,
+    next_id: SeqId,
+    waiting: VecDeque<Sequence>,
+    prefilling: BTreeMap<SeqId, Sequence>,
+    running: BTreeMap<SeqId, Sequence>,
+    finished: Vec<Sequence>,
+    interactive_grants: usize,
+    stalled_rounds: usize,
+    chunk_checked: bool,
+}
+
+impl SchedCheckpoint {
+    /// Host bytes pinned by this checkpoint's arena mirrors (payload +
+    /// scale planes across group/parked/chunking/prefix arenas) — the
+    /// supervisor's checkpoint byte gauge.
+    pub fn host_bytes(&self) -> usize {
+        self.engine.host_bytes()
+    }
+
+    /// Total generated tokens captured at checkpoint time — the baseline
+    /// the supervisor subtracts to count `replayed_tokens` after a
+    /// restart.
+    pub fn generated_token_total(&self) -> usize {
+        self.prefilling
+            .values()
+            .chain(self.running.values())
+            .chain(self.finished.iter())
+            .map(|s| s.generated.len())
+            .sum()
+    }
 }
 
 pub struct Scheduler<'rt> {
@@ -238,6 +280,101 @@ impl<'rt> Scheduler<'rt> {
         seq.prompt.len() + seq.max_new
     }
 
+    /// Snapshot the complete serving state host-side. Pure clone — the
+    /// delta-synced host mirrors already hold every arena row, so no
+    /// device traffic is charged (the restore side re-uploads).
+    pub fn checkpoint(&self) -> SchedCheckpoint {
+        SchedCheckpoint {
+            engine: self.engine.checkpoint(),
+            kv: self.kv.clone(),
+            next_id: self.next_id,
+            waiting: self.waiting.clone(),
+            prefilling: self.prefilling.clone(),
+            running: self.running.clone(),
+            finished: self.finished.clone(),
+            interactive_grants: self.interactive_grants,
+            stalled_rounds: self.stalled_rounds,
+            chunk_checked: self.chunk_checked,
+        }
+    }
+
+    /// Warm restart: drop the (poisoned) engine, install `fresh` — built
+    /// from the same `Manifest` — and rebuild every queue, the block
+    /// accounting, and the engine's host state from the checkpoint.
+    /// Device literals for in-flight chunked prefills are re-uploaded
+    /// eagerly (charged to `sync_upload_bytes`); everything else
+    /// re-uploads lazily through the same `in_sync` path a tier switch
+    /// uses. After this returns, stepping resumes exactly at the
+    /// checkpointed round: replay is ordinary re-stepping.
+    pub fn restore_from(&mut self, fresh: Engine<'rt>, ck: &SchedCheckpoint)
+        -> Result<()> {
+        let mut engine = fresh;
+        engine.restore(&ck.engine)?;
+        // the old engine (with whatever poisoned device state it held)
+        // drops here
+        self.engine = engine;
+        self.kv = ck.kv.clone();
+        self.next_id = ck.next_id;
+        self.waiting = ck.waiting.clone();
+        self.prefilling = ck.prefilling.clone();
+        self.running = ck.running.clone();
+        self.finished = ck.finished.clone();
+        self.interactive_grants = ck.interactive_grants;
+        self.stalled_rounds = ck.stalled_rounds;
+        self.progressed = false;
+        self.chunk_checked = ck.chunk_checked;
+        Ok(())
+    }
+
+    /// Total generated tokens across in-flight and finished sequences —
+    /// compared against a checkpoint's total to count replayed tokens.
+    pub fn generated_token_total(&self) -> usize {
+        self.prefilling
+            .values()
+            .chain(self.running.values())
+            .chain(self.finished.iter())
+            .map(|s| s.generated.len())
+            .sum()
+    }
+
+    /// Did the last `step()` make prefill/admission progress? The
+    /// router's drain loop consults this (like `run_to_completion`) so an
+    /// advancing chunked prefill is never mistaken for a stall.
+    pub(crate) fn made_progress(&self) -> bool {
+        self.progressed
+    }
+
+    /// Restart-budget exhaustion: the supervisor gave up on reviving the
+    /// engine, so serve what can be served without it — shed the waiting
+    /// queue and fail every sequence holding a reservation, releasing
+    /// blocks and arena rows on the same event as always. Every
+    /// accounting touched here is host-side, so this is safe to run with
+    /// a poisoned engine.
+    pub fn drain_for_escalation(&mut self) {
+        while let Some(mut seq) = self.waiting.pop_front() {
+            seq.finish(FinishReason::Shed);
+            self.finished.push(seq);
+        }
+        let ids: Vec<SeqId> = self
+            .prefilling
+            .keys()
+            .chain(self.running.keys())
+            .copied()
+            .collect();
+        for id in ids {
+            let seq = self
+                .prefilling
+                .remove(&id)
+                .or_else(|| self.running.remove(&id));
+            if let Some(mut seq) = seq {
+                self.free_seq(id);
+                seq.finish(FinishReason::Failed);
+                self.engine.metrics.quarantined_seqs += 1;
+                self.finished.push(seq);
+            }
+        }
+    }
+
     /// Free a sequence's logical KV blocks and physical cache rows on the
     /// same event — the two accountings never disagree about liveness.
     /// Also cancels any in-flight chunked prefill state. Blocks whose
@@ -337,9 +474,28 @@ impl<'rt> Scheduler<'rt> {
             let Some(idx) = self.next_admissible() else { break };
             let mut seq = self.waiting.remove(idx)
                 .expect("next_admissible returns an index into waiting");
-            self.admit_blocks(&seq)?;
+            if let Err(e) = self.admit_blocks(&seq) {
+                // the admit_blocks-then-fail window: release whatever the
+                // partial grant reserved and surface the failure ON the
+                // request — the old `?` propagated the error while
+                // silently dropping the sequence with its blocks
+                self.free_seq(seq.id);
+                seq.finish(FinishReason::PrefillFailed);
+                self.finished.push(seq);
+                return Err(e);
+            }
             self.progressed = true;
             if let Err(e) = self.with_retries(|eng| eng.prefill(&mut seq)) {
+                if matches!(e, EngineError::Fatal { .. }) {
+                    // poisoned engine: free this sequence's blocks/rows
+                    // (host-side accounting only), requeue it untouched
+                    // for the post-restart world, and escalate
+                    self.free_seq(seq.id);
+                    seq.reset_for_restart();
+                    self.waiting.push_front(seq);
+                    self.engine.metrics.fatal_steps += 1;
+                    return Err(e.into());
+                }
                 // roll the reservation back and fail the request visibly
                 // instead of leaking the blocks and dropping the sequence
                 self.free_seq(seq.id);
@@ -510,9 +666,17 @@ impl<'rt> Scheduler<'rt> {
                 Priority::Batch => adm_batch,
             };
             if let Some(idx) = admissible {
-                let seq = self.waiting.remove(idx)
+                let mut seq = self.waiting.remove(idx)
                     .expect("admissibility probe indexes the waiting queue");
-                self.admit_blocks(&seq)?;
+                if let Err(e) = self.admit_blocks(&seq) {
+                    // same admit_blocks-then-fail window as `admit`: the
+                    // request fails visibly instead of leaking with the
+                    // propagated error
+                    self.free_seq(seq.id);
+                    seq.finish(FinishReason::PrefillFailed);
+                    self.finished.push(seq);
+                    return Err(e);
+                }
                 chosen = Some(seq);
                 break 'pick;
             }
@@ -529,6 +693,18 @@ impl<'rt> Scheduler<'rt> {
 
         let before = self.engine.rows(seq.id);
         match self.with_retries(|eng| eng.prefill_chunk(&mut seq, chunk)) {
+            Err(e) if matches!(e, EngineError::Fatal { .. }) => {
+                // poisoned engine mid-chunked-prefill: release the
+                // reservation AND the partial arena together (host-side),
+                // requeue from scratch, escalate to the supervisor — the
+                // pre-fix path quarantined the sequence and kept stepping
+                // a dead engine
+                self.free_seq(seq.id);
+                seq.reset_for_restart();
+                self.waiting.push_front(seq);
+                self.engine.metrics.fatal_steps += 1;
+                Err(e.into())
+            }
             Err(e) => {
                 // roll back reservation + any partial arena, fail visibly
                 self.free_seq(seq.id);
@@ -827,7 +1003,7 @@ impl<'rt> Scheduler<'rt> {
     /// exact accounting) rejects the head of line to guarantee progress —
     /// but never while a chunked prefill is in flight, since its
     /// completion will free budget at the next chunk boundary.
-    fn flush_unservable(&mut self, stall: usize) {
+    pub(crate) fn flush_unservable(&mut self, stall: usize) {
         let cap = self.kv.total_token_capacity();
         let before = self.finished.len();
         let mut keep = VecDeque::with_capacity(self.waiting.len());

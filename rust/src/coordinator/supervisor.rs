@@ -1,0 +1,320 @@
+//! Supervised warm restart: the layer that turns an `EngineError::Fatal`
+//! from a run-ending outage into a bounded latency blip.
+//!
+//! The supervisor wraps the scheduler loop. Every K rounds
+//! ([`SupervisorConfig::checkpoint_every`]) it takes a
+//! [`SchedCheckpoint`] — a pure host-side clone of the complete serving
+//! state, cheap because the delta-synced host mirrors (PR 2) and the
+//! paged block accounting (PR 8) already hold everything the device
+//! holds. When a step fails Fatal (or completes but overruns the
+//! per-step wall-clock watchdog — a wedged execute that never errors),
+//! the supervisor:
+//!
+//! 1. drops the poisoned [`Engine`] and builds a fresh one from the same
+//!    `Manifest` via the injected factory,
+//! 2. restores the checkpoint into it
+//!    ([`Scheduler::restore_from`] re-uploads device literals from the
+//!    host mirrors, charged to `sync_upload_bytes` — the only traffic
+//!    that distinguishes a restart from a tier switch),
+//! 3. rewinds its logical round counter to the checkpoint's round and
+//!    resumes stepping: **replay is ordinary re-stepping**. The sampler
+//!    RNG was captured in the checkpoint and is a pure function of seed
+//!    + consumption, so the ≤K replayed rounds regenerate bit-exact
+//!    tokens. The fault injector's RNG stream is deliberately NOT
+//!    restored — replay draws fresh fault randomness, so the same
+//!    injected Fatal does not re-fire deterministically forever.
+//!
+//! Restarts run under a bounded budget with exponential backoff
+//! ([`SupervisorConfig::max_restarts`]): each consecutive restart (no
+//! successful round in between) sleeps a doubling slot, and exhaustion
+//! returns a typed [`RestartBudgetExhausted`] the router downcasts to
+//! drain/shed per its policy — recovery code returns errors, it never
+//! dies (enforced by `cargo xtask lint`'s `no-exit-in-recovery` rule).
+//!
+//! Determinism contract (pinned by rust/tests/restart_e2e.rs): the
+//! checkpoint cadence counts LOGICAL rounds (restarts rewind the
+//! counter), so a faulted run and its fault-free twin checkpoint at the
+//! same logical rounds 0, K, 2K, … and their
+//! [`Supervisor::checkpoint_fingerprints`] sequences must be equal —
+//! `state_fingerprint` equality at matched rounds is the bit-exactness
+//! oracle.
+
+use anyhow::Result;
+
+use crate::coordinator::engine::Engine;
+use crate::coordinator::metrics::RecoveryStats;
+use crate::coordinator::scheduler::{backoff_slot_us, SchedCheckpoint,
+                                    Scheduler};
+
+/// Supervision knobs. `Default` checkpoints every 8 rounds and allows 8
+/// consecutive restarts with 200µs-base exponential backoff (clamped at
+/// 50ms); the watchdog is off unless a deadline is set.
+#[derive(Clone, Copy, Debug)]
+pub struct SupervisorConfig {
+    /// Take a checkpoint every this many successful scheduler rounds.
+    /// The worst-case replay after a restart is this many rounds.
+    pub checkpoint_every: usize,
+    /// Consecutive restarts (no successful round in between) tolerated
+    /// before the supervisor escalates with [`RestartBudgetExhausted`].
+    pub max_restarts: usize,
+    /// Base pre-restart backoff, in microseconds; doubles per
+    /// consecutive restart (same slot arithmetic as step retries).
+    pub restart_backoff_us: u64,
+    /// Clamp on one pre-restart backoff slot, in microseconds.
+    pub max_restart_backoff_us: u64,
+    /// Per-step wall-clock deadline, in seconds: a round that completes
+    /// but overruns it is treated as a wedged engine and discarded via
+    /// restart. `None` disables the watchdog.
+    pub watchdog_step_s: Option<f64>,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> SupervisorConfig {
+        SupervisorConfig {
+            checkpoint_every: 8,
+            max_restarts: 8,
+            restart_backoff_us: 200,
+            max_restart_backoff_us: 50_000,
+            watchdog_step_s: None,
+        }
+    }
+}
+
+/// Typed escalation: the restart budget is spent and the engine could
+/// not be kept alive. The router downcasts this to trigger its
+/// drain/shed path instead of crashing the serve loop.
+#[derive(Debug)]
+pub struct RestartBudgetExhausted {
+    /// Consecutive restarts attempted before giving up.
+    pub restarts: usize,
+    /// Rendering of the failure that spent the last attempt.
+    pub last_error: String,
+}
+
+impl std::fmt::Display for RestartBudgetExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "restart budget exhausted after {} consecutive restarts \
+             (last error: {})",
+            self.restarts, self.last_error
+        )
+    }
+}
+
+impl std::error::Error for RestartBudgetExhausted {}
+
+/// The supervision loop state: the current checkpoint, the logical
+/// round clock, the restart budget, and the recovery telemetry that
+/// ends up in the `ServeReport`.
+pub struct Supervisor<'rt> {
+    pub cfg: SupervisorConfig,
+    /// Builds a fresh engine from the same manifest/config/seed as the
+    /// one being supervised — the restore target after a Fatal.
+    factory: Box<dyn FnMut() -> Result<Engine<'rt>> + 'rt>,
+    checkpoint: Option<SchedCheckpoint>,
+    /// Logical round the current checkpoint was taken at.
+    checkpoint_round: u64,
+    /// Logical rounds completed — rewinds to `checkpoint_round` on
+    /// restart, so replayed rounds do not advance the clock and the
+    /// checkpoint cadence realigns with a fault-free twin.
+    rounds_done: u64,
+    rounds_since_ckpt: usize,
+    /// Restarts since the last successful round — the budget counter.
+    consecutive_restarts: usize,
+    pub stats: RecoveryStats,
+    /// `(logical_round, state_fingerprint)` at every checkpoint — the
+    /// replay bit-exactness oracle (equal across a faulted run and its
+    /// fault-free twin).
+    fingerprints: Vec<(u64, u64)>,
+}
+
+impl<'rt> Supervisor<'rt> {
+    pub fn new(
+        cfg: SupervisorConfig,
+        factory: impl FnMut() -> Result<Engine<'rt>> + 'rt,
+    ) -> Supervisor<'rt> {
+        Supervisor {
+            cfg,
+            factory: Box::new(factory),
+            checkpoint: None,
+            checkpoint_round: 0,
+            rounds_done: 0,
+            rounds_since_ckpt: 0,
+            consecutive_restarts: 0,
+            stats: RecoveryStats::default(),
+            fingerprints: Vec::new(),
+        }
+    }
+
+    /// The `(logical_round, state_fingerprint)` sequence recorded at
+    /// checkpoint time — restart_e2e compares it across runs.
+    pub fn checkpoint_fingerprints(&self) -> &[(u64, u64)] {
+        &self.fingerprints
+    }
+
+    /// Logical rounds completed (replayed rounds count once).
+    pub fn rounds_done(&self) -> u64 {
+        self.rounds_done
+    }
+
+    /// One supervised scheduler round. Returns the decode tokens the
+    /// round produced; a round that was discarded by a restart returns
+    /// 0 (its tokens will be regenerated by replay). Errors only when
+    /// the restart budget is exhausted or recovery itself failed — the
+    /// caller (router) downcasts [`RestartBudgetExhausted`] to drain.
+    pub fn step(&mut self, sched: &mut Scheduler<'rt>) -> Result<usize> {
+        if self.checkpoint.is_none()
+            || self.rounds_since_ckpt >= self.cfg.checkpoint_every.max(1)
+        {
+            self.take_checkpoint(sched);
+        }
+        let t0 = std::time::Instant::now();
+        match sched.step() {
+            Ok(produced) => {
+                let wedged = self
+                    .cfg
+                    .watchdog_step_s
+                    .is_some_and(|d| t0.elapsed().as_secs_f64() > d);
+                if wedged {
+                    // the round "succeeded" but stalled past the
+                    // deadline — a wedged execute. Discard its effects
+                    // via restore and count the trip.
+                    self.stats.watchdog_trips += 1;
+                    self.restart(sched, "watchdog: step deadline overrun")?;
+                    return Ok(0);
+                }
+                self.rounds_done += 1;
+                self.rounds_since_ckpt += 1;
+                self.consecutive_restarts = 0;
+                Ok(produced)
+            }
+            Err(e) => {
+                self.restart(sched, &format!("{e:#}"))?;
+                Ok(0)
+            }
+        }
+    }
+
+    fn take_checkpoint(&mut self, sched: &mut Scheduler<'rt>) {
+        let ck = sched.checkpoint();
+        let bytes = ck.host_bytes() as u64;
+        self.stats.checkpoint_bytes = bytes;
+        self.stats.peak_checkpoint_bytes =
+            self.stats.peak_checkpoint_bytes.max(bytes);
+        self.stats.checkpoint_rounds += 1;
+        self.fingerprints
+            .push((self.rounds_done, sched.engine.state_fingerprint()));
+        self.checkpoint_round = self.rounds_done;
+        self.rounds_since_ckpt = 0;
+        self.checkpoint = Some(ck);
+    }
+
+    /// Drop the poisoned engine, restore the checkpoint into a fresh
+    /// one, rewind the logical clock. The checkpoint survives the
+    /// restart (it is NOT re-taken), so repeated failures inside the
+    /// same replay window keep restoring the same state.
+    fn restart(&mut self, sched: &mut Scheduler<'rt>, why: &str)
+        -> Result<()> {
+        if self.consecutive_restarts >= self.cfg.max_restarts {
+            self.stats.escalations += 1;
+            return Err(anyhow::Error::new(RestartBudgetExhausted {
+                restarts: self.consecutive_restarts,
+                last_error: why.to_string(),
+            }));
+        }
+        let us = backoff_slot_us(
+            self.cfg.restart_backoff_us,
+            self.consecutive_restarts,
+            0,
+            self.cfg.max_restart_backoff_us,
+        );
+        if us > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(us));
+        }
+        self.stats.restart_backoff.record_us(us as f64);
+        let Some(ck) = self.checkpoint.take() else {
+            self.stats.escalations += 1;
+            anyhow::bail!(
+                "supervisor invariant: restart at round {} without a \
+                 checkpoint (step() always checkpoints first)",
+                self.rounds_done
+            );
+        };
+        let fresh = match (self.factory)() {
+            Ok(engine) => engine,
+            Err(e) => {
+                self.checkpoint = Some(ck);
+                self.stats.escalations += 1;
+                return Err(e.context(
+                    "supervisor could not build a replacement engine",
+                ));
+            }
+        };
+        // tokens generated past the checkpoint are about to be
+        // regenerated by replay — count them before the restore
+        // overwrites the queues
+        let replayed = sched
+            .generated_token_total()
+            .saturating_sub(ck.generated_token_total());
+        if let Err(e) = sched.restore_from(fresh, &ck) {
+            self.checkpoint = Some(ck);
+            self.stats.escalations += 1;
+            return Err(e.context("checkpoint restore failed"));
+        }
+        self.checkpoint = Some(ck);
+        self.stats.replayed_tokens += replayed as u64;
+        self.stats.engine_restarts += 1;
+        self.consecutive_restarts += 1;
+        self.rounds_since_ckpt = 0;
+        self.rounds_done = self.checkpoint_round;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_checkpoints_and_bounds_restarts() {
+        let cfg = SupervisorConfig::default();
+        assert_eq!(cfg.checkpoint_every, 8);
+        assert_eq!(cfg.max_restarts, 8);
+        assert!(cfg.watchdog_step_s.is_none(), "watchdog is opt-in");
+    }
+
+    #[test]
+    fn budget_exhaustion_is_a_typed_downcastable_error() {
+        let e = anyhow::Error::new(RestartBudgetExhausted {
+            restarts: 8,
+            last_error: "fatal engine error in decode_step".into(),
+        });
+        let x = e
+            .downcast_ref::<RestartBudgetExhausted>()
+            .expect("router relies on this downcast");
+        assert_eq!(x.restarts, 8);
+        assert!(e.to_string().contains("8 consecutive restarts"));
+        assert!(e.to_string().contains("decode_step"));
+    }
+
+    #[test]
+    fn restart_backoff_doubles_and_clamps() {
+        let cfg = SupervisorConfig::default();
+        assert_eq!(
+            backoff_slot_us(cfg.restart_backoff_us, 0, 0,
+                            cfg.max_restart_backoff_us),
+            200
+        );
+        assert_eq!(
+            backoff_slot_us(cfg.restart_backoff_us, 3, 0,
+                            cfg.max_restart_backoff_us),
+            1_600
+        );
+        assert_eq!(
+            backoff_slot_us(cfg.restart_backoff_us, 16, 0,
+                            cfg.max_restart_backoff_us),
+            cfg.max_restart_backoff_us
+        );
+    }
+}

@@ -19,6 +19,7 @@ use thinkeys::coordinator::kvcache::{KvCacheConfig, KvCacheManager};
 use thinkeys::coordinator::router::{Router, RouterPolicy};
 use thinkeys::coordinator::sampling::Sampler;
 use thinkeys::coordinator::scheduler::{SchedConfig, Scheduler};
+use thinkeys::coordinator::supervisor::{Supervisor, SupervisorConfig};
 use thinkeys::datagen::arrival::{mixed_chat_doc_trace, poisson_trace,
                                  TraceConfig};
 use thinkeys::experiments::{self, Opts};
@@ -156,6 +157,18 @@ fn serve(argv: &[String]) -> Result<()> {
         .flag_f64("interactive-deadline-ms", Some(0.0),
                   "shed a WAITING interactive request once it queued this \
                    long while degraded; 0 = never (shed batch first)")
+        .flag_usize("checkpoint-every", Some(8),
+                    "supervised recovery: checkpoint the full serving \
+                     state every K scheduler rounds; a Fatal engine error \
+                     warm-restarts from the last checkpoint and replays \
+                     (0 = unsupervised, a Fatal ends the run)")
+        .flag_usize("max-restarts", Some(8),
+                    "consecutive engine restarts tolerated before the \
+                     supervisor escalates and the router drains/sheds")
+        .flag_f64("watchdog-ms", Some(0.0),
+                  "per-round wall-clock deadline: a round exceeding it is \
+                   treated as a wedged engine and discarded via restart \
+                   (0 = watchdog off; pair with a wedge=P fault plan)")
         .flag_usize("shared-prefix-users", Some(0),
                     "instead of a trace: serve N chat users over ONE \
                      48-token system prompt on a fixed block pool, \
@@ -269,6 +282,32 @@ fn serve(argv: &[String]) -> Result<()> {
         only_when_degraded: true,
     };
     let mut router = Router::new(sched).with_policy(policy);
+    let checkpoint_every = p.usize("checkpoint-every")?;
+    if checkpoint_every > 0 {
+        let watchdog_ms = p.f64("watchdog-ms")?;
+        let sup_cfg = SupervisorConfig {
+            checkpoint_every,
+            max_restarts: p.usize("max-restarts")?,
+            watchdog_step_s: if watchdog_ms > 0.0 {
+                Some(watchdog_ms / 1e3)
+            } else {
+                None
+            },
+            ..SupervisorConfig::default()
+        };
+        // the restore target after a Fatal: a fresh engine from the SAME
+        // manifest/config/seed the serving engine was built from
+        let fact_cfg = cfg.clone();
+        let fact_name = cfg_name.clone();
+        let pallas = p.bool("pallas");
+        let rt_ref = &rt;
+        let factory = move || {
+            let params = ParamStore::init(&fact_cfg, 42);
+            Engine::with_kv_quant(rt_ref, &fact_name, params, pallas,
+                                  Sampler::Greedy, 0, quant)
+        };
+        router = router.with_supervisor(Supervisor::new(sup_cfg, factory));
+    }
     let n = p.usize("requests")?;
     let trace = if p.bool("mixed") {
         // 1 doc per 4 requests, chats arriving while docs prefill

@@ -1,15 +1,16 @@
 //! Deterministic, seeded fault injection at the `Runtime::execute`
 //! boundary.
 //!
-//! A [`FaultPlan`] gives per-call probabilities for four fault kinds
+//! A [`FaultPlan`] gives per-call probabilities for six fault kinds
 //! (transient exec failures, artifact-load failures, corrupted output
-//! literals, latency spikes); a [`FaultInjector`] draws from its own
-//! seeded [`Rng`] stream — never the engine's — so installing a plan
-//! perturbs *when* steps fail but not *what* surviving sequences decode.
+//! literals, latency spikes, fatal errors, wedged executes); a
+//! [`FaultInjector`] draws from its own seeded [`Rng`] stream — never
+//! the engine's — so installing a plan perturbs *when* steps fail but
+//! not *what* surviving sequences decode.
 //!
 //! Two properties the chaos tests lean on:
 //!
-//! - **Fixed draw count.** `decide` consumes exactly five RNG draws per
+//! - **Fixed draw count.** `decide` consumes exactly seven RNG draws per
 //!   call regardless of outcome, so the fault schedule for call N depends
 //!   only on the seed and N — not on which earlier faults fired or how
 //!   callers reacted to them.
@@ -17,11 +18,14 @@
 //!   are injected; the next call is then forced clean. A retry budget
 //!   larger than `max_burst` therefore always recovers a transient
 //!   fault, which is what lets the chaos e2e assert zero Fatal
-//!   escalations under any seed. Latency spikes don't error and don't
-//!   count toward the burst.
+//!   escalations under any seed. Injected FATAL errors are also
+//!   burst-clamped (so a bounded restart budget always outlasts a
+//!   burst), but they are never retried in place — the scheduler
+//!   escalates and the supervisor restarts the engine. Latency spikes
+//!   and wedges don't error and don't count toward the burst.
 use crate::substrate::rng::Rng;
 
-/// The four injectable fault kinds.
+/// The six injectable fault kinds.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FaultKind {
     /// Device execution failed after the artifact was loaded.
@@ -34,6 +38,15 @@ pub enum FaultKind {
     CorruptOutput,
     /// Execution succeeded but took `latency_us` longer than usual.
     LatencySpike,
+    /// The device is poisoned: the coordinator classifies this as
+    /// `EngineError::Fatal` (never retried in place — the supervisor
+    /// drops the engine and warm-restarts from the last checkpoint).
+    FatalError,
+    /// The execute wedges: it eventually succeeds but only after
+    /// `wedge_us` of dead time — long enough to trip a supervisor
+    /// watchdog deadline. Does not error and does not count toward
+    /// the burst.
+    Wedge,
 }
 
 impl std::fmt::Display for FaultKind {
@@ -43,6 +56,8 @@ impl std::fmt::Display for FaultKind {
             FaultKind::ArtifactLoad => "artifact-load",
             FaultKind::CorruptOutput => "corrupt-output",
             FaultKind::LatencySpike => "latency-spike",
+            FaultKind::FatalError => "fatal-error",
+            FaultKind::Wedge => "wedge",
         };
         f.write_str(name)
     }
@@ -87,6 +102,14 @@ pub struct FaultPlan {
     pub latency: f64,
     /// Added latency per spike, in microseconds.
     pub latency_us: u64,
+    /// P(fatal engine error) per call — kills the engine; only a
+    /// supervisor warm restart recovers it.
+    pub fatal: f64,
+    /// P(wedged execute) per call — succeeds after `wedge_us` of dead
+    /// time (watchdog fodder; no error).
+    pub wedge: f64,
+    /// Dead time per wedge, in microseconds.
+    pub wedge_us: u64,
     /// Max consecutive erroring faults before a forced-clean call.
     pub max_burst: u32,
 }
@@ -100,6 +123,9 @@ impl Default for FaultPlan {
             corrupt: 0.0,
             latency: 0.0,
             latency_us: 500,
+            fatal: 0.0,
+            wedge: 0.0,
+            wedge_us: 20_000,
             max_burst: 2,
         }
     }
@@ -117,15 +143,18 @@ impl FaultPlan {
             && self.load == 0.0
             && self.corrupt == 0.0
             && self.latency == 0.0
+            && self.fatal == 0.0
+            && self.wedge == 0.0
     }
 
     /// Parse the `--fault-plan` spec: comma-separated `key=value` pairs.
     ///
-    /// Keys: `seed` (u64), `exec` / `load` / `corrupt` / `latency`
-    /// (probabilities in [0,1]), `latency-us` (u64), `burst` (u32 >= 1).
-    /// The empty string parses to the empty plan.
+    /// Keys: `seed` (u64), `exec` / `load` / `corrupt` / `latency` /
+    /// `fatal` / `wedge` (probabilities in [0,1]), `latency-us` /
+    /// `wedge-us` (u64), `burst` (u32 >= 1). The empty string parses to
+    /// the empty plan.
     ///
-    /// Example: `seed=7,exec=0.05,corrupt=0.02,latency=0.1,latency-us=300`
+    /// Example: `seed=7,exec=0.05,fatal=0.01,wedge=0.02,latency-us=300`
     pub fn parse(spec: &str) -> anyhow::Result<Self> {
         let mut plan = Self::default();
         for part in spec.split(',') {
@@ -154,6 +183,9 @@ impl FaultPlan {
                 "corrupt" => plan.corrupt = prob(value)?,
                 "latency" => plan.latency = prob(value)?,
                 "latency-us" => plan.latency_us = value.parse()?,
+                "fatal" => plan.fatal = prob(value)?,
+                "wedge" => plan.wedge = prob(value)?,
+                "wedge-us" => plan.wedge_us = value.parse()?,
                 "burst" => {
                     plan.max_burst = value.parse()?;
                     if plan.max_burst == 0 {
@@ -211,7 +243,7 @@ impl FaultInjector {
     }
 
     /// Decide the fate of one `execute` call. Always consumes exactly
-    /// five RNG draws so the schedule is a pure function of (seed, call
+    /// seven RNG draws so the schedule is a pure function of (seed, call
     /// index) — see the module docs.
     pub fn decide(&mut self, _artifact: &str) -> Decision {
         let r_latency = self.rng.f64();
@@ -219,6 +251,8 @@ impl FaultInjector {
         let r_exec = self.rng.f64();
         let r_corrupt = self.rng.f64();
         let lane_hint = self.rng.next_u64();
+        let r_fatal = self.rng.f64();
+        let r_wedge = self.rng.f64();
 
         let mut d = Decision {
             lane_hint,
@@ -226,6 +260,10 @@ impl FaultInjector {
         };
         if r_latency < self.plan.latency {
             d.latency_us = self.plan.latency_us;
+            self.injected += 1;
+        }
+        if r_wedge < self.plan.wedge {
+            d.latency_us += self.plan.wedge_us;
             self.injected += 1;
         }
         // Erroring faults are burst-clamped; first matching kind wins.
@@ -237,6 +275,8 @@ impl FaultInjector {
                 fault = Some(FaultKind::ExecFailure);
             } else if r_corrupt < self.plan.corrupt {
                 fault = Some(FaultKind::CorruptOutput);
+            } else if r_fatal < self.plan.fatal {
+                fault = Some(FaultKind::FatalError);
             }
         }
         match fault {
@@ -262,7 +302,7 @@ mod tests {
     fn parse_round_trip() {
         let plan = FaultPlan::parse(
             "seed=7,exec=0.05,load=0.02,corrupt=0.03,latency=0.1,\
-             latency-us=250,burst=3",
+             latency-us=250,fatal=0.01,wedge=0.04,wedge-us=9000,burst=3",
         )
         .unwrap();
         assert_eq!(plan.seed, 7);
@@ -271,8 +311,17 @@ mod tests {
         assert_eq!(plan.corrupt, 0.03);
         assert_eq!(plan.latency, 0.1);
         assert_eq!(plan.latency_us, 250);
+        assert_eq!(plan.fatal, 0.01);
+        assert_eq!(plan.wedge, 0.04);
+        assert_eq!(plan.wedge_us, 9000);
         assert_eq!(plan.max_burst, 3);
         assert!(!plan.is_empty());
+    }
+
+    #[test]
+    fn fatal_only_and_wedge_only_plans_are_not_empty() {
+        assert!(!FaultPlan { fatal: 0.1, ..FaultPlan::empty() }.is_empty());
+        assert!(!FaultPlan { wedge: 0.1, ..FaultPlan::empty() }.is_empty());
     }
 
     #[test]
@@ -349,6 +398,84 @@ mod tests {
             assert_eq!(d.latency_us, 0);
         }
         assert_eq!(inj.injected(), 0);
+    }
+
+    #[test]
+    fn forced_fatal_errors_are_burst_clamped() {
+        let plan = FaultPlan {
+            seed: 11,
+            fatal: 1.0,
+            max_burst: 2,
+            ..FaultPlan::default()
+        };
+        let mut inj = FaultInjector::new(plan);
+        let mut streak = 0u32;
+        let mut fired = 0u32;
+        for _ in 0..300 {
+            let d = inj.decide("decode");
+            match d.error {
+                Some(FaultKind::FatalError) => {
+                    streak += 1;
+                    fired += 1;
+                    assert!(streak <= plan.max_burst, "burst clamp violated");
+                }
+                Some(k) => panic!("unexpected kind {k}"),
+                None => streak = 0,
+            }
+            assert!(!d.corrupt);
+        }
+        assert!(fired > 0, "certain fatal plan never fired");
+    }
+
+    #[test]
+    fn fatal_yields_to_higher_priority_erroring_kinds() {
+        // with exec also certain, the erroring slot is taken by exec and
+        // fatal never fires (first matching kind wins)
+        let plan = FaultPlan {
+            seed: 5,
+            exec: 1.0,
+            fatal: 1.0,
+            max_burst: 1_000_000,
+            ..FaultPlan::default()
+        };
+        let mut inj = FaultInjector::new(plan);
+        for _ in 0..100 {
+            assert_eq!(inj.decide("decode").error,
+                       Some(FaultKind::ExecFailure));
+        }
+    }
+
+    #[test]
+    fn wedges_add_dead_time_without_erroring() {
+        let plan = FaultPlan {
+            seed: 4,
+            wedge: 1.0,
+            wedge_us: 13,
+            ..FaultPlan::default()
+        };
+        let mut inj = FaultInjector::new(plan);
+        for _ in 0..50 {
+            let d = inj.decide("decode");
+            assert_eq!(d.latency_us, 13);
+            assert!(d.error.is_none() && !d.corrupt);
+        }
+        assert_eq!(inj.injected(), 50);
+    }
+
+    #[test]
+    fn wedge_dead_time_stacks_on_latency_spikes() {
+        let plan = FaultPlan {
+            seed: 4,
+            latency: 1.0,
+            latency_us: 7,
+            wedge: 1.0,
+            wedge_us: 13,
+            ..FaultPlan::default()
+        };
+        let mut inj = FaultInjector::new(plan);
+        let d = inj.decide("decode");
+        assert_eq!(d.latency_us, 20);
+        assert!(d.error.is_none());
     }
 
     #[test]

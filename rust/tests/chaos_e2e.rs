@@ -112,6 +112,7 @@ fn chaos_plan(seed: u64) -> FaultPlan {
         latency: 0.08,
         latency_us: 200,
         max_burst: 2,
+        ..FaultPlan::empty()
     }
 }
 

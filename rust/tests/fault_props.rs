@@ -46,9 +46,23 @@ fn forced(kind: FaultKind, seed: u64) -> FaultPlan {
         FaultKind::ExecFailure => p.exec = 1.0,
         FaultKind::ArtifactLoad => p.load = 1.0,
         FaultKind::CorruptOutput => p.corrupt = 1.0,
-        FaultKind::LatencySpike => unreachable!("latency never errors"),
+        FaultKind::FatalError => p.fatal = 1.0,
+        FaultKind::LatencySpike | FaultKind::Wedge => {
+            unreachable!("latency/wedge never error")
+        }
     }
     p
+}
+
+/// A forced TRANSIENT-class kind (exec or artifact-load): guaranteed to
+/// error the step without implicating any sequence, so a zero-progress
+/// failed round leaves scheduler-owned state untouched too.
+fn pick_transient(rng: &mut Rng) -> FaultKind {
+    if rng.below(2) == 0 {
+        FaultKind::ExecFailure
+    } else {
+        FaultKind::ArtifactLoad
+    }
 }
 
 fn pick_kind(rng: &mut Rng) -> FaultKind {
@@ -248,6 +262,7 @@ fn randomized_churn_under_random_fault_schedules_stays_consistent() {
             latency: rng.f64() * 0.2,
             latency_us: 100,
             max_burst: 2,
+            ..FaultPlan::empty()
         };
         rt.install_fault_plan(plan);
         let mut submitted = 0usize;
@@ -280,6 +295,146 @@ fn randomized_churn_under_random_fault_schedules_stays_consistent() {
         if finished != submitted {
             return Err(format!(
                 "{submitted} submitted but {finished} accounted for"));
+        }
+        if sched.engine.metrics.sync_download_bytes != 0 {
+            return Err("recovery resorted to full-arena downloads".into());
+        }
+        Ok(())
+    });
+}
+
+/// Satellite 3 (ISSUE 9): rollback exactness across the PR 8 paged-KV
+/// states the snapshot machinery predates — adopted shared prefixes,
+/// forked CoW children (shared full blocks + privately copied partial
+/// tail), live refcounts > 1. A forced transient failure in that state
+/// must leave the engine fingerprint, the invariants, AND the block
+/// refcounts untouched, and the recovered run must decode bit-identical
+/// to a fault-free twin driven through the same submit/fork schedule.
+#[test]
+fn rollback_exactness_holds_across_paged_kv_states() {
+    let rt = runtime();
+    let chunk = rt.manifest().chunks_for("servethin").first().copied();
+    property("paged_state_rollback_exact", 4, |rng| {
+        let eng_seed = rng.next_u64();
+        let cfg = SchedConfig {
+            max_batch: 6,
+            round_budget: 64,
+            chunk_tokens: chunk,
+            max_step_retries: 4,
+            retry_backoff_us: 20,
+            ..SchedConfig::default()
+        };
+        let mut sched = Scheduler::with_config(
+            engine(&rt, "servethin", eng_seed),
+            kv_for(&rt, "servethin", 0.5),
+            cfg,
+        );
+        let mut twin = Scheduler::with_config(
+            engine(&rt, "servethin", eng_seed),
+            kv_for(&rt, "servethin", 0.5),
+            cfg,
+        );
+        let vocab = sched.engine.cfg.vocab;
+        // one shared 24-token prefix (1 full block + a partial tail at
+        // block_tokens=16) under three distinct continuations
+        let prefix = synth_prompt(24, vocab, rng);
+        let mut prompts: Vec<Vec<i32>> = Vec::new();
+        for i in 0..3usize {
+            let mut p = prefix.clone();
+            p.extend(synth_prompt(3 + i, vocab, rng));
+            prompts.push(p);
+        }
+        // user 1 first, alone, so its prefix is sealed and registered
+        // before users 2/3 admit — forcing the adoption fast path
+        sched.submit(prompts[0].clone(), 8, None);
+        twin.submit(prompts[0].clone(), 8, None);
+        let mut rounds = 0usize;
+        while sched.n_running() < 1 && rounds < 30 {
+            sched.step().map_err(|e| format!("step: {e:#}"))?;
+            twin.step().map_err(|e| format!("twin step: {e:#}"))?;
+            rounds += 1;
+        }
+        for p in &prompts[1..] {
+            sched.submit(p.clone(), 8, None);
+            twin.submit(p.clone(), 8, None);
+        }
+        // drive lockstep until the cohort is fully admitted and decoding
+        while (sched.n_waiting() > 0 || sched.n_prefilling() > 0)
+            && rounds < 60
+        {
+            sched.step().map_err(|e| format!("step: {e:#}"))?;
+            twin.step().map_err(|e| format!("twin step: {e:#}"))?;
+            rounds += 1;
+        }
+        if sched.n_running() < 2 {
+            return Err(format!(
+                "cohort never co-resident: {} running after {rounds} rounds",
+                sched.n_running()
+            ));
+        }
+        if sched.engine.metrics.prefix_hits == 0 {
+            return Err("users 2/3 never adopted the sealed prefix".into());
+        }
+        // fork the lowest running id in BOTH runs: CoW shared history +
+        // private partial-tail copy, refcounts > 1 while both live
+        let parent = *sched
+            .running_ids()
+            .first()
+            .expect("running checked non-empty");
+        sched.fork(parent, 4).map_err(|e| format!("fork: {e:#}"))?;
+        twin.fork(parent, 4).map_err(|e| format!("twin fork: {e:#}"))?;
+        if sched.kv.sharing_stats().shared_blocks == 0 {
+            return Err("fork shared no blocks with its parent".into());
+        }
+
+        // the pinned interaction: a forced transient failure while the
+        // engine holds adopted-prefix AND forked-CoW state
+        rt.install_fault_plan(forced(pick_transient(rng), rng.next_u64()));
+        let fp = sched.engine.state_fingerprint();
+        let rc = sched.kv.refcount_violations();
+        if sched.step().is_ok() {
+            return Err("forced transient plan did not escalate".into());
+        }
+        if sched.engine.state_fingerprint() != fp {
+            return Err(
+                "rollback did not restore the paged-state fingerprint".into(),
+            );
+        }
+        let v = sched.engine.invariant_violations();
+        if !v.is_empty() {
+            return Err(format!("violations after rollback: {v:?}"));
+        }
+        if sched.kv.refcount_violations() != rc {
+            return Err("failed step disturbed block refcounts".into());
+        }
+        rt.install_fault_plan(FaultPlan::empty());
+
+        // recovery: both runs drain, and every sequence (including the
+        // forked children) decodes bit-identical tokens
+        sched
+            .run_to_completion()
+            .map_err(|e| format!("drain: {e:#}"))?;
+        twin
+            .run_to_completion()
+            .map_err(|e| format!("twin drain: {e:#}"))?;
+        if sched.finished.len() != 4 || twin.finished.len() != 4 {
+            return Err(format!(
+                "expected 4 finished (3 users + 1 fork): {} vs {}",
+                sched.finished.len(),
+                twin.finished.len()
+            ));
+        }
+        let toks = |s: &Scheduler| -> Vec<(u64, Vec<i32>)> {
+            let mut v: Vec<(u64, Vec<i32>)> = s
+                .finished
+                .iter()
+                .map(|q| (q.id, q.generated.clone()))
+                .collect();
+            v.sort();
+            v
+        };
+        if toks(&sched) != toks(&twin) {
+            return Err("recovered run diverged from fault-free twin".into());
         }
         if sched.engine.metrics.sync_download_bytes != 0 {
             return Err("recovery resorted to full-arena downloads".into());

@@ -1,0 +1,381 @@
+//! Restart e2e (ISSUE 9 capstone): the mixed chat+doc churn workload
+//! under seeded fatal + wedge fault plans, served by a supervised
+//! scheduler (checkpoint every K rounds, warm restart on Fatal or
+//! watchdog overrun, deterministic replay).
+//!
+//! The contracts under test:
+//! - a fatal-plan run COMPLETES every request with zero run-ending
+//!   escalations inside the restart budget (`engine_restarts > 0`,
+//!   `failed == 0`),
+//! - replay is BIT-EXACT: per-sequence outputs equal the fault-free
+//!   twin's, and the `(logical_round, state_fingerprint)` sequence
+//!   recorded at every checkpoint is equal across the two runs — the
+//!   cadence counts logical rounds, so restarts realign at 0, K, 2K, …
+//! - a wedged execute (latency injection, no error) trips the per-step
+//!   watchdog, restarts, and still decodes the fault-free tokens,
+//! - recovery re-uploads device state from the host mirrors only
+//!   (`sync_download_bytes == 0` throughout),
+//! - mid-prefill fatals leak NO KV reservations (satellite 1: the
+//!   admit-blocks-then-fail window frees before requeueing),
+//! - a SPENT restart budget drains visibly (shed/failed buckets) and
+//!   returns a report instead of crashing the serve loop,
+//! - the runtime auditor stays green across every restart.
+//!
+//! Runs are closed-loop so round composition is deterministic (the
+//! fingerprint oracle needs matched rounds). `RESTART_SEED` selects the
+//! fault schedule (CI runs two fixed seeds).
+
+use std::collections::BTreeMap;
+
+use thinkeys::coordinator::engine::Engine;
+use thinkeys::coordinator::kvcache::{KvCacheConfig, KvCacheManager};
+use thinkeys::coordinator::metrics::{EngineMetrics, ServeReport};
+use thinkeys::coordinator::router::{
+    bucket_of, synth_prompt, ReportBucket, Router,
+};
+use thinkeys::coordinator::sampling::Sampler;
+use thinkeys::coordinator::scheduler::{SchedConfig, Scheduler};
+use thinkeys::coordinator::supervisor::{Supervisor, SupervisorConfig};
+use thinkeys::datagen::arrival::{mixed_chat_doc_trace, RequestSpec};
+use thinkeys::runtime::{FaultPlan, ParamStore, Runtime};
+use thinkeys::substrate::rng::Rng;
+
+fn restart_seed() -> u64 {
+    std::env::var("RESTART_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(7)
+}
+
+/// Supervision knobs shared by every run in this file: checkpoint every
+/// 4 rounds (worst-case replay = 4), tight backoff so tests stay fast.
+fn sup_cfg() -> SupervisorConfig {
+    SupervisorConfig {
+        checkpoint_every: 4,
+        max_restarts: 8,
+        restart_backoff_us: 100,
+        max_restart_backoff_us: 5_000,
+        watchdog_step_s: None,
+    }
+}
+
+/// Everything a supervised run leaves behind once the runtime is gone.
+struct RestartRun {
+    report: ServeReport,
+    /// id -> generated tokens, COMPLETED sequences only. Closed-loop
+    /// submission order is trace order, so ids line up across runs.
+    tokens: BTreeMap<u64, Vec<i32>>,
+    metrics: EngineMetrics,
+    violations: Vec<String>,
+    /// `(logical_round, state_fingerprint)` at every checkpoint — the
+    /// replay bit-exactness oracle.
+    fingerprints: Vec<(u64, u64)>,
+    kv_free_tokens: usize,
+    kv_total_tokens: usize,
+    refcount_violations: Vec<String>,
+}
+
+fn run(
+    plan: Option<FaultPlan>,
+    sup: Option<SupervisorConfig>,
+    prefix_sharing: bool,
+    trace: &[RequestSpec],
+) -> RestartRun {
+    let rt = Runtime::new().expect("run `make artifacts` first");
+    if let Some(p) = plan {
+        rt.install_fault_plan(p);
+    }
+    let cfg = "servethin";
+    let c = rt.manifest().config(cfg).unwrap().clone();
+    let mk_kv = |c: &thinkeys::runtime::ConfigEntry| {
+        KvCacheManager::new(KvCacheConfig {
+            n_layers: c.n_layers,
+            k_dims: c.k_cache_dims,
+            v_dims: c.v_cache_dims,
+            block_tokens: 16,
+            bytes_per_el_k: 2.0,
+            bytes_per_el_v: 2.0,
+            budget_bytes: 4e6,
+        })
+    };
+    let params = ParamStore::init(&c, 42);
+    let eng = Engine::new(&rt, cfg, params, false, Sampler::Greedy, 0).unwrap();
+    let chunk = rt.manifest().chunks_for(cfg).first().copied();
+    let sched = Scheduler::with_config(eng, mk_kv(&c), SchedConfig {
+        max_batch: 8,
+        round_budget: 64,
+        chunk_tokens: chunk,
+        interactive_weight: 4,
+        max_step_retries: 4,
+        retry_backoff_us: 50,
+        prefix_sharing,
+        ..SchedConfig::default()
+    });
+    let mut router = Router::new(sched);
+    if let Some(scfg) = sup {
+        // the factory rebuilds an engine IDENTICAL to the original (same
+        // manifest config, same param seed, same sampler) — the restore
+        // target after a Fatal
+        let rt_ref = &rt;
+        let fact_cfg = c.clone();
+        let factory = move || {
+            let params = ParamStore::init(&fact_cfg, 42);
+            Engine::new(rt_ref, cfg, params, false, Sampler::Greedy, 0)
+        };
+        router = router.with_supervisor(Supervisor::new(scfg, factory));
+    }
+    let report = router
+        .run_closed_loop(trace, 0)
+        .expect("the supervised serve loop must survive its fault plan");
+    let mut tokens = BTreeMap::new();
+    for seq in &router.sched.finished {
+        if bucket_of(seq) == ReportBucket::Completed {
+            tokens.insert(seq.id, seq.generated.clone());
+        }
+    }
+    RestartRun {
+        report,
+        tokens,
+        metrics: router.sched.engine.metrics.clone(),
+        violations: router.sched.engine.invariant_violations(),
+        fingerprints: router
+            .supervisor
+            .as_ref()
+            .map(|s| s.checkpoint_fingerprints().to_vec())
+            .unwrap_or_default(),
+        kv_free_tokens: router.sched.kv.free_token_capacity(),
+        kv_total_tokens: router.sched.kv.total_token_capacity(),
+        refcount_violations: router.sched.kv.refcount_violations(),
+    }
+}
+
+/// The capstone: under a seeded fatal plan the supervised run restarts,
+/// replays, completes everything, and is bit-exact against its
+/// fault-free twin — tokens AND the checkpoint fingerprint sequence.
+#[test]
+fn fatal_plan_run_recovers_and_is_bit_exact() {
+    let trace = mixed_chat_doc_trace(10, 3, 0.002, 0.0005);
+    let baseline = run(None, Some(sup_cfg()), true, &trace);
+    assert_eq!(baseline.report.n_requests, trace.len(),
+               "fault-free baseline must serve the whole trace");
+    assert_eq!(baseline.metrics.faults_injected, 0);
+    assert_eq!(baseline.report.recovery.engine_restarts, 0);
+    assert!(baseline.report.recovery.checkpoint_rounds > 0,
+            "supervised baseline never checkpointed");
+    assert!(baseline.report.recovery.checkpoint_bytes > 0);
+
+    let plan = FaultPlan {
+        seed: restart_seed(),
+        fatal: 0.02,
+        max_burst: 2,
+        ..FaultPlan::empty()
+    };
+    let faulted = run(Some(plan), Some(sup_cfg()), true, &trace);
+
+    // the schedule fired, and every Fatal became a warm restart inside
+    // the budget — zero run-ending escalations, nobody lost
+    assert!(faulted.metrics.faults_injected > 0, "plan injected nothing");
+    assert!(faulted.report.recovery.engine_restarts > 0,
+            "no Fatal ever reached the supervisor");
+    assert_eq!(faulted.report.recovery.escalations, 0);
+    assert_eq!(faulted.report.n_requests, trace.len(),
+               "all requests complete under the fatal plan");
+    assert_eq!(faulted.report.failed, 0);
+    assert_eq!(faulted.report.rejected, 0);
+    assert_eq!(faulted.report.shed_requests, 0);
+
+    // recovery re-uploaded from host mirrors only — never a download
+    assert_eq!(faulted.metrics.sync_download_bytes, 0);
+
+    // the auditor cross-checked rounds after every restore, stayed green
+    assert!(faulted.violations.is_empty(), "{:?}", faulted.violations);
+    assert!(faulted.refcount_violations.is_empty(),
+            "{:?}", faulted.refcount_violations);
+    if cfg!(any(debug_assertions, feature = "audit")) {
+        assert!(faulted.metrics.audit_checks > 0,
+                "auditor compiled out of the restart run");
+    }
+
+    // bit-exactness, twice over: every completed sequence decodes the
+    // fault-free tokens, and the state fingerprint at every matched
+    // logical checkpoint round is equal
+    assert_eq!(faulted.tokens, baseline.tokens,
+               "replayed outputs diverged from the fault-free twin");
+    assert_eq!(faulted.fingerprints, baseline.fingerprints,
+               "checkpoint fingerprints diverged at matched rounds");
+}
+
+/// A wedged execute never errors — it stalls. The per-step watchdog
+/// converts the stall into a restart, and replay still decodes the
+/// fault-free tokens.
+#[test]
+fn watchdog_restarts_wedged_steps_bit_exactly() {
+    let trace = mixed_chat_doc_trace(6, 2, 0.002, 0.0005);
+    let baseline = run(None, Some(sup_cfg()), true, &trace);
+    assert_eq!(baseline.report.n_requests, trace.len());
+
+    let plan = FaultPlan {
+        seed: restart_seed(),
+        wedge: 0.03,
+        wedge_us: 300_000,
+        max_burst: 1,
+        ..FaultPlan::empty()
+    };
+    let scfg = SupervisorConfig {
+        watchdog_step_s: Some(0.1),
+        max_restarts: 16,
+        ..sup_cfg()
+    };
+    let wedged = run(Some(plan), Some(scfg), true, &trace);
+
+    assert!(wedged.metrics.faults_injected > 0, "plan injected nothing");
+    assert!(wedged.report.recovery.watchdog_trips > 0,
+            "no wedge ever tripped the watchdog");
+    assert!(wedged.report.recovery.engine_restarts > 0);
+    assert_eq!(wedged.report.recovery.escalations, 0);
+    assert_eq!(wedged.report.n_requests, trace.len(),
+               "all requests complete despite wedged steps");
+    assert_eq!(wedged.report.failed, 0);
+    assert_eq!(wedged.metrics.sync_download_bytes, 0);
+    assert!(wedged.violations.is_empty(), "{:?}", wedged.violations);
+    assert_eq!(wedged.tokens, baseline.tokens,
+               "watchdog-discarded rounds did not replay bit-exactly");
+}
+
+/// Satellite 1: fatals landing in the admit-blocks-then-fail window of a
+/// chunked prefill must not leak reservations — after the supervised run
+/// drains, the block pool is EMPTY again and refcounts are clean.
+/// Prefix sharing is off so no sealed prefix legitimately pins blocks.
+#[test]
+fn mid_prefill_fatals_leak_no_kv_reservations() {
+    let trace = mixed_chat_doc_trace(4, 4, 0.002, 0.0005);
+    let plan = FaultPlan {
+        seed: restart_seed(),
+        fatal: 0.05,
+        max_burst: 2,
+        ..FaultPlan::empty()
+    };
+    let out = run(Some(plan), Some(sup_cfg()), false, &trace);
+
+    assert!(out.metrics.faults_injected > 0, "plan injected nothing");
+    assert!(out.report.recovery.engine_restarts > 0,
+            "no fatal ever interrupted the run");
+    assert_eq!(out.report.n_requests, trace.len());
+    assert_eq!(out.report.failed, 0);
+    assert_eq!(out.kv_free_tokens, out.kv_total_tokens,
+               "a mid-prefill fatal leaked KV reservations");
+    assert!(out.refcount_violations.is_empty(),
+            "{:?}", out.refcount_violations);
+    assert!(out.violations.is_empty(), "{:?}", out.violations);
+}
+
+/// A spent restart budget is an OUTCOME, not a crash: the router drains
+/// (waiting sheds, admitted work fails visibly) and the run returns a
+/// report with the escalation counted.
+#[test]
+fn budget_exhaustion_drains_and_reports_instead_of_crashing() {
+    let trace = mixed_chat_doc_trace(4, 1, 0.002, 0.0005);
+    // every op fatals, no burst clamp: the supervisor restarts twice,
+    // then the third failure exhausts the budget and escalates
+    let plan = FaultPlan {
+        seed: restart_seed(),
+        fatal: 1.0,
+        max_burst: 1_000_000,
+        ..FaultPlan::empty()
+    };
+    let scfg = SupervisorConfig { max_restarts: 2, ..sup_cfg() };
+    let out = run(Some(plan), Some(scfg), true, &trace);
+
+    assert_eq!(out.report.recovery.engine_restarts, 2,
+               "budget allows exactly two consecutive restarts");
+    assert!(out.report.recovery.escalations >= 1,
+            "exhaustion must be counted as an escalation");
+    assert_eq!(out.report.n_requests, 0,
+               "nothing completes when every op fatals");
+    // every request is accounted for in a visible bucket
+    assert_eq!(
+        out.report.n_requests + out.report.failed
+            + out.report.shed_requests + out.report.rejected,
+        trace.len(),
+        "drain must not lose or duplicate requests"
+    );
+    assert!(out.report.shed_requests + out.report.failed > 0);
+    assert!(out.refcount_violations.is_empty(),
+            "{:?}", out.refcount_violations);
+}
+
+/// Checkpoint/restore round-trip, directly: restoring a checkpoint into
+/// a FRESH engine reproduces the exact state fingerprint, and replaying
+/// from it converges to the same tokens as a run that never restarted.
+#[test]
+fn restore_into_fresh_engine_reproduces_the_fingerprint() {
+    let rt = Runtime::new().expect("run `make artifacts` first");
+    let cfg = "servethin";
+    let c = rt.manifest().config(cfg).unwrap().clone();
+    let mk_engine = || {
+        let params = ParamStore::init(&c, 42);
+        Engine::new(&rt, cfg, params, false, Sampler::Greedy, 0).unwrap()
+    };
+    let mk_kv = || {
+        KvCacheManager::new(KvCacheConfig {
+            n_layers: c.n_layers,
+            k_dims: c.k_cache_dims,
+            v_dims: c.v_cache_dims,
+            block_tokens: 16,
+            bytes_per_el_k: 2.0,
+            bytes_per_el_v: 2.0,
+            budget_bytes: 4e6,
+        })
+    };
+    let chunk = rt.manifest().chunks_for(cfg).first().copied();
+    let scfg = SchedConfig {
+        max_batch: 6,
+        round_budget: 64,
+        chunk_tokens: chunk,
+        retry_backoff_us: 20,
+        ..SchedConfig::default()
+    };
+    let mut sched = Scheduler::with_config(mk_engine(), mk_kv(), scfg);
+    let mut twin = Scheduler::with_config(mk_engine(), mk_kv(), scfg);
+    let mut rng = Rng::new(restart_seed());
+    for _ in 0..6 {
+        let p = synth_prompt(12 + rng.below(24), c.vocab, &mut rng);
+        sched.submit(p.clone(), 8, None);
+        twin.submit(p, 8, None);
+    }
+    for _ in 0..3 {
+        sched.step().unwrap();
+        twin.step().unwrap();
+    }
+    let ck = sched.checkpoint();
+    let fp = sched.engine.state_fingerprint();
+    assert!(ck.host_bytes() > 0, "checkpoint pinned no host bytes");
+
+    // perturb well past the checkpoint, then restore into a FRESH engine
+    for _ in 0..5 {
+        sched.step().unwrap();
+    }
+    assert_ne!(sched.engine.state_fingerprint(), fp,
+               "perturbation rounds changed nothing — test is vacuous");
+    sched.restore_from(mk_engine(), &ck).unwrap();
+    assert_eq!(sched.engine.state_fingerprint(), fp,
+               "restore did not reproduce the checkpoint fingerprint");
+    assert_eq!(sched.engine.metrics.sync_download_bytes, 0,
+               "restore must rebuild device state from host mirrors");
+
+    // replay from the checkpoint converges to the never-restarted twin
+    sched.run_to_completion().unwrap();
+    twin.run_to_completion().unwrap();
+    let toks = |s: &Scheduler| -> Vec<(u64, Vec<i32>)> {
+        let mut v: Vec<(u64, Vec<i32>)> = s
+            .finished
+            .iter()
+            .map(|q| (q.id, q.generated.clone()))
+            .collect();
+        v.sort();
+        v
+    };
+    assert_eq!(toks(&sched), toks(&twin),
+               "replay from the restored checkpoint diverged");
+    assert!(sched.engine.invariant_violations().is_empty());
+}

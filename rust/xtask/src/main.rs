@@ -29,6 +29,12 @@
 //!   into an anyhow chain and silently opts out of the fault-recovery
 //!   policy — step failures must be matched (retry loop) or explicitly
 //!   converted.
+//! - **no-exit-in-recovery** — `supervisor.rs` and `router.rs` are the
+//!   crash-recovery path: they exist to turn a Fatal into a warm restart
+//!   or a drained report. A `process::exit` there kills the process the
+//!   machinery was built to keep alive (and skips destructors holding
+//!   device state). Recovery code returns errors; only `main.rs` — outside
+//!   the coordinator tree — may exit.
 //!
 //! Rules scan comment-stripped, string-masked source and skip everything
 //! from the first `#[cfg(test)]` to end of file — tests may unwrap freely.
@@ -195,6 +201,21 @@ fn lint_source(file_name: &str, text: &str) -> Vec<Violation> {
                 "engine step error `?`-propagated as anyhow — match the \
                  typed EngineError (retry / quarantine / escalate) \
                  instead of erasing its class"
+                    .into(),
+            );
+        }
+
+        // no-exit-in-recovery: the supervisor/router exist to keep the
+        // serve loop alive through Fatal — exiting there defeats the
+        // machinery (and skips Drop on live device state).
+        if (file_name == "supervisor.rs" || file_name == "router.rs")
+            && line.contains("process::exit")
+        {
+            fail(
+                "no-exit-in-recovery",
+                "`process::exit` in the crash-recovery path — return a \
+                 typed error (RestartBudgetExhausted) and let the router \
+                 drain; only main.rs may exit"
                     .into(),
             );
         }
@@ -378,6 +399,28 @@ mod tests {
         assert_eq!(rules("scheduler.rs", src),
                    vec!["no-naked-anyhow-propagation",
                         "no-naked-anyhow-propagation"]);
+    }
+
+    #[test]
+    fn seeded_exit_in_supervisor_is_denied() {
+        let src = "fn give_up() -> ! { std::process::exit(1) }\n";
+        assert_eq!(rules("supervisor.rs", src), vec!["no-exit-in-recovery"]);
+    }
+
+    #[test]
+    fn seeded_exit_in_router_is_denied() {
+        // a `use` alias does not dodge the rule
+        let src = "use std::process;\n\
+                   fn bail_out() { process::exit(2); }\n";
+        assert_eq!(rules("router.rs", src), vec!["no-exit-in-recovery"]);
+    }
+
+    #[test]
+    fn exit_outside_the_recovery_path_is_not_this_rules_business() {
+        // main.rs lives outside the coordinator tree entirely; within the
+        // tree, the rule pins only the two recovery files
+        let src = "fn cli_fail() -> ! { std::process::exit(1) }\n";
+        assert!(rules("engine.rs", src).is_empty());
     }
 
     #[test]
