@@ -231,13 +231,15 @@ def build_entry(kind, cfg, geom):
                 pnames + ["k_cache", "k_scale", "v_cache", "v_scale",
                           "tokens", "pos"], \
                 ["logits", "k_cache", "k_scale", "v_cache", "v_scale",
-                 "k_rows", "k_row_scale", "v_rows", "v_row_scale"]
+                 "k_rows", "k_row_scale", "v_rows", "v_row_scale",
+                 "attn_mass"]
         fn = M.make_decode(cfg, b, n=n, impl=impl)
         specs = _param_arg_specs(cfg) + [
             _spec((cfg.n_layers, b, n, kd)), _spec((cfg.n_layers, b, n, vd)),
             _spec((b,), I32), _spec((b,), I32)]
         return fn, specs, pnames + ["k_cache", "v_cache", "tokens", "pos"], \
-            ["logits", "k_cache", "v_cache", "k_rows", "v_rows"]
+            ["logits", "k_cache", "v_cache", "k_rows", "v_rows",
+             "attn_mass"]
     raise ValueError(kind)
 
 

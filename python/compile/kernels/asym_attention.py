@@ -148,8 +148,8 @@ def pallas_attention_prefill(q, k, v, lengths=None, causal=True,
 # Decode kernel
 # ---------------------------------------------------------------------------
 
-def _decode_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, m_ref, l_ref, *,
-                   scale, n_k_blocks):
+def _decode_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, m_ref, l_ref,
+                   s_ref, *, scale, n_k_blocks):
     ik = pl.program_id(2)
 
     @pl.when(ik == 0)
@@ -162,6 +162,10 @@ def _decode_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, m_ref, l_ref, *,
     k = k_ref[0, 0]                      # (block_k, dqk)
     v = v_ref[0, 0]                      # (block_k, dv)
     s = jnp.dot(k, q) * scale + bias_ref[0]     # (block_k,)
+    # raw (biased) scores land in the per-row score plane; the caller
+    # renormalizes with the final (m, l) accumulators — attention-mass
+    # support without touching the online-softmax loop (ISSUE 10)
+    s_ref[0, 0] = s
 
     m_prev = m_ref[0, 0]
     l_prev = l_ref[0, 0]
@@ -184,11 +188,16 @@ def _decode_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, m_ref, l_ref, *,
 
 
 def pallas_attention_decode(q, k_cache, v_cache, pos, block_k=64,
-                            interpret=True):
+                            interpret=True, return_mass=False):
     """One-token decode attention, streaming the thin key cache in tiles.
 
     q: (B, H, dqk)  k_cache: (B, Hkv, N, dqk)  v_cache: (B, Hkv, N, dv)
     pos: (B,) int32, current position (inclusive). -> (B, H, dv)
+
+    With ``return_mass=True`` also returns the per-row post-softmax
+    attention mass (B, N) (head-mean, 0 past ``pos``), rebuilt outside
+    the kernel from the raw score plane and the final online-softmax
+    (m, l) accumulators: w = exp(s - m) / l.
     """
     b, h, dqk = q.shape
     hkv, n = k_cache.shape[1], k_cache.shape[2]
@@ -202,7 +211,7 @@ def pallas_attention_decode(q, k_cache, v_cache, pos, block_k=64,
                      0.0, NEG_INF).astype(q.dtype)
 
     kernel = functools.partial(_decode_kernel, scale=scale, n_k_blocks=nk)
-    out, _, _ = pl.pallas_call(
+    out, m, l, s = pl.pallas_call(
         kernel,
         grid=(b, h, nk),
         in_specs=[
@@ -217,19 +226,24 @@ def pallas_attention_decode(q, k_cache, v_cache, pos, block_k=64,
             pl.BlockSpec((1, 1, dv), lambda ib, ih, ik: (ib, ih, 0)),
             pl.BlockSpec((1, 1), lambda ib, ih, ik: (ib, ih)),
             pl.BlockSpec((1, 1), lambda ib, ih, ik: (ib, ih)),
+            pl.BlockSpec((1, 1, block_k), lambda ib, ih, ik: (ib, ih, ik)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((b, h, dv), q.dtype),
             jax.ShapeDtypeStruct((b, h), q.dtype),
             jax.ShapeDtypeStruct((b, h), q.dtype),
+            jax.ShapeDtypeStruct((b, h, n), q.dtype),
         ],
         interpret=interpret,
     )(q, k_cache, v_cache, bias)
+    if return_mass:
+        w = jnp.exp(s - m[..., None]) / l[..., None]
+        return out, jnp.mean(w, axis=1)
     return out
 
 
 def _decode_kernel_q8(q_ref, k_ref, ks_ref, v_ref, vs_ref, bias_ref, o_ref,
-                      m_ref, l_ref, *, scale, n_k_blocks):
+                      m_ref, l_ref, s_ref, *, scale, n_k_blocks):
     """q8 decode tile: K/V arrive as raw int8 tiles plus (block_k,) per-row
     fp32 scales. The dequant is fused into the online-softmax loop — the
     K scale lands on the scalar score (q·k_q)·s and the V scale folds into
@@ -249,6 +263,7 @@ def _decode_kernel_q8(q_ref, k_ref, ks_ref, v_ref, vs_ref, bias_ref, o_ref,
     v = v_ref[0, 0].astype(q.dtype)              # (block_k, dv)  <- int8
     vs = vs_ref[0]                               # (block_k,) f32
     s = jnp.dot(k, q) * ks * scale + bias_ref[0]  # (block_k,)
+    s_ref[0, 0] = s
 
     m_prev = m_ref[0, 0]
     l_prev = l_ref[0, 0]
@@ -271,7 +286,8 @@ def _decode_kernel_q8(q_ref, k_ref, ks_ref, v_ref, vs_ref, bias_ref, o_ref,
 
 
 def pallas_attention_decode_q8(q, k_cache_q, k_scale, v_cache_q, v_scale,
-                               pos, block_k=64, interpret=True):
+                               pos, block_k=64, interpret=True,
+                               return_mass=False):
     """One-token decode attention streaming INT8 key/value tiles.
 
     q: (B, H, dqk) f32; k_cache_q: (B, Hkv, N, dqk) int8; k_scale: (B, N)
@@ -281,6 +297,8 @@ def pallas_attention_decode_q8(q, k_cache_q, k_scale, v_cache_q, v_scale,
     The K tile is dqk/dv·4x smaller than a full-dim fp32 tile — the
     thin-keys bandwidth win and the int8 win compose in the same
     BlockSpec (paper §6: "compose with GQA and quantization").
+
+    ``return_mass=True`` as in :func:`pallas_attention_decode`.
     """
     b, h, dqk = q.shape
     hkv, n = k_cache_q.shape[1], k_cache_q.shape[2]
@@ -294,7 +312,7 @@ def pallas_attention_decode_q8(q, k_cache_q, k_scale, v_cache_q, v_scale,
                      0.0, NEG_INF).astype(q.dtype)
 
     kernel = functools.partial(_decode_kernel_q8, scale=scale, n_k_blocks=nk)
-    out, _, _ = pl.pallas_call(
+    out, m, l, s = pl.pallas_call(
         kernel,
         grid=(b, h, nk),
         in_specs=[
@@ -311,14 +329,19 @@ def pallas_attention_decode_q8(q, k_cache_q, k_scale, v_cache_q, v_scale,
             pl.BlockSpec((1, 1, dv), lambda ib, ih, ik: (ib, ih, 0)),
             pl.BlockSpec((1, 1), lambda ib, ih, ik: (ib, ih)),
             pl.BlockSpec((1, 1), lambda ib, ih, ik: (ib, ih)),
+            pl.BlockSpec((1, 1, block_k), lambda ib, ih, ik: (ib, ih, ik)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((b, h, dv), q.dtype),
             jax.ShapeDtypeStruct((b, h), q.dtype),
             jax.ShapeDtypeStruct((b, h), q.dtype),
+            jax.ShapeDtypeStruct((b, h, n), q.dtype),
         ],
         interpret=interpret,
     )(q, k_cache_q, k_scale, v_cache_q, v_scale, bias)
+    if return_mass:
+        w = jnp.exp(s - m[..., None]) / l[..., None]
+        return out, jnp.mean(w, axis=1)
     return out
 
 

@@ -128,12 +128,18 @@ def attention_prefill_chunk_q8(q, k_cache_q, k_scale, v_cache_q, v_scale,
     return jnp.einsum("bhqk,bhkd->bhqd", w * v_scale[:, None, None, :], v)
 
 
-def attention_decode_q8(q, k_cache_q, k_scale, v_cache_q, v_scale, pos):
+def attention_decode_q8(q, k_cache_q, k_scale, v_cache_q, v_scale, pos,
+                        return_mass=False):
     """Dequant-fused single-token decode attention over int8 arenas.
 
     q: (B, H, dqk) f32; k_cache_q: (B, Hkv, N, dqk) int8; k_scale: (B, N)
     f32 per-row scales (shared across kv heads); v likewise.
     Returns (B, H, dv) f32. See attention_prefill_chunk_q8 on the fusion.
+
+    With ``return_mass=True`` also returns the per-row post-softmax
+    attention mass ``(B, N)`` — the head-mean of the softmax weights this
+    step spent on each cache row (rows past ``pos`` get exactly 0, the
+    NEG_INF mask). The eviction policies (ISSUE 10) rank rows by this.
     """
     b, h, dqk = q.shape
     n = k_cache_q.shape[2]
@@ -146,16 +152,21 @@ def attention_decode_q8(q, k_cache_q, k_scale, v_cache_q, v_scale, pos):
     scores = jnp.where(ki <= pos[:, None, None], scores, NEG_INF)
     w = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
     w = w / w.sum(axis=-1, keepdims=True)
-    return jnp.einsum("bhk,bhkd->bhd", w * v_scale[:, None, :], v)
+    o = jnp.einsum("bhk,bhkd->bhd", w * v_scale[:, None, :], v)
+    if return_mass:
+        return o, jnp.mean(w, axis=1)
+    return o
 
 
-def attention_decode(q, k_cache, v_cache, pos):
+def attention_decode(q, k_cache, v_cache, pos, return_mass=False):
     """Single-token decode attention against a dense cache arena.
 
     q: (B, H, dqk)  k_cache: (B, Hkv, N, dqk)  v_cache: (B, Hkv, N, dv)
     pos: (B,) int32 — index of the CURRENT token; positions 0..pos are valid
     (the current token's k/v are assumed already written at index pos).
-    Returns (B, H, dv).
+    Returns (B, H, dv); with ``return_mass=True`` additionally the per-row
+    post-softmax attention mass (B, N) — head-mean softmax weight per
+    cache row, 0 past ``pos`` (see attention_decode_q8).
     """
     b, h, dqk = q.shape
     n = k_cache.shape[2]
@@ -168,4 +179,7 @@ def attention_decode(q, k_cache, v_cache, pos):
     scores = jnp.where(ki <= pos[:, None, None], scores, NEG_INF)
     w = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
     w = w / w.sum(axis=-1, keepdims=True)
-    return jnp.einsum("bhk,bhkd->bhd", w, v)
+    o = jnp.einsum("bhk,bhkd->bhd", w, v)
+    if return_mass:
+        return o, jnp.mean(w, axis=1)
+    return o

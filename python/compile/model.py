@@ -524,11 +524,15 @@ def make_decode(cfg: ModelConfig, batch, n=None, impl="ref"):
     args: *params, k_cache (L,B,N,KD), v_cache (L,B,N,VD),
           tokens (B,) i32, pos (B,) i32   [pos = index of THIS token]
     returns: (logits (B, vocab), k_cache', v_cache',
-              k_rows (L,B,KD), v_rows (L,B,VD))
+              k_rows (L,B,KD), v_rows (L,B,VD), attn_mass (B,N))
 
     k_rows/v_rows are the cache rows written THIS step (one per lane per
     layer) — the delta the host mirrors in O(L*B*(KD+VD)) per step instead
     of downloading the full arenas on membership changes.
+
+    attn_mass is the per-row post-softmax attention mass of THIS step,
+    meaned over layers and heads (rows past pos are exactly 0) — the
+    score plane the eviction policies rank cache rows by (ISSUE 10).
     """
     nparams = len(param_specs(cfg))
     hkv, dqk, dvh = cfg.n_kv_heads, cfg.d_qk_head, cfg.d_v_head
@@ -549,7 +553,7 @@ def make_decode(cfg: ModelConfig, batch, n=None, impl="ref"):
         positions = pos[:, None]                     # (B,1)
         if cfg.arch == "vanilla":
             x = x + jnp.take(p["emb.pos"], pos, axis=0)[:, None]
-        new_k, new_v, row_k, row_v = [], [], [], []
+        new_k, new_v, row_k, row_v, mass = [], [], [], [], []
         for i in range(cfg.n_layers):
             L = f"l{i}"
             xn = _norm(cfg, p, f"{L}.ln1", x)
@@ -565,16 +569,20 @@ def make_decode(cfg: ModelConfig, batch, n=None, impl="ref"):
             kh = kc.reshape(b, N, hkv, dqk).transpose(0, 2, 1, 3)
             vh = vc.reshape(b, N, hkv, dvh).transpose(0, 2, 1, 3)
             if impl == "pallas":
-                o = pallas_attention_decode(q[:, :, 0], kh, vh, pos)
+                o, w = pallas_attention_decode(q[:, :, 0], kh, vh, pos,
+                                               return_mass=True)
             else:
-                o = ref.attention_decode(q[:, :, 0], kh, vh, pos)
+                o, w = ref.attention_decode(q[:, :, 0], kh, vh, pos,
+                                            return_mass=True)
+            mass.append(w)
             x = x + (o.reshape(b, 1, -1) @ p[f"{L}.attn.wo"])
             xn = _norm(cfg, p, f"{L}.ln2", x)
             x = x + _mlp(cfg, p, L, xn)
         x = _norm(cfg, p, "ln_f", x)
         logits = x[:, 0] @ p["emb.tok"].T
+        attn_mass = jnp.mean(jnp.stack(mass), axis=0)    # (B, N)
         return (logits, jnp.stack(new_k), jnp.stack(new_v),
-                jnp.stack(row_k), jnp.stack(row_v))
+                jnp.stack(row_k), jnp.stack(row_v), attn_mass)
 
     return fn
 
@@ -592,7 +600,8 @@ def make_decode_q8(cfg: ModelConfig, batch, n=None, impl="ref"):
           tokens (B,) i32, pos (B,) i32
     returns: (logits (B, vocab), k_cache', k_scale', v_cache', v_scale',
               k_rows (L,B,KD) i8, k_row_scale (L,B) f32,
-              v_rows (L,B,VD) i8, v_row_scale (L,B) f32)
+              v_rows (L,B,VD) i8, v_row_scale (L,B) f32,
+              attn_mass (B,N) f32)
 
     k_rows/k_row_scale etc. are the delta the host mirrors — int8 codes
     plus scales, so per-step host traffic also shrinks ~4x vs fp32.
@@ -624,6 +633,7 @@ def make_decode_q8(cfg: ModelConfig, batch, n=None, impl="ref"):
             x = x + jnp.take(p["emb.pos"], pos, axis=0)[:, None]
         new_k, new_ks, new_v, new_vs = [], [], [], []
         row_k, row_ks, row_v, row_vs = [], [], [], []
+        mass = []
         for i in range(cfg.n_layers):
             L = f"l{i}"
             xn = _norm(cfg, p, f"{L}.ln1", x)
@@ -647,19 +657,22 @@ def make_decode_q8(cfg: ModelConfig, batch, n=None, impl="ref"):
             kh = kc.reshape(b, N, hkv, dqk).transpose(0, 2, 1, 3)
             vh = vc.reshape(b, N, hkv, dvh).transpose(0, 2, 1, 3)
             if impl == "pallas":
-                o = pallas_attention_decode_q8(q[:, :, 0], kh, ksc, vh,
-                                               vsc, pos)
+                o, w = pallas_attention_decode_q8(q[:, :, 0], kh, ksc, vh,
+                                                  vsc, pos,
+                                                  return_mass=True)
             else:
-                o = ref.attention_decode_q8(q[:, :, 0], kh, ksc, vh, vsc,
-                                            pos)
+                o, w = ref.attention_decode_q8(q[:, :, 0], kh, ksc, vh,
+                                               vsc, pos, return_mass=True)
+            mass.append(w)
             x = x + (o.reshape(b, 1, -1) @ p[f"{L}.attn.wo"])
             xn = _norm(cfg, p, f"{L}.ln2", x)
             x = x + _mlp(cfg, p, L, xn)
         x = _norm(cfg, p, "ln_f", x)
         logits = x[:, 0] @ p["emb.tok"].T
+        attn_mass = jnp.mean(jnp.stack(mass), axis=0)    # (B, N)
         return (logits, jnp.stack(new_k), jnp.stack(new_ks),
                 jnp.stack(new_v), jnp.stack(new_vs),
                 jnp.stack(row_k), jnp.stack(row_ks),
-                jnp.stack(row_v), jnp.stack(row_vs))
+                jnp.stack(row_v), jnp.stack(row_vs), attn_mass)
 
     return fn

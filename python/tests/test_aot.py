@@ -91,7 +91,7 @@ def test_q8_decode_entry_specs():
         "decode", cfg, {"b": 2, "n": 32, "quant": "q8"})
     assert out_names == ["logits", "k_cache", "k_scale", "v_cache",
                          "v_scale", "k_rows", "k_row_scale", "v_rows",
-                         "v_row_scale"]
+                         "v_row_scale", "attn_mass"]
     by_name = dict(zip(in_names, specs))
     assert tuple(by_name["k_cache"].shape) == (
         cfg.n_layers, 2, 32, cfg.k_cache_dims())
@@ -178,7 +178,8 @@ def test_decode_entry_returns_delta_rows():
     cfg = REGISTRY["servethin"]
     _, specs, in_names, out_names = build_entry(
         "decode", cfg, {"b": 2, "n": 32})
-    assert out_names == ["logits", "k_cache", "v_cache", "k_rows", "v_rows"]
+    assert out_names == ["logits", "k_cache", "v_cache", "k_rows", "v_rows",
+                         "attn_mass"]
     by_name = dict(zip(in_names, specs))
     assert tuple(by_name["k_cache"].shape) == (
         cfg.n_layers, 2, 32, cfg.k_cache_dims())
@@ -230,11 +231,12 @@ def test_manifest_decode_cache_shapes():
             assert by_name["k_scale"][2] == [
                 cfg.n_layers, art["geom"]["b"], n]
             assert by_name["k_scale"][1] == "float32"
-            assert art["outputs"][-4:] == [
-                "k_rows", "k_row_scale", "v_rows", "v_row_scale"]
+            assert art["outputs"][-5:] == [
+                "k_rows", "k_row_scale", "v_rows", "v_row_scale",
+                "attn_mass"]
         else:
             assert by_name["k_cache"][1] == "float32"
-            assert art["outputs"][-2:] == ["k_rows", "v_rows"]
+            assert art["outputs"][-3:] == ["k_rows", "v_rows", "attn_mass"]
 
 
 def test_gqa_serving_configs_grouped_geometry():

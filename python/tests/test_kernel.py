@@ -152,6 +152,53 @@ def test_decode_pos_zero():
                                rtol=1e-5, atol=1e-5)
 
 
+@given(prefill_geometry(), st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_decode_attention_mass_matches_ref(geom, seed):
+    """The per-row attention mass (ISSUE 10): the pallas score-plane
+    reconstruction must match the ref softmax head-mean, each lane's mass
+    must sum to 1 over the valid rows, and rows past pos must be exactly
+    0 (the eviction policies rely on masked rows scoring zero)."""
+    b, hkv, group, n, dqk, dv = geom
+    h = hkv * group
+    q = rand(seed, (b, h, dqk))
+    kc = rand(seed + 1, (b, hkv, n, dqk))
+    vc = rand(seed + 2, (b, hkv, n, dv))
+    pos = jnp.asarray(
+        np.random.RandomState((seed + 7) % 2 ** 31).randint(0, n, size=(b,)),
+        jnp.int32)
+    o_ref, m_ref = ref.attention_decode(q, kc, vc, pos, return_mass=True)
+    o_pl, m_pl = pallas_attention_decode(q, kc, vc, pos, block_k=8,
+                                         return_mass=True)
+    np.testing.assert_allclose(np.asarray(o_pl), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(m_pl), np.asarray(m_ref),
+                               rtol=2e-5, atol=2e-5)
+    mass = np.asarray(m_ref)
+    np.testing.assert_allclose(mass.sum(axis=-1), 1.0, rtol=1e-5)
+    for lane in range(b):
+        assert np.all(mass[lane, int(pos[lane]) + 1:] == 0.0)
+
+
+def test_decode_q8_attention_mass_matches_ref():
+    """q8 twin of the mass oracle: fused-dequant mass (pallas vs ref)."""
+    b, hkv, group, n, dqk, dv = 2, 2, 2, 16, 4, 8
+    q = rand(0, (b, hkv * group, dqk))
+    kq, ks, vq, vs = _quantized_cache(1, b, hkv, n, dqk, dv)
+    pos = jnp.array([5, 12], jnp.int32)
+    o_ref, m_ref = ref.attention_decode_q8(q, kq, ks, vq, vs, pos,
+                                           return_mass=True)
+    o_pl, m_pl = pallas_attention_decode_q8(q, kq, ks, vq, vs, pos,
+                                            block_k=8, return_mass=True)
+    np.testing.assert_allclose(np.asarray(o_pl), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(m_pl), np.asarray(m_ref),
+                               rtol=2e-5, atol=2e-5)
+    mass = np.asarray(m_ref)
+    np.testing.assert_allclose(mass.sum(axis=-1), 1.0, rtol=1e-5)
+    assert np.all(mass[0, 6:] == 0.0) and np.all(mass[1, 13:] == 0.0)
+
+
 # ---------------------------------------------------------------------------
 # Per-row int8 quantization (ISSUE 4): round-trip properties + the
 # dequant-fused attention oracle. The rust twin

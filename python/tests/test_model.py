@@ -51,8 +51,8 @@ def test_prefill_decode_parity(name):
     va = jnp.zeros((L, 1, N, vc.shape[-1])).at[:, 0, :S].set(vc)
     decode = M.make_decode(cfg, 1)
     for t in range(7, 12):
-        lg, ka, va, kr, vr = decode(*plist, ka, va, toks[:, t],
-                                    jnp.array([t], jnp.int32))
+        lg, ka, va, kr, vr, _ = decode(*plist, ka, va, toks[:, t],
+                                       jnp.array([t], jnp.int32))
         np.testing.assert_allclose(np.asarray(lg[0]), np.asarray(full[0, t]),
                                    rtol=1e-4, atol=1e-4)
         # the delta outputs are exactly the rows written at position t
@@ -79,8 +79,8 @@ def test_decode_tier_parity(name):
         decode = M.make_decode(cfg, 1, n=n)
         logs = []
         for t in range(S, S + 6):
-            lg, ka, va, _, _ = decode(*plist, ka, va, toks[:, t],
-                                      jnp.array([t], jnp.int32))
+            lg, ka, va, _, _, _ = decode(*plist, ka, va, toks[:, t],
+                                         jnp.array([t], jnp.int32))
             logs.append(np.asarray(lg))
         run[n] = logs
     for a, b in zip(run[tier], run[cfg.max_seq]):
@@ -158,8 +158,8 @@ def test_q8_decode_parity_bounded(name):
     pos = jnp.array([S, 0], jnp.int32)
     worst = 0.0
     for _ in range(6):
-        lg, ka, va, _, _ = dec(*plist, ka, va, t, pos)
-        lg8, kq, ks, vq, vs, kr, krs, vr, vrs = dec8(
+        lg, ka, va, _, _, _ = dec(*plist, ka, va, t, pos)
+        lg8, kq, ks, vq, vs, kr, krs, vr, vrs, _ = dec8(
             *plist, kq, ks, vq, vs, t, pos)
         worst = max(worst, float(jnp.abs(lg - lg8).max()))
         # the delta outputs are exactly the quantized rows written at pos

@@ -5,6 +5,7 @@
 use thinkeys::analysis::trajectory;
 use thinkeys::bench::Table;
 use thinkeys::coordinator::engine::Engine;
+use thinkeys::coordinator::eviction::EvictionPolicy;
 use thinkeys::coordinator::kvcache::{KvCacheConfig, KvCacheManager};
 use thinkeys::coordinator::metrics::ServeReport;
 use thinkeys::coordinator::router::Router;
@@ -325,6 +326,71 @@ fn main() {
     );
     assert!(c8.shared.peak_dedup_bytes > 0.0
                 && c8.shared.peak_shared_blocks > 0);
+
+    // Bounded-cache streaming (ISSUE 10 acceptance): the infinite-chat
+    // trace — streams whose full reservations each exceed the pool — is
+    // rejected wholesale without eviction, and completes wholesale under
+    // every active policy while the pool gauge never exceeds the budget,
+    // sink + recency slots are never evicted, and the device-residency
+    // tripwire holds (eviction zeroes rows host-side and re-uploads;
+    // nothing ever downloads).
+    let (evict_table, evict_runs) =
+        serving::eviction_policy_table(&rt, "servethin").unwrap();
+    evict_table.print();
+    let none_run = evict_runs
+        .iter()
+        .find(|r| r.policy == EvictionPolicy::None)
+        .expect("policy-none row");
+    assert_eq!(
+        none_run.completed, 0,
+        "the acceptance trace must overwhelm the pool without eviction"
+    );
+    assert!(none_run.rejected > 0);
+    for r in evict_runs.iter().filter(|r| r.policy != EvictionPolicy::None) {
+        let p = r.policy.name();
+        assert_eq!(r.rejected, 0, "{p}: streams rejected despite eviction");
+        assert!(r.completed > 0 && r.report.failed == 0,
+                "{p}: streams lost under eviction");
+        assert!(
+            r.peak_pool_blocks <= r.pool_blocks,
+            "{p}: peak pool {} blocks exceeded the {}-block budget",
+            r.peak_pool_blocks, r.pool_blocks
+        );
+        assert_eq!(r.pinning_violations, 0,
+                   "{p}: a sink or recency slot was evicted");
+        assert!(r.evicted_blocks > 0 && r.capped_admissions > 0,
+                "{p}: the bounded trace never exercised eviction");
+        assert_eq!(r.sync_download_bytes, 0,
+                   "{p}: eviction must not round-trip arenas through host");
+    }
+
+    // Thin-vs-full eviction-score fidelity (ISSUE 10): the factored
+    // r-dim keys must rank eviction victims like the full d-dim keys do.
+    // Hard bounds are sanity only (toy widths); EXPERIMENTS.md records
+    // the measured numbers. Skipped on a legacy grid without the
+    // attn_mass plane (the policy table already emitted skip rows).
+    let has_mass =
+        evict_runs.iter().any(|r| r.policy == EvictionPolicy::A2sf);
+    if has_mass {
+        let (fid_table, fid) = serving::score_fidelity_table(&rt).unwrap();
+        fid_table.print();
+        assert!(fid.spearman.is_finite()
+                    && fid.spearman.abs() <= 1.0 + 1e-9);
+        assert!(fid.full_order_delta.is_finite()
+                    && fid.thin_order_delta.is_finite());
+        assert!(fid.k > 0 && fid.slots >= fid.k);
+        if fid.spearman < 0.5 {
+            eprintln!(
+                "WARNING: thin-vs-full eviction rank correlation low on \
+                 this testbed: rho = {:.3}",
+                fid.spearman
+            );
+        }
+    } else {
+        println!(
+            "score fidelity skipped: artifact grid has no attn_mass plane"
+        );
+    }
 
     // Pallas-kernel decode path (L1 lowered into the serving HLO)
     let tok_ref = serving::decode_throughput(&rt, "servethin", 8, 10, false)

@@ -31,6 +31,12 @@
 //!   of tables holding each block, the free list is exactly the ref==0
 //!   blocks, every prefix-tree registration points at a live block, and
 //!   blocks past a table's `shared_rows` are private (CoW safety);
+//! - the evicted-rows ledger reconciles bidirectionally (ISSUE 10):
+//!   the engine's count of physically zeroed rows per sequence equals the
+//!   block accounting's evicted-slot holes × block_tokens, and committed
+//!   rows never exceed live-block capacity + evicted rows — committed
+//!   rows may legally be evicted, so the audit reasons in terms of slot
+//!   conservation rather than contiguous block coverage;
 //! - the engine's shared-prefix view matches the block accounting
 //!   bidirectionally: per sequence, adopted prefix rows equal the
 //!   table's `shared_rows`; every resident store block is still live in
@@ -90,6 +96,38 @@ pub fn audit(engine: &Engine, kv: &KvCacheManager) -> Vec<String> {
     // Paged-block self-consistency: refcounts ↔ tables ↔ free list ↔
     // prefix tree, plus the CoW privacy invariant (ISSUE 8).
     v.extend(kv.refcount_violations());
+
+    // Evicted-rows ledger: the engine's count of physically zeroed rows
+    // must match the block accounting's slot holes, and the committed rows
+    // must still fit in live blocks + holes (a table can never have more
+    // rows written than slots that ever existed for them). Committed rows
+    // may legally exceed live-block capacity once eviction has punched
+    // holes — that is the whole point of bounded-cache streaming — so this
+    // replaces naive `rows <= live_blocks * bt` reasoning.
+    for (id, rows) in &tracked {
+        let ledger = engine.evicted_rows_of(*id);
+        let holes = kv.evicted_rows(*id).unwrap_or(0);
+        if ledger != holes {
+            v.push(format!(
+                "seq {id:?}: engine evicted-rows ledger says {ledger} but \
+                 block accounting has {holes} rows of evicted slots"
+            ));
+        }
+        if let Some(table_rows) = kv.rows_written(*id) {
+            let bt = kv.cfg.block_tokens;
+            let live = kv.live_blocks(*id).unwrap_or(0);
+            if table_rows != *rows {
+                continue; // already reported above
+            }
+            if *rows > live * bt + holes {
+                v.push(format!(
+                    "seq {id:?}: {rows} committed rows exceed live-block \
+                     capacity {} + evicted rows {holes}",
+                    live * bt
+                ));
+            }
+        }
+    }
 
     // Engine shared-prefix view ↔ block accounting, both directions.
     for (id, _) in &tracked {

@@ -235,13 +235,18 @@ fn check_decode_geometry(cfg: &ConfigEntry, a: &ArtifactEntry, b: usize,
             // one fp32 scale per (layer, lane, position) row
             expect_input(a, "k_scale", "float32", &[l, b, n], out);
             expect_input(a, "v_scale", "float32", &[l, b, n], out);
+            // decode also exports the per-row attention-mass plane the
+            // eviction scorer consumes (ISSUE 10)
             expect_output_tail(
-                a, &["k_rows", "k_row_scale", "v_rows", "v_row_scale"], out);
+                a,
+                &["k_rows", "k_row_scale", "v_rows", "v_row_scale",
+                  "attn_mass"],
+                out);
         }
         KvQuant::Fp32 => {
             forbid_input(a, "k_scale", out);
             forbid_input(a, "v_scale", out);
-            expect_output_tail(a, &["k_rows", "v_rows"], out);
+            expect_output_tail(a, &["k_rows", "v_rows", "attn_mass"], out);
         }
     }
 }
@@ -646,9 +651,10 @@ mod tests {
         let p = if pallas { "_pallas" } else { "" };
         let outs: &[&str] = if q8 {
             &["logits", "k_cache", "k_scale", "v_cache", "v_scale",
-              "k_rows", "k_row_scale", "v_rows", "v_row_scale"]
+              "k_rows", "k_row_scale", "v_rows", "v_row_scale", "attn_mass"]
         } else {
-            &["logits", "k_cache", "v_cache", "k_rows", "v_rows"]
+            &["logits", "k_cache", "v_cache", "k_rows", "v_rows",
+              "attn_mass"]
         };
         art(&format!("decode_mini_b{b}_n{n}{q}{p}"), "decode", inputs, outs)
     }

@@ -163,6 +163,7 @@ struct StepSnapshot {
     v_group: RowArena,
     parked: HashMap<SeqId, Parked>,
     rows: HashMap<SeqId, usize>,
+    step_mass: HashMap<SeqId, Vec<f32>>,
     metrics: EngineMetrics,
 }
 
@@ -200,6 +201,7 @@ pub struct EngineCheckpoint {
     block_tokens: usize,
     chunking: HashMap<SeqId, ChunkCheckpoint>,
     rows: HashMap<SeqId, usize>,
+    evicted: HashMap<SeqId, usize>,
     rng: Rng,
     metrics: EngineMetrics,
 }
@@ -301,6 +303,17 @@ pub struct Engine<'rt> {
     /// far; for an in-flight chunked prefill, the chunked progress).
     /// Physical-side half of the unified accounting contract.
     rows: HashMap<SeqId, usize>,
+    /// Per-sequence post-softmax attention mass over positions
+    /// `0..len`, from the most recent decode step (the `attn_mass`
+    /// output plane, mean over layers and heads). Feeds the eviction
+    /// scorer (ISSUE 10). Absent until the sequence decodes once, or
+    /// when the manifest predates the plane.
+    step_mass: HashMap<SeqId, Vec<f32>>,
+    /// Evicted-rows ledger: cache rows per sequence whose mirror K/V
+    /// were zeroed by [`Engine::evict_rows`]. Rows stay "written" in
+    /// `rows` accounting — the ledger is what lets the auditor accept
+    /// committed rows whose blocks were legally evicted.
+    evicted: HashMap<SeqId, usize>,
     /// Logits of the most recent completed prefill (monolithic or final
     /// chunk) — exposed for the chunked-vs-monolithic parity tests.
     last_prefill_logits: Option<Tensor>,
@@ -366,6 +379,8 @@ impl<'rt> Engine<'rt> {
             block_tokens: 0,
             chunking: HashMap::new(),
             rows: HashMap::new(),
+            step_mass: HashMap::new(),
+            evicted: HashMap::new(),
             last_prefill_logits: None,
             last_decode_logits: None,
             metrics: EngineMetrics::default(),
@@ -1211,14 +1226,27 @@ impl<'rt> Engine<'rt> {
         // download this step's delta rows, keep the updated arena
         // literals for the next step, scatter into the host mirror.
         // Output layouts:
-        //   fp32: [logits, k_cache, v_cache, k_rows, v_rows]
+        //   fp32: [logits, k_cache, v_cache, k_rows, v_rows, attn_mass]
         //   q8:   [logits, k_cache, k_scale, v_cache, v_scale,
-        //          k_rows, k_row_scale, v_rows, v_row_scale]
+        //          k_rows, k_row_scale, v_rows, v_row_scale, attn_mass]
+        // attn_mass (B, N) is the per-row post-softmax weight plane the
+        // eviction scorer consumes; legacy manifests lack it, so its
+        // parse is gated on the artifact's declared outputs.
+        let has_mass = self
+            .rt
+            .manifest()
+            .artifact(&artifact)
+            .map(|a| a.has_output("attn_mass"))
+            .unwrap_or(false);
+        let mut mass: Option<Vec<f32>> = None;
         let mut outs = outs;
         match self.quant {
             KvQuant::Fp32 => {
                 let k_rows = literal_to_vec_f32(&outs[3])?; // (L, B, KD)
                 let v_rows = literal_to_vec_f32(&outs[4])?; // (L, B, VD)
+                if has_mass {
+                    mass = Some(literal_to_vec_f32(&outs[5])?); // (B, N)
+                }
                 self.v_lit = Some(outs.remove(2));
                 self.k_lit = Some(outs.remove(1));
                 self.metrics.row_sync_bytes +=
@@ -1243,6 +1271,9 @@ impl<'rt> Engine<'rt> {
                 let k_row_s = literal_to_vec_f32(&outs[6])?; // (L, B)
                 let v_rows = literal_to_vec_i8(&outs[7])?; // (L, B, VD)
                 let v_row_s = literal_to_vec_f32(&outs[8])?; // (L, B)
+                if has_mass {
+                    mass = Some(literal_to_vec_f32(&outs[9])?); // (B, N)
+                }
                 self.v_scale_lit = Some(outs.remove(4));
                 self.v_lit = Some(outs.remove(3));
                 self.k_scale_lit = Some(outs.remove(2));
@@ -1268,11 +1299,21 @@ impl<'rt> Engine<'rt> {
                 }
             }
         }
+        if let Some(m) = &mass {
+            self.metrics.mass_sync_bytes += (m.len() * 4) as u64;
+        }
         let v = self.cfg.vocab;
         for s in seqs.iter_mut() {
             let lane = self.lanes.lane_of(s.id).expect("active seq has a lane");
             // this step wrote the row for the token we just fed
             self.rows.insert(s.id, s.len());
+            if let Some(m) = &mass {
+                // positions past len are exactly zero in the plane; keep
+                // only the sequence's own prefix so the scorer never sees
+                // another lane's mass
+                self.step_mass
+                    .insert(s.id, m[lane * n..lane * n + s.len()].to_vec());
+            }
             let row = &logits.data[lane * v..(lane + 1) * v];
             let tok = self.sampler.sample(row, &mut self.rng);
             s.push_token(tok);
@@ -1526,6 +1567,88 @@ impl<'rt> Engine<'rt> {
         }
     }
 
+    /// Does the loaded artifact grid export the per-row `attn_mass`
+    /// plane on its decode artifacts? Probed on the smallest decode
+    /// artifact of the active config/quant — the grid auditor keeps the
+    /// plane all-or-nothing across the grid. Score-based eviction
+    /// policies (a2sf/tova) refuse to start without it.
+    pub fn supports_attn_mass(&self) -> bool {
+        let m = self.rt.manifest();
+        let b = match m.decode_batches.first() {
+            Some(&b) => b,
+            None => return false,
+        };
+        let n = match m.tiers_for(&self.cfg.name).first() {
+            Some(&n) => n,
+            None => return false,
+        };
+        let name = m.decode_name(&self.cfg.name, b, n, self.pallas,
+                                 self.quant);
+        m.artifact(&name)
+            .map(|a| a.has_output("attn_mass"))
+            .unwrap_or(false)
+    }
+
+    /// Post-softmax attention mass over positions `0..len` from the
+    /// most recent decode step of `id` (mean over layers and heads), or
+    /// `None` before the first decode step / on a legacy manifest.
+    pub fn step_attn_mass(&self, id: SeqId) -> Option<&[f32]> {
+        self.step_mass.get(&id).map(|v| v.as_slice())
+    }
+
+    /// Rows of `id` evicted so far (the evicted-rows ledger).
+    pub fn evicted_rows_of(&self, id: SeqId) -> usize {
+        self.evicted.get(&id).copied().unwrap_or(0)
+    }
+
+    /// Physically evict `count` cache rows of `id` starting at position
+    /// `start`: the host-mirror K/V rows are zeroed in place and the
+    /// carried device literals are dropped, so the next decode step
+    /// re-uploads the edited arenas (charged to `sync_upload_bytes` via
+    /// the regroup path — nothing is ever downloaded). A zeroed key
+    /// scores 0 pre-softmax and a zeroed value contributes nothing to
+    /// the output: the positions stay addressable (the one `pos` input
+    /// drives rope, write index, and causal mask together, so rows
+    /// cannot be masked out or compacted away) but carry no content.
+    ///
+    /// Row accounting is untouched — the rows remain "written"; the
+    /// evicted-rows ledger records them so the auditor can reconcile
+    /// committed rows against live blocks.
+    pub fn evict_rows(&mut self, id: SeqId, start: usize, count: usize)
+        -> Result<()> {
+        if count == 0 {
+            return Ok(());
+        }
+        let rows = *self.rows.get(&id).ok_or_else(|| {
+            anyhow::anyhow!("evict_rows: seq {id} has no row accounting")
+        })?;
+        anyhow::ensure!(
+            start + count <= rows,
+            "evict_rows: seq {id} rows [{start}, {}) exceed written {rows}",
+            start + count
+        );
+        let lane = self.lanes.lane_of(id).ok_or_else(|| {
+            anyhow::anyhow!("evict_rows: seq {id} holds no decode lane")
+        })?;
+        let (b, n) = (self.lanes.bucket(), self.tier);
+        let (l, kd, vd) = (self.cfg.n_layers, self.cfg.k_cache_dims,
+                           self.cfg.v_cache_dims);
+        let zk = vec![0f32; count * kd];
+        let zv = vec![0f32; count * vd];
+        for li in 0..l {
+            let base = (li * b + lane) * n + start;
+            self.k_group.write_f32_rows(base, &zk, count);
+            self.v_group.write_f32_rows(base, &zv, count);
+        }
+        self.k_lit = None;
+        self.k_scale_lit = None;
+        self.v_lit = None;
+        self.v_scale_lit = None;
+        *self.evicted.entry(id).or_insert(0) += count;
+        self.metrics.eviction.evicted_rows += count as u64;
+        Ok(())
+    }
+
     /// Forget a sequence's cache storage. If it held a lane, the lane
     /// becomes a hole — no bytes move, no regroup is scheduled; survivors
     /// keep decoding from their existing lanes.
@@ -1534,6 +1657,8 @@ impl<'rt> Engine<'rt> {
         self.chunking.remove(&id); // cancel an in-flight chunked prefill
         self.prefix_of.remove(&id);
         self.rows.remove(&id);
+        self.step_mass.remove(&id);
+        self.evicted.remove(&id);
         if self.lanes.remove(id) {
             self.metrics.lane_leaves += 1;
             // what the old full park/unpark design would have copied for
@@ -1802,6 +1927,7 @@ impl<'rt> Engine<'rt> {
             v_group: self.v_group.clone(),
             parked: self.parked.clone(),
             rows: self.rows.clone(),
+            step_mass: self.step_mass.clone(),
             metrics: self.metrics.clone(),
         }
     }
@@ -1819,6 +1945,7 @@ impl<'rt> Engine<'rt> {
         self.v_group = snap.v_group;
         self.parked = snap.parked;
         self.rows = snap.rows;
+        self.step_mass = snap.step_mass;
         self.metrics = snap.metrics;
         self.k_lit = None;
         self.k_scale_lit = None;
@@ -1852,6 +1979,7 @@ impl<'rt> Engine<'rt> {
                 })
                 .collect(),
             rows: self.rows.clone(),
+            evicted: self.evicted.clone(),
             rng: self.rng.clone(),
             metrics: self.metrics.clone(),
         }
@@ -1888,6 +2016,10 @@ impl<'rt> Engine<'rt> {
         self.prefix_of = ck.prefix_of.clone();
         self.block_tokens = ck.block_tokens;
         self.rows = ck.rows.clone();
+        self.evicted = ck.evicted.clone();
+        // per-step mass is transient telemetry: the next decode step
+        // repopulates it, and the eviction scorer tolerates its absence
+        self.step_mass.clear();
         self.rng = ck.rng.clone();
         self.metrics = ck.metrics.clone();
         self.k_lit = None;

@@ -1,0 +1,338 @@
+//! Bounded-cache eviction policies over the paged block tables
+//! (ISSUE 10): sink + recency pinning with an optional attention-score
+//! ordering for the evictable middle.
+//!
+//! The policy layer decides WHICH position-slot to give up; the
+//! mechanism lives elsewhere — [`crate::coordinator::kvcache`] frees the
+//! block (refusing shared/registered/shared-region blocks), and
+//! [`crate::coordinator::engine`] zeroes the mirror rows. Three
+//! orderings over the unpinned middle:
+//!
+//! - **Sink**: score-free FIFO — evict the oldest unpinned slot. The
+//!   attention-sink literature (StreamingLLM) motivates the pinned
+//!   head; the middle falls off oldest-first.
+//! - **A2SF**: forgetting-factor accumulated attention —
+//!   `acc[slot] = ff * acc[slot] + step_mass[slot]` every decode step,
+//!   evict the argmin. Old mass decays, so a slot that WAS hot but went
+//!   cold becomes evictable (the A2SF correction to raw accumulation,
+//!   which over-protects early tokens).
+//! - **TOVA**: the current step's attention alone — evict the argmin of
+//!   the most recent step's mass, no memory.
+//!
+//! Scores arrive per POSITION from the decode kernels' `attn_mass`
+//! output plane (post-softmax weight, mean over layers and heads) and
+//! are summed per 16-token slot; the policies only ever rank whole
+//! slots because eviction frees whole blocks.
+
+use std::collections::BTreeMap;
+
+use super::kvcache::SeqId;
+
+/// Which ordering picks the victim slot. `Sink` needs no scores and
+/// works on legacy manifests; `A2sf`/`Tova` require the `attn_mass`
+/// decode output plane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum EvictionPolicy {
+    /// Eviction off: full reservations, reject-on-overflow (seed
+    /// behaviour).
+    #[default]
+    None,
+    /// Pin sink + recency, evict the oldest middle slot (FIFO).
+    Sink,
+    /// Pin sink + recency, evict the lowest forgetting-factor
+    /// accumulated attention score.
+    A2sf,
+    /// Pin sink + recency, evict the lowest current-step attention.
+    Tova,
+}
+
+impl EvictionPolicy {
+    pub fn parse(s: &str) -> Option<EvictionPolicy> {
+        match s {
+            "none" => Some(EvictionPolicy::None),
+            "sink" => Some(EvictionPolicy::Sink),
+            "a2sf" => Some(EvictionPolicy::A2sf),
+            "tova" => Some(EvictionPolicy::Tova),
+            _ => None,
+        }
+    }
+
+    pub fn needs_scores(&self) -> bool {
+        matches!(self, EvictionPolicy::A2sf | EvictionPolicy::Tova)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EvictionPolicy::None => "none",
+            EvictionPolicy::Sink => "sink",
+            EvictionPolicy::A2sf => "a2sf",
+            EvictionPolicy::Tova => "tova",
+        }
+    }
+}
+
+/// Per-sequence cache budget in blocks: `sink + window + slack` live
+/// blocks is the steady-state holding of a capped stream.
+#[derive(Clone, Copy, Debug)]
+pub struct EvictionConfig {
+    pub policy: EvictionPolicy,
+    /// Leading slots never evicted (attention sinks).
+    pub sink_blocks: usize,
+    /// Trailing WRITTEN slots never evicted (the recency window).
+    pub window_blocks: usize,
+    /// Evictable middle slots the budget grants beyond the pinned
+    /// regions — must be >= 1 or a stream could never grow past its
+    /// pins.
+    pub slack_blocks: usize,
+    /// A2SF forgetting factor in (0, 1]: 1.0 = raw accumulation (H2O),
+    /// smaller forgets faster.
+    pub forgetting: f64,
+}
+
+impl Default for EvictionConfig {
+    fn default() -> Self {
+        EvictionConfig {
+            policy: EvictionPolicy::None,
+            sink_blocks: 1,
+            window_blocks: 2,
+            slack_blocks: 1,
+            forgetting: 0.3,
+        }
+    }
+}
+
+impl EvictionConfig {
+    pub fn active(&self) -> bool {
+        self.policy != EvictionPolicy::None
+    }
+
+    /// Per-sequence live-block budget.
+    pub fn budget_blocks(&self) -> usize {
+        self.sink_blocks + self.window_blocks + self.slack_blocks
+    }
+}
+
+/// Per-sequence slot scores + victim selection. Owned by the scheduler
+/// and cloned into its checkpoints, so replay after a restore ranks
+/// victims identically.
+#[derive(Clone, Debug, Default)]
+pub struct Evictor {
+    pub cfg: EvictionConfig,
+    /// A2SF forgetting-factor accumulated mass per slot.
+    acc: BTreeMap<SeqId, Vec<f64>>,
+    /// The most recent step's mass per slot (TOVA's whole memory).
+    last: BTreeMap<SeqId, Vec<f64>>,
+}
+
+impl Evictor {
+    pub fn new(cfg: EvictionConfig) -> Evictor {
+        Evictor { cfg, ..Default::default() }
+    }
+
+    /// Fold one decode step's per-position attention mass (positions
+    /// `0..rows`) into the per-slot scores. A step without a mass plane
+    /// (legacy manifest, or the step before the first decode) leaves the
+    /// scores untouched — Sink never calls this path's scores anyway.
+    pub fn observe(&mut self, id: SeqId, mass: &[f32], bt: usize) {
+        let slots = mass.len().div_ceil(bt);
+        let acc = self.acc.entry(id).or_default();
+        let last = self.last.entry(id).or_default();
+        acc.resize(slots.max(acc.len()), 0.0);
+        last.clear();
+        last.resize(acc.len(), 0.0);
+        for (slot, chunk) in mass.chunks(bt).enumerate() {
+            let m: f64 = chunk.iter().map(|&x| x as f64).sum();
+            acc[slot] = self.cfg.forgetting * acc[slot] + m;
+            last[slot] = m;
+        }
+    }
+
+    /// Pick the victim position-slot for `id`, or `None` when every
+    /// live slot is pinned. `live_slots` are the sequence's live slots
+    /// ascending (from the block table), `rows` its written rows.
+    ///
+    /// Pinning: slots below `sink_blocks`, slots whose range reaches
+    /// into the trailing `window_blocks * bt` written rows, slots inside
+    /// the shared-prefix region (`shared_rows`), and the partially
+    /// written tail slot are all ineligible.
+    pub fn pick_victim(&self, id: SeqId, live_slots: &[usize],
+                       rows: usize, shared_rows: usize, bt: usize)
+        -> Option<usize> {
+        let window_floor = rows
+            .saturating_sub(self.cfg.window_blocks * bt);
+        let candidates: Vec<usize> = live_slots
+            .iter()
+            .copied()
+            .filter(|&s| {
+                s >= self.cfg.sink_blocks
+                    && s * bt >= shared_rows
+                    && (s + 1) * bt <= rows
+                    && (s + 1) * bt <= window_floor
+            })
+            .collect();
+        match self.cfg.policy {
+            EvictionPolicy::None => None,
+            EvictionPolicy::Sink => candidates.first().copied(),
+            EvictionPolicy::A2sf => {
+                self.argmin(&candidates, self.acc.get(&id))
+            }
+            EvictionPolicy::Tova => {
+                self.argmin(&candidates, self.last.get(&id))
+            }
+        }
+    }
+
+    /// Candidate with the smallest score; a slot with no recorded score
+    /// counts 0 (never observed => nothing recent speaks for keeping
+    /// it). Ties break oldest-first, matching Sink.
+    fn argmin(&self, candidates: &[usize], scores: Option<&Vec<f64>>)
+        -> Option<usize> {
+        candidates.iter().copied().min_by(|&a, &b| {
+            let sa = scores.and_then(|s| s.get(a)).copied().unwrap_or(0.0);
+            let sb = scores.and_then(|s| s.get(b)).copied().unwrap_or(0.0);
+            sa.partial_cmp(&sb)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        })
+    }
+
+    /// Forget a retired sequence's scores.
+    pub fn drop_seq(&mut self, id: SeqId) {
+        self.acc.remove(&id);
+        self.last.remove(&id);
+    }
+
+    /// Accumulated A2SF score per slot (fidelity experiment surface).
+    pub fn acc_scores(&self, id: SeqId) -> Option<&[f64]> {
+        self.acc.get(&id).map(|v| v.as_slice())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn evictor(policy: EvictionPolicy) -> Evictor {
+        Evictor::new(EvictionConfig {
+            policy,
+            sink_blocks: 1,
+            window_blocks: 1,
+            slack_blocks: 2,
+            forgetting: 0.5,
+        })
+    }
+
+    const BT: usize = 16;
+
+    #[test]
+    fn sink_evicts_oldest_unpinned_slot() {
+        let ev = evictor(EvictionPolicy::Sink);
+        // 6 slots, 96 written rows: slot 0 is sink, slot 5 is window
+        let live: Vec<usize> = (0..6).collect();
+        assert_eq!(ev.pick_victim(1, &live, 96, 0, BT), Some(1));
+        // with slot 1 already evicted, the next-oldest middle goes
+        let live = vec![0, 2, 3, 4, 5];
+        assert_eq!(ev.pick_victim(1, &live, 96, 0, BT), Some(2));
+    }
+
+    #[test]
+    fn window_and_sink_are_never_candidates() {
+        let ev = evictor(EvictionPolicy::Sink);
+        // only sink + window written: nothing evictable
+        let live = vec![0, 1];
+        assert_eq!(ev.pick_victim(1, &live, 32, 0, BT), None);
+        // partial tail slot is pinned even outside the window
+        let live = vec![0, 1, 2];
+        assert_eq!(ev.pick_victim(1, &live, 40, 0, BT), None);
+    }
+
+    #[test]
+    fn shared_region_is_pinned() {
+        let ev = evictor(EvictionPolicy::Sink);
+        let live: Vec<usize> = (0..6).collect();
+        // slots 0..3 shared: the first evictable middle slot is 3
+        assert_eq!(ev.pick_victim(1, &live, 96, 48, BT), Some(3));
+    }
+
+    #[test]
+    fn a2sf_evicts_lowest_accumulated_mass() {
+        let mut ev = evictor(EvictionPolicy::A2sf);
+        // slot 2 consistently cold, slot 1 and 3 hot
+        let mut mass = vec![0.2f32; 64];
+        for p in 32..48 {
+            mass[p] = 0.001;
+        }
+        ev.observe(1, &mass, BT);
+        ev.observe(1, &mass, BT);
+        let live: Vec<usize> = (0..5).collect();
+        assert_eq!(ev.pick_victim(1, &live, 80, 0, BT), Some(2));
+    }
+
+    #[test]
+    fn a2sf_forgetting_lets_cold_slots_overtake_old_hot_ones() {
+        let mut ev = evictor(EvictionPolicy::A2sf);
+        // step 1: slot 1 very hot, everything else modestly warm
+        let mut m1 = vec![0.1f32; 64];
+        for p in 16..32 {
+            m1[p] = 1.0;
+        }
+        for p in 32..48 {
+            m1[p] = 0.3;
+        }
+        ev.observe(1, &m1, BT);
+        // many later steps: slot 1 stone cold, the rest stay warm
+        let mut m2 = vec![0.1f32; 64];
+        for p in 16..32 {
+            m2[p] = 0.0;
+        }
+        for p in 32..48 {
+            m2[p] = 0.3;
+        }
+        for _ in 0..8 {
+            ev.observe(1, &m2, BT);
+        }
+        let live: Vec<usize> = (0..5).collect();
+        // ff=0.5 decayed slot 1's old glory below slot 2's steady mass
+        assert_eq!(ev.pick_victim(1, &live, 80, 0, BT), Some(1));
+        // raw accumulation (ff=1.0) would have kept slot 1 forever
+        let mut raw = ev.clone();
+        raw.cfg.forgetting = 1.0;
+        raw.drop_seq(1);
+        raw.observe(1, &m1, BT);
+        for _ in 0..8 {
+            raw.observe(1, &m2, BT);
+        }
+        assert_eq!(raw.pick_victim(1, &live, 80, 0, BT), Some(3),
+                   "H2O-style accumulation protects the old hot slot");
+    }
+
+    #[test]
+    fn tova_uses_only_the_current_step() {
+        let mut ev = evictor(EvictionPolicy::Tova);
+        // history says slot 1 cold — but TOVA must ignore history
+        let mut m1 = vec![0.2f32; 64];
+        for p in 16..32 {
+            m1[p] = 0.001;
+        }
+        ev.observe(1, &m1, BT);
+        // current step: slot 3 cold
+        let mut m2 = vec![0.2f32; 64];
+        for p in 48..64 {
+            m2[p] = 0.001;
+        }
+        ev.observe(1, &m2, BT);
+        let live: Vec<usize> = (0..5).collect();
+        assert_eq!(ev.pick_victim(1, &live, 80, 0, BT), Some(3));
+    }
+
+    #[test]
+    fn policy_parse_round_trips() {
+        for p in [EvictionPolicy::None, EvictionPolicy::Sink,
+                  EvictionPolicy::A2sf, EvictionPolicy::Tova] {
+            assert_eq!(EvictionPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(EvictionPolicy::parse("h2o"), None);
+        assert!(EvictionPolicy::A2sf.needs_scores());
+        assert!(!EvictionPolicy::Sink.needs_scores());
+    }
+}

@@ -84,6 +84,35 @@ struct BlockTable {
     /// private: refcount 1, never tree-registered — the only blocks this
     /// sequence may still write (the CoW privacy invariant).
     shared_rows: usize,
+    /// Position-slots whose block was evicted whole back to the pool
+    /// (ISSUE 10). Slot `i` covers rows `[i*bt, (i+1)*bt)`; `blocks`
+    /// holds only the LIVE slots in ascending slot order, so the table's
+    /// slot span is `blocks.len() + evicted_slots.len()` and stays equal
+    /// to `ceil(n_tokens / bt)` (slot conservation). Sorted, unique.
+    evicted_slots: Vec<usize>,
+}
+
+impl BlockTable {
+    /// Total position-slots (live + evicted) — always covers `n_tokens`.
+    fn slot_span(&self) -> usize {
+        self.blocks.len() + self.evicted_slots.len()
+    }
+
+    /// Index into `blocks` of the live block at position-slot `slot`
+    /// (None when the slot is evicted or out of range).
+    fn live_index(&self, slot: usize) -> Option<usize> {
+        if slot >= self.slot_span() || self.evicted_slots.contains(&slot) {
+            return None;
+        }
+        Some(slot - self.evicted_slots.iter().filter(|&&e| e < slot).count())
+    }
+
+    /// Position-slots currently holding live blocks, ascending.
+    fn live_slots(&self) -> Vec<usize> {
+        (0..self.slot_span())
+            .filter(|s| !self.evicted_slots.contains(s))
+            .collect()
+    }
 }
 
 /// The refcounted block pool. `refs[b] == 0` ⟺ `b` is on the free list;
@@ -351,6 +380,15 @@ impl KvCacheManager {
     pub fn new(cfg: KvCacheConfig) -> KvCacheManager {
         let tokens = cfg.token_capacity();
         let blocks = tokens / cfg.block_tokens;
+        Self::with_block_count(cfg, blocks)
+    }
+
+    /// Size the pool to an explicit block count, ignoring the byte
+    /// budget — the `--kv-budget-blocks` serve axis (ISSUE 10), which
+    /// pins the bounded-cache experiments to an exact pool size instead
+    /// of deriving one from dtype-aware byte math.
+    pub fn with_block_count(cfg: KvCacheConfig, blocks: usize)
+        -> KvCacheManager {
         KvCacheManager {
             pool: Pool::new(blocks),
             tree: PrefixTree::default(),
@@ -482,6 +520,12 @@ impl KvCacheManager {
                 full
             );
         }
+        if t.evicted_slots.iter().any(|&s| s < full) {
+            bail!(
+                "seal_prefix: sequence {seq} evicted a prompt block — \
+                 evicted rows cannot be registered for sharing"
+            );
+        }
         let chunks: Vec<&[i32]> = prompt.chunks(bt).take(full).collect();
         let blocks: Vec<BlockId> = t.blocks[..full].to_vec();
         let (depth, registered) = self.tree.register(&chunks, &blocks);
@@ -510,6 +554,12 @@ impl KvCacheManager {
             .tables
             .get(&parent)
             .ok_or_else(|| anyhow::anyhow!("fork: unknown parent {parent}"))?;
+        if !p.evicted_slots.is_empty() {
+            bail!(
+                "fork: parent {parent} has evicted blocks — a child cannot \
+                 share rows whose content was evicted"
+            );
+        }
         let w = p.rows_written;
         let full = w / bt;
         if n_tokens < w {
@@ -562,7 +612,9 @@ impl KvCacheManager {
             .ok_or_else(|| anyhow::anyhow!("unknown sequence {seq}"))?;
         let new_total = t.n_tokens + added;
         let need = new_total.div_ceil(bt);
-        let extra = need.saturating_sub(t.blocks.len());
+        // evicted slots still occupy their position range: fresh blocks
+        // are only needed past the table's full slot span
+        let extra = need.saturating_sub(t.slot_span());
         if self.pool.free.len() < extra {
             bail!("KV cache full on extend of sequence {seq}");
         }
@@ -621,6 +673,84 @@ impl KvCacheManager {
             }
         }
         freed
+    }
+
+    /// Evict the block at position-slot `slot` of `seq`, freeing it
+    /// whole back to the pool (ISSUE 10). Refused — with an error, so
+    /// the caller can count `refused_shared` — when the block is shared
+    /// (refcount > 1), registered in the prefix tree, inside the
+    /// copy-on-write shared region, not yet fully written, already
+    /// evicted, or out of range. On success the freed [`BlockId`] is
+    /// returned; the caller must zero the engine mirror rows
+    /// (`Engine::evict_rows`) for the slot's `[slot*bt, (slot+1)*bt)`
+    /// position range.
+    pub fn evict_slot(&mut self, seq: SeqId, slot: usize)
+        -> Result<BlockId> {
+        let bt = self.cfg.block_tokens;
+        let t = self
+            .tables
+            .get(&seq)
+            .ok_or_else(|| anyhow::anyhow!("evict_slot: unknown sequence {seq}"))?;
+        let idx = t.live_index(slot).ok_or_else(|| {
+            anyhow::anyhow!(
+                "evict_slot: seq {seq} slot {slot} is evicted or out of \
+                 range ({} slots)",
+                t.slot_span()
+            )
+        })?;
+        if (slot + 1) * bt > t.rows_written {
+            bail!(
+                "evict_slot: seq {seq} slot {slot} not fully written \
+                 ({} rows)",
+                t.rows_written
+            );
+        }
+        if slot * bt < t.shared_rows {
+            bail!(
+                "evict_slot: seq {seq} slot {slot} is inside the shared \
+                 prefix region ({} rows)",
+                t.shared_rows
+            );
+        }
+        let b = t.blocks[idx];
+        if self.pool.refs[b] > 1 {
+            bail!("evict_slot: seq {seq} block {b} is shared (refcount {})",
+                  self.pool.refs[b]);
+        }
+        if self.tree.is_registered(b) {
+            bail!("evict_slot: seq {seq} block {b} is tree-registered");
+        }
+        let t = self.tables.get_mut(&seq).expect("table checked above");
+        t.blocks.remove(idx);
+        let at = t.evicted_slots.partition_point(|&e| e < slot);
+        t.evicted_slots.insert(at, slot);
+        let freed = self.pool.release(b);
+        debug_assert!(freed, "refcount-1 block must free on release");
+        Ok(b)
+    }
+
+    /// Live (non-evicted) blocks held by `seq`.
+    pub fn live_blocks(&self, seq: SeqId) -> Option<usize> {
+        self.tables.get(&seq).map(|t| t.blocks.len())
+    }
+
+    /// Position-slots of `seq` currently holding live blocks, ascending.
+    pub fn live_slots(&self, seq: SeqId) -> Option<Vec<usize>> {
+        self.tables.get(&seq).map(|t| t.live_slots())
+    }
+
+    /// Position-slots of `seq` whose block was evicted, ascending.
+    pub fn evicted_slots(&self, seq: SeqId) -> Option<Vec<usize>> {
+        self.tables.get(&seq).map(|t| t.evicted_slots.clone())
+    }
+
+    /// Rows of `seq` covered by evicted blocks — the logical half of the
+    /// evicted-rows ledger the auditor reconciles against
+    /// `Engine::evicted_rows_of`.
+    pub fn evicted_rows(&self, seq: SeqId) -> Option<usize> {
+        self.tables
+            .get(&seq)
+            .map(|t| t.evicted_slots.len() * self.cfg.block_tokens)
     }
 
     pub fn seq_tokens(&self, seq: SeqId) -> Option<usize> {
@@ -688,6 +818,27 @@ impl KvCacheManager {
                     "seq {id}: shared_rows {} exceeds table ({} blocks)",
                     t.shared_rows,
                     t.blocks.len()));
+            }
+            // slot conservation: evicted slots keep their position range,
+            // so live + evicted always tiles the reservation exactly
+            if t.slot_span() != t.n_tokens.div_ceil(bt) {
+                out.push(format!(
+                    "seq {id}: {} live + {} evicted slots != ceil({} / {bt})",
+                    t.blocks.len(),
+                    t.evicted_slots.len(),
+                    t.n_tokens));
+            }
+            if t.evicted_slots.windows(2).any(|w| w[0] >= w[1]) {
+                out.push(format!(
+                    "seq {id}: evicted slots not sorted/unique: {:?}",
+                    t.evicted_slots));
+            }
+            if t.evicted_slots.iter().any(|&s| s * bt < t.shared_rows) {
+                out.push(format!(
+                    "seq {id}: evicted slot inside shared region \
+                     ({} rows): {:?}",
+                    t.shared_rows,
+                    t.evicted_slots));
             }
             for (i, &b) in t.blocks.iter().enumerate() {
                 if b >= self.pool.total {
@@ -1026,6 +1177,77 @@ mod tests {
         assert!(s.dedup_bytes > 0.0);
         assert!(m.refcount_violations().is_empty(),
                 "{:?}", m.refcount_violations());
+    }
+
+    // --- ISSUE 10: bounded-cache eviction ------------------------------
+
+    #[test]
+    fn evict_slot_frees_whole_blocks_and_conserves_slots() {
+        let mut m = KvCacheManager::new(cfg(32, 4.0));
+        m.allocate(1, 80).unwrap(); // 5 blocks of 16
+        m.commit_rows(1, 80).unwrap();
+        let used0 = m.stats().k_blocks_used;
+        let b = m.evict_slot(1, 1).unwrap();
+        assert_eq!(m.block_ref(b), 0, "evicted block must free");
+        assert_eq!(m.stats().k_blocks_used, used0 - 1);
+        assert_eq!(m.live_blocks(1), Some(4));
+        assert_eq!(m.evicted_rows(1), Some(16));
+        assert_eq!(m.live_slots(1).unwrap(), vec![0, 2, 3, 4]);
+        // double-evict refused; pool accounting stays balanced
+        assert!(m.evict_slot(1, 1).is_err());
+        assert!(m.refcount_violations().is_empty(),
+                "{:?}", m.refcount_violations());
+        m.release(1);
+        assert_eq!(m.free_token_capacity(), m.total_token_capacity(),
+                   "release after eviction must not double-free");
+    }
+
+    #[test]
+    fn evict_refuses_shared_registered_and_unwritten() {
+        let mut m = KvCacheManager::new(cfg(32, 4.0));
+        let p = prompt(40, 7); // 2 full blocks + tail
+        m.allocate_prompt(1, &p, 80, true).unwrap();
+        m.commit_rows(1, 40).unwrap();
+        m.seal_prefix(1, &p).unwrap();
+        m.allocate_prompt(2, &p, 80, true).unwrap();
+        // slot 0: shared region (refcount 2 via seq 2, tree-registered)
+        assert!(m.evict_slot(1, 0).is_err(), "shared prefix must pin");
+        // slot 3: reserved but unwritten
+        assert!(m.evict_slot(1, 3).is_err(), "unwritten slot must pin");
+        // slot 9: out of range
+        assert!(m.evict_slot(1, 9).is_err());
+        // slot 2 (the written private tail block) is evictable
+        m.commit_rows(1, 48).unwrap();
+        m.evict_slot(1, 2).unwrap();
+        assert!(m.refcount_violations().is_empty(),
+                "{:?}", m.refcount_violations());
+    }
+
+    #[test]
+    fn extend_accounts_for_evicted_slots() {
+        let mut m = KvCacheManager::new(cfg(32, 4.0));
+        m.allocate(1, 48).unwrap(); // 3 blocks
+        m.commit_rows(1, 48).unwrap();
+        m.evict_slot(1, 1).unwrap();
+        let used0 = m.stats().k_blocks_used;
+        // growing within the existing slot span allocates nothing (the
+        // evicted slot still occupies its position range)
+        assert_eq!(m.seq_tokens(1), Some(48));
+        m.extend(1, 16).unwrap(); // 64 tokens -> slot 3, one fresh block
+        assert_eq!(m.stats().k_blocks_used, used0 + 1);
+        assert_eq!(m.live_slots(1).unwrap(), vec![0, 2, 3]);
+        assert!(m.refcount_violations().is_empty(),
+                "{:?}", m.refcount_violations());
+    }
+
+    #[test]
+    fn fork_of_evicted_sequence_refused() {
+        let mut m = KvCacheManager::new(cfg(32, 4.0));
+        m.allocate(1, 64).unwrap();
+        m.commit_rows(1, 64).unwrap();
+        m.evict_slot(1, 1).unwrap();
+        assert!(m.fork(1, 2, 64).is_err(),
+                "a child cannot share evicted rows");
     }
 
     #[test]

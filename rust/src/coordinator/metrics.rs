@@ -177,6 +177,13 @@ pub struct EngineMetrics {
     /// Gauge: block-pool occupancy, used out of `block_pool_total`.
     pub block_pool_used: u64,
     pub block_pool_total: u64,
+    /// Delta-download bytes of the per-row `attn_mass` plane (one f32
+    /// per lane·position per decode step). Charged separately from
+    /// `row_sync_bytes` so existing delta-sync accounting is unchanged
+    /// when the scorer plane rides along.
+    pub mass_sync_bytes: u64,
+    /// Bounded-cache eviction telemetry (ISSUE 10).
+    pub eviction: EvictionStats,
 }
 
 impl EngineMetrics {
@@ -249,6 +256,7 @@ impl EngineMetrics {
              dedup {:.0} B, {} CoW splits, pool {}/{} blocks\n\
              faults:  {} injected, {} retries (backoff {}), \
              {} recovered, {} quarantined, {} fatal\n\
+             {}\n\
              decode throughput: {:.1} tok/s",
             self.prefill.summary(),
             self.prefill_tokens,
@@ -285,7 +293,55 @@ impl EngineMetrics {
             self.recovered_steps,
             self.quarantined_seqs,
             self.fatal_steps,
+            self.eviction.report(self.mass_sync_bytes),
             self.decode_tokens_per_sec()
+        )
+    }
+}
+
+/// Bounded-cache eviction telemetry (ISSUE 10), kept inside
+/// [`EngineMetrics`] so both halves of an eviction — the scheduler's
+/// block-table trim and the engine's mirror zeroing — report into one
+/// place. All zeros when `--eviction none`.
+#[derive(Clone, Debug, Default)]
+pub struct EvictionStats {
+    /// 16-token blocks evicted whole back to the pool.
+    pub evicted_blocks: u64,
+    /// Cache rows zeroed in the engine mirror (ledger total across
+    /// live + retired sequences).
+    pub evicted_rows: u64,
+    /// Eviction candidates refused because the block was shared
+    /// (refcount > 1), registered in the prefix tree, or inside the
+    /// copy-on-write shared region — the "never evict shared prefixes"
+    /// guarantee, counted rather than silently skipped.
+    pub refused_shared: u64,
+    /// Decode steps whose `attn_mass` plane fed the scorer.
+    pub score_steps: u64,
+    /// Admissions that succeeded only under the eviction-capped
+    /// reservation (the full `prompt + max_new` reservation would have
+    /// overflowed the pool) — the bounded-cache admission headline.
+    pub capped_admissions: u64,
+    /// High-water mark of live (non-evicted) blocks held by any single
+    /// sequence — the acceptance bound is `<= budget blocks`.
+    pub peak_seq_blocks: u64,
+    /// Configured per-sequence live-block budget (gauge; 0 = off).
+    pub budget_blocks: u64,
+}
+
+impl EvictionStats {
+    pub fn report(&self, mass_sync_bytes: u64) -> String {
+        format!(
+            "evict:   {} blocks ({} rows), {} refused shared, \
+             {} scored steps (mass {} B), {} capped admissions, \
+             peak {}/{} blocks/seq",
+            self.evicted_blocks,
+            self.evicted_rows,
+            self.refused_shared,
+            self.score_steps,
+            mass_sync_bytes,
+            self.capped_admissions,
+            self.peak_seq_blocks,
+            self.budget_blocks
         )
     }
 }

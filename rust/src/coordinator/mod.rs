@@ -28,6 +28,7 @@ pub mod sequence;
 pub mod sampling;
 pub mod lanes;
 pub mod engine;
+pub mod eviction;
 pub mod scheduler;
 pub mod supervisor;
 pub mod router;

@@ -46,6 +46,7 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::engine::{Engine, EngineCheckpoint};
 use crate::coordinator::errors::EngineError;
+use crate::coordinator::eviction::{EvictionConfig, Evictor};
 use crate::coordinator::kvcache::{KvCacheManager, SeqId};
 use crate::coordinator::sequence::{FinishReason, Priority, Sequence};
 
@@ -91,6 +92,15 @@ pub struct SchedConfig {
     /// of re-prefilling them. Off reproduces fully private per-sequence
     /// storage (the bit-exactness baseline).
     pub prefix_sharing: bool,
+    /// Bounded-cache eviction (ISSUE 10): with an active policy,
+    /// admission reserves at most `budget_blocks()` worth of tokens per
+    /// sequence (instead of the full `prompt + max_new`) and every
+    /// decode round trims each running sequence back to the budget by
+    /// evicting whole middle blocks — sink and recency-window slots
+    /// pinned, shared-prefix blocks never touched.
+    /// `EvictionPolicy::None` reproduces the seed's full-reservation,
+    /// reject-on-overflow behaviour exactly.
+    pub eviction: EvictionConfig,
 }
 
 impl Default for SchedConfig {
@@ -104,6 +114,7 @@ impl Default for SchedConfig {
             retry_backoff_us: 200,
             max_step_backoff_us: 10_000,
             prefix_sharing: true,
+            eviction: EvictionConfig::default(),
         }
     }
 }
@@ -146,6 +157,7 @@ pub struct SchedCheckpoint {
     interactive_grants: usize,
     stalled_rounds: usize,
     chunk_checked: bool,
+    evictor: Evictor,
 }
 
 impl SchedCheckpoint {
@@ -193,6 +205,9 @@ pub struct Scheduler<'rt> {
     /// `cfg.chunk_tokens` has been validated against the manifest's
     /// exported chunk sizes (checked once, on the first chunked round).
     chunk_checked: bool,
+    /// Eviction policy state (per-slot attention scores + victim
+    /// selection); inert when `cfg.eviction` is `None`.
+    evictor: Evictor,
 }
 
 impl<'rt> Scheduler<'rt> {
@@ -212,6 +227,10 @@ impl<'rt> Scheduler<'rt> {
         // the engine's shared-prefix store speaks the pool's block
         // geometry from the start
         engine.set_block_tokens(kv.cfg.block_tokens);
+        if cfg.eviction.active() {
+            engine.metrics.eviction.budget_blocks =
+                cfg.eviction.budget_blocks() as u64;
+        }
         Scheduler {
             engine,
             kv,
@@ -225,6 +244,7 @@ impl<'rt> Scheduler<'rt> {
             stalled_rounds: 0,
             progressed: false,
             chunk_checked: false,
+            evictor: Evictor::new(cfg.eviction),
         }
     }
 
@@ -276,8 +296,26 @@ impl<'rt> Scheduler<'rt> {
             || !self.prefilling.is_empty()
     }
 
-    fn reservation(seq: &Sequence) -> usize {
+    /// The full per-user context reservation (Table 10 capacity math).
+    fn full_reservation(seq: &Sequence) -> usize {
         seq.prompt.len() + seq.max_new
+    }
+
+    /// Blocks reserved at admission. Without eviction this is the full
+    /// `prompt + max_new` context (reject-on-overflow, the seed
+    /// behaviour). With an active eviction policy the reservation is
+    /// capped at the per-sequence live-block budget — never below the
+    /// prompt plus the first decode row, since prefill must land whole —
+    /// and the sequence grows past it by evicting its own middle blocks
+    /// (`evict_round`), so an unbounded stream admits on a bounded pool.
+    fn reservation(&self, seq: &Sequence) -> usize {
+        let full = Self::full_reservation(seq);
+        if !self.cfg.eviction.active() {
+            return full;
+        }
+        let cap =
+            self.cfg.eviction.budget_blocks() * self.kv.cfg.block_tokens;
+        full.min(cap.max(seq.prompt.len() + 1))
     }
 
     /// Snapshot the complete serving state host-side. Pure clone — the
@@ -295,6 +333,7 @@ impl<'rt> Scheduler<'rt> {
             interactive_grants: self.interactive_grants,
             stalled_rounds: self.stalled_rounds,
             chunk_checked: self.chunk_checked,
+            evictor: self.evictor.clone(),
         }
     }
 
@@ -323,6 +362,7 @@ impl<'rt> Scheduler<'rt> {
         self.stalled_rounds = ck.stalled_rounds;
         self.progressed = false;
         self.chunk_checked = ck.chunk_checked;
+        self.evictor = ck.evictor.clone();
         Ok(())
     }
 
@@ -384,6 +424,75 @@ impl<'rt> Scheduler<'rt> {
         let freed = self.kv.release(id);
         self.engine.drop_seq(id);
         self.engine.drop_blocks(&freed);
+        self.evictor.drop_seq(id);
+    }
+
+    /// Post-decode cache maintenance for one running sequence under an
+    /// active eviction policy: fold this step's attention mass into the
+    /// slot scores, grow the logical reservation to cover the newly
+    /// written row — self-funding the fresh block by evicting one of its
+    /// own middle blocks when at budget or the pool is dry, so a capped
+    /// stream never takes net-new pool blocks past its admission — and
+    /// trim back to the per-sequence live-block budget. Runs before
+    /// `commit_rows`, which would otherwise reject rows past the capped
+    /// reservation.
+    fn evict_round(&mut self, id: SeqId) -> Result<()> {
+        let bt = self.kv.cfg.block_tokens;
+        let rows = self.engine.rows(id);
+        if let Some(m) = self.engine.step_attn_mass(id) {
+            self.evictor.observe(id, m, bt);
+            self.engine.metrics.eviction.score_steps += 1;
+        }
+        let reserved = self.kv.seq_tokens(id).unwrap_or(0);
+        let budget = self.cfg.eviction.budget_blocks();
+        if rows > reserved {
+            let need_fresh = rows.div_ceil(bt) > reserved.div_ceil(bt);
+            if need_fresh {
+                let live = self.kv.live_blocks(id).unwrap_or(0);
+                if live >= budget || self.kv.free_token_capacity() == 0 {
+                    self.trim_to(id, live.saturating_sub(1), rows)?;
+                }
+            }
+            self.kv.extend(id, rows - reserved)?;
+        }
+        self.trim_to(id, budget, rows)?;
+        let live = self.kv.live_blocks(id).unwrap_or(0) as u64;
+        let ev = &mut self.engine.metrics.eviction;
+        ev.peak_seq_blocks = ev.peak_seq_blocks.max(live);
+        Ok(())
+    }
+
+    /// Evict policy-chosen victim blocks from `id` until it holds at
+    /// most `target` live blocks. Stops early — without error — when
+    /// every live slot is pinned (sink, recency window, shared prefix,
+    /// partial tail) or the mechanism refuses the pick (shared or
+    /// registered block, counted as `refused_shared`).
+    fn trim_to(&mut self, id: SeqId, target: usize, rows: usize)
+        -> Result<()> {
+        let bt = self.kv.cfg.block_tokens;
+        loop {
+            let live = self.kv.live_blocks(id).unwrap_or(0);
+            if live <= target {
+                return Ok(());
+            }
+            let slots = self.kv.live_slots(id).unwrap_or_default();
+            let shared = self.kv.shared_rows(id).unwrap_or(0);
+            let Some(victim) =
+                self.evictor.pick_victim(id, &slots, rows, shared, bt)
+            else {
+                return Ok(());
+            };
+            match self.kv.evict_slot(id, victim) {
+                Ok(_) => {
+                    self.engine.evict_rows(id, victim * bt, bt)?;
+                    self.engine.metrics.eviction.evicted_blocks += 1;
+                }
+                Err(_) => {
+                    self.engine.metrics.eviction.refused_shared += 1;
+                    return Ok(());
+                }
+            }
+        }
     }
 
     /// Reserve blocks for a newly admitted sequence, adopting any
@@ -392,12 +501,22 @@ impl<'rt> Scheduler<'rt> {
     /// them, and both prefill paths then skip the adopted rows entirely
     /// — the prefix-hit fast path.
     fn admit_blocks(&mut self, seq: &Sequence) -> Result<()> {
+        let res = self.reservation(seq);
+        let full = Self::full_reservation(seq);
+        let capped = res < full
+            && !self.kv.can_admit_prompt(&seq.prompt, full,
+                                         self.cfg.prefix_sharing);
         let grant = self.kv.allocate_prompt(
             seq.id,
             &seq.prompt,
-            Self::reservation(seq),
+            res,
             self.cfg.prefix_sharing,
         )?;
+        if capped {
+            // this admission only fit because of the eviction cap — the
+            // bounded-cache headline the acceptance trace asserts on
+            self.engine.metrics.eviction.capped_admissions += 1;
+        }
         if grant.matched_rows > 0 {
             if let Err(e) = self.engine.adopt_prefix(
                 seq.id, &grant.matched_blocks, grant.matched_rows)
@@ -531,7 +650,7 @@ impl<'rt> Scheduler<'rt> {
             .find(|(_, s)| s.priority == class)?;
         // the probe credits a prefix hit's adopted blocks, so sharing
         // admits strictly more concurrent sequences on the same pool
-        if self.kv.can_admit_prompt(&seq.prompt, Self::reservation(seq),
+        if self.kv.can_admit_prompt(&seq.prompt, self.reservation(seq),
                                     self.cfg.prefix_sharing) {
             Some(idx)
         } else {
@@ -777,8 +896,16 @@ impl<'rt> Scheduler<'rt> {
             return Ok(0);
         }
         let produced = self.decode_round()?;
-        // mirror physical rows into the block accounting, retire finished
+        // eviction maintenance first (grow-and-trim against the capped
+        // reservation), then mirror physical rows into the block
+        // accounting, then retire finished
         let mut done: Vec<SeqId> = Vec::new();
+        let ids: Vec<SeqId> = self.running.keys().copied().collect();
+        if self.cfg.eviction.active() {
+            for &id in &ids {
+                self.evict_round(id)?;
+            }
+        }
         for s in self.running.values() {
             self.kv.commit_rows(s.id, self.engine.rows(s.id))?;
             if s.is_finished() {
@@ -1008,7 +1135,7 @@ impl<'rt> Scheduler<'rt> {
         let before = self.finished.len();
         let mut keep = VecDeque::with_capacity(self.waiting.len());
         while let Some(mut seq) = self.waiting.pop_front() {
-            if Self::reservation(&seq) > cap {
+            if self.reservation(&seq) > cap {
                 seq.finish(FinishReason::CacheOverflow);
                 self.finished.push(seq);
             } else {

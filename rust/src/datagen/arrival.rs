@@ -106,6 +106,26 @@ pub fn mixed_chat_doc_trace(n_chats: usize, n_docs: usize,
     out
 }
 
+/// The infinite-chat / log-summarization trace (ISSUE 10): `n_streams`
+/// Interactive chats with tiny prompts and generations long enough that
+/// each stream's FULL reservation (`prompt + gen` tokens) would exceed a
+/// bounded block pool on its own. Without eviction the admission gate
+/// rejects these outright (`CacheOverflow`); with `--eviction` active the
+/// capped reservation admits them and each stream self-funds its growth
+/// by evicting its own middle. Streams arrive `gap_s` apart so admission
+/// pressure ramps rather than spikes.
+pub fn infinite_chat_trace(n_streams: usize, gen_len: usize, gap_s: f64)
+    -> Vec<RequestSpec> {
+    (0..n_streams)
+        .map(|i| RequestSpec {
+            arrive_s: i as f64 * gap_s,
+            prompt_len: 8,
+            gen_len,
+            priority: Priority::Interactive,
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -152,6 +172,19 @@ mod tests {
                                    && r.prompt_len <= 16));
         // chats arrive strictly after the docs, spaced apart
         assert!(tr[2..].windows(2).all(|w| w[1].arrive_s > w[0].arrive_s));
+    }
+
+    #[test]
+    fn infinite_chat_streams_outgrow_small_pools() {
+        let tr = infinite_chat_trace(4, 192, 0.001);
+        assert_eq!(tr.len(), 4);
+        for (i, r) in tr.iter().enumerate() {
+            assert_eq!(r.priority, Priority::Interactive);
+            assert!(r.prompt_len <= 16, "prompt fits one block");
+            // full reservation exceeds a 8-block (128-token) pool
+            assert!(r.prompt_len + r.gen_len > 8 * 16);
+            assert!((r.arrive_s - i as f64 * 0.001).abs() < 1e-12);
+        }
     }
 
     #[test]

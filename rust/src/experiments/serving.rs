@@ -8,6 +8,7 @@ use anyhow::Result;
 
 use crate::bench::Table;
 use crate::coordinator::engine::Engine;
+use crate::coordinator::eviction::{EvictionConfig, EvictionPolicy, Evictor};
 use crate::coordinator::kvcache::{KvCacheConfig, KvCacheManager};
 use crate::coordinator::metrics::ServeReport;
 use crate::coordinator::roofline::{self, eq10_speedup, GB};
@@ -19,6 +20,7 @@ use crate::datagen::arrival::{mixed_chat_doc_trace, RequestSpec};
 use crate::experiments::common::Opts;
 use crate::runtime::{KvQuant, ParamStore, Runtime};
 use crate::substrate::rng::Rng;
+use crate::substrate::tensor::Tensor;
 
 /// Steady-state decode throughput (tokens/s) at a fixed batch size and
 /// prompt length. `pin_tier` forces a fixed arena tier (`Some(max_seq)`
@@ -818,7 +820,411 @@ pub fn shared_prefix_table(rt: &Runtime, cfg_name: &str)
     Ok((t, out))
 }
 
-/// Headline capacity comparison (paper §1 / Table 10).
+/// What one bounded-cache streaming run measured (ISSUE 10 acceptance).
+#[derive(Clone, Debug)]
+pub struct BoundedStreamStats {
+    pub policy: EvictionPolicy,
+    /// Requests that completed generation.
+    pub completed: usize,
+    /// Requests rejected at admission (CacheOverflow) — the acceptance
+    /// trace must drive this to `streams` without eviction and 0 with.
+    pub rejected: usize,
+    /// Peak block-pool occupancy sampled after every scheduler round.
+    pub peak_pool_blocks: usize,
+    pub pool_blocks: usize,
+    pub evicted_blocks: u64,
+    pub refused_shared: u64,
+    pub capped_admissions: u64,
+    pub peak_seq_blocks: u64,
+    /// Evicted slots observed inside the sink or the trailing recency
+    /// window at ANY sampled round (must stay 0 — pinning is absolute).
+    pub pinning_violations: usize,
+    pub audit_checks: u64,
+    pub sync_download_bytes: u64,
+    pub report: ServeReport,
+}
+
+/// Serve `streams` infinite-chat streams (8-token prompts, `gen_len`
+/// generations) closed-loop on a pool of exactly `pool_blocks` blocks,
+/// under `policy`. Each stream's FULL reservation exceeds the pool, so
+/// without eviction every stream is rejected at admission; with eviction
+/// the capped reservation admits them and the post-decode grow-and-trim
+/// pass keeps each stream at its live-block budget. Samples the pool
+/// gauge and the pinning invariant after every round (an evicted slot's
+/// legality is monotone: rows only grow, so a slot legal at eviction
+/// time stays outside the sink and the trailing window forever).
+pub fn bounded_stream_run(rt: &Runtime, cfg_name: &str,
+                          policy: EvictionPolicy, streams: usize,
+                          gen_len: usize, pool_blocks: usize)
+    -> Result<BoundedStreamStats> {
+    let cfg = rt.manifest().config(cfg_name)?.clone();
+    let params = ParamStore::init(&cfg, 42);
+    let eng = Engine::new(rt, cfg_name, params, false, Sampler::Greedy, 0)?;
+    let kc = KvCacheConfig {
+        n_layers: cfg.n_layers,
+        k_dims: cfg.k_cache_dims,
+        v_dims: cfg.v_cache_dims,
+        block_tokens: 16,
+        bytes_per_el_k: 2.0,
+        bytes_per_el_v: 2.0,
+        budget_bytes: 0.0,
+    };
+    let bt = kc.block_tokens;
+    let kv = KvCacheManager::with_block_count(kc, pool_blocks);
+    let eviction = EvictionConfig { policy, ..EvictionConfig::default() };
+    let mut sched = Scheduler::with_config(eng, kv, SchedConfig {
+        max_batch: 8,
+        eviction,
+        ..SchedConfig::default()
+    });
+    let mut rng = Rng::new(31);
+    let t0 = std::time::Instant::now();
+    for _ in 0..streams {
+        sched.submit(synth_prompt(8, cfg.vocab, &mut rng), gen_len, None);
+    }
+    let (sink, window) = (eviction.sink_blocks, eviction.window_blocks);
+    let mut peak = 0usize;
+    let mut pinning_violations = 0usize;
+    let mut stall = 0usize;
+    while sched.has_work() {
+        let before = sched.finished.len();
+        sched.step()?;
+        peak = peak.max(sched.kv.stats().k_blocks_used);
+        for id in sched.kv.live_seqs() {
+            let rows = sched.kv.rows_written(id).unwrap_or(0);
+            for e in sched.kv.evicted_slots(id).unwrap_or_default() {
+                if e < sink
+                    || (e + 1) * bt > rows.saturating_sub(window * bt)
+                {
+                    pinning_violations += 1;
+                }
+            }
+        }
+        if sched.finished.len() == before
+            && sched.n_running() == 0
+            && !sched.made_progress()
+        {
+            stall += 1;
+            if stall > 2 {
+                sched.flush_unservable(stall);
+            }
+        } else {
+            stall = 0;
+        }
+    }
+    let mut report = ServeReport {
+        total_s: t0.elapsed().as_secs_f64(),
+        ..ServeReport::default()
+    };
+    collect_into(&sched.finished, &mut report);
+    let m = &sched.engine.metrics;
+    Ok(BoundedStreamStats {
+        policy,
+        completed: report.n_requests,
+        rejected: report.rejected,
+        peak_pool_blocks: peak,
+        pool_blocks,
+        evicted_blocks: m.eviction.evicted_blocks,
+        refused_shared: m.eviction.refused_shared,
+        capped_admissions: m.eviction.capped_admissions,
+        peak_seq_blocks: m.eviction.peak_seq_blocks,
+        pinning_violations,
+        audit_checks: m.audit_checks,
+        sync_download_bytes: m.sync_download_bytes,
+        report,
+    })
+}
+
+/// The ISSUE 10 acceptance table: the same infinite-chat workload — 4
+/// streams whose full 128-token reservations each exceed a 6-block
+/// (96-token) pool — under every eviction policy. `none` rejects every
+/// stream at admission (the seed behaviour the trace is built to
+/// trigger); each active policy completes all of them inside the pool
+/// with sink + recency never evicted. Score-ranked policies are skipped
+/// (not failed) on legacy manifests without the attn_mass plane.
+pub fn eviction_policy_table(rt: &Runtime, cfg_name: &str)
+    -> Result<(Table, Vec<BoundedStreamStats>)> {
+    let (streams, gen_len, pool) = (4usize, 120usize, 6usize);
+    let cfg = rt.manifest().config(cfg_name)?.clone();
+    let probe = Engine::new(rt, cfg_name, ParamStore::init(&cfg, 42),
+                            false, Sampler::Greedy, 0)?;
+    let has_mass = probe.supports_attn_mass();
+    drop(probe);
+    let mut t = Table::new(
+        &format!(
+            "Bounded-cache streaming ({cfg_name}): {streams} \
+             infinite-chat streams (8+{gen_len} tokens, full reservation \
+             8 blocks) on a {pool}-block pool"
+        ),
+        &["policy", "completed", "rejected", "peak pool blocks",
+          "evicted blocks", "refused", "capped adm", "pin viol", "down B"],
+    );
+    let mut out = Vec::new();
+    for policy in [EvictionPolicy::None, EvictionPolicy::Sink,
+                   EvictionPolicy::A2sf, EvictionPolicy::Tova] {
+        if policy.needs_scores() && !has_mass {
+            t.row(&[policy.name().into(), "-".into(), "-".into(),
+                    "-".into(), "-".into(), "-".into(), "-".into(),
+                    "-".into(), "(no attn_mass plane)".into()]);
+            continue;
+        }
+        let r = bounded_stream_run(rt, cfg_name, policy, streams, gen_len,
+                                   pool)?;
+        t.row(&[
+            policy.name().into(),
+            r.completed.to_string(),
+            r.rejected.to_string(),
+            format!("{}/{}", r.peak_pool_blocks, r.pool_blocks),
+            r.evicted_blocks.to_string(),
+            r.refused_shared.to_string(),
+            r.capped_admissions.to_string(),
+            r.pinning_violations.to_string(),
+            r.sync_download_bytes.to_string(),
+        ]);
+        out.push(r);
+    }
+    Ok((t, out))
+}
+
+/// Thin-vs-full eviction-score fidelity (ISSUE 10): do the factored
+/// r-dim keys rank eviction victims the way full d-dim keys would?
+#[derive(Clone, Debug)]
+pub struct ScoreFidelity {
+    /// Spearman rank correlation of the thin vs full A2SF slot scores
+    /// over the evictable middle.
+    pub spearman: f64,
+    /// Evictable middle slots both orderings ranked.
+    pub slots: usize,
+    /// Victims (bottom-k slots) the two orderings agree on, out of `k`.
+    pub victim_overlap: usize,
+    pub k: usize,
+    /// Teacher-forced max-abs logit delta (vs the unevicted baseline)
+    /// after evicting the FULL ordering's victims in the full engine.
+    pub full_order_delta: f64,
+    /// Same delta after evicting the THIN ordering's victims instead —
+    /// the cost of selecting by r-dim scores. Fidelity holds when this
+    /// tracks `full_order_delta` closely.
+    pub thin_order_delta: f64,
+}
+
+/// Average-rank helper for Spearman: ranks with ties sharing their mean.
+fn avg_ranks(x: &[f64]) -> Vec<f64> {
+    let n = x.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| {
+        x[i].partial_cmp(&x[j]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut ranks = vec![0.0; n];
+    let mut i = 0usize;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && x[idx[j + 1]] == x[idx[i]] {
+            j += 1;
+        }
+        let mean = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            ranks[k] = mean;
+        }
+        i = j + 1;
+    }
+    ranks
+}
+
+/// Spearman rank correlation (Pearson on average ranks).
+fn spearman(a: &[f64], b: &[f64]) -> f64 {
+    let (ra, rb) = (avg_ranks(a), avg_ranks(b));
+    let n = ra.len() as f64;
+    if n < 2.0 {
+        return 1.0;
+    }
+    let (ma, mb) = (ra.iter().sum::<f64>() / n, rb.iter().sum::<f64>() / n);
+    let mut num = 0.0;
+    let mut da = 0.0;
+    let mut db = 0.0;
+    for (x, y) in ra.iter().zip(&rb) {
+        num += (x - ma) * (y - mb);
+        da += (x - ma) * (x - ma);
+        db += (y - mb) * (y - mb);
+    }
+    if da == 0.0 || db == 0.0 {
+        1.0
+    } else {
+        num / (da * db).sqrt()
+    }
+}
+
+/// Twin teacher-forced decode of `servethin` vs `servefull` over one
+/// shared token stream, accumulating A2SF slot scores from each engine's
+/// `attn_mass` plane; then a second teacher-forced pass in the FULL
+/// engine applying each ordering's bottom-k evictions, measuring the
+/// logit delta each selection causes vs an unevicted baseline. The
+/// paper's selection claim, measured at the eviction policy layer: thin
+/// keys must produce the same victim ranking full keys would.
+pub fn score_fidelity(rt: &Runtime, prompt_len: usize, steps: usize,
+                      k: usize) -> Result<ScoreFidelity> {
+    let full_name = "servefull";
+    let thin_name = "servethin";
+    let cfg_full = rt.manifest().config(full_name)?.clone();
+    let cfg_thin = rt.manifest().config(thin_name)?.clone();
+    let mut e_full = Engine::new(rt, full_name,
+                                 ParamStore::init(&cfg_full, 42), false,
+                                 Sampler::Greedy, 0)?;
+    let mut e_thin = Engine::new(rt, thin_name,
+                                 ParamStore::init(&cfg_thin, 42), false,
+                                 Sampler::Greedy, 0)?;
+    anyhow::ensure!(
+        e_full.supports_attn_mass() && e_thin.supports_attn_mass(),
+        "score_fidelity needs the attn_mass decode plane on both configs"
+    );
+    let mut rng = Rng::new(17);
+    let prompt = synth_prompt(prompt_len, cfg_full.vocab.min(cfg_thin.vocab),
+                              &mut rng);
+    let mut s_full = Sequence::new(1, prompt.clone(), steps + 8, None);
+    let mut s_thin = Sequence::new(1, prompt.clone(), steps + 8, None);
+    e_full.prefill(&mut s_full)?;
+    e_thin.prefill(&mut s_thin)?;
+    *s_thin.generated.last_mut().unwrap() = *s_full.generated.last().unwrap();
+    let a2sf = EvictionConfig {
+        policy: EvictionPolicy::A2sf,
+        ..EvictionConfig::default()
+    };
+    let mut ev_full = Evictor::new(a2sf);
+    let mut ev_thin = Evictor::new(a2sf);
+    let bt = 16usize;
+    // the replayed token stream: prefill's sampled token + one per step
+    let mut tokens = vec![*s_full.generated.last().unwrap()];
+    for _ in 0..steps {
+        let mut r: Vec<&mut Sequence> = vec![&mut s_full];
+        e_full.decode_step(&mut r)?;
+        drop(r);
+        let mut r: Vec<&mut Sequence> = vec![&mut s_thin];
+        e_thin.decode_step(&mut r)?;
+        drop(r);
+        if let Some(m) = e_full.step_attn_mass(1) {
+            let m = m.to_vec();
+            ev_full.observe(1, &m, bt);
+        }
+        if let Some(m) = e_thin.step_attn_mass(1) {
+            let m = m.to_vec();
+            ev_thin.observe(1, &m, bt);
+        }
+        *s_thin.generated.last_mut().unwrap() =
+            *s_full.generated.last().unwrap();
+        tokens.push(*s_full.generated.last().unwrap());
+    }
+    let rows = prompt_len + steps + 1;
+    // the evictable middle under the default pinning (sink 1, window 2),
+    // restricted to slots fully written by the PROMPT so the replay pass
+    // can evict them right after its first decode step
+    let cfg_ev = EvictionConfig::default();
+    let window_floor = rows.saturating_sub(cfg_ev.window_blocks * bt);
+    let candidates: Vec<usize> = (cfg_ev.sink_blocks..)
+        .take_while(|&s| (s + 1) * bt <= window_floor.min(prompt_len))
+        .collect();
+    anyhow::ensure!(
+        candidates.len() >= 2,
+        "prompt too short for a rankable middle ({prompt_len} tokens)"
+    );
+    let score_of = |ev: &Evictor| -> Vec<f64> {
+        let acc = ev.acc_scores(1).unwrap_or(&[]);
+        candidates
+            .iter()
+            .map(|&s| acc.get(s).copied().unwrap_or(0.0))
+            .collect()
+    };
+    let (sc_full, sc_thin) = (score_of(&ev_full), score_of(&ev_thin));
+    let rho = spearman(&sc_full, &sc_thin);
+    let bottom_k = |scores: &[f64]| -> Vec<usize> {
+        let mut order: Vec<usize> = (0..candidates.len()).collect();
+        order.sort_by(|&i, &j| {
+            scores[i]
+                .partial_cmp(&scores[j])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(candidates[i].cmp(&candidates[j]))
+        });
+        order[..k.min(order.len())]
+            .iter()
+            .map(|&i| candidates[i])
+            .collect()
+    };
+    let (v_full, v_thin) = (bottom_k(&sc_full), bottom_k(&sc_thin));
+    let overlap = v_full.iter().filter(|s| v_thin.contains(s)).count();
+    // replay pass: three full-config engines teacher-forced along the
+    // SAME stream; evictions land after the first decode step (lanes are
+    // assigned at the first regroup), victims all inside the prompt
+    let run_replay = |victims: Option<&[usize]>| -> Result<Vec<Tensor>> {
+        let mut eng = Engine::new(rt, full_name,
+                                  ParamStore::init(&cfg_full, 42), false,
+                                  Sampler::Greedy, 0)?;
+        let mut s = Sequence::new(1, prompt.clone(), steps + 8, None);
+        eng.prefill(&mut s)?;
+        *s.generated.last_mut().unwrap() = tokens[0];
+        let mut logits = Vec::with_capacity(steps);
+        for (i, &tok) in tokens[1..].iter().enumerate() {
+            let mut r: Vec<&mut Sequence> = vec![&mut s];
+            eng.decode_step(&mut r)?;
+            drop(r);
+            logits.push(
+                eng.last_decode_logits().expect("decode logits").clone());
+            *s.generated.last_mut().unwrap() = tok;
+            if i == 0 {
+                if let Some(vs) = victims {
+                    for &slot in vs {
+                        eng.evict_rows(1, slot * bt, bt)?;
+                    }
+                }
+            }
+        }
+        Ok(logits)
+    };
+    let base = run_replay(None)?;
+    let by_full = run_replay(Some(&v_full))?;
+    let by_thin = run_replay(Some(&v_thin))?;
+    // step 0 precedes the evictions (identical by construction) — the
+    // delta is over the post-eviction steps
+    let delta = |evicted: &[Tensor]| -> f64 {
+        base.iter()
+            .zip(evicted)
+            .skip(1)
+            .map(|(a, b)| a.max_abs_diff(b) as f64)
+            .fold(0.0, f64::max)
+    };
+    Ok(ScoreFidelity {
+        spearman: rho,
+        slots: candidates.len(),
+        victim_overlap: overlap,
+        k: k.min(candidates.len()),
+        full_order_delta: delta(&by_full),
+        thin_order_delta: delta(&by_thin),
+    })
+}
+
+/// The score-fidelity table (ISSUE 10): one row summarizing the
+/// thin-vs-full eviction-selection agreement, regenerated by
+/// `thinkeys experiments serving` (EXPERIMENTS.md §Eviction holds the
+/// committed copy).
+pub fn score_fidelity_table(rt: &Runtime)
+    -> Result<(Table, ScoreFidelity)> {
+    let (prompt, steps, k) = (96usize, 32usize, 2usize);
+    let f = score_fidelity(rt, prompt, steps, k)?;
+    let mut t = Table::new(
+        &format!(
+            "Thin-vs-full eviction-score fidelity (A2SF scores, prompt \
+             {prompt}, {steps} teacher-forced steps, bottom-{k} victims)"
+        ),
+        &["metric", "value"],
+    );
+    t.row(&["Spearman rank corr (thin vs full)".into(),
+            format!("{:.3}", f.spearman)]);
+    t.row(&["evictable middle slots".into(), f.slots.to_string()]);
+    t.row(&["victim-set overlap".into(),
+            format!("{}/{}", f.victim_overlap, f.k)]);
+    t.row(&["logit delta, evict by FULL scores".into(),
+            format!("{:.3e}", f.full_order_delta)]);
+    t.row(&["logit delta, evict by THIN scores".into(),
+            format!("{:.3e}", f.thin_order_delta)]);
+    Ok((t, f))
+}
 pub fn capacity_table() -> Table {
     let c = crate::coordinator::capacity::headline_comparison(
         crate::coordinator::capacity::H100_NODE_7B);
@@ -839,7 +1245,8 @@ pub fn run(rt: &Runtime, opts: &Opts) -> Result<Vec<Table>> {
     let (quantized, _) = quantized_decode_table(rt, "servethin")?;
     let (gqa, _) = gqa_composition_table(rt)?;
     let (prefix, _) = shared_prefix_table(rt, "servethin")?;
-    Ok(vec![
+    let (eviction, _) = eviction_policy_table(rt, "servethin")?;
+    let mut tables = vec![
         table11_predicted(),
         table11_measured(rt, opts)?,
         tiered_decode_table(rt, opts)?,
@@ -847,6 +1254,18 @@ pub fn run(rt: &Runtime, opts: &Opts) -> Result<Vec<Table>> {
         quantized,
         gqa,
         prefix,
+        eviction,
         capacity_table(),
-    ])
+    ];
+    // score fidelity needs the attn_mass plane on both serve configs;
+    // legacy manifests skip the table rather than failing the suite
+    let cfg = rt.manifest().config("servethin")?.clone();
+    let probe = Engine::new(rt, "servethin", ParamStore::init(&cfg, 42),
+                            false, Sampler::Greedy, 0)?;
+    if probe.supports_attn_mass() {
+        drop(probe);
+        let (fidelity, _) = score_fidelity_table(rt)?;
+        tables.push(fidelity);
+    }
+    Ok(tables)
 }

@@ -15,13 +15,14 @@
 use anyhow::{bail, Result};
 
 use thinkeys::coordinator::engine::Engine;
+use thinkeys::coordinator::eviction::{EvictionConfig, EvictionPolicy};
 use thinkeys::coordinator::kvcache::{KvCacheConfig, KvCacheManager};
 use thinkeys::coordinator::router::{Router, RouterPolicy};
 use thinkeys::coordinator::sampling::Sampler;
 use thinkeys::coordinator::scheduler::{SchedConfig, Scheduler};
 use thinkeys::coordinator::supervisor::{Supervisor, SupervisorConfig};
-use thinkeys::datagen::arrival::{mixed_chat_doc_trace, poisson_trace,
-                                 TraceConfig};
+use thinkeys::datagen::arrival::{infinite_chat_trace, mixed_chat_doc_trace,
+                                 poisson_trace, TraceConfig};
 use thinkeys::experiments::{self, Opts};
 use thinkeys::analysis::grid;
 use thinkeys::runtime::{FaultPlan, KvQuant, Manifest, ParamStore, Runtime};
@@ -182,6 +183,23 @@ fn serve(argv: &[String]) -> Result<()> {
                    "disable prefix-tree matching and copy-on-write block \
                     sharing (per-sequence private blocks only — the \
                     pre-paged baseline)")
+        .flag_usize("kv-budget-blocks", Some(0),
+                    "total KV pool size in 16-token blocks (0 = derive \
+                     from --budget-mb); with --eviction active, streams \
+                     whose full reservation exceeds this pool are admitted \
+                     capped and stay within it by evicting their middle")
+        .flag_str("eviction", Some("none"),
+                  "bounded-cache eviction over the paged block tables: \
+                   none (reject-on-overflow) | sink (pin sink + recency, \
+                   FIFO middle) | a2sf (forgetting-factor accumulated \
+                   attention argmin) | tova (current-step attention \
+                   argmin); a2sf/tova need the attn_mass decode output \
+                   plane from `make artifacts`")
+        .flag_bool("infinite-chat",
+                   "serve the infinite-chat streaming trace: short \
+                    prompts, generations long enough that full \
+                    reservations exceed the pool (rejected without \
+                    --eviction, completes bounded with it)")
         .parse(argv)?;
     let cfg_name = p.str("config")?;
     let quant_name = p.str("kv-quant")?;
@@ -238,7 +256,7 @@ fn serve(argv: &[String]) -> Result<()> {
             1.0 + 4.0 / cfg.v_cache_dims as f64,
         ),
     };
-    let kv = KvCacheManager::new(KvCacheConfig {
+    let kv_cfg = KvCacheConfig {
         n_layers: cfg.n_layers,
         k_dims: cfg.k_cache_dims,
         v_dims: cfg.v_cache_dims,
@@ -246,7 +264,35 @@ fn serve(argv: &[String]) -> Result<()> {
         bytes_per_el_k: bk,
         bytes_per_el_v: bv,
         budget_bytes: p.f64("budget-mb")? * 1e6,
-    });
+    };
+    let kv = match p.usize("kv-budget-blocks")? {
+        0 => KvCacheManager::new(kv_cfg),
+        b => KvCacheManager::with_block_count(kv_cfg, b),
+    };
+    let ev_name = p.str("eviction")?;
+    let policy = EvictionPolicy::parse(&ev_name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "--eviction {ev_name}: expected none, sink, a2sf, or tova"
+        )
+    })?;
+    if policy.needs_scores() && !eng.supports_attn_mass() {
+        bail!(
+            "--eviction {} ranks victims by attention scores, but this \
+             artifact grid exports no attn_mass decode plane; re-run \
+             `make artifacts` or use --eviction sink",
+            policy.name()
+        );
+    }
+    let eviction = EvictionConfig { policy, ..EvictionConfig::default() };
+    if eviction.active() {
+        println!(
+            "eviction: {} (budget {} blocks/seq = {} sink + {} window + \
+             {} slack; pool {} blocks)",
+            policy.name(), eviction.budget_blocks(), eviction.sink_blocks,
+            eviction.window_blocks, eviction.slack_blocks,
+            kv.total_token_capacity() / kv.cfg.block_tokens
+        );
+    }
     let chunk = match p.usize("chunk-tokens")? {
         0 => None,
         c => {
@@ -273,6 +319,7 @@ fn serve(argv: &[String]) -> Result<()> {
         chunk_tokens: chunk,
         interactive_weight: p.usize("interactive-weight")?,
         prefix_sharing: !p.bool("no-prefix-sharing"),
+        eviction,
         ..SchedConfig::default()
     });
     let deadline = |ms: f64| if ms > 0.0 { Some(ms / 1e3) } else { None };
@@ -309,7 +356,11 @@ fn serve(argv: &[String]) -> Result<()> {
         router = router.with_supervisor(Supervisor::new(sup_cfg, factory));
     }
     let n = p.usize("requests")?;
-    let trace = if p.bool("mixed") {
+    let trace = if p.bool("infinite-chat") {
+        // each stream's full reservation (8 prompt + 192 gen) dwarfs a
+        // bounded pool; only capped admission + eviction completes it
+        infinite_chat_trace(n, 192, 0.002)
+    } else if p.bool("mixed") {
         // 1 doc per 4 requests, chats arriving while docs prefill
         mixed_chat_doc_trace(n - n / 4, n / 4, 0.002, 0.0005)
     } else {
@@ -336,6 +387,26 @@ fn serve(argv: &[String]) -> Result<()> {
         stats.v_bytes_capacity / 1e6,
         100.0 * stats.k_fraction()
     );
+    // With eviction on, the whole point is that bounded pools stop
+    // rejecting: hard-fail the smoke if a stream was still turned away or
+    // lost, or if eviction round-tripped an arena through host memory
+    // (it zeroes rows host-side and re-uploads; downloads stay 0).
+    if eviction.active() {
+        let m = &router.sched.engine.metrics;
+        if report.rejected > 0 || report.failed > 0 {
+            bail!(
+                "eviction {} active but {} requests rejected / {} failed",
+                eviction.policy.name(), report.rejected, report.failed
+            );
+        }
+        if m.sync_download_bytes != 0 {
+            bail!(
+                "sync_download_bytes = {} under eviction \
+                 (device-residency regression)",
+                m.sync_download_bytes
+            );
+        }
+    }
     Ok(())
 }
 

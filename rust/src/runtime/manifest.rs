@@ -87,6 +87,15 @@ pub struct ArtifactEntry {
     pub n_params: usize,
 }
 
+impl ArtifactEntry {
+    /// Does this artifact export `name` among its outputs? The engine
+    /// gates optional-output parsing on this (e.g. the `attn_mass` plane
+    /// appended in ISSUE 10 — absent on legacy manifests).
+    pub fn has_output(&self, name: &str) -> bool {
+        self.outputs.iter().any(|o| o == name)
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct AdamConfig {
     pub b1: f64,
@@ -486,10 +495,12 @@ mod tests {
                         vec![cfg.n_layers, b, n, cfg.k_cache_dims]
                     );
                     // the delta-sync contract: per-step written rows are
-                    // exported alongside the full arenas
+                    // exported alongside the full arenas, and ISSUE 10
+                    // appends the per-row attention-mass plane the
+                    // eviction scorer consumes
                     assert_eq!(
-                        &a.outputs[a.outputs.len() - 2..],
-                        ["k_rows".to_string(), "v_rows".to_string()]
+                        &a.outputs[a.outputs.len() - 3..],
+                        ["k_rows", "v_rows", "attn_mass"].map(String::from)
                     );
                 }
             }
@@ -530,8 +541,9 @@ mod tests {
                     assert_eq!(by("v_scale").shape,
                                vec![cfg.n_layers, b, n]);
                     assert_eq!(
-                        &a.outputs[a.outputs.len() - 4..],
-                        ["k_rows", "k_row_scale", "v_rows", "v_row_scale"]
+                        &a.outputs[a.outputs.len() - 5..],
+                        ["k_rows", "k_row_scale", "v_rows", "v_row_scale",
+                         "attn_mass"]
                             .map(String::from)
                     );
                 }

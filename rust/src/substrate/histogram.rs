@@ -72,7 +72,16 @@ impl Histogram {
         if self.total == 0 { 0.0 } else { self.max_us }
     }
 
-    /// Quantile in microseconds (upper bound of the containing bucket).
+    pub fn min_us(&self) -> f64 {
+        if self.total == 0 { 0.0 } else { self.min_us }
+    }
+
+    /// Quantile in microseconds: upper bound of the containing log
+    /// bucket, clamped into `[min_us, max_us]` — a bucket bound can
+    /// overshoot the largest recorded sample by up to one bucket width
+    /// (~4%), and a sub-`BASE_US` sample's bucket bound undershoots
+    /// nothing a real sample ever reached. No reported quantile can lie
+    /// outside the observed sample range.
     pub fn quantile_us(&self, q: f64) -> f64 {
         if self.total == 0 {
             return 0.0;
@@ -82,13 +91,18 @@ impl Histogram {
         for (i, &c) in self.counts.iter().enumerate() {
             acc += c;
             if acc >= target {
-                return bucket_upper(i).min(self.max_us.max(BASE_US));
+                return bucket_upper(i).clamp(self.min_us, self.max_us);
             }
         }
         self.max_us
     }
 
     pub fn merge(&mut self, other: &Histogram) {
+        if other.total == 0 {
+            // an empty histogram's min_us sentinel (f64::INFINITY) must
+            // never fold into a populated one's stats
+            return;
+        }
         for (a, b) in self.counts.iter_mut().zip(&other.counts) {
             *a += b;
         }
@@ -148,6 +162,70 @@ mod tests {
         assert_eq!(a.count(), 200);
         assert!(a.quantile_us(0.25) < 200.0);
         assert!(a.quantile_us(0.75) > 900.0);
+    }
+
+    #[test]
+    fn single_sample_quantiles_clamped_to_sample() {
+        // regression (ISSUE 10): the containing bucket's upper bound
+        // overshoots a lone 100us sample by ~4%; every quantile must
+        // report exactly the one observed value
+        let mut h = Histogram::new();
+        h.record_us(100.0);
+        for q in [0.01, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(h.quantile_us(q), 100.0, "q={q}");
+        }
+        assert!(h.quantile_us(0.5) <= h.max_us());
+        assert!(h.quantile_us(0.5) >= h.min_us());
+    }
+
+    #[test]
+    fn sub_base_sample_never_exceeds_max() {
+        // a sample below BASE_US lands in bucket 0 (upper bound
+        // BASE_US*GROWTH > the sample); the clamp must pull the
+        // quantile down to the observed max
+        let mut h = Histogram::new();
+        h.record_us(0.5);
+        assert_eq!(h.quantile_us(0.5), 0.5);
+        assert!(h.quantile_us(0.99) <= h.max_us());
+    }
+
+    #[test]
+    fn two_bucket_quantiles_stay_in_range() {
+        let mut h = Histogram::new();
+        h.record_us(10.0);
+        h.record_us(1000.0);
+        let p50 = h.quantile_us(0.5);
+        let p99 = h.quantile_us(0.99);
+        // p50 resolves in the low bucket (within ~4% of 10us), p99 in
+        // the high one, and both stay inside [min_us, max_us]
+        assert!((9.0..=11.0).contains(&p50), "p50 {p50}");
+        assert!(p99 > 900.0, "p99 {p99}");
+        for q in [0.01, 0.25, 0.5, 0.75, 0.99, 1.0] {
+            let v = h.quantile_us(q);
+            assert!(v >= h.min_us() && v <= h.max_us(), "q={q} v={v}");
+        }
+    }
+
+    #[test]
+    fn merge_with_empty_keeps_min() {
+        let mut a = Histogram::new();
+        a.record_us(50.0);
+        a.record_us(70.0);
+        a.merge(&Histogram::new());
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.min_us(), 50.0);
+        assert_eq!(a.max_us(), 70.0);
+        // and the empty side: merging INTO an empty histogram adopts
+        // the populated stats without the INFINITY sentinel leaking
+        let mut e = Histogram::new();
+        e.merge(&a);
+        assert_eq!(e.min_us(), 50.0);
+        assert!(e.min_us().is_finite());
+        // empty-empty merge stays empty with a 0.0 reported min
+        let mut z = Histogram::new();
+        z.merge(&Histogram::new());
+        assert_eq!(z.min_us(), 0.0);
+        assert_eq!(z.count(), 0);
     }
 
     #[test]

@@ -1,0 +1,195 @@
+//! Bounded-cache eviction invariants under randomized streaming churn
+//! (ISSUE 10), seeded through `thinkeys::proptest::property` so a failure
+//! reproduces from its printed seed.
+//!
+//! For every policy (sink / a2sf / tova), random submit/step traffic on a
+//! deliberately tiny block pool — every stream's full reservation exceeds
+//! it, so admissions are capped and the grow-and-trim pass runs hot —
+//! asserting after EVERY scheduler round:
+//!
+//! - pinning is absolute: no evicted slot inside the sink prefix or the
+//!   trailing recency window (legality is monotone — rows only grow — so
+//!   a slot legal at eviction time stays legal forever);
+//! - the paged accounting balances: used + free == total, and
+//!   `KvCacheManager::refcount_violations` is empty (slot conservation,
+//!   sorted/unique holes, no evicted slot inside a shared region,
+//!   refcounts == table membership — i.e. shared blocks never evicted);
+//! - the full engine auditor stays green, including the evicted-rows
+//!   ledger reconciliation (`Engine::evicted_rows_of` vs the block
+//!   table's holes);
+//! - after draining, every block is free again and `audit_checks > 0`
+//!   (the audits actually ran).
+
+use thinkeys::analysis::auditor;
+use thinkeys::coordinator::engine::Engine;
+use thinkeys::coordinator::eviction::{EvictionConfig, EvictionPolicy};
+use thinkeys::coordinator::kvcache::{KvCacheConfig, KvCacheManager};
+use thinkeys::coordinator::router::synth_prompt;
+use thinkeys::coordinator::sampling::Sampler;
+use thinkeys::coordinator::scheduler::{SchedConfig, Scheduler};
+use thinkeys::proptest::property;
+use thinkeys::runtime::{ParamStore, Runtime};
+use thinkeys::substrate::rng::Rng;
+
+fn runtime() -> Runtime {
+    Runtime::new().expect("run `make artifacts` first")
+}
+
+fn engine<'a>(rt: &'a Runtime, cfg: &str, seed: u64) -> Engine<'a> {
+    let params = ParamStore::init(rt.manifest().config(cfg).unwrap(), 42);
+    Engine::new(rt, cfg, params, false, Sampler::Greedy, seed).unwrap()
+}
+
+fn kv_blocks(rt: &Runtime, cfg: &str, blocks: usize) -> KvCacheManager {
+    let c = rt.manifest().config(cfg).unwrap();
+    KvCacheManager::with_block_count(
+        KvCacheConfig {
+            n_layers: c.n_layers,
+            k_dims: c.k_cache_dims,
+            v_dims: c.v_cache_dims,
+            block_tokens: 16,
+            bytes_per_el_k: 2.0,
+            bytes_per_el_v: 2.0,
+            budget_bytes: 0.0,
+        },
+        blocks,
+    )
+}
+
+/// The per-round invariant bundle. `sink`/`window` echo the eviction
+/// config; `bt` is block_tokens.
+fn check_round(sched: &Scheduler, sink: usize, window: usize, bt: usize)
+    -> Result<(), String> {
+    // pinning: no evicted slot in the sink or the trailing window
+    for id in sched.kv.live_seqs() {
+        let rows = sched.kv.rows_written(id).unwrap_or(0);
+        for e in sched.kv.evicted_slots(id).unwrap_or_default() {
+            if e < sink {
+                return Err(format!(
+                    "seq {id}: sink slot {e} evicted (sink = {sink})"
+                ));
+            }
+            if (e + 1) * bt > rows.saturating_sub(window * bt) {
+                return Err(format!(
+                    "seq {id}: slot {e} inside the {window}-block recency \
+                     window at {rows} rows"
+                ));
+            }
+        }
+    }
+    // pool balance: used + free == total
+    let stats = sched.kv.stats();
+    let free = sched.kv.free_token_capacity() / bt;
+    let total = sched.kv.total_token_capacity() / bt;
+    if stats.k_blocks_used + free != total {
+        return Err(format!(
+            "pool imbalance: {} used + {free} free != {total} total",
+            stats.k_blocks_used
+        ));
+    }
+    // block-accounting self-consistency (refcounts, slot conservation,
+    // hole ordering, shared regions)
+    let v = sched.kv.refcount_violations();
+    if !v.is_empty() {
+        return Err(format!("refcount violations: {}", v.join("; ")));
+    }
+    // the full cross-view audit, including the evicted-rows ledger
+    let v = auditor::audit(&sched.engine, &sched.kv);
+    if !v.is_empty() {
+        return Err(format!("auditor violations: {}", v.join("; ")));
+    }
+    Ok(())
+}
+
+fn churn(policy: EvictionPolicy, name: &'static str) {
+    let rt = runtime();
+    let mut total_evicted = 0u64;
+    let mut total_capped = 0u64;
+    property(name, 3, |rng| {
+        let eng = engine(&rt, "servethin", rng.next_u64());
+        // 8-block pool, 4-block per-seq budget: any stream generating
+        // past ~56 tokens outgrows its cap and must self-fund
+        let kv = kv_blocks(&rt, "servethin", 8);
+        let eviction = EvictionConfig {
+            policy,
+            ..EvictionConfig::default()
+        };
+        let mut sched = Scheduler::with_config(eng, kv, SchedConfig {
+            max_batch: 4,
+            round_budget: 48,
+            prefix_sharing: rng.below(2) == 0,
+            eviction,
+            ..SchedConfig::default()
+        });
+        let bt = 16usize;
+        let (sink, window) = (eviction.sink_blocks, eviction.window_blocks);
+        let vocab = sched.engine.cfg.vocab;
+        let mut submitted = 0usize;
+        for _ in 0..30 {
+            match rng.below(3) {
+                0 if submitted < 10 => {
+                    // short prompt, generation long enough that the full
+                    // reservation exceeds the 8-block pool half the time
+                    let plen = 1 + rng.below(24);
+                    let gen = if rng.below(2) == 0 {
+                        100 + rng.below(40)
+                    } else {
+                        4 + rng.below(40)
+                    };
+                    let prompt = synth_prompt(plen, vocab, rng);
+                    sched.submit(prompt, gen, None);
+                    submitted += 1;
+                }
+                _ => {
+                    sched.step().map_err(|e| e.to_string())?;
+                }
+            }
+            check_round(&sched, sink, window, bt)?;
+        }
+        sched.run_to_completion().map_err(|e| e.to_string())?;
+        check_round(&sched, sink, window, bt)?;
+        if sched.finished.len() != submitted {
+            return Err(format!(
+                "{submitted} submitted but {} finished",
+                sched.finished.len()
+            ));
+        }
+        // drained: the whole pool is free again
+        if sched.kv.free_token_capacity() != sched.kv.total_token_capacity()
+        {
+            return Err("leaked KV blocks after drain".into());
+        }
+        let m = &sched.engine.metrics;
+        if m.audit_checks == 0 {
+            return Err("auditor never ran".into());
+        }
+        if m.sync_download_bytes != 0 {
+            return Err(format!(
+                "sync_download_bytes = {} under eviction churn",
+                m.sync_download_bytes
+            ));
+        }
+        total_evicted += m.eviction.evicted_blocks;
+        total_capped += m.eviction.capped_admissions;
+        Ok(())
+    });
+    // across the seeded cases the workload must actually have exercised
+    // the machinery, or the invariants above were vacuous
+    assert!(total_evicted > 0, "{name}: no block was ever evicted");
+    assert!(total_capped > 0, "{name}: no admission was ever capped");
+}
+
+#[test]
+fn eviction_churn_sink() {
+    churn(EvictionPolicy::Sink, "eviction_churn_sink");
+}
+
+#[test]
+fn eviction_churn_a2sf() {
+    churn(EvictionPolicy::A2sf, "eviction_churn_a2sf");
+}
+
+#[test]
+fn eviction_churn_tova() {
+    churn(EvictionPolicy::Tova, "eviction_churn_tova");
+}

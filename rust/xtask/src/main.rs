@@ -29,6 +29,14 @@
 //!   into an anyhow chain and silently opts out of the fault-recovery
 //!   policy — step failures must be matched (retry loop) or explicitly
 //!   converted.
+//! - **no-direct-pool-free** — KV blocks are refcounted; the ONLY legal
+//!   way to return one to the pool is the refcount-aware release path in
+//!   `kvcache.rs` (`Pool::release` via `KvCacheManager::release` /
+//!   `evict_slot`). Touching `pool.free` / `pool.refs` / `pool.release(`
+//!   anywhere else (scheduler, engine, router, …) can free a block a
+//!   shared-prefix sequence still references — a use-after-free of device
+//!   rows. `kvcache.rs` owns the pool; `eviction.rs` is the policy layer
+//!   blessed to drive it.
 //! - **no-exit-in-recovery** — `supervisor.rs` and `router.rs` are the
 //!   crash-recovery path: they exist to turn a Fatal into a warm restart
 //!   or a drained report. A `process::exit` there kills the process the
@@ -203,6 +211,26 @@ fn lint_source(file_name: &str, text: &str) -> Vec<Violation> {
                  instead of erasing its class"
                     .into(),
             );
+        }
+
+        // no-direct-pool-free: the block pool's free list and refcounts
+        // are kvcache.rs internals; eviction.rs is the one policy layer
+        // blessed to drive the release path. Anything else touching them
+        // can free a block a shared-prefix sequence still references.
+        if file_name != "kvcache.rs" && file_name != "eviction.rs" {
+            let direct = line.contains("pool.free")
+                || line.contains("pool.refs")
+                || line.contains("pool.release(");
+            if direct {
+                fail(
+                    "no-direct-pool-free",
+                    "direct Pool free-list/refcount access — KV blocks go \
+                     back to the pool only through the refcount-aware \
+                     release path (KvCacheManager::release / evict_slot \
+                     in kvcache.rs)"
+                        .into(),
+                );
+            }
         }
 
         // no-exit-in-recovery: the supervisor/router exist to keep the
@@ -399,6 +427,35 @@ mod tests {
         assert_eq!(rules("scheduler.rs", src),
                    vec!["no-naked-anyhow-propagation",
                         "no-naked-anyhow-propagation"]);
+    }
+
+    #[test]
+    fn seeded_direct_free_list_push_is_denied() {
+        let src = "fn shortcut(&mut self, b: BlockId) {\n    \
+                   self.kv.pool.free.push(b);\n}\n";
+        assert_eq!(rules("scheduler.rs", src), vec!["no-direct-pool-free"]);
+    }
+
+    #[test]
+    fn seeded_refcount_fiddling_is_denied() {
+        let src = "fn drop_ref(&mut self, b: usize) {\n    \
+                   self.pool.refs[b] -= 1;\n}\n";
+        assert_eq!(rules("engine.rs", src), vec!["no-direct-pool-free"]);
+    }
+
+    #[test]
+    fn seeded_pool_release_call_is_denied() {
+        let src = "fn evict(&mut self, b: BlockId) {\n    \
+                   let _ = self.kv.pool.release(b);\n}\n";
+        assert_eq!(rules("router.rs", src), vec!["no-direct-pool-free"]);
+    }
+
+    #[test]
+    fn kvcache_and_eviction_own_the_pool() {
+        let src = "fn release(&mut self, b: BlockId) {\n    \
+                   if self.pool.release(b) { self.pool.free.len(); }\n}\n";
+        assert!(rules("kvcache.rs", src).is_empty());
+        assert!(rules("eviction.rs", src).is_empty());
     }
 
     #[test]
